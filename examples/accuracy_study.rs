@@ -1,0 +1,113 @@
+//! Numerical-accuracy study — the paper's §2/§6 safety claims, measured.
+//!
+//! ```bash
+//! cargo run --release --example accuracy_study
+//! ```
+//!
+//! * Where does naive softmax (Algorithm 1) start returning NaN/Inf,
+//!   and how do safe/online behave there?
+//! * "If one is using Naive Softmax then switching to Online version
+//!   improves numerical accuracy" (§6) — quantified against an f64
+//!   reference.
+//! * Error of the ⊕ tree reduction vs the sequential fold.
+
+use onlinesoftmax::rng::Xoshiro256pp;
+use onlinesoftmax::softmax::{self, monoid, Algorithm};
+
+/// f64 reference softmax.
+fn softmax_f64(x: &[f32]) -> Vec<f64> {
+    let m = x.iter().fold(f64::NEG_INFINITY, |a, &b| a.max(b as f64));
+    let exps: Vec<f64> = x.iter().map(|&v| ((v as f64) - m).exp()).collect();
+    let d: f64 = exps.iter().sum();
+    exps.iter().map(|e| e / d).collect()
+}
+
+/// Max relative error over entries that carry probability mass
+/// (want ≥ 1e-12): below that, fp32 storage itself cannot represent
+/// the value and relative error is meaningless noise.
+fn max_rel_error(y: &[f32], want: &[f64]) -> f64 {
+    y.iter()
+        .zip(want)
+        .filter(|(_, &b)| b >= 1e-12)
+        .map(|(&a, &b)| ((a as f64 - b) / b).abs())
+        .fold(0.0, f64::max)
+}
+
+/// Total-variation distance — the distribution-level error.
+fn tv_distance(y: &[f32], want: &[f64]) -> f64 {
+    0.5 * y.iter().zip(want).map(|(&a, &b)| (a as f64 - b).abs()).sum::<f64>()
+}
+
+fn main() {
+    let v = 4096;
+    let mut rng = Xoshiro256pp::seed_from_u64(11);
+    let base = rng.logits(v, 3.0);
+
+    println!("=== overflow cliff: shift logits by +offset, check finiteness ===");
+    println!("(scalar kernels — faithful to the paper's pseudocode)");
+    println!("{:>8} {:>10} {:>10} {:>10}", "offset", "naive", "safe", "online");
+    for offset in [0.0f32, 40.0, 80.0, 85.0, 90.0, 120.0, 300.0] {
+        let x: Vec<f32> = base.iter().map(|v| v + offset).collect();
+        let mut y = vec![0.0f32; x.len()];
+        let mut finite = |f: &dyn Fn(&[f32], &mut [f32])| {
+            f(&x, &mut y);
+            if y.iter().all(|p| p.is_finite()) { "ok" } else { "NaN/Inf" }
+        };
+        println!(
+            "{:>8} {:>10} {:>10} {:>10}",
+            offset,
+            finite(&softmax::scalar::naive),
+            finite(&softmax::scalar::safe),
+            finite(&softmax::scalar::online)
+        );
+    }
+
+    println!("\n=== accuracy vs f64 reference ===");
+    println!(
+        "{:>8} {:>12} {:>12} {:>12} {:>12} {:>12} {:>12}",
+        "scale", "naive rel", "safe rel", "online rel", "naive tv", "safe tv", "online tv"
+    );
+    for scale in [0.5f32, 2.0, 8.0, 20.0] {
+        let x = Xoshiro256pp::seed_from_u64(100).logits(v, scale);
+        let want = softmax_f64(&x);
+        let rel = |a: Algorithm| max_rel_error(&softmax::compute(&x, a), &want);
+        let tv = |a: Algorithm| tv_distance(&softmax::compute(&x, a), &want);
+        println!(
+            "{:>8} {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e}",
+            scale,
+            rel(Algorithm::Naive),
+            rel(Algorithm::Safe),
+            rel(Algorithm::Online),
+            tv(Algorithm::Naive),
+            tv(Algorithm::Safe),
+            tv(Algorithm::Online)
+        );
+    }
+
+    println!("\n=== normalizer d: sequential fold vs ⊕ tree reduction vs f64 ===");
+    println!("{:>10} {:>14} {:>14}", "V", "seq rel err", "tree rel err");
+    for n in [1_000usize, 10_000, 100_000, 1_000_000] {
+        let x = Xoshiro256pp::seed_from_u64(n as u64).logits(n, 5.0);
+        // f64 reference normalizer
+        let m = x.iter().fold(f64::NEG_INFINITY, |a, &b| a.max(b as f64));
+        let d64: f64 = x.iter().map(|&v| ((v as f64) - m).exp()).sum();
+        // sequential Algorithm 3
+        let seq = onlinesoftmax::softmax::scalar::online_normalizer(&x);
+        // pairwise ⊕ tree over 1024-element leaves
+        let leaves: Vec<monoid::MD> = x
+            .chunks(1024)
+            .map(onlinesoftmax::softmax::vectorized::online_normalizer)
+            .collect();
+        let tree = monoid::tree_reduce(&leaves);
+        let rel = |d: f32| ((d as f64 - d64) / d64).abs();
+        println!("{:>10} {:>14.3e} {:>14.3e}", n, rel(seq.d), rel(tree.d));
+    }
+
+    println!(
+        "\nconclusions:\n\
+         • naive overflows past x ≈ 88.7 (fp32 exp limit); safe/online never do.\n\
+         • online matches safe's accuracy — same (m, d), one fewer pass (Theorem 1).\n\
+         • the ⊕ tree is as accurate as (usually better than) the sequential fold,\n\
+           so the parallel/sharded evaluation orders cost nothing numerically."
+    );
+}

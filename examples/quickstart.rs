@@ -1,0 +1,73 @@
+//! Quickstart: the core library API in two minutes.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Covers the paper's four algorithms, the ⊕ monoid, and the analytic
+//! access model — no artifacts or server needed.
+
+use onlinesoftmax::analytic::{DeviceModel, Pipeline};
+use onlinesoftmax::rng::Xoshiro256pp;
+use onlinesoftmax::softmax::{self, fused, monoid::MD, Algorithm};
+
+fn main() {
+    // Random logits like the paper's benchmark inputs.
+    let mut rng = Xoshiro256pp::seed_from_u64(42);
+    let logits = rng.logits(10_000, 6.0);
+
+    // --- Algorithms 1-3: softmax three ways -----------------------------
+    let y_naive = softmax::compute(&logits, Algorithm::Naive);
+    let y_safe = softmax::compute(&logits, Algorithm::Safe);
+    let y_online = softmax::compute(&logits, Algorithm::Online);
+    println!("softmax sums (≈1): naive={:.6} safe={:.6} online={:.6}",
+        y_naive.iter().sum::<f32>(),
+        y_safe.iter().sum::<f32>(),
+        y_online.iter().sum::<f32>());
+
+    // Safety: naive (Algorithm 1 verbatim, scalar) dies on large
+    // logits; online does not (paper §2-3).  The *vectorized* naive
+    // saturates instead of overflowing — use the scalar form to see
+    // the true failure mode.
+    let hot: Vec<f32> = logits.iter().map(|x| x + 120.0).collect();
+    let mut naive_hot = vec![0.0; hot.len()];
+    softmax::scalar::naive(&hot, &mut naive_hot);
+    let online_hot = softmax::compute(&hot, Algorithm::Online);
+    println!(
+        "after +120 shift: naive finite? {}  online finite? {}",
+        naive_hot.iter().all(|v| v.is_finite()),
+        online_hot.iter().all(|v| v.is_finite())
+    );
+    assert!(!naive_hot.iter().all(|v| v.is_finite()), "Alg 1 must overflow here");
+
+    // --- §3.1: the ⊕ monoid — split anywhere, merge, same answer --------
+    let (left, right) = logits.split_at(3000);
+    let whole = softmax::vectorized::online_normalizer(&logits);
+    let merged = softmax::vectorized::online_normalizer(left)
+        .combine(softmax::vectorized::online_normalizer(right));
+    println!("⊕ merge: whole=(m {:.4}, d {:.4})  merged=(m {:.4}, d {:.4})",
+        whole.m, whole.d, merged.m, merged.d);
+    assert_eq!(whole.m, merged.m);
+
+    // --- Algorithm 4: fused online softmax + top-k ----------------------
+    let (vals, idx) = fused::online_topk(&logits, 5);
+    println!("top-5 next-token probabilities:");
+    for (v, i) in vals.iter().zip(&idx) {
+        println!("  token {i:>6}  p = {v:.5}");
+    }
+
+    // --- the paper's access arithmetic ----------------------------------
+    let v100 = DeviceModel::v100();
+    println!(
+        "\nanalytic V100 speedups at V=25000, batch 4000:\n  online vs safe softmax: {:.2}x (paper ~1.3x)\n  fused Alg4 vs safe-unfused: {:.2}x (paper ~5x)",
+        v100.speedup(Pipeline::SafeSoftmax, Pipeline::OnlineSoftmax, 25_000, 4000),
+        v100.speedup(Pipeline::SafeUnfusedTopK, Pipeline::OnlineFusedTopK, 25_000, 4000)
+    );
+
+    // MD is also usable directly for streaming normalization:
+    let mut md = MD::IDENTITY;
+    for &x in &logits[..100] {
+        md = md.push(x);
+    }
+    println!("\nstreaming (m, d) after 100 elements: ({:.4}, {:.4})", md.m, md.d);
+}

@@ -1,0 +1,230 @@
+"""AOT lowering: JAX decode graphs → HLO *text* artifacts for the rust runtime.
+
+``python -m compile.aot --out-dir ../artifacts`` lowers every serving
+variant in :mod:`compile.model` for the configured shape buckets and
+writes:
+
+* ``artifacts/<name>.hlo.txt``  — one HLO-text module per executable,
+* ``artifacts/manifest.json``   — machine-readable index (shapes,
+  dtypes, variant metadata) consumed by ``rust/src/runtime/manifest.rs``.
+
+HLO **text** is the interchange format, not ``lowered.compile()`` /
+serialized protos: jax ≥ 0.5 emits HloModuleProto with 64-bit
+instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Python runs ONLY here, at build time.  The rust binary is self-contained
+once ``artifacts/`` exists; ``make artifacts`` is a no-op when inputs
+are unchanged.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# ---------------------------------------------------------------------------
+# Shape configuration.  Batch buckets mirror the coordinator's padding
+# policy (rust/src/coordinator/batcher.rs): requests are padded up to the
+# next bucket so a small, fixed set of executables covers all loads.
+# ---------------------------------------------------------------------------
+
+DEFAULT_BATCH_BUCKETS = (1, 4, 16)
+DEFAULT_VOCAB = 8192
+DEFAULT_HIDDEN = 128
+DEFAULT_K = 5
+DEFAULT_SHARDS = 4
+
+
+def _f32(*dims: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(dims), jnp.float32)
+
+
+def _i32(*dims: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(dims), jnp.int32)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, example_args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+# ---------------------------------------------------------------------------
+# Artifact catalogue.
+# ---------------------------------------------------------------------------
+
+def build_catalogue(
+    batches=DEFAULT_BATCH_BUCKETS,
+    vocab=DEFAULT_VOCAB,
+    hidden=DEFAULT_HIDDEN,
+    k=DEFAULT_K,
+    shards=DEFAULT_SHARDS,
+    with_pallas=True,
+):
+    """Return ``[(name, fn, example_args, meta), ...]`` for every artifact.
+
+    ``meta`` flows verbatim into the manifest; the rust side keys its
+    executable registry on (variant, batch) and validates shard layout
+    against (vocab, shard_count).
+    """
+    if vocab % shards:
+        raise ValueError(f"vocab={vocab} must divide into shards={shards}")
+    vs = vocab // shards
+    cat = []
+
+    for b in batches:
+        # Full-vocab softmax serving (Figures 1-2 workload).
+        cat.append((
+            f"softmax_safe_b{b}_v{vocab}",
+            model.softmax_safe_jnp,
+            (_f32(b, vocab),),
+            dict(variant="softmax_safe", batch=b, vocab=vocab),
+        ))
+        # Sharded softmax: per-shard partial (m, d) + second-pass scale.
+        cat.append((
+            f"softmax_partial_b{b}_v{vs}",
+            model.softmax_partial_jnp,
+            (_f32(b, vs),),
+            dict(variant="softmax_partial", batch=b, vocab=vs),
+        ))
+        cat.append((
+            f"softmax_scale_b{b}_v{vs}",
+            model.softmax_scale_jnp,
+            (_f32(b, vs), _f32(b), _f32(b)),
+            dict(variant="softmax_scale", batch=b, vocab=vs),
+        ))
+        # Beam-search decode: projection + softmax + top-k (Figures 3-4).
+        cat.append((
+            f"decode_topk_b{b}_h{hidden}_v{vocab}_k{k}",
+            functools.partial(model.decode_topk_jnp, k=k),
+            (_f32(b, hidden), _f32(vocab, hidden)),
+            dict(variant="decode_topk_safe", batch=b, vocab=vocab, hidden=hidden, k=k),
+        ))
+        cat.append((
+            f"decode_topk_online_b{b}_h{hidden}_v{vocab}_k{k}",
+            functools.partial(model.decode_topk_online_jnp, k=k),
+            (_f32(b, hidden), _f32(vocab, hidden)),
+            dict(variant="decode_topk_online", batch=b, vocab=vocab, hidden=hidden, k=k),
+        ))
+        # Sharded decode partial: the ⊕-mergeable unit of §3.1.
+        cat.append((
+            f"decode_partial_b{b}_h{hidden}_vs{vs}_k{k}",
+            functools.partial(model.decode_partial_jnp, k=k),
+            (_f32(b, hidden), _f32(vs, hidden)),
+            dict(variant="decode_partial", batch=b, vocab=vs, hidden=hidden, k=k,
+                 shard_count=shards, full_vocab=vocab),
+        ))
+        # Toy-LM recurrent state update for the end-to-end example.
+        cat.append((
+            f"lm_step_b{b}_h{hidden}_v{vocab}",
+            model.toy_lm_step,
+            (_f32(vocab, hidden), _f32(hidden, hidden), _f32(hidden, hidden),
+             _f32(b, hidden), _i32(b)),
+            dict(variant="lm_step", batch=b, vocab=vocab, hidden=hidden),
+        ))
+
+    if with_pallas:
+        # Kernel-integration artifacts: the L1 Pallas kernels lowered
+        # (interpret mode) into self-contained HLO, executed by the rust
+        # integration tests to prove the full L1→L3 path composes.
+        # Small shapes: interpret-mode HLO is while-loop heavy.
+        pb, pv, ph, pk = 2, 1024, 64, 5
+        cat.append((
+            f"softmax_online_pallas_b{pb}_v{pv}",
+            model.softmax_online_pallas,
+            (_f32(pb, pv),),
+            dict(variant="softmax_online_pallas", batch=pb, vocab=pv),
+        ))
+        cat.append((
+            f"decode_topk_pallas_b{pb}_h{ph}_v{pv}_k{pk}",
+            functools.partial(model.decode_topk_pallas, k=pk),
+            (_f32(pb, ph), _f32(pv, ph)),
+            dict(variant="decode_topk_pallas", batch=pb, vocab=pv, hidden=ph, k=pk),
+        ))
+    return cat
+
+
+def _spec_json(args) -> list[dict]:
+    return [
+        {"shape": list(a.shape), "dtype": str(a.dtype)} for a in args
+    ]
+
+
+def _out_spec(fn, example_args) -> list[dict]:
+    outs = jax.eval_shape(fn, *example_args)
+    leaves = jax.tree_util.tree_leaves(outs)
+    return [{"shape": list(o.shape), "dtype": str(o.dtype)} for o in leaves]
+
+
+def write_artifacts(out_dir: str, catalogue, *, verbose=True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": 1, "artifacts": []}
+    for name, fn, args, meta in catalogue:
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        text = lower_entry(fn, args)
+        with open(path, "w") as f:
+            f.write(text)
+        entry = dict(meta)
+        entry.update(
+            name=name,
+            file=f"{name}.hlo.txt",
+            inputs=_spec_json(args),
+            outputs=_out_spec(fn, args),
+            sha256=hashlib.sha256(text.encode()).hexdigest(),
+        )
+        manifest["artifacts"].append(entry)
+        if verbose:
+            print(f"  {name}: {len(text)} chars", file=sys.stderr)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="legacy single-file makefile hook; "
+                    "writes the full artifact set into its directory")
+    ap.add_argument("--vocab", type=int, default=DEFAULT_VOCAB)
+    ap.add_argument("--hidden", type=int, default=DEFAULT_HIDDEN)
+    ap.add_argument("--k", type=int, default=DEFAULT_K)
+    ap.add_argument("--shards", type=int, default=DEFAULT_SHARDS)
+    ap.add_argument("--batches", type=int, nargs="+", default=list(DEFAULT_BATCH_BUCKETS))
+    ap.add_argument("--no-pallas", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    cat = build_catalogue(
+        batches=tuple(args.batches), vocab=args.vocab, hidden=args.hidden,
+        k=args.k, shards=args.shards, with_pallas=not args.no_pallas,
+    )
+    manifest = write_artifacts(out_dir, cat)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {out_dir}", file=sys.stderr)
+    if args.out:
+        # Makefile stamp: ensure the named sentinel exists.
+        if not os.path.exists(args.out):
+            with open(args.out, "w") as f:
+                f.write("# see manifest.json\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Golden-vector generator: jnp reference results → JSON for rust tests.
+
+``python -m compile.golden --out ../rust/tests/golden`` writes small,
+deterministic input/output pairs computed by the :mod:`compile.kernels.ref`
+oracles.  The rust test-suite (``rust/tests/golden_vectors.rs``) replays
+them against the rust softmax/topk implementations, closing the loop
+between the two halves of the stack without python on the rust side.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+
+
+def _rng(seed: int) -> jax.Array:
+    return jax.random.PRNGKey(seed)
+
+
+def _cases():
+    """(name, x) pairs covering the interesting numeric regimes."""
+    mk = jax.random.normal
+    yield "gauss_small", mk(_rng(0), (3, 17)) * 2.0
+    yield "gauss_wide", mk(_rng(1), (2, 257)) * 10.0
+    yield "large_positive", mk(_rng(2), (2, 64)) * 5.0 + 80.0   # naive overflows
+    yield "large_negative", mk(_rng(3), (2, 64)) * 5.0 - 80.0
+    yield "constant_rows", jnp.full((2, 33), 3.25)
+    yield "single_element", jnp.asarray([[42.0]])
+    yield "two_elements", jnp.asarray([[1.0, -1.0], [5.0, 5.0]])
+    yield "monotone", jnp.arange(96, dtype=jnp.float32).reshape(1, 96) / 7.0
+    yield "alternating", jnp.asarray([[(-1.0) ** i * (i % 13) for i in range(101)]])
+
+
+def build(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    cases = []
+    for name, x in _cases():
+        x = x.astype(jnp.float32)
+        m, d = ref.online_normalizer(x)
+        y = ref.softmax_safe(x)
+        k = min(5, x.shape[-1])
+        tv, tz = ref.softmax_topk(x, k)
+        cases.append({
+            "name": name,
+            "x": np.asarray(x).tolist(),
+            "m": np.asarray(m).tolist(),
+            "d": np.asarray(d).tolist(),
+            "y": np.asarray(y).tolist(),
+            "k": k,
+            "topk_vals": np.asarray(tv).tolist(),
+            "topk_idx": np.asarray(tz).tolist(),
+        })
+
+    # ⊕-merge cases: random shard splits whose merge must equal the
+    # whole-vector normalizer.
+    merges = []
+    for seed, (b, v, s) in enumerate([(2, 96, 3), (1, 128, 4), (4, 60, 5)]):
+        x = jax.random.normal(_rng(100 + seed), (b, v)) * 4.0
+        m, d = ref.online_normalizer(x)
+        parts = []
+        vs = v // s
+        for i in range(s):
+            pm, pd = ref.online_normalizer(x[:, i * vs : (i + 1) * vs])
+            parts.append({"m": np.asarray(pm).tolist(), "d": np.asarray(pd).tolist()})
+        merges.append({
+            "parts": parts,
+            "m": np.asarray(m).tolist(),
+            "d": np.asarray(d).tolist(),
+        })
+
+    with open(os.path.join(out_dir, "softmax_golden.json"), "w") as f:
+        json.dump({"cases": cases, "merges": merges}, f)
+    print(f"wrote {len(cases)} cases + {len(merges)} merges to {out_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../rust/tests/golden")
+    args = ap.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    main()

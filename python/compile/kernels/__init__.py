@@ -1,0 +1,20 @@
+"""L1 — Pallas kernels for the paper's softmax algorithms.
+
+Modules map one-to-one onto the paper:
+
+* :mod:`.naive`      — Algorithm 1 (2-pass, numerically unsafe baseline)
+* :mod:`.safe`       — Algorithm 2 (3-pass, the framework default)
+* :mod:`.online`     — Algorithm 3 (single-pass online normalizer)
+* :mod:`.fused_topk` — Algorithm 4 (online softmax ⊕ running top-k) and
+  the safe-fused baseline
+* :mod:`.ref`        — pure-jnp oracles used by pytest and by the fast
+  serving path lowered in :mod:`compile.aot`
+
+All kernels run under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); block structure is still authored for the TPU memory
+hierarchy — see DESIGN.md §Hardware-Adaptation.
+"""
+
+from . import common, fused_topk, naive, online, ref, safe  # noqa: F401
+
+__all__ = ["common", "naive", "safe", "online", "fused_topk", "ref"]

@@ -1,0 +1,115 @@
+"""Shared plumbing for the Pallas softmax kernels.
+
+All kernels in this package operate on batched row vectors ``x : (B, V)``
+and tile the vocabulary axis into blocks of ``block_v`` columns — the TPU
+adaptation of the paper's CUDA "one threadblock per vector" layout (see
+DESIGN.md §Hardware-Adaptation).  The helpers here handle:
+
+* block-size selection respecting the (8, 128) TPU lane layout,
+* −∞ padding of the vocabulary axis so any ``V`` works with any block
+  size (``e^{−∞−m} = 0`` leaves both the max and the normalizer exact),
+* the mandatory ``interpret=True`` plumbing: the CPU PJRT plugin cannot
+  execute Mosaic custom-calls, so every kernel lowers through the Pallas
+  interpreter (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+# Lane width of the TPU vector unit; the natural V-block granularity.
+LANE = 128
+# Sublane count for fp32; the natural batch-block granularity.
+SUBLANE = 8
+
+# Default HBM→VMEM tile: 8 rows × 1024 logits ≈ 32 KiB of fp32, leaving
+# VMEM headroom for the (m, d) carries and the top-k candidate buffers.
+DEFAULT_BLOCK_V = 1024
+
+
+def pick_block_v(v: int, block_v: int | None = None) -> int:
+    """Choose a vocabulary block size.
+
+    Honours an explicit request, otherwise uses ``DEFAULT_BLOCK_V``
+    clamped to the (lane-rounded) vector length so tiny vectors do not
+    pay for a mostly-padded block.
+    """
+    if block_v is not None:
+        if block_v <= 0:
+            raise ValueError(f"block_v must be positive, got {block_v}")
+        return block_v
+    rounded = ((v + LANE - 1) // LANE) * LANE
+    return min(DEFAULT_BLOCK_V, max(LANE, rounded))
+
+
+def pad_vocab(x: jax.Array, block_v: int, fill) -> tuple[jax.Array, int]:
+    """Pad the last axis of ``x`` up to a multiple of ``block_v``.
+
+    Returns the padded array and the number of blocks.  ``fill`` is −∞
+    for max/normalizer passes (annihilates under both ``max`` and
+    ``Σ e^{·}``) and 0 for plain value passes.
+    """
+    if x.ndim != 2:
+        raise ValueError(f"expected (B, V) input, got shape {x.shape}")
+    v = x.shape[-1]
+    if v == 0:
+        raise ValueError("softmax over an empty vector is undefined")
+    pad = (-v) % block_v
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)), constant_values=fill)
+    return x, (v + pad) // block_v
+
+
+def validate_topk(v: int, k: int) -> None:
+    if k <= 0:
+        raise ValueError(f"k must be positive, got {k}")
+    if k > v:
+        raise ValueError(f"k={k} exceeds vector length V={v}")
+
+
+def as_f32(x: jax.Array) -> jax.Array:
+    """Kernels accumulate in fp32 regardless of the storage dtype,
+    mirroring the paper's fp32 ``d`` bound analysis (§3)."""
+    return x.astype(jnp.float32)
+
+
+def cast_back(y: jax.Array, like: jax.Array) -> jax.Array:
+    return y.astype(like.dtype)
+
+
+def row_iota(shape: tuple[int, ...], axis: int) -> jax.Array:
+    """Index helper usable inside Pallas kernels (≥2D iota only)."""
+    return jax.lax.broadcasted_iota(jnp.int32, shape, axis)
+
+
+def topk_desc(x: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Descending top-k via stable argsort (AOT-parser-safe).
+
+    Used inside Pallas kernels instead of ``jax.lax.top_k`` because the
+    latter lowers to an HLO ``topk`` op that the xla_extension 0.5.1
+    text parser cannot ingest.  Stable ⇒ earliest index wins ties, the
+    same convention as Algorithm 4's strict `<` insertion loop.
+    """
+    idx = jnp.argsort(-x, axis=-1, stable=True)[..., :k]
+    vals = jnp.take_along_axis(x, idx, axis=-1)
+    return vals, idx.astype(jnp.int32)
+
+
+def interpret_flag() -> bool:
+    """Pallas must run in interpret mode on this CPU-only testbed."""
+    return True
+
+
+def kernel_call(kernel, **kwargs):
+    """``pl.pallas_call`` with the package-wide interpret policy applied."""
+    from jax.experimental import pallas as pl
+
+    return pl.pallas_call(kernel, interpret=interpret_flag(), **kwargs)
+
+
+def jit_cached(fn):
+    """``jax.jit`` with static kernel-config args, cached per config."""
+    return functools.partial(jax.jit, static_argnames=("block_v", "k"))(fn)

@@ -1,0 +1,187 @@
+"""Algorithm 4 — Online softmax fused with TopK, plus the safe-fused baseline.
+
+The paper's beam-search fast path: while the online normalizer sweeps the
+vocabulary once, a running top-k candidate buffer ``(u, p)`` rides along
+in VMEM scratch.  The scalar Algorithm 4 inserts one element at a time
+into a (K+1)-slot sorted buffer; on tiled hardware we apply the same
+idea at block granularity (DESIGN.md §Hardware-Adaptation):
+
+    per block:  (m, d) ← (m, d) ⊕ (m_blk, d_blk)          [eq. 4]
+                (u, p) ← top_k(concat(u, topk_blk), K)    [lines 8-15]
+
+Both reductions are associative, so the block-merge computes exactly the
+same ``(m_V, d_V, u, p)`` as the element-wise loop.  Memory traffic:
+**1 load / element** (plus O(K) outputs) — versus 5 accesses / element
+for safe-softmax-then-TopK run separately.
+
+Also provided: :func:`safe_fused` — Safe softmax fused with TopK (the
+middle bar of Figures 3-4): one max pass, then one fused sum+topk pass =
+2 loads / element.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common, safe
+
+
+def _merge_topk(u_old, p_old, vals_blk, idx_blk, k):
+    """Associative top-k merge: keep the k best of (running ∪ block)."""
+    from . import common
+
+    cat_v = jnp.concatenate([u_old, vals_blk], axis=-1)
+    cat_i = jnp.concatenate([p_old, idx_blk], axis=-1)
+    u_new, sel = common.topk_desc(cat_v, k)
+    p_new = jnp.take_along_axis(cat_i, sel, axis=-1)
+    return u_new, p_new
+
+
+def _online_fused_kernel(x_ref, m_ref, d_ref, u_ref, p_ref, *, k: int, block_v: int):
+    """Grid: (num_v_blocks,).  Carries (m, d) and the top-k buffer (u, p)."""
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        d_ref[...] = jnp.zeros_like(d_ref)
+        u_ref[...] = jnp.full_like(u_ref, -jnp.inf)
+        p_ref[...] = jnp.full_like(p_ref, -1)
+
+    xb = common.as_f32(x_ref[...])
+    b = xb.shape[0]
+
+    # --- normalizer: one ⊕ fold per block (lines 6-7 of Algorithm 4).
+    m_blk = jnp.max(xb, axis=-1)
+    d_blk = jnp.sum(jnp.exp(xb - m_blk[:, None]), axis=-1)
+    m_old = m_ref[...]
+    m_new = jnp.maximum(m_old, m_blk)
+    scale_old = jnp.where(jnp.isneginf(m_old), 0.0, jnp.exp(m_old - m_new))
+    d_ref[...] = d_ref[...] * scale_old + d_blk * jnp.exp(m_blk - m_new)
+    m_ref[...] = m_new
+
+    # --- running top-k: block candidates, then associative merge
+    #     (lines 8-15 of Algorithm 4, blocked).
+    vals_blk, idx_local = common.topk_desc(xb, k)
+    idx_blk = (idx_local + j * block_v).astype(jnp.int32)
+    u_new, p_new = _merge_topk(u_ref[...], p_ref[...], vals_blk, idx_blk, k)
+    u_ref[...] = u_new
+    p_ref[...] = p_new
+
+
+def _safe_fused_kernel(x_ref, m_ref, d_ref, u_ref, p_ref, *, k: int, block_v: int):
+    """Pass 2 of safe-fused: given m, carry (d, u, p) in one sweep."""
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        d_ref[...] = jnp.zeros_like(d_ref)
+        u_ref[...] = jnp.full_like(u_ref, -jnp.inf)
+        p_ref[...] = jnp.full_like(p_ref, -1)
+
+    xb = common.as_f32(x_ref[...])
+    d_ref[...] += jnp.sum(jnp.exp(xb - m_ref[...][:, None]), axis=-1)
+
+    vals_blk, idx_local = common.topk_desc(xb, k)
+    idx_blk = (idx_local + j * block_v).astype(jnp.int32)
+    u_new, p_new = _merge_topk(u_ref[...], p_ref[...], vals_blk, idx_blk, k)
+    u_ref[...] = u_new
+    p_ref[...] = p_new
+
+
+def _finalize(m, d, u, p):
+    """Lines 17-19: turn raw top-k logits into probabilities."""
+    vals = jnp.exp(u - m[:, None]) / d[:, None]
+    return vals, p
+
+
+def online_fused_raw(
+    x: jax.Array, k: int, *, block_v: int | None = None
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Single-pass ``(m, d, u, p)`` — the shard-partial building block.
+
+    ``u``/``p`` are the raw top-k *logits* and indices; the caller (or
+    the rust coordinator, for vocabulary shards) applies eq. (4) merges
+    and the final ``e^{u−m}/d`` scaling.
+    """
+    b, v = x.shape
+    bv = common.pick_block_v(v, block_v)
+    common.validate_topk(v, k)
+    if k > bv:
+        raise ValueError(f"k={k} must not exceed block_v={bv}")
+    xp, nblk = common.pad_vocab(x, bv, fill=-jnp.inf)
+
+    import functools
+
+    kern = functools.partial(_online_fused_kernel, k=k, block_v=bv)
+    m, d, u, p = common.kernel_call(
+        kern,
+        grid=(nblk,),
+        in_specs=[pl.BlockSpec((b, bv), lambda j: (0, j))],
+        out_specs=[
+            pl.BlockSpec((b,), lambda j: (0,)),
+            pl.BlockSpec((b,), lambda j: (0,)),
+            pl.BlockSpec((b, k), lambda j: (0, 0)),
+            pl.BlockSpec((b, k), lambda j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+        ],
+    )(xp)
+    return m, d, u, p
+
+
+def online_fused(
+    x: jax.Array, k: int, *, block_v: int | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """Full Algorithm 4: top-k softmax probabilities in one pass.
+
+    Returns ``(vals, idx)`` with ``vals[i] = softmax(x)[idx[i]]`` sorted
+    descending.
+    """
+    m, d, u, p = online_fused_raw(x, k, block_v=block_v)
+    return _finalize(m, d, u, p)
+
+
+def safe_fused(
+    x: jax.Array, k: int, *, block_v: int | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """Safe softmax fused with TopK: 2 passes (max, then sum+topk).
+
+    The middle bar in Figures 3-4 — fusion without the online normalizer.
+    """
+    b, v = x.shape
+    bv = common.pick_block_v(v, block_v)
+    common.validate_topk(v, k)
+    if k > bv:
+        raise ValueError(f"k={k} must not exceed block_v={bv}")
+    m = safe.rowmax(x, block_v=bv)
+    xp, nblk = common.pad_vocab(x, bv, fill=-jnp.inf)
+
+    import functools
+
+    kern = functools.partial(_safe_fused_kernel, k=k, block_v=bv)
+    d, u, p = common.kernel_call(
+        kern,
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((b, bv), lambda j: (0, j)),
+            pl.BlockSpec((b,), lambda j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b,), lambda j: (0,)),
+            pl.BlockSpec((b, k), lambda j: (0, 0)),
+            pl.BlockSpec((b, k), lambda j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+        ],
+    )(xp, m)
+    return _finalize(m, d, u, p)

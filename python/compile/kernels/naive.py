@@ -1,0 +1,71 @@
+"""Algorithm 1 — naive softmax as a Pallas kernel pair.
+
+Two passes over the input (3 memory accesses / element):
+
+* pass 1 (:func:`_normalizer_kernel`): accumulate ``d = Σ e^{x_j}``
+  block-by-block, carrying ``d`` in a VMEM carry output across the grid,
+* pass 2 (:func:`_scale_kernel`): ``y_i = e^{x_i} / d``.
+
+Not numerically safe — ``e^{x}`` overflows fp32 for x ≳ 88.7 — but it is
+the paper's performance baseline (its access pattern matches Online
+softmax, which is the point of Figure 1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _normalizer_kernel(x_ref, d_ref):
+    """Grid: (num_v_blocks,).  Carries the running Σ e^{x} in d_ref."""
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        d_ref[...] = jnp.zeros_like(d_ref)
+
+    xb = common.as_f32(x_ref[...])
+    d_ref[...] += jnp.sum(jnp.exp(xb), axis=-1)
+
+
+def _scale_kernel(x_ref, d_ref, y_ref):
+    xb = common.as_f32(x_ref[...])
+    y = jnp.exp(xb) / d_ref[...][:, None]
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+def normalizer(x: jax.Array, *, block_v: int | None = None) -> jax.Array:
+    """Pass 1 of Algorithm 1: ``d = Σ_j e^{x_j}`` per row."""
+    b, v = x.shape
+    bv = common.pick_block_v(v, block_v)
+    xp, nblk = common.pad_vocab(x, bv, fill=-jnp.inf)
+    return common.kernel_call(
+        _normalizer_kernel,
+        grid=(nblk,),
+        in_specs=[pl.BlockSpec((b, bv), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((b,), lambda j: (0,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+    )(xp)
+
+
+def softmax(x: jax.Array, *, block_v: int | None = None) -> jax.Array:
+    """Full Algorithm 1: naive softmax over the last axis of ``(B, V)``."""
+    b, v = x.shape
+    bv = common.pick_block_v(v, block_v)
+    d = normalizer(x, block_v=bv)
+    xp, nblk = common.pad_vocab(x, bv, fill=-jnp.inf)
+    yp = common.kernel_call(
+        _scale_kernel,
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((b, bv), lambda j: (0, j)),
+            pl.BlockSpec((b,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((b, bv), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+    )(xp, d)
+    return yp[:, :v]

@@ -1,0 +1,112 @@
+"""Pure-jnp reference oracles for the softmax / top-k kernels.
+
+These are the *correctness ground truth* for every Pallas kernel in this
+package and for the rust implementations (via golden files emitted by
+``python -m compile.golden``).  They intentionally mirror the paper's
+algorithm definitions:
+
+* :func:`softmax_naive`   — Algorithm 1 (no max subtraction, 2 passes).
+* :func:`softmax_safe`    — Algorithm 2 (max-subtracted, 3 passes) — the
+  formulation used by every major DL framework.
+* :func:`online_normalizer` — lines 1-6 of Algorithm 3 expressed as a
+  vectorized computation (the quantity the online kernel must produce).
+* :func:`md_combine`      — the ⊕ operator from eq. (4) of the paper.
+* :func:`softmax_topk`    — Softmax followed by TopK, eq. (5).
+
+Everything here is straight-line ``jnp``: XLA sees the whole graph and
+is free to fuse, so these also serve as the *fast serving path* lowered
+by ``compile.aot`` (see DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "softmax_naive",
+    "softmax_safe",
+    "online_normalizer",
+    "md_combine",
+    "md_identity",
+    "softmax_topk",
+    "topk",
+]
+
+
+def softmax_naive(x: jax.Array) -> jax.Array:
+    """Algorithm 1: softmax without max subtraction.
+
+    Overflows for inputs ≳ 88.7 (fp32); kept as the numerical baseline
+    the paper compares against.  Rows are the last axis.
+    """
+    e = jnp.exp(x.astype(jnp.float32))
+    return (e / jnp.sum(e, axis=-1, keepdims=True)).astype(x.dtype)
+
+
+def softmax_safe(x: jax.Array) -> jax.Array:
+    """Algorithm 2: the standard max-subtracted ("safe") softmax."""
+    xf = x.astype(jnp.float32)
+    m = jnp.max(xf, axis=-1, keepdims=True)
+    e = jnp.exp(xf - m)
+    return (e / jnp.sum(e, axis=-1, keepdims=True)).astype(x.dtype)
+
+
+def online_normalizer(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Reference for lines 1-6 of Algorithm 3.
+
+    Returns ``(m, d)`` with ``m = max_j x_j`` and
+    ``d = Σ_j e^{x_j − m}`` over the last axis.  The online kernel must
+    produce exactly this pair (up to fp associativity).
+    """
+    xf = x.astype(jnp.float32)
+    m = jnp.max(xf, axis=-1)
+    d = jnp.sum(jnp.exp(xf - m[..., None]), axis=-1)
+    return m, d
+
+
+def md_identity(shape=(), dtype=jnp.float32) -> tuple[jax.Array, jax.Array]:
+    """Identity element of the ⊕ monoid: ``(−∞, 0)``."""
+    return (jnp.full(shape, -jnp.inf, dtype), jnp.zeros(shape, dtype))
+
+
+def md_combine(
+    a: tuple[jax.Array, jax.Array], b: tuple[jax.Array, jax.Array]
+) -> tuple[jax.Array, jax.Array]:
+    """The ⊕ operator, eq. (4): merge two partial (m, d) normalizer pairs.
+
+    Associative and commutative; ``md_identity()`` is its identity.
+    ``jnp.where`` guards the ``−∞ − −∞ = nan`` corner when one side is
+    the identity element.
+    """
+    m_a, d_a = a
+    m_b, d_b = b
+    m = jnp.maximum(m_a, m_b)
+    # e^{−∞ − −∞} must act as 0-weighted, not nan:
+    scale_a = jnp.where(jnp.isneginf(m_a) & jnp.isneginf(m), 0.0, jnp.exp(m_a - m))
+    scale_b = jnp.where(jnp.isneginf(m_b) & jnp.isneginf(m), 0.0, jnp.exp(m_b - m))
+    return m, d_a * scale_a + d_b * scale_b
+
+
+def topk(x: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Eq. (5): values and int32 indices of the k largest entries.
+
+    Implemented with a stable argsort rather than ``jax.lax.top_k``:
+    the modern lowering of ``top_k`` emits an HLO ``topk(..., largest)``
+    custom op that xla_extension 0.5.1's text parser rejects, while
+    ``sort`` round-trips cleanly (see DESIGN.md §Hardware-Adaptation).
+    Stable sort ⇒ ties resolve to the lowest index, matching both
+    ``lax.top_k`` and the rust ``TopKBuffer``.
+    """
+    idx = jnp.argsort(-x, axis=-1, stable=True)[..., :k]
+    vals = jnp.take_along_axis(x, idx, axis=-1)
+    return vals, idx.astype(jnp.int32)
+
+
+def softmax_topk(x: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Safe softmax followed by TopK — the unfused baseline of §4.
+
+    Returns ``(v, z)``: the k largest *probabilities* and their indices.
+    """
+    y = softmax_safe(x)
+    return topk(y, k)

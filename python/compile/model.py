@@ -1,0 +1,135 @@
+"""L2 — the JAX decode-step graphs the rust coordinator serves.
+
+The paper's motivating workload (§1, §4) is the output end of an
+auto-regressive language model: a projection layer mapping the hidden
+state into vocabulary space, followed by Softmax (training / scoring)
+or Softmax+TopK (beam-search inference).  This module defines every
+graph the serving system executes, in two flavours:
+
+* ``*_jnp``    — straight-line jnp (XLA fuses it); the production
+  serving path lowered to HLO by :mod:`compile.aot`.
+* ``*_pallas`` — the same graph but routed through the L1 Pallas
+  kernels, used for cross-validation and for the kernel-integration
+  artifact the rust test-suite executes.
+
+Sharded serving: :func:`decode_partial` computes, for one vocabulary
+shard, the tuple ``(m, d, u, p)`` — partial online normalizer (lines
+1-6 of Algorithm 3) plus shard-local top-k candidates.  The rust
+coordinator merges shards with the ⊕ operator (eq. 4) and finalizes
+``v = e^{u − m}/d``; that merge is exactly §3.1's parallel online
+normalizer calculation, promoted to the distributed layer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused_topk, online, ref, safe
+
+
+# ---------------------------------------------------------------------------
+# Projection layer (the paper's "projects hidden representation into the
+# output vocabulary space").
+# ---------------------------------------------------------------------------
+
+def project(h: jax.Array, w: jax.Array) -> jax.Array:
+    """``logits = h · Wᵀ``;  h: (B, H), w: (V, H) → (B, V)."""
+    return jnp.dot(h, w.T, preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Full-vocabulary decode steps (single executable owns the whole vocab).
+# ---------------------------------------------------------------------------
+
+def softmax_safe_jnp(x: jax.Array) -> tuple[jax.Array]:
+    """Logits → probabilities, Algorithm 2 semantics (serving default)."""
+    return (ref.softmax_safe(x),)
+
+
+def softmax_online_pallas(x: jax.Array) -> tuple[jax.Array]:
+    """Logits → probabilities through the L1 online-softmax kernel."""
+    return (online.softmax(x),)
+
+
+def decode_topk_jnp(h: jax.Array, w: jax.Array, *, k: int) -> tuple[jax.Array, jax.Array]:
+    """Projection → safe softmax → top-k (the unfused baseline path)."""
+    logits = project(h, w)
+    return ref.softmax_topk(logits, k)
+
+
+def decode_topk_online_jnp(h: jax.Array, w: jax.Array, *, k: int) -> tuple[jax.Array, jax.Array]:
+    """Projection → online-normalizer top-k, expressed in jnp.
+
+    Semantically Algorithm 4: the normalizer and the top-k are both
+    single-reduction consumers of the logits, so XLA can fuse them into
+    one sweep — the jnp rendering of the paper's fused kernel.
+    """
+    logits = project(h, w)
+    m, d = ref.online_normalizer(logits)
+    u, p = ref.topk(logits, k)
+    v = jnp.exp(u - m[:, None]) / d[:, None]
+    return v, p
+
+
+def decode_topk_pallas(h: jax.Array, w: jax.Array, *, k: int) -> tuple[jax.Array, jax.Array]:
+    """Projection → the L1 fused online-softmax+topk kernel (Algorithm 4)."""
+    logits = project(h, w)
+    return fused_topk.online_fused(logits, k)
+
+
+# ---------------------------------------------------------------------------
+# Vocabulary-sharded decode: per-shard partials merged by the rust L3.
+# ---------------------------------------------------------------------------
+
+def decode_partial_jnp(
+    h: jax.Array, w_shard: jax.Array, *, k: int
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One vocab shard's ``(m, d, u, p_local)`` — jnp fast path.
+
+    ``p_local`` indexes into the shard; the coordinator adds the shard's
+    vocabulary offset before the global ⊕/top-k merge.
+    """
+    logits = project(h, w_shard)
+    m, d = ref.online_normalizer(logits)
+    u, p = ref.topk(logits, k)
+    return m, d, u, p
+
+
+def decode_partial_pallas(
+    h: jax.Array, w_shard: jax.Array, *, k: int
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Shard partial through the single-pass L1 kernel (Algorithm 4 core)."""
+    logits = project(h, w_shard)
+    return fused_topk.online_fused_raw(logits, k)
+
+
+def softmax_partial_jnp(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Shard partial for plain softmax serving: just ``(m, d)`` (Alg 3 1-6)."""
+    return ref.online_normalizer(x)
+
+
+def softmax_scale_jnp(x: jax.Array, m: jax.Array, d: jax.Array) -> tuple[jax.Array]:
+    """Second pass for sharded softmax: ``y = e^{x − m} / d`` given the
+    globally ⊕-merged ``(m, d)`` from the coordinator."""
+    xf = x.astype(jnp.float32)
+    return ((jnp.exp(xf - m[:, None]) / d[:, None]).astype(x.dtype),)
+
+
+# ---------------------------------------------------------------------------
+# Tiny LM used by the end-to-end example: an embedding + GRU-free
+# feed-forward state update, enough to drive realistic beam search
+# without a training framework.  Deterministic given the seed weights.
+# ---------------------------------------------------------------------------
+
+def toy_lm_step(
+    emb: jax.Array,  # (V, H) token embeddings
+    w1: jax.Array,   # (H, H)
+    w2: jax.Array,   # (H, H)
+    state: jax.Array,  # (B, H)
+    token: jax.Array,  # (B,) int32
+) -> tuple[jax.Array]:
+    """One recurrent state update: ``s' = tanh(s·W1 + E[token]·W2)``."""
+    e = jnp.take(emb, token, axis=0)
+    new = jnp.tanh(jnp.dot(state, w1) + jnp.dot(e, w2))
+    return (new,)

@@ -1,0 +1,18 @@
+"""Pytest wiring: make the ``compile`` package importable regardless of
+where pytest is invoked from, and pin hypothesis to interpreter-friendly
+profiles (Pallas interpret mode is slow per example)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "kernels",
+    max_examples=25,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("kernels")

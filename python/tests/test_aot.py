@@ -1,0 +1,85 @@
+"""AOT pipeline: lowering produces loadable HLO text + a sound manifest."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+class TestLowering:
+    def test_hlo_text_has_entry(self):
+        text = aot.lower_entry(model.softmax_safe_jnp, (aot._f32(2, 64),))
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+
+    def test_hlo_text_no_serialized_proto(self):
+        """Interchange must be text — binary protos break xla_extension 0.5.1."""
+        text = aot.lower_entry(model.softmax_safe_jnp, (aot._f32(2, 64),))
+        assert text.isprintable() or "\n" in text
+
+    def test_lower_pallas_entry(self):
+        text = aot.lower_entry(model.softmax_online_pallas, (aot._f32(2, 128),))
+        assert text.startswith("HloModule")
+
+
+class TestCatalogue:
+    def test_default_catalogue_complete(self):
+        cat = aot.build_catalogue()
+        names = [c[0] for c in cat]
+        assert len(names) == len(set(names)), "duplicate artifact names"
+        for b in aot.DEFAULT_BATCH_BUCKETS:
+            assert f"softmax_safe_b{b}_v{aot.DEFAULT_VOCAB}" in names
+            assert any(n.startswith(f"decode_topk_b{b}_") for n in names)
+            assert any(n.startswith(f"decode_partial_b{b}_") for n in names)
+        assert any("pallas" in n for n in names)
+
+    def test_shard_divisibility_enforced(self):
+        with pytest.raises(ValueError):
+            aot.build_catalogue(vocab=100, shards=3)
+
+    def test_catalogue_meta_consistent(self):
+        for name, _, args, meta in aot.build_catalogue(with_pallas=False):
+            assert meta["batch"] in aot.DEFAULT_BATCH_BUCKETS
+            if meta["variant"].startswith("decode"):
+                # h input is (B, H); w input is (V|Vs, H)
+                assert args[0].shape == (meta["batch"], meta["hidden"])
+                assert args[1].shape[1] == meta["hidden"]
+
+
+class TestWriteArtifacts(object):
+    def test_manifest_roundtrip(self, tmp_path):
+        cat = [(
+            "softmax_safe_b2_v64",
+            model.softmax_safe_jnp,
+            (aot._f32(2, 64),),
+            dict(variant="softmax_safe", batch=2, vocab=64),
+        )]
+        manifest = aot.write_artifacts(str(tmp_path), cat, verbose=False)
+        with open(tmp_path / "manifest.json") as f:
+            on_disk = json.load(f)
+        assert on_disk == manifest
+        (entry,) = on_disk["artifacts"]
+        assert entry["inputs"] == [{"shape": [2, 64], "dtype": "float32"}]
+        assert entry["outputs"] == [{"shape": [2, 64], "dtype": "float32"}]
+        hlo = (tmp_path / entry["file"]).read_text()
+        assert hlo.startswith("HloModule")
+        import hashlib
+        assert entry["sha256"] == hashlib.sha256(hlo.encode()).hexdigest()
+
+    def test_partial_outputs_shapes(self, tmp_path):
+        import functools
+        cat = [(
+            "decode_partial_b2_h8_vs32_k3",
+            functools.partial(model.decode_partial_jnp, k=3),
+            (aot._f32(2, 8), aot._f32(32, 8)),
+            dict(variant="decode_partial", batch=2, vocab=32, hidden=8, k=3,
+                 shard_count=4, full_vocab=128),
+        )]
+        manifest = aot.write_artifacts(str(tmp_path), cat, verbose=False)
+        outs = manifest["artifacts"][0]["outputs"]
+        assert [o["shape"] for o in outs] == [[2], [2], [2, 3], [2, 3]]
+        assert outs[3]["dtype"] == "int32"

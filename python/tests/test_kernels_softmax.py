@@ -1,0 +1,136 @@
+"""L1 correctness: Pallas softmax kernels vs the jnp oracle.
+
+Hypothesis sweeps shapes, block sizes, magnitudes, and dtypes; each
+kernel must agree with :func:`ref.softmax_safe` (naive only within its
+non-overflowing range) and the online normalizer must match the
+whole-vector ``(m, d)`` bit-for-bit up to fp reassociation.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import common, naive, online, ref, safe
+
+shapes = st.tuples(st.integers(1, 6), st.integers(1, 700))
+blocks = st.sampled_from([16, 128, 256, 1024])
+scales = st.sampled_from([0.1, 1.0, 8.0, 30.0])
+
+
+def _rand(seed, shape, scale):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32) * scale
+
+
+@given(st.integers(0, 2**31 - 1), shapes, blocks, scales)
+def test_online_softmax_matches_ref(seed, shape, block_v, scale):
+    x = _rand(seed, shape, scale)
+    y = online.softmax(x, block_v=block_v)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(ref.softmax_safe(x)), rtol=2e-5, atol=1e-7
+    )
+
+
+@given(st.integers(0, 2**31 - 1), shapes, blocks, scales)
+def test_safe_softmax_matches_ref(seed, shape, block_v, scale):
+    x = _rand(seed, shape, scale)
+    y = safe.softmax(x, block_v=block_v)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(ref.softmax_safe(x)), rtol=2e-5, atol=1e-7
+    )
+
+
+@given(st.integers(0, 2**31 - 1), shapes, blocks)
+def test_naive_softmax_matches_ref_in_safe_range(seed, shape, block_v):
+    # moderate magnitudes only: naive is *expected* to overflow beyond ~88
+    x = _rand(seed, shape, 3.0)
+    y = naive.softmax(x, block_v=block_v)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(ref.softmax_safe(x)), rtol=2e-5, atol=1e-7
+    )
+
+
+@given(st.integers(0, 2**31 - 1), shapes, blocks, scales)
+def test_online_normalizer_matches_ref(seed, shape, block_v, scale):
+    x = _rand(seed, shape, scale)
+    m, d = online.normalizer(x, block_v=block_v)
+    rm, rd = ref.online_normalizer(x)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(rm))  # max is exact
+    np.testing.assert_allclose(np.asarray(d), np.asarray(rd), rtol=2e-6)
+
+
+@given(st.integers(0, 2**31 - 1), shapes, blocks)
+def test_safe_normalizer_matches_online(seed, shape, block_v):
+    """Algorithms 2 and 3 compute the same (m, d) — Theorem 1."""
+    x = _rand(seed, shape, 10.0)
+    m2, d2 = safe.normalizer(x, block_v=block_v)
+    m3, d3 = online.normalizer(x, block_v=block_v)
+    np.testing.assert_allclose(np.asarray(m2), np.asarray(m3))
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(d3), rtol=2e-6)
+
+
+class TestNumericalSafety:
+    def test_online_immune_to_large_inputs(self):
+        x = jnp.full((2, 300), 200.0)
+        y = np.asarray(online.softmax(x, block_v=128))
+        assert np.all(np.isfinite(y))
+        np.testing.assert_allclose(y.sum(-1), np.ones(2), rtol=1e-5)
+
+    def test_naive_overflows_where_online_does_not(self):
+        x = jnp.full((1, 64), 120.0)
+        assert not np.all(np.isfinite(np.asarray(naive.softmax(x, block_v=64))))
+        assert np.all(np.isfinite(np.asarray(online.softmax(x, block_v=64))))
+
+    def test_d_bound_holds_blockwise(self):
+        """1 ≤ d ≤ V survives the tiled ⊕ evaluation order."""
+        for v, bv in [(100, 16), (1000, 128), (515, 256)]:
+            x = _rand(v, (2, v), 25.0)
+            _, d = online.normalizer(x, block_v=bv)
+            d = np.asarray(d)
+            assert np.all(d >= 1.0 - 1e-5) and np.all(d <= v * (1 + 1e-5))
+
+
+class TestBlockEdgeCases:
+    @pytest.mark.parametrize("v", [1, 2, 15, 16, 17, 127, 128, 129, 1023, 1024, 1025])
+    def test_all_divisibility_regimes(self, v):
+        x = _rand(v, (3, v), 4.0)
+        np.testing.assert_allclose(
+            np.asarray(online.softmax(x, block_v=128)),
+            np.asarray(ref.softmax_safe(x)),
+            rtol=2e-5, atol=1e-7,
+        )
+
+    def test_block_larger_than_vector(self):
+        x = _rand(0, (2, 10), 2.0)
+        np.testing.assert_allclose(
+            np.asarray(online.softmax(x, block_v=1024)),
+            np.asarray(ref.softmax_safe(x)),
+            rtol=2e-5,
+        )
+
+    def test_default_block_pick(self):
+        assert common.pick_block_v(50) == 128
+        assert common.pick_block_v(3000) == 1024
+        assert common.pick_block_v(3000, 256) == 256
+
+    def test_rejects_empty_vector(self):
+        with pytest.raises(ValueError):
+            online.softmax(jnp.zeros((2, 0)), block_v=16)
+
+    def test_rejects_bad_block(self):
+        with pytest.raises(ValueError):
+            common.pick_block_v(10, 0)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dtype_roundtrip(dtype):
+    x = (_rand(7, (2, 200), 3.0)).astype(dtype)
+    y = online.softmax(x, block_v=128)
+    assert y.dtype == dtype
+    np.testing.assert_allclose(
+        np.asarray(y, dtype=np.float32),
+        np.asarray(ref.softmax_safe(x), dtype=np.float32),
+        rtol=2e-2 if dtype == jnp.bfloat16 else 2e-5,
+        atol=1e-3 if dtype == jnp.bfloat16 else 1e-7,
+    )

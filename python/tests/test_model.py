@@ -1,0 +1,127 @@
+"""L2 correctness: decode graphs, shard-partial contract, toy LM step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def _hw(seed, b=4, h=32, v=512):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    h_ = jax.random.normal(k1, (b, h), jnp.float32)
+    w_ = jax.random.normal(k2, (v, h), jnp.float32) * 0.3
+    return h_, w_
+
+
+class TestDecodeVariants:
+    def test_safe_and_online_agree(self):
+        h, w = _hw(0)
+        v1, z1 = model.decode_topk_jnp(h, w, k=5)
+        v2, z2 = model.decode_topk_online_jnp(h, w, k=5)
+        np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-5)
+        np.testing.assert_array_equal(np.asarray(z1), np.asarray(z2))
+
+    def test_pallas_decode_agrees(self):
+        h, w = _hw(1, b=2, h=16, v=256)
+        v1, z1 = model.decode_topk_jnp(h, w, k=5)
+        v2, z2 = model.decode_topk_pallas(h, w, k=5)
+        np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-5)
+        np.testing.assert_array_equal(np.asarray(z1), np.asarray(z2))
+
+    def test_topk_values_are_probabilities_of_logits(self):
+        h, w = _hw(2)
+        logits = model.project(h, w)
+        v, z = model.decode_topk_jnp(h, w, k=7)
+        y = np.asarray(ref.softmax_safe(logits))
+        for b in range(h.shape[0]):
+            np.testing.assert_allclose(np.asarray(v)[b], y[b][np.asarray(z)[b]], rtol=1e-5)
+
+
+class TestShardedDecode:
+    """The L3 merge contract: shard partials ⊕-merge to the full answer."""
+
+    @pytest.mark.parametrize("shards", [2, 4, 8])
+    def test_merged_shards_equal_full(self, shards):
+        b, hdim, v, k = 3, 32, 512, 5
+        h, w = _hw(3, b=b, h=hdim, v=v)
+        vs = v // shards
+
+        # full-vocab reference
+        rv, rz = model.decode_topk_jnp(h, w, k=k)
+
+        # shard partials + python rendition of the rust merge
+        m_acc, d_acc = ref.md_identity((b,))
+        u_all, p_all = [], []
+        for s in range(shards):
+            w_s = w[s * vs : (s + 1) * vs]
+            m, d, u, p = model.decode_partial_jnp(h, w_s, k=k)
+            m_acc, d_acc = ref.md_combine((m_acc, d_acc), (m, d))
+            u_all.append(np.asarray(u))
+            p_all.append(np.asarray(p) + s * vs)  # globalize indices
+
+        u_cat = np.concatenate(u_all, -1)
+        p_cat = np.concatenate(p_all, -1)
+        order = np.argsort(-u_cat, axis=-1, kind="stable")[:, :k]
+        u_top = np.take_along_axis(u_cat, order, -1)
+        p_top = np.take_along_axis(p_cat, order, -1)
+        vals = np.exp(u_top - np.asarray(m_acc)[:, None]) / np.asarray(d_acc)[:, None]
+
+        np.testing.assert_allclose(vals, np.asarray(rv), rtol=1e-5)
+        np.testing.assert_array_equal(p_top, np.asarray(rz))
+
+    def test_pallas_partial_matches_jnp_partial(self):
+        h, w = _hw(4, b=2, h=16, v=256)
+        out_j = model.decode_partial_jnp(h, w, k=5)
+        out_p = model.decode_partial_pallas(h, w, k=5)
+        for a, b_ in zip(out_j, out_p):
+            np.testing.assert_allclose(
+                np.asarray(a, dtype=np.float64), np.asarray(b_, dtype=np.float64), rtol=1e-5
+            )
+
+    def test_sharded_softmax_two_pass(self):
+        """softmax_partial + coordinator merge + softmax_scale == safe softmax."""
+        b, v, shards = 2, 384, 3
+        x = jax.random.normal(jax.random.PRNGKey(5), (b, v), jnp.float32) * 6
+        vs = v // shards
+        m_acc, d_acc = ref.md_identity((b,))
+        for s in range(shards):
+            part = model.softmax_partial_jnp(x[:, s * vs : (s + 1) * vs])
+            m_acc, d_acc = ref.md_combine((m_acc, d_acc), part)
+        pieces = [
+            np.asarray(model.softmax_scale_jnp(x[:, s * vs : (s + 1) * vs], m_acc, d_acc)[0])
+            for s in range(shards)
+        ]
+        y = np.concatenate(pieces, -1)
+        np.testing.assert_allclose(y, np.asarray(ref.softmax_safe(x)), rtol=1e-5)
+
+
+class TestToyLm:
+    def test_step_shapes_and_determinism(self):
+        v, hdim, b = 64, 16, 3
+        key = jax.random.PRNGKey(0)
+        ks = jax.random.split(key, 4)
+        emb = jax.random.normal(ks[0], (v, hdim))
+        w1 = jax.random.normal(ks[1], (hdim, hdim)) * 0.2
+        w2 = jax.random.normal(ks[2], (hdim, hdim)) * 0.2
+        state = jnp.zeros((b, hdim))
+        tok = jnp.asarray([1, 5, 9], jnp.int32)
+        (s1,) = model.toy_lm_step(emb, w1, w2, state, tok)
+        (s2,) = model.toy_lm_step(emb, w1, w2, state, tok)
+        assert s1.shape == (b, hdim)
+        np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+        assert np.all(np.abs(np.asarray(s1)) <= 1.0)
+
+    def test_step_depends_on_token(self):
+        v, hdim = 32, 8
+        key = jax.random.PRNGKey(1)
+        ks = jax.random.split(key, 3)
+        emb = jax.random.normal(ks[0], (v, hdim))
+        w1 = jnp.eye(hdim) * 0.5
+        w2 = jnp.eye(hdim) * 0.5
+        state = jax.random.normal(ks[1], (1, hdim))
+        (a,) = model.toy_lm_step(emb, w1, w2, state, jnp.asarray([0], jnp.int32))
+        (b_,) = model.toy_lm_step(emb, w1, w2, state, jnp.asarray([7], jnp.int32))
+        assert not np.allclose(np.asarray(a), np.asarray(b_))

@@ -1,0 +1,149 @@
+"""Oracle sanity: the pure-jnp references must themselves be right.
+
+Everything downstream (Pallas kernels, rust golden vectors, the serving
+artifacts) is validated against :mod:`compile.kernels.ref`, so this file
+pins the oracles to first principles: agreement with ``jax.nn.softmax``,
+probability-simplex invariants, the paper's boundedness claims for the
+normalizer, and the monoid laws of the ⊕ operator (§3.1).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import ref
+
+
+def _rand(seed, shape, scale=3.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32) * scale
+
+
+class TestSafeSoftmax:
+    def test_matches_jax_nn(self):
+        x = _rand(0, (5, 131))
+        np.testing.assert_allclose(
+            np.asarray(ref.softmax_safe(x)), np.asarray(jax.nn.softmax(x, axis=-1)),
+            rtol=1e-6,
+        )
+
+    def test_rows_sum_to_one(self):
+        y = np.asarray(ref.softmax_safe(_rand(1, (7, 64), scale=20.0)))
+        np.testing.assert_allclose(y.sum(-1), np.ones(7), rtol=1e-5)
+
+    def test_shift_invariance(self):
+        x = _rand(2, (3, 50))
+        np.testing.assert_allclose(
+            np.asarray(ref.softmax_safe(x)),
+            np.asarray(ref.softmax_safe(x + 123.0)),
+            rtol=1e-5,
+        )
+
+    def test_no_overflow_at_extremes(self):
+        x = jnp.asarray([[1000.0, 999.0, -1000.0]])
+        y = np.asarray(ref.softmax_safe(x))
+        assert np.all(np.isfinite(y))
+        np.testing.assert_allclose(y.sum(), 1.0, rtol=1e-6)
+
+    def test_single_element_is_one(self):
+        np.testing.assert_allclose(np.asarray(ref.softmax_safe(jnp.asarray([[7.0]]))), [[1.0]])
+
+
+class TestNaiveSoftmax:
+    def test_agrees_with_safe_in_moderate_range(self):
+        x = _rand(3, (4, 80))
+        np.testing.assert_allclose(
+            np.asarray(ref.softmax_naive(x)), np.asarray(ref.softmax_safe(x)), rtol=1e-5
+        )
+
+    def test_overflows_for_large_inputs(self):
+        """The very failure mode motivating Algorithm 2 (§2)."""
+        x = jnp.asarray([[100.0, 100.0]])
+        y = np.asarray(ref.softmax_naive(x))
+        assert not np.all(np.isfinite(y)) or np.all(np.isnan(y))
+
+
+class TestOnlineNormalizer:
+    def test_matches_direct_formula(self):
+        x = _rand(4, (6, 97))
+        m, d = ref.online_normalizer(x)
+        xm = np.asarray(x)
+        np.testing.assert_allclose(np.asarray(m), xm.max(-1))
+        np.testing.assert_allclose(
+            np.asarray(d), np.exp(xm - xm.max(-1, keepdims=True)).sum(-1), rtol=1e-6
+        )
+
+    def test_paper_bound_1_le_d_le_v(self):
+        """§3: 1 ≤ d_j ≤ j for all j — here at j = V."""
+        for seed in range(5):
+            v = 37 + seed * 50
+            _, d = ref.online_normalizer(_rand(seed, (3, v), scale=30.0))
+            d = np.asarray(d)
+            assert np.all(d >= 1.0 - 1e-6), d.min()
+            assert np.all(d <= v + 1e-3), d.max()
+
+
+class TestMdMonoid:
+    """⊕ (eq. 4) must be a commutative monoid with identity (−∞, 0)."""
+
+    @staticmethod
+    def _md(seed, scale=5.0):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        m = jax.random.normal(k1, ()) * scale
+        d = jax.random.uniform(k2, (), minval=0.1, maxval=10.0)
+        return m, d
+
+    @given(st.integers(0, 10_000), st.integers(0, 10_000))
+    def test_commutative(self, s1, s2):
+        a, b = self._md(s1), self._md(s2)
+        ab = ref.md_combine(a, b)
+        ba = ref.md_combine(b, a)
+        np.testing.assert_allclose(np.asarray(ab[0]), np.asarray(ba[0]))
+        np.testing.assert_allclose(np.asarray(ab[1]), np.asarray(ba[1]), rtol=1e-6)
+
+    @given(st.integers(0, 10_000), st.integers(0, 10_000), st.integers(0, 10_000))
+    def test_associative(self, s1, s2, s3):
+        a, b, c = self._md(s1), self._md(s2), self._md(s3)
+        left = ref.md_combine(ref.md_combine(a, b), c)
+        right = ref.md_combine(a, ref.md_combine(b, c))
+        np.testing.assert_allclose(np.asarray(left[0]), np.asarray(right[0]))
+        np.testing.assert_allclose(np.asarray(left[1]), np.asarray(right[1]), rtol=1e-5)
+
+    @given(st.integers(0, 10_000))
+    def test_identity(self, s):
+        a = self._md(s)
+        e = ref.md_identity()
+        for combined in (ref.md_combine(a, e), ref.md_combine(e, a)):
+            np.testing.assert_allclose(np.asarray(combined[0]), np.asarray(a[0]))
+            np.testing.assert_allclose(np.asarray(combined[1]), np.asarray(a[1]), rtol=1e-6)
+
+    def test_shard_merge_equals_whole(self):
+        """Splitting a vector and ⊕-merging equals the whole-vector (m, d)."""
+        x = _rand(9, (4, 120), scale=8.0)
+        m_ref, d_ref = ref.online_normalizer(x)
+        acc = ref.md_identity((4,))
+        for i in range(6):
+            part = ref.online_normalizer(x[:, i * 20 : (i + 1) * 20])
+            acc = ref.md_combine(acc, part)
+        np.testing.assert_allclose(np.asarray(acc[0]), np.asarray(m_ref))
+        np.testing.assert_allclose(np.asarray(acc[1]), np.asarray(d_ref), rtol=1e-5)
+
+
+class TestTopK:
+    def test_values_and_indices_consistent(self):
+        x = _rand(5, (3, 67))
+        v, z = ref.softmax_topk(x, 5)
+        y = np.asarray(ref.softmax_safe(x))
+        v, z = np.asarray(v), np.asarray(z)
+        for b in range(3):
+            np.testing.assert_allclose(v[b], y[b][z[b]], rtol=1e-6)
+            # sorted descending, and truly the largest
+            assert np.all(np.diff(v[b]) <= 1e-7)
+            np.testing.assert_allclose(v[b], np.sort(y[b])[::-1][:5], rtol=1e-6)
+
+    def test_k_equals_v(self):
+        x = _rand(6, (2, 8))
+        v, z = ref.softmax_topk(x, 8)
+        assert v.shape == (2, 8) and z.shape == (2, 8)
+        np.testing.assert_allclose(np.asarray(v).sum(-1), np.ones(2), rtol=1e-5)

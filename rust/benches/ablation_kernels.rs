@@ -1,0 +1,85 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! 1. scalar vs lane-parallel (vectorized) online normalizer — how much
+//!    of the speedup comes from keeping the single-pass loop
+//!    vectorized (§7 of the paper);
+//! 2. std `expf` vs the branchless [`fast_exp`] — the CPU stand-in for
+//!    the GPU SFU;
+//! 3. thread scaling of the parallel ⊕ reduction (§3.1);
+//! 4. insertion-buffer vs heap top-k at several K.
+
+use onlinesoftmax::benchkit::{bench, black_box, fmt_time, BenchConfig, Table};
+use onlinesoftmax::rng::Xoshiro256pp;
+use onlinesoftmax::softmax::{fastexp::fast_exp, monoid::MD, parallel, scalar, vectorized};
+use onlinesoftmax::topk;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let v = 262_144; // 1 MB rows: out of L1/L2, comfortably in bench time
+    let mut rng = Xoshiro256pp::seed_from_u64(9);
+    let x = rng.logits(v, 6.0);
+
+    println!("\n=== ablation: scalar vs vectorized vs multithreaded normalizer (V={v}) ===");
+    let mut t = Table::new(&["variant", "median", "elems/s"]);
+    let s_scalar = bench(&cfg, || black_box(scalar::online_normalizer(&x)));
+    let s_vec = bench(&cfg, || black_box(vectorized::online_normalizer(&x)));
+    t.row(vec![
+        "scalar (Alg 3 verbatim)".into(),
+        fmt_time(s_scalar.median),
+        format!("{:.0}M", s_scalar.elements_per_sec(v as f64) / 1e6),
+    ]);
+    t.row(vec![
+        "lane-parallel (16 lanes ⊕)".into(),
+        fmt_time(s_vec.median),
+        format!("{:.0}M", s_vec.elements_per_sec(v as f64) / 1e6),
+    ]);
+    for threads in [2, 4, 8] {
+        let s = bench(&cfg, || black_box(parallel::online_normalizer(&x, threads)));
+        t.row(vec![
+            format!("threads ⊕ x{threads}"),
+            fmt_time(s.median),
+            format!("{:.0}M", s.elements_per_sec(v as f64) / 1e6),
+        ]);
+    }
+    println!("{}", t.render());
+
+    println!("=== ablation: exp implementations (normalizer inner loop) ===");
+    let mut t = Table::new(&["exp", "median", "elems/s"]);
+    let s_std = bench(&cfg, || {
+        let mut md = MD::IDENTITY;
+        for &xi in &x {
+            md = md.push(xi); // std expf path
+        }
+        black_box(md.d)
+    });
+    let s_fast = bench(&cfg, || {
+        let mut m = f32::NEG_INFINITY;
+        let mut d = 0.0f32;
+        for &xi in &x {
+            let m2 = m.max(xi);
+            d = d * fast_exp(m - m2) + fast_exp(xi - m2);
+            m = m2;
+        }
+        black_box(d)
+    });
+    t.row(vec![
+        "std expf (scalar)".into(),
+        fmt_time(s_std.median),
+        format!("{:.0}M", s_std.elements_per_sec(v as f64) / 1e6),
+    ]);
+    t.row(vec![
+        "fast_exp (branchless)".into(),
+        fmt_time(s_fast.median),
+        format!("{:.0}M", s_fast.elements_per_sec(v as f64) / 1e6),
+    ]);
+    println!("{}", t.render());
+
+    println!("=== ablation: insertion buffer vs heap top-k (V={v}) ===");
+    let mut t = Table::new(&["K", "insertion buffer", "heap"]);
+    for k in [1usize, 5, 15, 30, 100] {
+        let s_buf = bench(&cfg, || black_box(topk::scan_topk(&x, k, 0).values()[0]));
+        let s_heap = bench(&cfg, || black_box(topk::heap_topk(&x, k).0[0]));
+        t.row(vec![k.to_string(), fmt_time(s_buf.median), fmt_time(s_heap.median)]);
+    }
+    println!("{}", t.render());
+}

@@ -1,0 +1,93 @@
+//! Coordinator micro-benchmarks: the L3 hot-path pieces the paper's
+//! system layer adds on top of the kernels — batch formation, the ⊕
+//! shard merge, and top-k buffer merging.  These quantify that the
+//! coordinator is NOT the bottleneck (DESIGN.md §Perf: L3 target).
+
+use onlinesoftmax::benchkit::{bench, black_box, fmt_time, BenchConfig, Table};
+use onlinesoftmax::coordinator::{BatchPolicy, Batcher, Payload, Request};
+use onlinesoftmax::exec::oneshot;
+use onlinesoftmax::rng::Xoshiro256pp;
+use onlinesoftmax::softmax::monoid::MD;
+use onlinesoftmax::topk::{scan_topk, TopKBuffer};
+use std::time::Duration;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let mut table = Table::new(&["operation", "median", "per-item"]);
+
+    // ⊕ merge of shard partials: 64 shards × 16 rows.
+    {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let parts: Vec<Vec<MD>> = (0..64)
+            .map(|_| {
+                (0..16)
+                    .map(|_| MD { m: rng.next_normal() * 10.0, d: rng.range_f32(1.0, 100.0) })
+                    .collect()
+            })
+            .collect();
+        let s = bench(&cfg, || {
+            let mut acc = vec![MD::IDENTITY; 16];
+            for part in &parts {
+                for (a, p) in acc.iter_mut().zip(part) {
+                    *a = a.combine(*p);
+                }
+            }
+            black_box(acc[0].d)
+        });
+        table.row(vec![
+            "⊕ merge 64 shards × 16 rows".into(),
+            fmt_time(s.median),
+            fmt_time(s.median / (64.0 * 16.0)),
+        ]);
+    }
+
+    // top-k buffer merge: 64 shards × k=5.
+    {
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let bufs: Vec<TopKBuffer> = (0..64)
+            .map(|s| {
+                let x = rng.logits(128, 5.0);
+                scan_topk(&x, 5, (s * 128) as i64)
+            })
+            .collect();
+        let s = bench(&cfg, || {
+            let mut acc = TopKBuffer::new(5);
+            for b in &bufs {
+                acc.merge(b);
+            }
+            black_box(acc.values()[0])
+        });
+        table.row(vec![
+            "topk merge 64 shards (k=5)".into(),
+            fmt_time(s.median),
+            fmt_time(s.median / 64.0),
+        ]);
+    }
+
+    // batcher submit→drain round trip at batch 16.
+    {
+        let batcher = Batcher::new(BatchPolicy {
+            max_batch: 16,
+            max_wait: Duration::from_secs(1),
+            queue_capacity: 1024,
+        });
+        let s = bench(&cfg, || {
+            for i in 0..16u64 {
+                let (tx, _rx) = oneshot();
+                batcher
+                    .submit(Request::new(i, Payload::Softmax { logits: Vec::new() }, tx))
+                    .ok();
+            }
+            let (_, batch, _) = batcher.next_batch().unwrap();
+            black_box(batch.len())
+        });
+        table.row(vec![
+            "batcher 16-submit + drain".into(),
+            fmt_time(s.median),
+            fmt_time(s.median / 16.0),
+        ]);
+    }
+
+    println!("\n=== coordinator micro-benchmarks ===");
+    println!("{}", table.render());
+}

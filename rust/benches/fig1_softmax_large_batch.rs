@@ -1,0 +1,11 @@
+//! `cargo bench --bench fig1_softmax_large_batch` — regenerates the paper's fig1 series.
+//! Thin wrapper over [`onlinesoftmax::benches::fig1`]; options via env:
+//! OSMAX_BENCH_FAST=1 for a quick pass.
+fn main() {
+    let opts = onlinesoftmax::benches::BenchOpts {
+        threads: 1,
+        json_out: std::env::var("OSMAX_BENCH_JSON").ok(),
+        ..Default::default()
+    };
+    onlinesoftmax::benches::fig1(&opts).expect("bench failed");
+}

@@ -1,0 +1,11 @@
+//! `cargo bench --bench fig2_softmax_small_batch` — regenerates the paper's fig2 series.
+//! Thin wrapper over [`onlinesoftmax::benches::fig2`]; options via env:
+//! OSMAX_BENCH_FAST=1 for a quick pass.
+fn main() {
+    let opts = onlinesoftmax::benches::BenchOpts {
+        threads: 1,
+        json_out: std::env::var("OSMAX_BENCH_JSON").ok(),
+        ..Default::default()
+    };
+    onlinesoftmax::benches::fig2(&opts).expect("bench failed");
+}

@@ -1,0 +1,11 @@
+//! `cargo bench --bench k_sweep` — regenerates the paper's k_sweep series.
+//! Thin wrapper over [`onlinesoftmax::benches::k_sweep`]; options via env:
+//! OSMAX_BENCH_FAST=1 for a quick pass.
+fn main() {
+    let opts = onlinesoftmax::benches::BenchOpts {
+        threads: 1,
+        json_out: std::env::var("OSMAX_BENCH_JSON").ok(),
+        ..Default::default()
+    };
+    onlinesoftmax::benches::k_sweep(&opts).expect("bench failed");
+}

@@ -1,0 +1,336 @@
+//! Paper-figure benchmark implementations.
+//!
+//! One function per figure/table in the paper's evaluation (§5), shared
+//! by the `cargo bench` targets (`rust/benches/*.rs`, `harness = false`)
+//! and the `onlinesoftmax bench` CLI:
+//!
+//! * [`fig1`] — softmax, large batch (paper: batch 4000, V 10→100k)
+//! * [`fig2`] — softmax, small batch (batch 10)
+//! * [`fig3`] — softmax+topk, large batch, K=5
+//! * [`fig4`] — softmax+topk, small batch, K=5
+//! * [`k_sweep`] — §5.2's fused-speedup-vs-K table (K=5/10/15/30)
+//!
+//! **Hardware scaling** (DESIGN.md §Hardware-Adaptation): the paper's
+//! batch-4000 × V-100k workloads size the *GPU's* DRAM; on this CPU we
+//! scale the large-batch case to keep the working set several times the
+//! last-level cache, which lands the benchmark in the same
+//! bandwidth-bound regime the paper measures.  The small-batch case
+//! keeps the paper's batch = 10 exactly.  Expected shape: all variants
+//! tie while cache-resident; past the cache cliff the ratios approach
+//! the access-count ratios (4/3 for softmax, 5/1 for fused topk).
+
+use std::io::Write;
+
+use anyhow::Result;
+
+use crate::benchkit::{bench, black_box, fmt_time, BenchConfig, Stats, Table};
+use crate::rng::Xoshiro256pp;
+use crate::softmax::{batched, fused, parallel, vectorized};
+
+/// CLI/bench-target options.
+#[derive(Clone, Debug, Default)]
+pub struct BenchOpts {
+    /// Vector sizes V (None = per-figure defaults).
+    pub sizes: Option<Vec<usize>>,
+    /// Batch size override.
+    pub batch: Option<usize>,
+    /// Threads for the parallel online variant (1 = off).
+    pub threads: usize,
+    /// Append JSON-lines results to this path.
+    pub json_out: Option<String>,
+}
+
+impl BenchOpts {
+    fn emit(&self, record: &crate::json::Value) -> Result<()> {
+        if let Some(path) = &self.json_out {
+            let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+            writeln!(f, "{}", record.to_json())?;
+        }
+        Ok(())
+    }
+}
+
+/// Scaled "large batch": the paper's 4000 vectors saturate a V100; this
+/// keeps per-(V,batch) working sets ≥ ~8× a 32 MB LLC at the default
+/// sizes so the CPU run is equally bandwidth-bound.
+pub const LARGE_BATCH: usize = 512;
+/// The paper's small-batch case, kept verbatim.
+pub const SMALL_BATCH: usize = 10;
+/// Default V sweep (the paper's x-axis, truncated to CPU-feasible time).
+pub const DEFAULT_SIZES: [usize; 6] = [1_000, 4_000, 10_000, 25_000, 50_000, 100_000];
+/// §5.2 uses V=25000 for the K sweep.
+pub const KSWEEP_V: usize = 25_000;
+
+fn make_batch(b: usize, v: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut data = vec![0.0f32; b * v];
+    rng.fill_logits(&mut data, 6.0);
+    data
+}
+
+fn row_apply<F: FnMut(&[f32])>(data: &[f32], v: usize, mut f: F) {
+    for row in data.chunks_exact(v) {
+        f(row);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Figures 1–2: softmax
+// ---------------------------------------------------------------------------
+
+struct SoftmaxRow {
+    v: usize,
+    naive: Stats,
+    safe: Stats,
+    online: Stats,
+    online_mt: Option<Stats>,
+}
+
+fn softmax_figure(name: &str, batch: usize, opts: &BenchOpts) -> Result<()> {
+    let sizes = opts.sizes.clone().unwrap_or_else(|| DEFAULT_SIZES.to_vec());
+    let batch = opts.batch.unwrap_or(batch);
+    let cfg = BenchConfig::from_env();
+    println!("\n=== {name}: softmax, batch {batch} (paper: naive vs safe vs online) ===");
+    let mt_header = format!("online x{}", opts.threads);
+    let headers: Vec<&str> = if opts.threads > 1 {
+        vec!["V", "naive", "safe", "online", &mt_header, "GB/s online", "online/safe"]
+    } else {
+        vec!["V", "naive", "safe", "online", "GB/s online", "online/safe"]
+    };
+    let mut table = Table::new(&headers);
+
+    for &v in &sizes {
+        let data = make_batch(batch, v, v as u64);
+        let mut out = vec![0.0f32; batch * v];
+
+        // Pass-major batched forms: every algorithm pass streams the
+        // whole (batch, v) matrix, as the paper's GPU grid does — see
+        // softmax::batched.
+        let naive = bench(&cfg, || {
+            batched::naive(&data, v, &mut out);
+            black_box(out[0])
+        });
+        let safe = bench(&cfg, || {
+            batched::safe(&data, v, &mut out);
+            black_box(out[0])
+        });
+        let online = bench(&cfg, || {
+            batched::online(&data, v, &mut out);
+            black_box(out[0])
+        });
+        let online_mt = (opts.threads > 1).then(|| {
+            bench(&cfg, || {
+                row_apply(&data, v, |row| {
+                    let o = &mut out[..v];
+                    parallel::online(row, o, opts.threads);
+                    black_box(o[0]);
+                })
+            })
+        });
+        let row = SoftmaxRow { v, naive, safe, online, online_mt };
+
+        // Effective bandwidth = algorithm's touched bytes / time.
+        let elems = (batch * v) as f64;
+        let online_gbs = row.online.throughput_gbs(elems * 4.0 * 3.0);
+        let speedup = row.safe.median / row.online.median;
+        let mut cells = vec![
+            row.v.to_string(),
+            fmt_time(row.naive.median),
+            fmt_time(row.safe.median),
+            fmt_time(row.online.median),
+        ];
+        if let Some(mt) = &row.online_mt {
+            cells.push(fmt_time(mt.median));
+        }
+        cells.push(format!("{online_gbs:.1}"));
+        cells.push(format!("{speedup:.2}x"));
+        table.row(cells);
+
+        let mut rec = crate::json::Value::object();
+        rec.set("bench", crate::json::Value::String(name.into()))
+            .set("v", crate::json::Value::Number(v as f64))
+            .set("batch", crate::json::Value::Number(batch as f64))
+            .set("naive_s", crate::json::Value::Number(row.naive.median))
+            .set("safe_s", crate::json::Value::Number(row.safe.median))
+            .set("online_s", crate::json::Value::Number(row.online.median))
+            .set("speedup_online_vs_safe", crate::json::Value::Number(speedup));
+        opts.emit(&rec)?;
+    }
+    println!("{}", table.render());
+    println!(
+        "paper reference ({}): online/safe → ~{} once V leaves cache; naive ≈ online.",
+        if batch >= 100 { "fig 1" } else { "fig 2" },
+        if batch >= 100 { "1.3x" } else { "1.15x" }
+    );
+    Ok(())
+}
+
+/// Figure 1: softmax, large batch.
+pub fn fig1(opts: &BenchOpts) -> Result<()> {
+    softmax_figure("fig1", LARGE_BATCH, opts)
+}
+
+/// Figure 2: softmax, small batch (paper batch = 10).
+pub fn fig2(opts: &BenchOpts) -> Result<()> {
+    softmax_figure("fig2", SMALL_BATCH, opts)
+}
+
+// ---------------------------------------------------------------------------
+// Figures 3–4: softmax + top-k
+// ---------------------------------------------------------------------------
+
+fn topk_figure(name: &str, batch: usize, opts: &BenchOpts) -> Result<()> {
+    let sizes = opts.sizes.clone().unwrap_or_else(|| DEFAULT_SIZES.to_vec());
+    let batch = opts.batch.unwrap_or(batch);
+    let k = 5;
+    let cfg = BenchConfig::from_env();
+    println!("\n=== {name}: softmax+topk (K={k}), batch {batch} ===");
+    let mut table = Table::new(&[
+        "V",
+        "safe unfused",
+        "online unfused",
+        "safe fused",
+        "online fused (Alg4)",
+        "fused/unfused",
+    ]);
+    for &v in &sizes {
+        let data = make_batch(batch, v, 7 + v as u64);
+        let mut scratch = Vec::new();
+
+        let safe_unfused = bench(&cfg, || {
+            black_box(batched::safe_unfused_topk(&data, v, k, &mut scratch).len())
+        });
+        let online_unfused = bench(&cfg, || {
+            black_box(batched::online_unfused_topk(&data, v, k, &mut scratch).len())
+        });
+        let safe_fused = bench(&cfg, || {
+            black_box(batched::safe_fused_topk(&data, v, k).len())
+        });
+        let online_fused = bench(&cfg, || {
+            black_box(batched::online_fused_topk(&data, v, k).len())
+        });
+
+        let speedup = safe_unfused.median / online_fused.median;
+        table.row(vec![
+            v.to_string(),
+            fmt_time(safe_unfused.median),
+            fmt_time(online_unfused.median),
+            fmt_time(safe_fused.median),
+            fmt_time(online_fused.median),
+            format!("{speedup:.2}x"),
+        ]);
+
+        let mut rec = crate::json::Value::object();
+        rec.set("bench", crate::json::Value::String(name.into()))
+            .set("v", crate::json::Value::Number(v as f64))
+            .set("batch", crate::json::Value::Number(batch as f64))
+            .set("k", crate::json::Value::Number(k as f64))
+            .set("safe_unfused_s", crate::json::Value::Number(safe_unfused.median))
+            .set("online_unfused_s", crate::json::Value::Number(online_unfused.median))
+            .set("safe_fused_s", crate::json::Value::Number(safe_fused.median))
+            .set("online_fused_s", crate::json::Value::Number(online_fused.median))
+            .set("speedup_fused_vs_unfused", crate::json::Value::Number(speedup));
+        opts.emit(&rec)?;
+    }
+    println!("{}", table.render());
+    println!(
+        "paper reference ({}): online-fused/safe-unfused grows with V toward {} \
+         (access ratio 5/1); fusion alone ≈ 2.5x of it.",
+        if batch >= 100 { "fig 3" } else { "fig 4" },
+        if batch >= 100 { "~5x" } else { "1.5–2.5x" },
+    );
+    Ok(())
+}
+
+/// Figure 3: softmax+topk, large batch.
+pub fn fig3(opts: &BenchOpts) -> Result<()> {
+    topk_figure("fig3", LARGE_BATCH, opts)
+}
+
+/// Figure 4: softmax+topk, small batch.
+pub fn fig4(opts: &BenchOpts) -> Result<()> {
+    topk_figure("fig4", SMALL_BATCH, opts)
+}
+
+// ---------------------------------------------------------------------------
+// §5.2: speedup decay as K grows
+// ---------------------------------------------------------------------------
+
+/// The paper's K-sweep: fused speedup at V=25000 for K ∈ {5,10,15,30},
+/// reported as 5x → 3.5x → 2x → 1.4x on V100.
+pub fn k_sweep(opts: &BenchOpts) -> Result<()> {
+    let v = opts.sizes.as_ref().and_then(|s| s.first().copied()).unwrap_or(KSWEEP_V);
+    let batch = opts.batch.unwrap_or(LARGE_BATCH / 4);
+    let cfg = BenchConfig::from_env();
+    println!("\n=== k_sweep: fused online softmax+topk speedup vs K (V={v}, batch {batch}) ===");
+    let data = make_batch(batch, v, 99);
+    let mut scratch = Vec::new();
+    let mut table =
+        Table::new(&["K", "safe unfused", "online fused", "speedup", "paper (V100)"]);
+    let paper: &[(usize, &str)] = &[(5, "5x"), (10, "3.5x"), (15, "2x"), (30, "1.4x"), (64, "<1.4x")];
+    for &(k, paper_x) in paper {
+        let unfused = bench(&cfg, || {
+            black_box(batched::safe_unfused_topk(&data, v, k, &mut scratch).len())
+        });
+        let fused_t = bench(&cfg, || {
+            black_box(batched::online_fused_topk(&data, v, k).len())
+        });
+        let speedup = unfused.median / fused_t.median;
+        table.row(vec![
+            k.to_string(),
+            fmt_time(unfused.median),
+            fmt_time(fused_t.median),
+            format!("{speedup:.2}x"),
+            paper_x.to_string(),
+        ]);
+        let mut rec = crate::json::Value::object();
+        rec.set("bench", crate::json::Value::String("k_sweep".into()))
+            .set("v", crate::json::Value::Number(v as f64))
+            .set("k", crate::json::Value::Number(k as f64))
+            .set("speedup", crate::json::Value::Number(speedup));
+        opts.emit(&rec)?;
+    }
+    println!("{}", table.render());
+    println!("expected shape: monotone decay with K (insertion cost grows, §5.2).");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_opts() -> BenchOpts {
+        std::env::set_var("OSMAX_BENCH_FAST", "1");
+        BenchOpts { sizes: Some(vec![256, 1024]), batch: Some(4), threads: 1, json_out: None }
+    }
+
+    #[test]
+    fn figures_run_to_completion() {
+        let o = fast_opts();
+        fig1(&o).unwrap();
+        fig2(&o).unwrap();
+        fig3(&o).unwrap();
+        fig4(&o).unwrap();
+    }
+
+    #[test]
+    fn k_sweep_runs() {
+        let mut o = fast_opts();
+        o.sizes = Some(vec![2048]);
+        k_sweep(&o).unwrap();
+    }
+
+    #[test]
+    fn json_out_appends_records() {
+        let mut o = fast_opts();
+        let path = std::env::temp_dir().join(format!("osmax-bench-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        o.json_out = Some(path.display().to_string());
+        o.sizes = Some(vec![128]);
+        fig1(&o).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let first = crate::json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(first.get("bench").unwrap().as_str().unwrap(), "fig1");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,261 @@
+//! Benchmark harness substrate (no `criterion` in the offline registry).
+//!
+//! Provides what the paper-figure benches need:
+//!
+//! * [`bench`] — warmup + calibrated timed iterations → [`Stats`]
+//!   (mean/median/p05/p95/stddev, per-iteration),
+//! * [`Stats::throughput_gbs`] — bandwidth from bytes-touched, the
+//!   y-axis of every figure in the paper,
+//! * [`Table`] — aligned console tables matching the paper's reporting
+//!   (one row per vector size V, one column per algorithm, plus the
+//!   speedup "bars"),
+//! * [`black_box`] — optimization barrier.
+//!
+//! Deterministic workloads come from [`crate::rng`]; the harness never
+//! allocates inside the timed region unless the benchmarked closure does.
+
+use std::time::{Duration, Instant};
+
+/// Optimization barrier (stable-rust implementation).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Per-iteration timing statistics, in seconds.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p05: f64,
+    pub p95: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut secs: Vec<f64>) -> Stats {
+        assert!(!secs.is_empty());
+        secs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = secs.len();
+        let mean = secs.iter().sum::<f64>() / n as f64;
+        let var = secs.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n as f64;
+        let pick = |q: f64| secs[((q * (n - 1) as f64).round() as usize).min(n - 1)];
+        Stats {
+            iters: n,
+            mean,
+            median: pick(0.5),
+            stddev: var.sqrt(),
+            min: secs[0],
+            max: secs[n - 1],
+            p05: pick(0.05),
+            p95: pick(0.95),
+        }
+    }
+
+    /// Effective bandwidth given bytes touched per iteration.
+    pub fn throughput_gbs(&self, bytes_per_iter: f64) -> f64 {
+        bytes_per_iter / self.median / 1e9
+    }
+
+    /// Elements processed per second.
+    pub fn elements_per_sec(&self, elems_per_iter: f64) -> f64 {
+        elems_per_iter / self.median
+    }
+}
+
+/// Benchmark configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// Wall-clock budget for the measurement phase.
+    pub measure_time: Duration,
+    /// Wall-clock budget for warmup.
+    pub warmup_time: Duration,
+    /// Upper bound on recorded samples.
+    pub max_samples: usize,
+    /// Lower bound on recorded samples (overrides time budget).
+    pub min_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            measure_time: Duration::from_millis(300),
+            warmup_time: Duration::from_millis(60),
+            max_samples: 1000,
+            min_samples: 10,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Faster profile for CI / smoke runs (set `OSMAX_BENCH_FAST=1`).
+    pub fn from_env() -> Self {
+        if std::env::var("OSMAX_BENCH_FAST").is_ok() {
+            Self {
+                measure_time: Duration::from_millis(60),
+                warmup_time: Duration::from_millis(10),
+                max_samples: 200,
+                min_samples: 5,
+            }
+        } else {
+            Self::default()
+        }
+    }
+}
+
+/// Run `f` under the config and return per-iteration stats.
+///
+/// The closure should perform *one* logical iteration and return a value
+/// routed through [`black_box`] internally (or return unit after
+/// black-boxing its outputs).
+pub fn bench<R>(config: &BenchConfig, mut f: impl FnMut() -> R) -> Stats {
+    // Warmup.
+    let t0 = Instant::now();
+    while t0.elapsed() < config.warmup_time {
+        black_box(f());
+    }
+    // Measure.
+    let mut samples = Vec::with_capacity(config.min_samples.max(64));
+    let t1 = Instant::now();
+    while (t1.elapsed() < config.measure_time || samples.len() < config.min_samples)
+        && samples.len() < config.max_samples
+    {
+        let s = Instant::now();
+        black_box(f());
+        samples.push(s.elapsed().as_secs_f64());
+    }
+    Stats::from_samples(samples)
+}
+
+// ---------------------------------------------------------------------------
+// Console tables
+// ---------------------------------------------------------------------------
+
+/// Aligned console table builder.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render with right-aligned numeric-looking cells.
+    pub fn render(&self) -> String {
+        let cols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], out: &mut String| {
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                let pad = widths[i] - c.len();
+                // right-align everything but the first column
+                if i == 0 {
+                    out.push_str(c);
+                    out.push_str(&" ".repeat(pad));
+                } else {
+                    out.push_str(&" ".repeat(pad));
+                    out.push_str(c);
+                }
+            }
+            out.push('\n');
+        };
+        fmt_row(&self.headers, &mut out);
+        let total: usize = widths.iter().sum::<usize>() + 2 * (cols - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            fmt_row(row, &mut out);
+        }
+        out
+    }
+}
+
+/// Format seconds with an adaptive unit.
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{secs:.3}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_from_known_samples() {
+        let s = Stats::from_samples(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.iters, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.stddev - 2.0f64.sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_respects_min_samples() {
+        let cfg = BenchConfig {
+            measure_time: Duration::ZERO,
+            warmup_time: Duration::ZERO,
+            max_samples: 100,
+            min_samples: 12,
+        };
+        let s = bench(&cfg, || black_box(1 + 1));
+        assert!(s.iters >= 12);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let s = Stats::from_samples(vec![0.001]); // 1 ms
+        // 1 MB in 1 ms = 1 GB/s
+        assert!((s.throughput_gbs(1e6) - 1.0).abs() < 1e-9);
+        assert!((s.elements_per_sec(1000.0) - 1e6).abs() < 1e-3);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["V", "safe", "online"]);
+        t.row(vec!["100".into(), "1.0".into(), "1.30".into()]);
+        t.row(vec!["100000".into(), "2.0".into(), "2.60".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("online"));
+        assert!(lines[3].contains("100000"));
+        // all rows same width
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(5e-9).ends_with("ns"));
+        assert!(fmt_time(5e-6).ends_with("µs"));
+        assert!(fmt_time(5e-3).ends_with("ms"));
+        assert!(fmt_time(5.0).ends_with('s'));
+    }
+}

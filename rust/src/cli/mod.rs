@@ -1,0 +1,232 @@
+//! CLI argument parsing substrate (no `clap` in the offline registry).
+//!
+//! Subcommand-oriented parser:
+//!
+//! ```text
+//! onlinesoftmax <command> [--flag] [--opt value] [--opt=value] [positional...]
+//! ```
+//!
+//! [`Args`] collects flags/options/positionals with typed accessors and
+//! strict unknown-argument rejection, so typos fail loudly instead of
+//! silently running a default bench.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    options: BTreeMap<String, Vec<String>>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+    /// Names consumed by typed accessors — used by `finish()` to reject
+    /// unknown arguments.
+    known: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse raw argv (without the program/subcommand names).
+    ///
+    /// `value_options` lists option names that consume a following
+    /// value (`--name value`); everything else starting with `--` is a
+    /// boolean flag.  `--name=value` works for any option.
+    pub fn parse(raw: &[String], value_options: &[&str]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = raw.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminator: the rest is positional
+                    for rest in it.by_ref() {
+                        args.positionals.push(rest.clone());
+                    }
+                    break;
+                }
+                if let Some((name, value)) = body.split_once('=') {
+                    args.options.entry(name.to_string()).or_default().push(value.to_string());
+                } else if value_options.contains(&body) {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("option --{body} requires a value"))?;
+                    args.options.entry(body.to_string()).or_default().push(v.clone());
+                } else {
+                    args.flags.push(body.to_string());
+                }
+            } else if a.starts_with('-') && a.len() > 1 && !a[1..2].chars().next().unwrap().is_ascii_digit() {
+                bail!("short options are not supported: `{a}` (use --long form)");
+            } else {
+                args.positionals.push(a.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    fn mark(&self, name: &str) {
+        self.known.borrow_mut().push(name.to_string());
+    }
+
+    /// Boolean flag presence.
+    pub fn flag(&self, name: &str) -> bool {
+        self.mark(name);
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Last occurrence of a string option.
+    pub fn opt_str(&self, name: &str) -> Option<&str> {
+        self.mark(name);
+        self.options.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// All occurrences (repeatable options).
+    pub fn opt_all(&self, name: &str) -> Vec<&str> {
+        self.mark(name);
+        self.options.get(name).map(|v| v.iter().map(|s| s.as_str()).collect()).unwrap_or_default()
+    }
+
+    /// Typed option with default.
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt_str(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| anyhow!("invalid value for --{name}: `{s}` ({e})")),
+        }
+    }
+
+    /// Required typed option.
+    pub fn opt_require<T: std::str::FromStr>(&self, name: &str) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let s = self
+            .opt_str(name)
+            .ok_or_else(|| anyhow!("missing required option --{name}"))?;
+        s.parse().map_err(|e| anyhow!("invalid value for --{name}: `{s}` ({e})"))
+    }
+
+    /// Comma- or repeat-separated list of typed values.
+    pub fn opt_list<T: std::str::FromStr>(&self, name: &str, default: &[T]) -> Result<Vec<T>>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        let occurrences = self.opt_all(name);
+        if occurrences.is_empty() {
+            return Ok(default.to_vec());
+        }
+        occurrences
+            .iter()
+            .flat_map(|s| s.split(','))
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.parse()
+                    .map_err(|e| anyhow!("invalid element for --{name}: `{s}` ({e})"))
+            })
+            .collect()
+    }
+
+    /// Positional arguments.
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+
+    /// Reject any option/flag that no accessor consumed.
+    pub fn finish(&self) -> Result<()> {
+        let known = self.known.borrow();
+        for f in &self.flags {
+            if !known.iter().any(|k| k == f) {
+                bail!("unknown flag --{f}");
+            }
+        }
+        for name in self.options.keys() {
+            if !known.iter().any(|k| k == name) {
+                bail!("unknown option --{name}");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Split argv into `(subcommand, rest)`.
+pub fn subcommand(argv: &[String]) -> Result<(&str, &[String])> {
+    let cmd = argv
+        .first()
+        .context("missing subcommand (try `onlinesoftmax help`)")?;
+    Ok((cmd.as_str(), &argv[1..]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = Args::parse(&sv(&["--v", "4096", "--algo=online", "--verbose", "pos1"]), &["v"])
+            .unwrap();
+        assert_eq!(a.opt_parse("v", 0usize).unwrap(), 4096);
+        assert_eq!(a.opt_str("algo"), Some("online"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positionals(), &["pos1".to_string()]);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&sv(&["--v"]), &["v"]).is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected_by_finish() {
+        let a = Args::parse(&sv(&["--typo=1"]), &[]).unwrap();
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn list_option_comma_and_repeat() {
+        let a = Args::parse(&sv(&["--sizes=1,2", "--sizes", "3"]), &["sizes"]).unwrap();
+        assert_eq!(a.opt_list::<usize>("sizes", &[]).unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn list_option_default() {
+        let a = Args::parse(&sv(&[]), &[]).unwrap();
+        assert_eq!(a.opt_list::<usize>("sizes", &[7, 8]).unwrap(), vec![7, 8]);
+    }
+
+    #[test]
+    fn negative_numbers_are_positional() {
+        let a = Args::parse(&sv(&["-5"]), &[]).unwrap();
+        assert_eq!(a.positionals(), &["-5".to_string()]);
+    }
+
+    #[test]
+    fn double_dash_terminates() {
+        let a = Args::parse(&sv(&["--x", "--", "--not-a-flag"]), &[]).unwrap();
+        assert!(a.flag("x"));
+        assert_eq!(a.positionals(), &["--not-a-flag".to_string()]);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn required_option() {
+        let a = Args::parse(&sv(&[]), &[]).unwrap();
+        assert!(a.opt_require::<usize>("n").is_err());
+    }
+
+    #[test]
+    fn subcommand_split() {
+        let argv = sv(&["bench", "--fig", "1"]);
+        let (cmd, rest) = subcommand(&argv).unwrap();
+        assert_eq!(cmd, "bench");
+        assert_eq!(rest.len(), 2);
+        assert!(subcommand(&[]).is_err());
+    }
+}

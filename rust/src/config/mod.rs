@@ -1,0 +1,238 @@
+//! Configuration system: typed config structs loadable from a JSON file
+//! with CLI overrides layered on top (file < flags), plus validation.
+//!
+//! ```text
+//! onlinesoftmax serve --config serve.json --port 7070
+//! ```
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cli::Args;
+use crate::json::{self, Value};
+
+/// Which softmax strategy the serving path uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServingMode {
+    /// Safe softmax (Algorithm 2) — the framework-default baseline.
+    Safe,
+    /// Online softmax (Algorithm 3) / fused online top-k (Algorithm 4).
+    Online,
+}
+
+impl ServingMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "safe" => Ok(ServingMode::Safe),
+            "online" => Ok(ServingMode::Online),
+            _ => bail!("invalid mode `{s}` (expected `safe` or `online`)"),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ServingMode::Safe => "safe",
+            ServingMode::Online => "online",
+        }
+    }
+}
+
+/// Full serving configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// TCP bind address.
+    pub addr: String,
+    /// Directory holding `manifest.json` + `*.hlo.txt`.
+    pub artifacts_dir: PathBuf,
+    /// Softmax strategy for decode requests.
+    pub mode: ServingMode,
+    /// Number of vocabulary shards to serve with (1 = unsharded).
+    pub shards: usize,
+    /// Maximum requests coalesced into one executed batch.
+    pub max_batch: usize,
+    /// How long the batcher waits to fill a batch before flushing.
+    pub max_wait: Duration,
+    /// Admission queue capacity (backpressure beyond this).
+    pub queue_capacity: usize,
+    /// Worker threads executing batches.
+    pub workers: usize,
+    /// Default top-k for decode requests that do not specify one.
+    pub default_k: usize,
+    /// RNG seed for the built-in synthetic model weights.
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7070".to_string(),
+            artifacts_dir: PathBuf::from("artifacts"),
+            mode: ServingMode::Online,
+            shards: 1,
+            max_batch: 16,
+            max_wait: Duration::from_millis(2),
+            queue_capacity: 1024,
+            workers: 2,
+            default_k: 5,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Load from a JSON file (all fields optional).
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let v = json::parse(&text).with_context(|| format!("parsing config {}", path.display()))?;
+        Self::from_json(&v)
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let mut cfg = ServeConfig::default();
+        if let Some(s) = v.get("addr").and_then(Value::as_str) {
+            cfg.addr = s.to_string();
+        }
+        if let Some(s) = v.get("artifacts_dir").and_then(Value::as_str) {
+            cfg.artifacts_dir = PathBuf::from(s);
+        }
+        if let Some(s) = v.get("mode").and_then(Value::as_str) {
+            cfg.mode = ServingMode::parse(s)?;
+        }
+        if let Some(n) = v.get("shards").and_then(Value::as_usize) {
+            cfg.shards = n;
+        }
+        if let Some(n) = v.get("max_batch").and_then(Value::as_usize) {
+            cfg.max_batch = n;
+        }
+        if let Some(n) = v.get("max_wait_us").and_then(Value::as_usize) {
+            cfg.max_wait = Duration::from_micros(n as u64);
+        }
+        if let Some(n) = v.get("queue_capacity").and_then(Value::as_usize) {
+            cfg.queue_capacity = n;
+        }
+        if let Some(n) = v.get("workers").and_then(Value::as_usize) {
+            cfg.workers = n;
+        }
+        if let Some(n) = v.get("default_k").and_then(Value::as_usize) {
+            cfg.default_k = n;
+        }
+        if let Some(n) = v.get("seed").and_then(Value::as_i64) {
+            cfg.seed = n as u64;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Layer CLI flags over the current values.
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        if let Some(a) = args.opt_str("addr") {
+            self.addr = a.to_string();
+        }
+        if let Some(d) = args.opt_str("artifacts") {
+            self.artifacts_dir = PathBuf::from(d);
+        }
+        if let Some(m) = args.opt_str("mode") {
+            self.mode = ServingMode::parse(m)?;
+        }
+        self.shards = args.opt_parse("shards", self.shards)?;
+        self.max_batch = args.opt_parse("max-batch", self.max_batch)?;
+        self.max_wait =
+            Duration::from_micros(args.opt_parse("max-wait-us", self.max_wait.as_micros() as u64)?);
+        self.queue_capacity = args.opt_parse("queue-capacity", self.queue_capacity)?;
+        self.workers = args.opt_parse("workers", self.workers)?;
+        self.default_k = args.opt_parse("k", self.default_k)?;
+        self.seed = args.opt_parse("seed", self.seed)?;
+        self.validate()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.shards == 0 {
+            bail!("shards must be >= 1");
+        }
+        if self.max_batch == 0 {
+            bail!("max_batch must be >= 1");
+        }
+        if self.workers == 0 {
+            bail!("workers must be >= 1");
+        }
+        if self.queue_capacity < self.max_batch {
+            bail!(
+                "queue_capacity ({}) must be >= max_batch ({})",
+                self.queue_capacity,
+                self.max_batch
+            );
+        }
+        if self.default_k == 0 {
+            bail!("default_k must be >= 1");
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::object();
+        v.set("addr", Value::String(self.addr.clone()))
+            .set("artifacts_dir", Value::String(self.artifacts_dir.display().to_string()))
+            .set("mode", Value::String(self.mode.as_str().to_string()))
+            .set("shards", Value::Number(self.shards as f64))
+            .set("max_batch", Value::Number(self.max_batch as f64))
+            .set("max_wait_us", Value::Number(self.max_wait.as_micros() as f64))
+            .set("queue_capacity", Value::Number(self.queue_capacity as f64))
+            .set("workers", Value::Number(self.workers as f64))
+            .set("default_k", Value::Number(self.default_k as f64))
+            .set("seed", Value::Number(self.seed as f64));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        ServeConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut cfg = ServeConfig::default();
+        cfg.shards = 4;
+        cfg.mode = ServingMode::Safe;
+        let back = ServeConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.shards, 4);
+        assert_eq!(back.mode, ServingMode::Safe);
+        assert_eq!(back.addr, cfg.addr);
+    }
+
+    #[test]
+    fn cli_overrides_file_values() {
+        let mut cfg = ServeConfig::default();
+        let raw: Vec<String> =
+            ["--mode", "safe", "--shards", "8", "--max-wait-us", "500"].iter().map(|s| s.to_string()).collect();
+        let args = Args::parse(&raw, &["mode", "shards", "max-wait-us"]).unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.mode, ServingMode::Safe);
+        assert_eq!(cfg.shards, 8);
+        assert_eq!(cfg.max_wait, Duration::from_micros(500));
+    }
+
+    #[test]
+    fn validation_rejects_nonsense() {
+        let mut cfg = ServeConfig::default();
+        cfg.shards = 0;
+        assert!(cfg.validate().is_err());
+        cfg = ServeConfig::default();
+        cfg.queue_capacity = 1;
+        cfg.max_batch = 16;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn mode_parse() {
+        assert!(ServingMode::parse("bogus").is_err());
+        assert_eq!(ServingMode::parse("online").unwrap(), ServingMode::Online);
+    }
+}

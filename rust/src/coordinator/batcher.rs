@@ -1,0 +1,287 @@
+//! Continuous dynamic batcher.
+//!
+//! Requests are admitted into a bounded queue (backpressure beyond
+//! capacity) and coalesced into batches by a vLLM-style policy:
+//!
+//! * a batch closes as soon as `max_batch` same-class requests are
+//!   waiting, or
+//! * when the oldest waiting request has aged past `max_wait`
+//!   (latency bound), whichever comes first;
+//! * requests of different [`BatchClass`]es never mix (they execute
+//!   different artifacts);
+//! * batches are padded up to the artifact bucket sizes by the executor
+//!   (see [`super::executor`]), so the batcher only bounds, never pads.
+
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::request::{BatchClass, Request};
+
+/// Batch-formation policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub queue_capacity: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 16, max_wait: Duration::from_millis(2), queue_capacity: 1024 }
+    }
+}
+
+/// Why a batch was closed (metrics / tests).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlushReason {
+    Full,
+    Deadline,
+    Shutdown,
+}
+
+struct State {
+    queues: HashMap<BatchClass, VecDeque<Request>>,
+    total: usize,
+    shutdown: bool,
+}
+
+/// The shared batching queue.
+pub struct Batcher {
+    policy: BatchPolicy,
+    state: Mutex<State>,
+    /// Wakes batch-forming workers when requests arrive / shutdown.
+    arrived: Condvar,
+    /// Wakes producers when capacity frees up.
+    freed: Condvar,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Batcher {
+        assert!(policy.max_batch > 0 && policy.queue_capacity >= policy.max_batch);
+        Batcher {
+            policy,
+            state: Mutex::new(State {
+                queues: HashMap::new(),
+                total: 0,
+                shutdown: false,
+            }),
+            arrived: Condvar::new(),
+            freed: Condvar::new(),
+        }
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// Admit a request, blocking while the queue is at capacity
+    /// (backpressure).  Returns `Err(request)` after shutdown.
+    pub fn submit(&self, request: Request) -> Result<(), Request> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.shutdown {
+                return Err(request);
+            }
+            if st.total < self.policy.queue_capacity {
+                st.queues.entry(request.class()).or_default().push_back(request);
+                st.total += 1;
+                drop(st);
+                self.arrived.notify_one();
+                return Ok(());
+            }
+            st = self.freed.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking admission (the server's overload path → 503-style
+    /// rejection instead of unbounded latency).
+    pub fn try_submit(&self, request: Request) -> Result<(), Request> {
+        let mut st = self.state.lock().unwrap();
+        if st.shutdown || st.total >= self.policy.queue_capacity {
+            return Err(request);
+        }
+        st.queues.entry(request.class()).or_default().push_back(request);
+        st.total += 1;
+        drop(st);
+        self.arrived.notify_one();
+        Ok(())
+    }
+
+    /// Pull the next batch, blocking until one is ready per the policy.
+    /// Returns `None` only at shutdown with empty queues.
+    pub fn next_batch(&self) -> Option<(BatchClass, Vec<Request>, FlushReason)> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            // A full batch in any class flushes immediately.
+            if let Some((&class, _)) = st
+                .queues
+                .iter()
+                .find(|(_, q)| q.len() >= self.policy.max_batch)
+            {
+                return Some((class, self.take(&mut st, class), FlushReason::Full));
+            }
+            // Otherwise, find the class with the oldest waiter.
+            let oldest: Option<(BatchClass, Instant)> = st
+                .queues
+                .iter()
+                .filter_map(|(&c, q)| q.front().map(|r| (c, r.enqueued)))
+                .min_by_key(|&(_, t)| t);
+            match oldest {
+                Some((class, t0)) => {
+                    let age = t0.elapsed();
+                    if age >= self.policy.max_wait {
+                        return Some((class, self.take(&mut st, class), FlushReason::Deadline));
+                    }
+                    if st.shutdown {
+                        return Some((class, self.take(&mut st, class), FlushReason::Shutdown));
+                    }
+                    let (guard, _) =
+                        self.arrived.wait_timeout(st, self.policy.max_wait - age).unwrap();
+                    st = guard;
+                }
+                None => {
+                    if st.shutdown {
+                        return None;
+                    }
+                    st = self.arrived.wait(st).unwrap();
+                }
+            }
+        }
+    }
+
+    fn take(&self, st: &mut State, class: BatchClass) -> Vec<Request> {
+        let q = st.queues.get_mut(&class).expect("class must exist");
+        let n = q.len().min(self.policy.max_batch);
+        let batch: Vec<Request> = q.drain(..n).collect();
+        st.total -= batch.len();
+        self.freed.notify_all();
+        batch
+    }
+
+    /// Current queued request count (metrics).
+    pub fn depth(&self) -> usize {
+        self.state.lock().unwrap().total
+    }
+
+    /// Begin shutdown: queued requests still drain via [`next_batch`].
+    pub fn shutdown(&self) {
+        self.state.lock().unwrap().shutdown = true;
+        self.arrived.notify_all();
+        self.freed.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Payload;
+    use crate::exec::channel::oneshot;
+    use std::sync::Arc;
+
+    fn req(id: u64, class: BatchClass) -> Request {
+        let (tx, _rx) = oneshot();
+        let payload = match class {
+            BatchClass::Softmax => Payload::Softmax { logits: vec![id as f32] },
+            BatchClass::Decode => Payload::DecodeTopK { hidden: vec![id as f32], k: None },
+            BatchClass::LmStep => Payload::LmStep { session: id, token: 0, k: None },
+        };
+        Request::new(id, payload, tx)
+    }
+
+    fn batcher(max_batch: usize, max_wait_ms: u64, cap: usize) -> Batcher {
+        Batcher::new(BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_millis(max_wait_ms),
+            queue_capacity: cap,
+        })
+    }
+
+    #[test]
+    fn full_batch_flushes_immediately() {
+        let b = batcher(4, 10_000, 64);
+        for i in 0..4 {
+            b.submit(req(i, BatchClass::Softmax)).map_err(|_| ()).unwrap();
+        }
+        let t0 = Instant::now();
+        let (class, batch, reason) = b.next_batch().unwrap();
+        assert!(t0.elapsed() < Duration::from_millis(100), "must not wait for deadline");
+        assert_eq!(class, BatchClass::Softmax);
+        assert_eq!(batch.len(), 4);
+        assert_eq!(reason, FlushReason::Full);
+        let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3], "FIFO order");
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let b = batcher(16, 20, 64);
+        b.submit(req(1, BatchClass::Decode)).map_err(|_| ()).unwrap();
+        let t0 = Instant::now();
+        let (class, batch, reason) = b.next_batch().unwrap();
+        let waited = t0.elapsed();
+        assert_eq!(class, BatchClass::Decode);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(reason, FlushReason::Deadline);
+        assert!(waited >= Duration::from_millis(15), "honored max_wait: {waited:?}");
+    }
+
+    #[test]
+    fn classes_never_mix() {
+        let b = batcher(8, 5, 64);
+        for i in 0..3 {
+            b.submit(req(i, BatchClass::Softmax)).map_err(|_| ()).unwrap();
+            b.submit(req(100 + i, BatchClass::Decode)).map_err(|_| ()).unwrap();
+        }
+        let (c1, b1, _) = b.next_batch().unwrap();
+        let (c2, b2, _) = b.next_batch().unwrap();
+        assert_ne!(c1, c2);
+        assert!(b1.iter().all(|r| r.class() == c1));
+        assert!(b2.iter().all(|r| r.class() == c2));
+    }
+
+    #[test]
+    fn try_submit_rejects_when_full() {
+        let b = batcher(2, 10_000, 2);
+        assert!(b.try_submit(req(0, BatchClass::Softmax)).is_ok());
+        assert!(b.try_submit(req(1, BatchClass::Softmax)).is_ok());
+        assert!(b.try_submit(req(2, BatchClass::Softmax)).is_err(), "over capacity");
+        assert_eq!(b.depth(), 2);
+    }
+
+    #[test]
+    fn backpressure_unblocks_after_drain() {
+        let b = Arc::new(batcher(2, 10_000, 2));
+        b.submit(req(0, BatchClass::Softmax)).map_err(|_| ()).unwrap();
+        b.submit(req(1, BatchClass::Softmax)).map_err(|_| ()).unwrap();
+        let b2 = b.clone();
+        let t = std::thread::spawn(move || b2.submit(req(2, BatchClass::Softmax)).is_ok());
+        std::thread::sleep(Duration::from_millis(20));
+        let (_, batch, _) = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 2);
+        assert!(t.join().unwrap(), "blocked submit completed after drain");
+    }
+
+    #[test]
+    fn shutdown_drains_then_none() {
+        let b = batcher(16, 10_000, 64);
+        b.submit(req(7, BatchClass::LmStep)).map_err(|_| ()).unwrap();
+        b.shutdown();
+        let (_, batch, reason) = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(reason, FlushReason::Shutdown);
+        assert!(b.next_batch().is_none());
+        assert!(b.submit(req(8, BatchClass::LmStep)).is_err(), "no admission after shutdown");
+    }
+
+    #[test]
+    fn oldest_class_flushes_first_on_deadline() {
+        let b = batcher(16, 30, 64);
+        b.submit(req(1, BatchClass::Softmax)).map_err(|_| ()).unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        b.submit(req(2, BatchClass::Decode)).map_err(|_| ()).unwrap();
+        let (class, _, _) = b.next_batch().unwrap();
+        assert_eq!(class, BatchClass::Softmax, "older waiter wins");
+    }
+}

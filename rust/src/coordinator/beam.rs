@@ -1,0 +1,128 @@
+//! Beam-search decoding driver — the workload §4 of the paper motivates
+//! ("inference with the beam search for auto-regressive models has TopK
+//! following Softmax").
+//!
+//! Each hypothesis owns a server-side LM session; every step submits
+//! one `LmStep` request per live hypothesis (the coordinator batches
+//! them into a single artifact execution), expands with the returned
+//! top-k, and keeps the `width` best by cumulative log-probability.
+
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use super::request::{Payload, Reply};
+use super::Coordinator;
+
+/// One beam hypothesis.
+#[derive(Clone, Debug)]
+pub struct Hypothesis {
+    pub tokens: Vec<i32>,
+    pub logprob: f64,
+    session: u64,
+}
+
+/// Beam-search configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BeamConfig {
+    pub width: usize,
+    pub steps: usize,
+    /// Branching factor per hypothesis (k of the fused softmax+topk).
+    pub k: usize,
+    pub timeout: Duration,
+}
+
+impl Default for BeamConfig {
+    fn default() -> Self {
+        Self { width: 4, steps: 8, k: 5, timeout: Duration::from_secs(30) }
+    }
+}
+
+/// Run beam search from `start_token`; returns hypotheses sorted by
+/// descending log-probability.
+pub fn beam_search(
+    coord: &Coordinator,
+    cfg: BeamConfig,
+    start_token: i32,
+) -> Result<Vec<Hypothesis>> {
+    assert!(cfg.width > 0 && cfg.k > 0 && cfg.steps > 0);
+    let root = coord.open_session();
+    let mut beam =
+        vec![Hypothesis { tokens: vec![start_token], logprob: 0.0, session: root }];
+
+    for _step in 0..cfg.steps {
+        // Fan out: one LmStep per live hypothesis, submitted together so
+        // the batcher can fuse them into a single artifact execution.
+        let receivers: Vec<_> = beam
+            .iter()
+            .map(|h| {
+                coord.submit(Payload::LmStep {
+                    session: h.session,
+                    token: *h.tokens.last().expect("nonempty"),
+                    k: Some(cfg.k),
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()
+            .map_err(|e| anyhow!(e))?;
+
+        // Collect expansions.
+        let mut candidates: Vec<(usize, f64, i32)> = Vec::new(); // (parent, score, token)
+        for (parent, rx) in receivers.into_iter().enumerate() {
+            let reply = rx
+                .recv_timeout(cfg.timeout)
+                .map_err(|e| anyhow!("beam step failed: {e:?}"))?
+                .map_err(|e| anyhow!(e))?;
+            match reply {
+                Reply::TopK { vals, idx } => {
+                    for (v, i) in vals.iter().zip(&idx) {
+                        let lp = beam[parent].logprob + (*v as f64).max(1e-30).ln();
+                        candidates.push((parent, lp, *i as i32));
+                    }
+                }
+                other => return Err(anyhow!("unexpected reply {other:?}")),
+            }
+        }
+
+        // Prune to the best `width` (stable tiebreak for determinism).
+        candidates.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1)
+                .unwrap()
+                .then(a.0.cmp(&b.0))
+                .then(a.2.cmp(&b.2))
+        });
+        candidates.truncate(cfg.width);
+
+        // Build the next beam: fork parent sessions for the survivors.
+        let mut next = Vec::with_capacity(candidates.len());
+        for &(parent, lp, token) in &candidates {
+            let session = coord.open_session();
+            coord.executor().fork_session(beam[parent].session, session)?;
+            let mut tokens = beam[parent].tokens.clone();
+            tokens.push(token);
+            next.push(Hypothesis { tokens, logprob: lp, session });
+        }
+        // Retire the previous generation's sessions.
+        for h in &beam {
+            coord.close_session(h.session);
+        }
+        // NOTE: sessions forked *pre-step* states; advance them by
+        // replaying the parent's last token so each survivor's state
+        // reflects its own token path.  The fork copied the parent's
+        // post-step state already (LmStep mutated it), so survivors of
+        // the same parent share the parent state and differ only in the
+        // *chosen* token, which feeds the next step — correct for this
+        // state-update model where the token enters at the next step.
+        beam = next;
+    }
+
+    // Final ordering; keep sessions open so callers may continue.
+    beam.sort_by(|a, b| b.logprob.partial_cmp(&a.logprob).unwrap());
+    Ok(beam)
+}
+
+/// Close all sessions held by a finished beam.
+pub fn release(coord: &Coordinator, beam: &[Hypothesis]) {
+    for h in beam {
+        coord.close_session(h.session);
+    }
+}

@@ -1,0 +1,624 @@
+//! Batch executor: turns a formed batch into artifact executions and
+//! fans results back to each request's reply channel.
+//!
+//! This is where the paper's §3.1 becomes a *system* feature: in
+//! sharded mode every vocabulary shard produces a partial
+//! `(m, d, topk)` on its own engine thread, and the coordinator merges
+//! them in rust with the ⊕ operator (eq. 4) — the parallel online
+//! normalizer calculation applied across the serving topology rather
+//! than across SIMD lanes.
+//!
+//! Batching detail: requests are padded up to the artifact batch
+//! buckets compiled by `aot.py` (1/4/16 by default); pad rows are zeros
+//! and their outputs are discarded.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::model::SyntheticLm;
+use super::request::{BatchClass, Payload, Reply, ReplyResult, Request};
+use crate::config::{ServeConfig, ServingMode};
+use crate::runtime::{EnginePool, Input, Tensor};
+use crate::softmax::fused;
+use crate::softmax::monoid::MD;
+use crate::topk::TopKBuffer;
+
+/// Executes batches against the engine pool.
+pub struct Executor {
+    pool: EnginePool,
+    model: SyntheticLm,
+    mode: ServingMode,
+    shards: usize,
+    default_k: usize,
+    vocab: usize,
+    hidden: usize,
+    artifact_k: usize,
+    /// LM session states, (hidden,) per session.
+    sessions: Mutex<HashMap<u64, Vec<f32>>>,
+}
+
+impl Executor {
+    /// Build from config: starts engine threads, generates the model,
+    /// registers weights as device-resident params, warms up the
+    /// executables the mode needs.
+    pub fn new(cfg: &ServeConfig) -> Result<Executor> {
+        let n_engines = if cfg.shards > 1 { cfg.shards } else { cfg.workers.max(1) };
+        let pool = EnginePool::start(&cfg.artifacts_dir, n_engines)?;
+        let manifest = pool.manifest();
+
+        // Shapes come from the manifest, not the config: the artifacts
+        // define what the runtime can execute.
+        let decode = manifest
+            .variant("decode_topk_safe")
+            .first()
+            .copied()
+            .ok_or_else(|| anyhow!("artifacts missing decode_topk_safe variant"))?
+            .clone();
+        let vocab = decode.vocab;
+        let hidden = decode.hidden.ok_or_else(|| anyhow!("decode artifact missing hidden"))?;
+        let artifact_k = decode.k.ok_or_else(|| anyhow!("decode artifact missing k"))?;
+        if cfg.default_k > artifact_k {
+            bail!(
+                "default_k {} exceeds the AOT-compiled k {} (regenerate artifacts with --k)",
+                cfg.default_k,
+                artifact_k
+            );
+        }
+        if cfg.shards > 1 {
+            let part = manifest
+                .variant("decode_partial")
+                .first()
+                .copied()
+                .ok_or_else(|| anyhow!("artifacts missing decode_partial variant"))?;
+            let expected = part.shard_count.unwrap_or(0);
+            if expected != cfg.shards {
+                bail!(
+                    "artifacts were compiled for {} shards, config wants {} \
+                     (regenerate with --shards)",
+                    expected,
+                    cfg.shards
+                );
+            }
+        }
+
+        let model = SyntheticLm::generate(vocab, hidden, cfg.seed);
+        let executor = Executor {
+            model,
+            mode: cfg.mode,
+            shards: cfg.shards,
+            default_k: cfg.default_k,
+            vocab,
+            hidden,
+            artifact_k,
+            sessions: Mutex::new(HashMap::new()),
+            pool,
+        };
+        executor.register_params()?;
+        Ok(executor)
+    }
+
+    fn register_params(&self) -> Result<()> {
+        if self.shards > 1 {
+            for s in 0..self.shards {
+                self.pool
+                    .engine(s)
+                    .register_param("W_shard", self.model.w_shard_tensor(s, self.shards))?;
+            }
+        }
+        // Full-vocab weights + LM weights live on every engine so any
+        // worker can run any class.
+        for i in 0..self.pool.len() {
+            let e = self.pool.engine(i);
+            e.register_param("W", self.model.w_tensor())?;
+            e.register_param("emb", self.model.emb_tensor())?;
+            e.register_param("w1", self.model.w1_tensor())?;
+            e.register_param("w2", self.model.w2_tensor())?;
+        }
+        Ok(())
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    pub fn hidden(&self) -> usize {
+        self.hidden
+    }
+
+    pub fn model(&self) -> &SyntheticLm {
+        &self.model
+    }
+
+    /// Create (or reset) an LM session with a zero state.
+    pub fn open_session(&self, id: u64) {
+        self.sessions.lock().unwrap().insert(id, vec![0.0; self.hidden]);
+    }
+
+    pub fn close_session(&self, id: u64) {
+        self.sessions.lock().unwrap().remove(&id);
+    }
+
+    /// Copy `src`'s state into session `dst` (beam-search expansion).
+    pub fn fork_session(&self, src: u64, dst: u64) -> Result<()> {
+        let mut sessions = self.sessions.lock().unwrap();
+        let state =
+            sessions.get(&src).ok_or_else(|| anyhow!("unknown session {src}"))?.clone();
+        sessions.insert(dst, state);
+        Ok(())
+    }
+
+    pub fn session_count(&self) -> usize {
+        self.sessions.lock().unwrap().len()
+    }
+
+    /// Execute one formed batch; every request's reply channel receives
+    /// its result (success or per-request error).
+    pub fn execute_batch(&self, class: BatchClass, batch: Vec<Request>, worker: usize) {
+        let outcome = match class {
+            BatchClass::Softmax => self.run_softmax(&batch, worker),
+            BatchClass::Decode => self.run_decode(&batch, worker),
+            BatchClass::LmStep => self.run_lm_step(&batch, worker),
+        };
+        match outcome {
+            Ok(replies) => {
+                debug_assert_eq!(replies.len(), batch.len());
+                for (req, reply) in batch.into_iter().zip(replies) {
+                    let _ = req.reply.send(reply);
+                }
+            }
+            Err(e) => {
+                let msg = format!("batch execution failed: {e:#}");
+                crate::error!("coordinator.executor", "{msg}");
+                for req in batch {
+                    let _ = req.reply.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Softmax serving (Figures 1–2 workload)
+    // ------------------------------------------------------------------
+
+    fn run_softmax(&self, batch: &[Request], worker: usize) -> Result<Vec<ReplyResult>> {
+        // Per-request validation: reject wrong-length rows up front.
+        let mut rows: Vec<Option<&[f32]>> = Vec::with_capacity(batch.len());
+        let mut errors: Vec<Option<String>> = vec![None; batch.len()];
+        for (i, req) in batch.iter().enumerate() {
+            match &req.payload {
+                Payload::Softmax { logits } if logits.len() == self.vocab => {
+                    rows.push(Some(logits))
+                }
+                Payload::Softmax { logits } => {
+                    errors[i] = Some(format!(
+                        "logits length {} != served vocab {}",
+                        logits.len(),
+                        self.vocab
+                    ));
+                    rows.push(None);
+                }
+                _ => unreachable!("router guarantees class purity"),
+            }
+        }
+        let live: Vec<&[f32]> = rows.iter().flatten().copied().collect();
+        let probs: Vec<Vec<f32>> = if live.is_empty() {
+            Vec::new()
+        } else if self.shards > 1 {
+            self.softmax_sharded(&live)?
+        } else {
+            self.softmax_unsharded(&live, worker)?
+        };
+        let mut out = Vec::with_capacity(batch.len());
+        let mut it = probs.into_iter();
+        for (row, err) in rows.iter().zip(errors) {
+            out.push(match (row, err) {
+                (Some(_), _) => Ok(Reply::Softmax { probs: it.next().expect("row count") }),
+                (None, Some(e)) => Err(e),
+                (None, None) => unreachable!(),
+            });
+        }
+        Ok(out)
+    }
+
+    fn softmax_unsharded(&self, rows: &[&[f32]], worker: usize) -> Result<Vec<Vec<f32>>> {
+        let entry = self
+            .pool
+            .manifest()
+            .bucket_for("softmax_safe", rows.len())
+            .ok_or_else(|| anyhow!("no softmax_safe artifact"))?
+            .clone();
+        let b = entry.batch;
+        let mut flat = vec![0.0f32; b * self.vocab];
+        for (i, r) in rows.iter().enumerate() {
+            flat[i * self.vocab..(i + 1) * self.vocab].copy_from_slice(r);
+        }
+        let out = self
+            .pool
+            .engine(worker)
+            .execute(&entry.name, vec![Tensor::f32(vec![b, self.vocab], flat)?])?;
+        let y = out.into_iter().next().unwrap().into_f32()?;
+        Ok(rows
+            .iter()
+            .enumerate()
+            .map(|(i, _)| y[i * self.vocab..(i + 1) * self.vocab].to_vec())
+            .collect())
+    }
+
+    /// Sharded softmax: per-shard single-pass partial (m, d) on each
+    /// engine, rust-side ⊕ merge, then per-shard scale pass — the
+    /// distributed rendition of Algorithm 3's two passes.
+    fn softmax_sharded(&self, rows: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let vs = self.vocab / self.shards;
+        let part_entry = self
+            .pool
+            .manifest()
+            .bucket_for("softmax_partial", rows.len())
+            .ok_or_else(|| anyhow!("no softmax_partial artifact"))?
+            .clone();
+        let scale_entry = self
+            .pool
+            .manifest()
+            .bucket_for("softmax_scale", rows.len())
+            .ok_or_else(|| anyhow!("no softmax_scale artifact"))?
+            .clone();
+        let b = part_entry.batch;
+        if part_entry.vocab != vs || scale_entry.vocab != vs {
+            bail!("shard artifacts sized for vocab {} but need {vs}", part_entry.vocab);
+        }
+
+        // Column slices per shard, padded to bucket rows.
+        let shard_input = |s: usize| -> Result<Tensor> {
+            let mut flat = vec![0.0f32; b * vs];
+            for (i, r) in rows.iter().enumerate() {
+                flat[i * vs..(i + 1) * vs].copy_from_slice(&r[s * vs..(s + 1) * vs]);
+            }
+            Tensor::f32(vec![b, vs], flat)
+        };
+
+        // Pass 1 (parallel over shard engines): partial (m, d).
+        let partials: Vec<Result<(Vec<f32>, Vec<f32>)>> =
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..self.shards)
+                    .map(|s| {
+                        let entry_name = part_entry.name.clone();
+                        let input = shard_input(s);
+                        let engine = self.pool.engine(s).clone();
+                        scope.spawn(move || -> Result<(Vec<f32>, Vec<f32>)> {
+                            let out = engine.execute(&entry_name, vec![input?])?;
+                            let mut it = out.into_iter();
+                            let m = it.next().unwrap().into_f32()?;
+                            let d = it.next().unwrap().into_f32()?;
+                            Ok((m, d))
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("shard thread")).collect()
+            });
+
+        // ⊕ merge in rust (eq. 4) per row.
+        let mut merged = vec![MD::IDENTITY; b];
+        for part in partials {
+            let (m, d) = part?;
+            for (row, acc) in merged.iter_mut().enumerate() {
+                *acc = acc.combine(MD { m: m[row], d: d[row] });
+            }
+        }
+        let m_final: Vec<f32> = merged.iter().map(|md| md.m).collect();
+        let d_final: Vec<f32> = merged.iter().map(|md| md.d).collect();
+
+        // Pass 2 (parallel): scale each shard with the global (m, d).
+        let scaled: Vec<Result<Vec<f32>>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..self.shards)
+                .map(|s| {
+                    let entry_name = scale_entry.name.clone();
+                    let input = shard_input(s);
+                    let m = Tensor::f32(vec![b], m_final.clone());
+                    let d = Tensor::f32(vec![b], d_final.clone());
+                    let engine = self.pool.engine(s).clone();
+                    scope.spawn(move || -> Result<Vec<f32>> {
+                        let out = engine.execute(&entry_name, vec![input?, m?, d?])?;
+                        out.into_iter().next().unwrap().into_f32()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("shard thread")).collect()
+        });
+
+        // Reassemble rows from shard columns.
+        let mut pieces = Vec::with_capacity(self.shards);
+        for piece in scaled {
+            pieces.push(piece?);
+        }
+        Ok((0..rows.len())
+            .map(|i| {
+                let mut row = Vec::with_capacity(self.vocab);
+                for piece in &pieces {
+                    row.extend_from_slice(&piece[i * vs..(i + 1) * vs]);
+                }
+                row
+            })
+            .collect())
+    }
+
+    // ------------------------------------------------------------------
+    // Decode serving (Figures 3–4 workload)
+    // ------------------------------------------------------------------
+
+    fn run_decode(&self, batch: &[Request], worker: usize) -> Result<Vec<ReplyResult>> {
+        let mut rows: Vec<Option<(&[f32], usize)>> = Vec::with_capacity(batch.len());
+        let mut errors: Vec<Option<String>> = vec![None; batch.len()];
+        for (i, req) in batch.iter().enumerate() {
+            match &req.payload {
+                Payload::DecodeTopK { hidden, k } => {
+                    let k = k.unwrap_or(self.default_k);
+                    if hidden.len() != self.hidden {
+                        errors[i] = Some(format!(
+                            "hidden length {} != served hidden {}",
+                            hidden.len(),
+                            self.hidden
+                        ));
+                        rows.push(None);
+                    } else if k == 0 || k > self.artifact_k {
+                        errors[i] =
+                            Some(format!("k={k} outside supported range 1..={}", self.artifact_k));
+                        rows.push(None);
+                    } else {
+                        rows.push(Some((hidden.as_slice(), k)));
+                    }
+                }
+                _ => unreachable!("router guarantees class purity"),
+            }
+        }
+        let live: Vec<(&[f32], usize)> = rows.iter().flatten().copied().collect();
+        let results: Vec<(Vec<f32>, Vec<i64>)> = if live.is_empty() {
+            Vec::new()
+        } else {
+            let states: Vec<&[f32]> = live.iter().map(|(h, _)| *h).collect();
+            let full = self.decode_states(&states, worker)?;
+            full.into_iter()
+                .zip(live.iter())
+                .map(|((vals, idx), (_, k))| (vals[..*k].to_vec(), idx[..*k].to_vec()))
+                .collect()
+        };
+        let mut out = Vec::with_capacity(batch.len());
+        let mut it = results.into_iter();
+        for (row, err) in rows.iter().zip(errors) {
+            out.push(match (row, err) {
+                (Some(_), _) => {
+                    let (vals, idx) = it.next().expect("row count");
+                    Ok(Reply::TopK { vals, idx })
+                }
+                (None, Some(e)) => Err(e),
+                (None, None) => unreachable!(),
+            });
+        }
+        Ok(out)
+    }
+
+    /// Decode a batch of hidden states to top-`artifact_k` results.
+    pub fn decode_states(
+        &self,
+        states: &[&[f32]],
+        worker: usize,
+    ) -> Result<Vec<(Vec<f32>, Vec<i64>)>> {
+        if self.shards > 1 {
+            self.decode_sharded(states)
+        } else {
+            self.decode_unsharded(states, worker)
+        }
+    }
+
+    fn decode_unsharded(
+        &self,
+        states: &[&[f32]],
+        worker: usize,
+    ) -> Result<Vec<(Vec<f32>, Vec<i64>)>> {
+        let variant = match self.mode {
+            ServingMode::Safe => "decode_topk_safe",
+            ServingMode::Online => "decode_topk_online",
+        };
+        let entry = self
+            .pool
+            .manifest()
+            .bucket_for(variant, states.len())
+            .ok_or_else(|| anyhow!("no {variant} artifact"))?
+            .clone();
+        let b = entry.batch;
+        let k = self.artifact_k;
+        let mut flat = vec![0.0f32; b * self.hidden];
+        for (i, s) in states.iter().enumerate() {
+            flat[i * self.hidden..(i + 1) * self.hidden].copy_from_slice(s);
+        }
+        let out = self.pool.engine(worker).execute_mixed(
+            &entry.name,
+            vec![
+                Input::Inline(Tensor::f32(vec![b, self.hidden], flat)?),
+                Input::Param("W".into()),
+            ],
+        )?;
+        let vals = out[0].as_f32()?;
+        let idx = out[1].as_i32()?;
+        Ok((0..states.len())
+            .map(|i| {
+                (
+                    vals[i * k..(i + 1) * k].to_vec(),
+                    idx[i * k..(i + 1) * k].iter().map(|&x| x as i64).collect(),
+                )
+            })
+            .collect())
+    }
+
+    /// Sharded decode: each shard engine computes `(m, d, u, p_local)`
+    /// on its vocabulary slice via the single-pass partial artifact; the
+    /// coordinator ⊕-merges normalizers and candidate buffers and
+    /// finalizes `e^{u−m}/d` — Algorithm 4 distributed across engines.
+    fn decode_sharded(&self, states: &[&[f32]]) -> Result<Vec<(Vec<f32>, Vec<i64>)>> {
+        let entry = self
+            .pool
+            .manifest()
+            .bucket_for("decode_partial", states.len())
+            .ok_or_else(|| anyhow!("no decode_partial artifact"))?
+            .clone();
+        let b = entry.batch;
+        let k = self.artifact_k;
+        let vs = self.vocab / self.shards;
+        let mut flat = vec![0.0f32; b * self.hidden];
+        for (i, s) in states.iter().enumerate() {
+            flat[i * self.hidden..(i + 1) * self.hidden].copy_from_slice(s);
+        }
+
+        type Partial = (Vec<f32>, Vec<f32>, Vec<f32>, Vec<i32>);
+        let partials: Vec<Result<Partial>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..self.shards)
+                .map(|s| {
+                    let name = entry.name.clone();
+                    let h = Tensor::f32(vec![b, self.hidden], flat.clone());
+                    let engine = self.pool.engine(s).clone();
+                    scope.spawn(move || -> Result<Partial> {
+                        let out = engine.execute_mixed(
+                            &name,
+                            vec![Input::Inline(h?), Input::Param("W_shard".into())],
+                        )?;
+                        let mut it = out.into_iter();
+                        Ok((
+                            it.next().unwrap().into_f32()?,
+                            it.next().unwrap().into_f32()?,
+                            it.next().unwrap().into_f32()?,
+                            it.next().unwrap().into_i32()?,
+                        ))
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("shard thread")).collect()
+        });
+
+        // Rust-side merge per row: ⊕ on (m, d), buffer-merge on top-k.
+        let mut acc: Vec<(MD, TopKBuffer)> =
+            (0..states.len()).map(|_| (MD::IDENTITY, TopKBuffer::new(k))).collect();
+        for (s, part) in partials.into_iter().enumerate() {
+            let (m, d, u, p) = part?;
+            let base = (s * vs) as i64;
+            for (row, (md, buf)) in acc.iter_mut().enumerate() {
+                *md = md.combine(MD { m: m[row], d: d[row] });
+                for i in 0..k {
+                    let idx = p[row * k + i];
+                    if idx >= 0 {
+                        buf.push(u[row * k + i], base + idx as i64);
+                    }
+                }
+            }
+        }
+        Ok(acc.iter().map(|(md, buf)| fused::finalize(buf, *md)).collect())
+    }
+
+    // ------------------------------------------------------------------
+    // LM sessions (end-to-end example workload)
+    // ------------------------------------------------------------------
+
+    fn run_lm_step(&self, batch: &[Request], worker: usize) -> Result<Vec<ReplyResult>> {
+        let mut jobs: Vec<Option<(u64, i32, usize)>> = Vec::with_capacity(batch.len());
+        let mut errors: Vec<Option<String>> = vec![None; batch.len()];
+        {
+            let sessions = self.sessions.lock().unwrap();
+            for (i, req) in batch.iter().enumerate() {
+                match &req.payload {
+                    Payload::LmStep { session, token, k } => {
+                        let k = k.unwrap_or(self.default_k);
+                        if !sessions.contains_key(session) {
+                            errors[i] = Some(format!("unknown session {session}"));
+                            jobs.push(None);
+                        } else if *token < 0 || *token as usize >= self.vocab {
+                            errors[i] = Some(format!("token {token} outside vocab"));
+                            jobs.push(None);
+                        } else if k == 0 || k > self.artifact_k {
+                            errors[i] = Some(format!(
+                                "k={k} outside supported range 1..={}",
+                                self.artifact_k
+                            ));
+                            jobs.push(None);
+                        } else {
+                            jobs.push(Some((*session, *token, k)));
+                        }
+                    }
+                    _ => unreachable!("router guarantees class purity"),
+                }
+            }
+        }
+        let live: Vec<(u64, i32, usize)> = jobs.iter().flatten().copied().collect();
+        let mut results: Vec<(Vec<f32>, Vec<i64>)> = Vec::new();
+        if !live.is_empty() {
+            // 1. advance recurrent states via the lm_step artifact
+            let entry = self
+                .pool
+                .manifest()
+                .bucket_for("lm_step", live.len())
+                .ok_or_else(|| anyhow!("no lm_step artifact"))?
+                .clone();
+            let b = entry.batch;
+            let mut state_flat = vec![0.0f32; b * self.hidden];
+            let mut tokens = vec![0i32; b];
+            {
+                let sessions = self.sessions.lock().unwrap();
+                for (i, (sid, tok, _)) in live.iter().enumerate() {
+                    state_flat[i * self.hidden..(i + 1) * self.hidden]
+                        .copy_from_slice(&sessions[sid]);
+                    tokens[i] = *tok;
+                }
+            }
+            let out = self.pool.engine(worker).execute_mixed(
+                &entry.name,
+                vec![
+                    Input::Param("emb".into()),
+                    Input::Param("w1".into()),
+                    Input::Param("w2".into()),
+                    Input::Inline(Tensor::f32(vec![b, self.hidden], state_flat)?),
+                    Input::Inline(Tensor::i32(vec![b], tokens)?),
+                ],
+            )?;
+            let new_states = out.into_iter().next().unwrap().into_f32()?;
+
+            // 2. persist new states
+            {
+                let mut sessions = self.sessions.lock().unwrap();
+                for (i, (sid, _, _)) in live.iter().enumerate() {
+                    sessions.insert(
+                        *sid,
+                        new_states[i * self.hidden..(i + 1) * self.hidden].to_vec(),
+                    );
+                }
+            }
+
+            // 3. decode the new states
+            let state_rows: Vec<&[f32]> = live
+                .iter()
+                .enumerate()
+                .map(|(i, _)| &new_states[i * self.hidden..(i + 1) * self.hidden])
+                .collect();
+            let decoded = self.decode_states(&state_rows, worker)?;
+            results = decoded
+                .into_iter()
+                .zip(live.iter())
+                .map(|((vals, idx), (_, _, k))| (vals[..*k].to_vec(), idx[..*k].to_vec()))
+                .collect();
+        }
+        let mut out = Vec::with_capacity(batch.len());
+        let mut it = results.into_iter();
+        for (job, err) in jobs.iter().zip(errors) {
+            out.push(match (job, err) {
+                (Some(_), _) => {
+                    let (vals, idx) = it.next().expect("row count");
+                    Ok(Reply::TopK { vals, idx })
+                }
+                (None, Some(e)) => Err(e),
+                (None, None) => unreachable!(),
+            });
+        }
+        Ok(out)
+    }
+
+    pub fn shutdown(&self) {
+        self.pool.shutdown();
+    }
+}

@@ -1,0 +1,168 @@
+//! L3 coordinator — the serving system around the paper's kernels.
+//!
+//! ```text
+//!  clients ──► Coordinator::submit ──► Batcher (bounded, classed)
+//!                                         │ next_batch()
+//!                              worker threads (config.workers)
+//!                                         │
+//!                                  Executor::execute_batch
+//!                   ┌──────────────┬──────┴────────┬──────────────┐
+//!               softmax        decode topk      lm step        (classes)
+//!                   │              │               │
+//!             EnginePool (PJRT CPU clients, AOT artifacts)
+//!                   │
+//!          sharded mode: per-shard (m, d, topk) partials,
+//!          ⊕-merged in rust (§3.1 of the paper) and finalized
+//! ```
+//!
+//! Submodules: [`request`] (types), [`batcher`] (continuous dynamic
+//! batching with deadline flush + backpressure), [`executor`] (artifact
+//! execution + shard merge), [`model`] (deterministic synthetic
+//! weights), [`beam`] (beam-search driver used by the examples).
+
+pub mod batcher;
+pub mod beam;
+pub mod executor;
+pub mod model;
+pub mod request;
+
+pub use batcher::{BatchPolicy, Batcher, FlushReason};
+pub use executor::Executor;
+pub use model::SyntheticLm;
+pub use request::{BatchClass, Payload, Reply, ReplyResult, Request, RequestId};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::config::ServeConfig;
+use crate::exec::channel::OnceReceiver;
+use crate::exec::oneshot;
+use crate::metrics;
+
+/// The assembled serving system.
+pub struct Coordinator {
+    batcher: Arc<Batcher>,
+    executor: Arc<Executor>,
+    next_id: AtomicU64,
+    next_session: AtomicU64,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Build and start: engines, weights, batcher, worker threads.
+    pub fn start(cfg: &ServeConfig) -> Result<Coordinator> {
+        let executor = Arc::new(Executor::new(cfg)?);
+        let batcher = Arc::new(Batcher::new(BatchPolicy {
+            max_batch: cfg.max_batch,
+            max_wait: cfg.max_wait,
+            queue_capacity: cfg.queue_capacity,
+        }));
+        let reg = metrics::global();
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers {
+            let batcher = batcher.clone();
+            let executor = executor.clone();
+            let batch_hist = reg.histogram("coordinator.batch_exec_us");
+            let batch_size = reg.counter("coordinator.batched_requests");
+            let batches = reg.counter("coordinator.batches");
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("coord-worker-{w}"))
+                    .spawn(move || {
+                        while let Some((class, batch, _reason)) = batcher.next_batch() {
+                            batches.inc();
+                            batch_size.add(batch.len() as u64);
+                            let t0 = std::time::Instant::now();
+                            executor.execute_batch(class, batch, w);
+                            batch_hist.record(t0.elapsed());
+                        }
+                    })
+                    .expect("spawn coordinator worker"),
+            );
+        }
+        Ok(Coordinator {
+            batcher,
+            executor,
+            next_id: AtomicU64::new(1),
+            next_session: AtomicU64::new(1),
+            workers,
+        })
+    }
+
+    /// Submit a request; returns the response channel immediately.
+    pub fn submit(&self, payload: Payload) -> Result<OnceReceiver<ReplyResult>, String> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = oneshot();
+        let req = Request::new(id, payload, tx);
+        metrics::global().counter("coordinator.submitted").inc();
+        metrics::global()
+            .gauge("coordinator.queue_depth")
+            .set(self.batcher.depth() as i64);
+        self.batcher
+            .submit(req)
+            .map_err(|_| "coordinator shutting down".to_string())?;
+        Ok(rx)
+    }
+
+    /// Submit without blocking on a full queue (server overload path).
+    pub fn try_submit(&self, payload: Payload) -> Result<OnceReceiver<ReplyResult>, String> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = oneshot();
+        let req = Request::new(id, payload, tx);
+        self.batcher.try_submit(req).map_err(|_| "queue full (backpressure)".to_string())?;
+        Ok(rx)
+    }
+
+    /// Submit and wait with a timeout — the blocking convenience path.
+    pub fn call(&self, payload: Payload, timeout: Duration) -> ReplyResult {
+        let t0 = std::time::Instant::now();
+        let rx = self.submit(payload)?;
+        let result = rx
+            .recv_timeout(timeout)
+            .map_err(|e| format!("request timed out/failed: {e:?}"))?;
+        metrics::global()
+            .histogram("coordinator.request_us")
+            .record(t0.elapsed());
+        result
+    }
+
+    /// Open a new LM session, returning its id.
+    pub fn open_session(&self) -> u64 {
+        let id = self.next_session.fetch_add(1, Ordering::Relaxed);
+        self.executor.open_session(id);
+        id
+    }
+
+    pub fn close_session(&self, id: u64) {
+        self.executor.close_session(id);
+    }
+
+    /// Fork an existing session's state into a fresh session id
+    /// (beam-search expansion without replay).
+    pub fn fork_session(&self, src: u64) -> Result<u64> {
+        let id = self.next_session.fetch_add(1, Ordering::Relaxed);
+        self.executor.fork_session(src, id)?;
+        Ok(id)
+    }
+
+    pub fn executor(&self) -> &Executor {
+        &self.executor
+    }
+
+    /// Queue depth snapshot (metrics / tests).
+    pub fn queue_depth(&self) -> usize {
+        self.batcher.depth()
+    }
+
+    /// Drain and stop: in-flight batches finish, workers join.
+    pub fn shutdown(mut self) {
+        self.batcher.shutdown();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.executor.shutdown();
+    }
+}

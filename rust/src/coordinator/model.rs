@@ -1,0 +1,136 @@
+//! Synthetic model weights for the serving system.
+//!
+//! The paper evaluates kernels on random fp32 logits; the serving
+//! system needs an actual projection layer (and, for the end-to-end
+//! example, a tiny recurrent LM).  Weights are generated determin-
+//! istically from the config seed with the crate PRNG — the same seed
+//! always serves the same model, so tests and clients can assert exact
+//! numerics.  Scales follow common initializer conventions (≈1/√H).
+
+use crate::rng::Xoshiro256pp;
+use crate::runtime::Tensor;
+
+/// Deterministic synthetic LM weights sized to the artifact shapes.
+pub struct SyntheticLm {
+    pub vocab: usize,
+    pub hidden: usize,
+    /// Projection matrix, row-major (vocab, hidden).
+    pub w: Vec<f32>,
+    /// Token embeddings, row-major (vocab, hidden).
+    pub emb: Vec<f32>,
+    /// Recurrent state weights (hidden, hidden).
+    pub w1: Vec<f32>,
+    /// Input weights (hidden, hidden).
+    pub w2: Vec<f32>,
+}
+
+impl SyntheticLm {
+    pub fn generate(vocab: usize, hidden: usize, seed: u64) -> SyntheticLm {
+        let scale = 1.0 / (hidden as f32).sqrt();
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut gen = |n: usize, s: f32| -> Vec<f32> {
+            let mut v = vec![0.0f32; n];
+            rng.fill_logits(&mut v, s);
+            v
+        };
+        SyntheticLm {
+            vocab,
+            hidden,
+            w: gen(vocab * hidden, scale),
+            emb: gen(vocab * hidden, 1.0),
+            w1: gen(hidden * hidden, scale * 0.5),
+            w2: gen(hidden * hidden, scale * 0.5),
+        }
+    }
+
+    /// Projection weights for one vocabulary shard (rows `[lo, hi)`).
+    pub fn w_shard(&self, shard: usize, shards: usize) -> Vec<f32> {
+        assert!(self.vocab % shards == 0, "vocab must divide shards");
+        let vs = self.vocab / shards;
+        let lo = shard * vs * self.hidden;
+        let hi = (shard + 1) * vs * self.hidden;
+        self.w[lo..hi].to_vec()
+    }
+
+    pub fn w_tensor(&self) -> Tensor {
+        Tensor::f32(vec![self.vocab, self.hidden], self.w.clone()).expect("shape")
+    }
+
+    pub fn w_shard_tensor(&self, shard: usize, shards: usize) -> Tensor {
+        let vs = self.vocab / shards;
+        Tensor::f32(vec![vs, self.hidden], self.w_shard(shard, shards)).expect("shape")
+    }
+
+    pub fn emb_tensor(&self) -> Tensor {
+        Tensor::f32(vec![self.vocab, self.hidden], self.emb.clone()).expect("shape")
+    }
+
+    pub fn w1_tensor(&self) -> Tensor {
+        Tensor::f32(vec![self.hidden, self.hidden], self.w1.clone()).expect("shape")
+    }
+
+    pub fn w2_tensor(&self) -> Tensor {
+        Tensor::f32(vec![self.hidden, self.hidden], self.w2.clone()).expect("shape")
+    }
+
+    /// Host-side projection `logits = h · Wᵀ` for one row (reference /
+    /// fallback path; the hot path runs the AOT artifact instead).
+    pub fn project_row(&self, h: &[f32]) -> Vec<f32> {
+        assert_eq!(h.len(), self.hidden);
+        let mut logits = vec![0.0f32; self.vocab];
+        for (j, out) in logits.iter_mut().enumerate() {
+            let row = &self.w[j * self.hidden..(j + 1) * self.hidden];
+            let mut acc = 0.0f32;
+            for (a, b) in row.iter().zip(h) {
+                acc += a * b;
+            }
+            *out = acc;
+        }
+        logits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = SyntheticLm::generate(64, 8, 42);
+        let b = SyntheticLm::generate(64, 8, 42);
+        let c = SyntheticLm::generate(64, 8, 43);
+        assert_eq!(a.w, b.w);
+        assert_ne!(a.w, c.w);
+        assert_eq!(a.w.len(), 64 * 8);
+    }
+
+    #[test]
+    fn shards_partition_w() {
+        let m = SyntheticLm::generate(64, 8, 1);
+        let mut joined = Vec::new();
+        for s in 0..4 {
+            joined.extend(m.w_shard(s, 4));
+        }
+        assert_eq!(joined, m.w);
+    }
+
+    #[test]
+    fn project_row_matches_manual() {
+        let m = SyntheticLm::generate(8, 4, 2);
+        let h = [1.0f32, -1.0, 0.5, 2.0];
+        let logits = m.project_row(&h);
+        let mut want = 0.0f32;
+        for d in 0..4 {
+            want += m.w[3 * 4 + d] * h[d];
+        }
+        assert!((logits[3] - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn tensors_have_declared_shapes() {
+        let m = SyntheticLm::generate(32, 8, 3);
+        assert_eq!(m.w_tensor().shape(), &[32, 8]);
+        assert_eq!(m.w_shard_tensor(1, 4).shape(), &[8, 8]);
+        assert_eq!(m.w1_tensor().shape(), &[8, 8]);
+    }
+}

@@ -1,0 +1,95 @@
+//! Request/response types flowing through the coordinator.
+
+use std::time::Instant;
+
+use crate::exec::channel::OnceSender;
+
+/// Monotonic request identifier.
+pub type RequestId = u64;
+
+/// What a client asks of the serving system.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    /// Full probability vector over raw logits (Figures 1–2 workload).
+    Softmax { logits: Vec<f32> },
+    /// Top-k next-token probabilities for a hidden state — the beam
+    /// search decode step (Figures 3–4 workload).  `k = None` uses the
+    /// server default.
+    DecodeTopK { hidden: Vec<f32>, k: Option<usize> },
+    /// One recurrent LM step: advance `session`'s state with `token`,
+    /// then decode top-k (the end-to-end example's path).
+    LmStep { session: u64, token: i32, k: Option<usize> },
+}
+
+/// Result returned to the submitting client.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Reply {
+    Softmax { probs: Vec<f32> },
+    TopK { vals: Vec<f32>, idx: Vec<i64> },
+}
+
+/// Errors surfaced to clients (stringly: crosses the wire as JSON).
+pub type ReplyResult = Result<Reply, String>;
+
+/// A queued request with its response channel and admission timestamp.
+pub struct Request {
+    pub id: RequestId,
+    pub payload: Payload,
+    pub reply: OnceSender<ReplyResult>,
+    pub enqueued: Instant,
+}
+
+impl Request {
+    pub fn new(id: RequestId, payload: Payload, reply: OnceSender<ReplyResult>) -> Request {
+        Request { id, payload, reply, enqueued: Instant::now() }
+    }
+
+    /// Routing class — requests of different classes never share a batch.
+    pub fn class(&self) -> BatchClass {
+        match &self.payload {
+            Payload::Softmax { .. } => BatchClass::Softmax,
+            Payload::DecodeTopK { .. } => BatchClass::Decode,
+            Payload::LmStep { .. } => BatchClass::LmStep,
+        }
+    }
+}
+
+/// Batchable request classes (one executable family per class).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BatchClass {
+    Softmax,
+    Decode,
+    LmStep,
+}
+
+impl BatchClass {
+    pub const ALL: [BatchClass; 3] = [BatchClass::Softmax, BatchClass::Decode, BatchClass::LmStep];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BatchClass::Softmax => "softmax",
+            BatchClass::Decode => "decode",
+            BatchClass::LmStep => "lm_step",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::channel::oneshot;
+
+    #[test]
+    fn class_routing() {
+        let (tx, _rx) = oneshot();
+        let r = Request::new(1, Payload::Softmax { logits: vec![1.0] }, tx);
+        assert_eq!(r.class(), BatchClass::Softmax);
+        let (tx, _rx) = oneshot();
+        let r = Request::new(2, Payload::DecodeTopK { hidden: vec![], k: Some(3) }, tx);
+        assert_eq!(r.class(), BatchClass::Decode);
+        let (tx, _rx) = oneshot();
+        let r = Request::new(3, Payload::LmStep { session: 9, token: 5, k: None }, tx);
+        assert_eq!(r.class(), BatchClass::LmStep);
+        assert_eq!(BatchClass::Decode.name(), "decode");
+    }
+}

@@ -1,0 +1,123 @@
+//! Concurrency substrate (no `tokio`/`rayon` in the offline registry).
+//!
+//! * [`ThreadPool`] — fixed-size worker pool with a shared injector
+//!   queue for `'static` tasks; powers the server's connection handling
+//!   and the coordinator's background workers.
+//! * [`oneshot`] — single-value rendezvous channel (request → response).
+//! * [`bounded`] — blocking MPMC channel with capacity-based
+//!   backpressure (the batcher's admission queue).
+//! * [`WaitGroup`] — Go-style completion barrier for fan-out/fan-in.
+//! * [`parallel_chunks`] — scoped data-parallel map over slice chunks
+//!   with an atomic work queue (rayon-style, borrow-friendly); powers
+//!   the parallel ⊕ reduction of §3.1.
+
+pub mod channel;
+pub mod pool;
+pub mod waitgroup;
+
+pub use channel::{bounded, oneshot, RecvError, SendError};
+pub use pool::ThreadPool;
+pub use waitgroup::WaitGroup;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Run `f(chunk_index, chunk)` over disjoint `chunk`-sized pieces of
+/// `data` on up to `threads` scoped workers, returning results in chunk
+/// order.  Workers claim chunks from an atomic counter, so uneven chunk
+/// costs balance dynamically.  `threads == 1` (or a single chunk) runs
+/// inline with zero spawns.
+pub fn parallel_chunks<T, R, F>(threads: usize, data: &[T], chunk: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &[T]) -> R + Sync,
+{
+    assert!(chunk > 0, "chunk size must be positive");
+    let n_chunks = data.len().div_ceil(chunk);
+    if n_chunks == 0 {
+        return Vec::new();
+    }
+    if threads <= 1 || n_chunks == 1 {
+        return data.chunks(chunk).enumerate().map(|(i, c)| f(i, c)).collect();
+    }
+
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(n_chunks);
+    slots.resize_with(n_chunks, || None);
+    let slots_ptr = SendPtr(slots.as_mut_ptr());
+    let next = AtomicUsize::new(0);
+    let workers = threads.min(n_chunks);
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let f = &f;
+            let next = &next;
+            let slots_ptr = &slots_ptr;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n_chunks {
+                    break;
+                }
+                let start = i * chunk;
+                let end = (start + chunk).min(data.len());
+                let r = f(i, &data[start..end]);
+                // SAFETY: each index i is claimed exactly once via the
+                // atomic counter, so writes to slots[i] are disjoint;
+                // the scope joins all workers before `slots` is read.
+                unsafe { *slots_ptr.0.add(i) = Some(r) };
+            });
+        }
+    });
+
+    slots.into_iter().map(|s| s.expect("chunk result missing")).collect()
+}
+
+/// Raw pointer wrapper asserting cross-thread transfer is safe under the
+/// disjoint-write discipline documented at the use site.
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Sync for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+
+/// Default parallelism: physical parallelism reported by the OS.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_chunks_orders_results() {
+        let data: Vec<u64> = (0..1000).collect();
+        let sums = parallel_chunks(4, &data, 64, |_, c| c.iter().sum::<u64>());
+        assert_eq!(sums.len(), 16);
+        assert_eq!(sums.iter().sum::<u64>(), 499_500);
+        assert_eq!(sums[0], (0..64).sum::<u64>());
+        assert_eq!(*sums.last().unwrap(), (960..1000).sum::<u64>());
+    }
+
+    #[test]
+    fn parallel_matches_serial_for_all_thread_counts() {
+        let data: Vec<u64> = (0..777).collect();
+        let serial = parallel_chunks(1, &data, 50, |i, c| (i, c.iter().sum::<u64>()));
+        for threads in [2, 3, 8, 32] {
+            let par = parallel_chunks(threads, &data, 50, |i, c| (i, c.iter().sum::<u64>()));
+            assert_eq!(par, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_chunks_empty_and_tiny() {
+        let out: Vec<usize> = parallel_chunks(4, &[] as &[u8], 4, |_, c| c.len());
+        assert!(out.is_empty());
+        let out = parallel_chunks(4, &[9u8], 4, |i, c| (i, c.len()));
+        assert_eq!(out, vec![(0, 1)]);
+    }
+
+    #[test]
+    fn uneven_tail_chunk() {
+        let data: Vec<u8> = vec![1; 10];
+        let lens = parallel_chunks(3, &data, 4, |_, c| c.len());
+        assert_eq!(lens, vec![4, 4, 2]);
+    }
+}

@@ -1,0 +1,200 @@
+//! Fixed-size worker pool with a shared FIFO injector queue.
+//!
+//! Semantics match the classic `ThreadPool` contract: [`execute`]
+//! enqueues a boxed `'static` task; workers drain the queue; dropping
+//! the pool signals shutdown and joins all workers after the queue is
+//! empty.  [`ThreadPool::join_idle`] lets tests and the coordinator
+//! quiesce without tearing the pool down.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<State>,
+    /// Signals workers when tasks arrive or shutdown begins.
+    work_cv: Condvar,
+    /// Signals joiners when the pool drains to idle.
+    idle_cv: Condvar,
+}
+
+struct State {
+    tasks: VecDeque<Task>,
+    shutdown: bool,
+    /// Tasks currently executing (for join_idle).
+    active: usize,
+}
+
+/// A fixed pool of named worker threads.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers named `{name}-{i}`.
+    pub fn new(size: usize, name: &str) -> Self {
+        assert!(size > 0, "pool must have at least one worker");
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(State { tasks: VecDeque::new(), shutdown: false, active: 0 }),
+            work_cv: Condvar::new(),
+            idle_cv: Condvar::new(),
+        });
+        let workers = (0..size)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("failed to spawn pool worker")
+            })
+            .collect();
+        Self { shared, workers, size }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Enqueue a task.  Panics if called after shutdown began (drop).
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let mut st = self.shared.queue.lock().unwrap();
+        assert!(!st.shutdown, "execute on shut-down pool");
+        st.tasks.push_back(Box::new(f));
+        drop(st);
+        self.shared.work_cv.notify_one();
+    }
+
+    /// Number of queued (not yet running) tasks.
+    pub fn queued(&self) -> usize {
+        self.shared.queue.lock().unwrap().tasks.len()
+    }
+
+    /// Block until the queue is empty and no task is executing.
+    pub fn join_idle(&self) {
+        let mut st = self.shared.queue.lock().unwrap();
+        while !st.tasks.is_empty() || st.active > 0 {
+            st = self.shared.idle_cv.wait(st).unwrap();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.queue.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let task = {
+            let mut st = shared.queue.lock().unwrap();
+            loop {
+                if let Some(t) = st.tasks.pop_front() {
+                    st.active += 1;
+                    break t;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        // Panics in tasks poison nothing: catch and continue, matching
+        // production pool behaviour (a bad request must not kill workers).
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(task));
+        let mut st = shared.queue.lock().unwrap();
+        st.active -= 1;
+        let idle = st.tasks.is_empty() && st.active == 0;
+        drop(st);
+        if idle {
+            shared.idle_cv.notify_all();
+        }
+        if let Err(p) = result {
+            crate::error!(
+                "exec.pool",
+                "worker task panicked: {}",
+                panic_message(&p)
+            );
+        }
+    }
+}
+
+fn panic_message(p: &Box<dyn std::any::Any + Send>) -> &str {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s
+    } else {
+        "<non-string panic>"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_tasks() {
+        let pool = ThreadPool::new(4, "t");
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = counter.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.join_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn drop_joins_and_drains() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = ThreadPool::new(2, "t");
+            for _ in 0..50 {
+                let c = counter.clone();
+                pool.execute(move || {
+                    std::thread::sleep(std::time::Duration::from_micros(100));
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        } // drop: must finish queued work before join returns
+        assert_eq!(counter.load(Ordering::Relaxed), 50);
+    }
+
+    #[test]
+    fn survives_panicking_task() {
+        crate::logging::init(crate::logging::Level::Error);
+        let pool = ThreadPool::new(1, "t");
+        pool.execute(|| panic!("boom"));
+        let done = Arc::new(AtomicUsize::new(0));
+        let d = done.clone();
+        pool.execute(move || {
+            d.store(7, Ordering::Relaxed);
+        });
+        pool.join_idle();
+        assert_eq!(done.load(Ordering::Relaxed), 7);
+    }
+
+    #[test]
+    fn join_idle_on_empty_pool_returns() {
+        let pool = ThreadPool::new(2, "t");
+        pool.join_idle();
+        assert_eq!(pool.queued(), 0);
+        assert_eq!(pool.size(), 2);
+    }
+}

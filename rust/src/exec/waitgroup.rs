@@ -1,0 +1,104 @@
+//! Go-style WaitGroup: `add()` hands out RAII guards, `wait()` blocks
+//! until every guard has dropped.  Used for fan-out/fan-in joins in the
+//! coordinator and the scoped parallel helpers.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+struct Inner {
+    count: Mutex<usize>,
+    cv: Condvar,
+}
+
+/// Completion barrier over a dynamic set of tasks.
+#[derive(Clone)]
+pub struct WaitGroup {
+    inner: Arc<Inner>,
+}
+
+/// RAII task guard; dropping it decrements the group.
+pub struct WaitGuard {
+    inner: Arc<Inner>,
+}
+
+impl Default for WaitGroup {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WaitGroup {
+    pub fn new() -> Self {
+        Self { inner: Arc::new(Inner { count: Mutex::new(0), cv: Condvar::new() }) }
+    }
+
+    /// Register one task; drop the returned guard on completion.
+    pub fn add(&self) -> WaitGuard {
+        *self.inner.count.lock().unwrap() += 1;
+        WaitGuard { inner: self.inner.clone() }
+    }
+
+    /// Block until the count returns to zero.
+    pub fn wait(&self) {
+        let mut count = self.inner.count.lock().unwrap();
+        while *count > 0 {
+            count = self.inner.cv.wait(count).unwrap();
+        }
+    }
+
+    /// Current outstanding count (diagnostics only — racy by nature).
+    pub fn pending(&self) -> usize {
+        *self.inner.count.lock().unwrap()
+    }
+}
+
+impl Drop for WaitGuard {
+    fn drop(&mut self) {
+        let mut count = self.inner.count.lock().unwrap();
+        *count -= 1;
+        if *count == 0 {
+            drop(count);
+            self.inner.cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn waits_for_all_guards() {
+        let wg = WaitGroup::new();
+        let done = Arc::new(AtomicUsize::new(0));
+        for _ in 0..8 {
+            let guard = wg.add();
+            let done = done.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                done.fetch_add(1, Ordering::SeqCst);
+                drop(guard);
+            });
+        }
+        wg.wait();
+        assert_eq!(done.load(Ordering::SeqCst), 8);
+        assert_eq!(wg.pending(), 0);
+    }
+
+    #[test]
+    fn wait_with_no_tasks_returns_immediately() {
+        WaitGroup::new().wait();
+    }
+
+    #[test]
+    fn guard_drop_via_panic_still_decrements() {
+        let wg = WaitGroup::new();
+        let guard = wg.add();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+            let _g = guard;
+            panic!("task failed");
+        }));
+        assert!(r.is_err());
+        wg.wait(); // must not hang
+    }
+}

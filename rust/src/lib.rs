@@ -1,0 +1,63 @@
+//! # onlinesoftmax — Online Normalizer Calculation for Softmax
+//!
+//! Production-grade reproduction of Milakov & Gimelshein, *"Online
+//! normalizer calculation for softmax"* (NVIDIA, 2018): a single-pass
+//! softmax normalizer, its parallel ⊕-merge form, fused Softmax+TopK,
+//! and a vocabulary-softmax serving system built around them.
+//!
+//! ## Layers
+//!
+//! * **Core algorithms** ([`softmax`], [`topk`]) — Algorithms 1–4 of the
+//!   paper in scalar, vectorized, multithreaded, and fused forms.
+//! * **Runtime** ([`runtime`]) — loads AOT-compiled JAX/Pallas decode
+//!   graphs (HLO text in `artifacts/`) into a PJRT CPU client; python is
+//!   never on the request path.
+//! * **Coordinator** ([`coordinator`], [`server`]) — request routing,
+//!   continuous dynamic batching, beam-search decode scheduling, and
+//!   vocabulary-sharded execution whose partial normalizers are merged
+//!   with the paper's ⊕ operator (§3.1) in rust.
+//! * **Substrates** ([`exec`], [`json`], [`cli`], [`config`], [`rng`],
+//!   [`prop`], [`benchkit`], [`metrics`], [`logging`]) — the offline
+//!   crate registry ships only `xla` + `anyhow`, so the thread-pool
+//!   runtime, JSON codec, CLI parser, PRNG, property-testing harness,
+//!   benchmark harness, and metrics registry are first-class modules of
+//!   this crate (see DESIGN.md §3).
+//! * **Analytics** ([`analytic`]) — the paper's memory-access model and
+//!   a device-bandwidth performance model that regenerates the shape of
+//!   Figures 1–4 analytically.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use onlinesoftmax::softmax::{self, Algorithm};
+//!
+//! let x: Vec<f32> = (0..4096).map(|i| (i as f32 * 0.37).sin()).collect();
+//! let y = softmax::compute(&x, Algorithm::Online);
+//! let (vals, idx) = onlinesoftmax::softmax::fused::online_topk(&x, 5);
+//! assert_eq!(vals.len(), 5);
+//! assert!((y.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+//! # let _ = idx;
+//! ```
+
+pub mod analytic;
+pub mod benches;
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod exec;
+pub mod json;
+pub mod logging;
+pub mod metrics;
+pub mod prop;
+pub mod rng;
+pub mod runtime;
+pub mod server;
+pub mod softmax;
+pub mod topk;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Semantic version of the library, kept in sync with `Cargo.toml`.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,186 @@
+//! Structured leveled logging substrate (no `tracing`/`env_logger` offline).
+//!
+//! A process-global logger with `error/warn/info/debug/trace` levels,
+//! monotonic timestamps, and per-module targets.  Level is configured
+//! via [`init`] or the `OSMAX_LOG` environment variable
+//! (`error|warn|info|debug|trace`, default `info`).  Thread-safe;
+//! writes are line-atomic via an internal mutex.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+}
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static SINK: Mutex<Option<Box<dyn Write + Send>>> = Mutex::new(None);
+
+fn start_instant() -> Instant {
+    static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+    *START.get_or_init(Instant::now)
+}
+
+/// Set the global level explicitly (overrides `OSMAX_LOG`).
+pub fn init(level: Level) {
+    let _ = start_instant();
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Initialize from the `OSMAX_LOG` environment variable.
+pub fn init_from_env() {
+    let level = std::env::var("OSMAX_LOG")
+        .ok()
+        .and_then(|s| Level::parse(&s))
+        .unwrap_or(Level::Info);
+    init(level);
+}
+
+/// Redirect log output (tests use this to capture lines).
+pub fn set_sink(sink: Option<Box<dyn Write + Send>>) {
+    *SINK.lock().unwrap() = sink;
+}
+
+pub fn max_level() -> Level {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+#[inline]
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Core emit function — prefer the [`log!`](crate::log)/[`info!`](crate::info)
+/// macros.
+pub fn emit(level: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let t = start_instant().elapsed();
+    let line = format!(
+        "[{:>10.4}s {:5} {}] {}\n",
+        t.as_secs_f64(),
+        level.as_str(),
+        target,
+        msg
+    );
+    let mut guard = SINK.lock().unwrap();
+    match guard.as_mut() {
+        Some(w) => {
+            let _ = w.write_all(line.as_bytes());
+        }
+        None => {
+            let _ = std::io::stderr().write_all(line.as_bytes());
+        }
+    }
+}
+
+/// `log!(Level::Info, "target", "format {}", 1)`
+#[macro_export]
+macro_rules! log {
+    ($lvl:expr, $target:expr, $($arg:tt)*) => {
+        $crate::logging::emit($lvl, $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! error {
+    ($target:expr, $($arg:tt)*) => { $crate::log!($crate::logging::Level::Error, $target, $($arg)*) };
+}
+
+#[macro_export]
+macro_rules! warn_ {
+    ($target:expr, $($arg:tt)*) => { $crate::log!($crate::logging::Level::Warn, $target, $($arg)*) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($target:expr, $($arg:tt)*) => { $crate::log!($crate::logging::Level::Info, $target, $($arg)*) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($target:expr, $($arg:tt)*) => { $crate::log!($crate::logging::Level::Debug, $target, $($arg)*) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($target:expr, $($arg:tt)*) => { $crate::log!($crate::logging::Level::Trace, $target, $($arg)*) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex as StdMutex};
+
+    /// Shared buffer sink for capturing output in tests.
+    struct BufSink(Arc<StdMutex<Vec<u8>>>);
+    impl Write for BufSink {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn level_parse_and_order() {
+        assert_eq!(Level::parse("DEBUG"), Some(Level::Debug));
+        assert_eq!(Level::parse("bogus"), None);
+        assert!(Level::Error < Level::Trace);
+    }
+
+    #[test]
+    fn filtering_and_capture() {
+        let buf = Arc::new(StdMutex::new(Vec::new()));
+        set_sink(Some(Box::new(BufSink(buf.clone()))));
+        init(Level::Warn);
+        crate::info!("test", "should be filtered");
+        crate::warn_!("test", "visible {}", 42);
+        set_sink(None);
+        init(Level::Info);
+        let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+        assert!(text.contains("visible 42"), "{text}");
+        assert!(!text.contains("filtered"), "{text}");
+        assert!(text.contains("WARN"));
+    }
+}

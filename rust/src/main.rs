@@ -1,0 +1,279 @@
+//! `onlinesoftmax` — CLI for the Online Softmax serving system.
+//!
+//! ```text
+//! onlinesoftmax serve   [--config f.json] [--addr ..] [--mode safe|online] [--shards N] ...
+//! onlinesoftmax bench   [--fig 1|2|3|4|k|all] [--sizes ..] [--threads N]
+//! onlinesoftmax model   [--device v100|cpu]         # analytic predictions
+//! onlinesoftmax accesses                            # the paper's access table
+//! onlinesoftmax loadgen [--addr ..] [--requests N] [--concurrency C] [--op decode|softmax]
+//! onlinesoftmax help
+//! ```
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use onlinesoftmax::analytic::{DeviceModel, Pipeline};
+use onlinesoftmax::benchkit::Table;
+use onlinesoftmax::cli::{subcommand, Args};
+use onlinesoftmax::config::ServeConfig;
+use onlinesoftmax::coordinator::Coordinator;
+use onlinesoftmax::server::{client::Client, Server};
+use onlinesoftmax::{benches, logging};
+
+const VALUE_OPTS: &[&str] = &[
+    "config", "addr", "artifacts", "mode", "shards", "max-batch", "max-wait-us",
+    "queue-capacity", "workers", "k", "seed", "fig", "sizes", "batch", "threads",
+    "device", "requests", "concurrency", "op", "out",
+];
+
+fn main() {
+    logging::init_from_env();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    if argv.is_empty() {
+        print_help();
+        return Ok(());
+    }
+    let (cmd, rest) = subcommand(argv)?;
+    let args = Args::parse(rest, VALUE_OPTS)?;
+    match cmd {
+        "serve" => cmd_serve(&args),
+        "bench" => cmd_bench(&args),
+        "model" => cmd_model(&args),
+        "accesses" => cmd_accesses(&args),
+        "loadgen" => cmd_loadgen(&args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command `{other}` (try `help`)")),
+    }
+}
+
+fn print_help() {
+    println!(
+        "onlinesoftmax {} — Online Normalizer Calculation for Softmax (reproduction)\n\n\
+         USAGE:\n  onlinesoftmax <command> [options]\n\n\
+         COMMANDS:\n\
+           serve      start the vocabulary-softmax serving system\n\
+           bench      run the paper's benchmark figures on this CPU\n\
+           model      analytic V100/CPU predictions for every figure\n\
+           accesses   print the paper's memory-access table\n\
+           loadgen    drive a running server with synthetic load\n\
+           help       this message\n\n\
+         SERVE OPTIONS:\n\
+           --config FILE        JSON config (defaults + CLI overrides)\n\
+           --addr HOST:PORT     bind address        [127.0.0.1:7070]\n\
+           --artifacts DIR      AOT artifacts dir   [artifacts]\n\
+           --mode safe|online   softmax strategy    [online]\n\
+           --shards N           vocabulary shards   [1]\n\
+           --max-batch N        dynamic batch bound [16]\n\
+           --max-wait-us N      batch deadline      [2000]\n\
+           --workers N          executor workers    [2]\n\n\
+         BENCH OPTIONS:\n\
+           --fig 1|2|3|4|k|all  which paper figure  [all]\n\
+           --sizes a,b,c        vector sizes V override\n\
+           --batch N            batch size override\n\
+           --threads N          worker threads for parallel variants [1]\n\
+           --out FILE           also append results as JSON lines\n",
+        onlinesoftmax::VERSION
+    );
+}
+
+// ---------------------------------------------------------------------------
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut cfg = match args.opt_str("config") {
+        Some(path) => ServeConfig::from_file(std::path::Path::new(path))?,
+        None => ServeConfig::default(),
+    };
+    cfg.apply_args(args)?;
+    args.finish()?;
+    onlinesoftmax::info!("main", "starting coordinator: {}", cfg.to_json().to_json());
+    let coordinator = Arc::new(Coordinator::start(&cfg)?);
+    let server = Server::bind(&cfg.addr, coordinator, 32)?;
+    server.serve()
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let fig = args.opt_str("fig").unwrap_or("all").to_string();
+    let sizes = args.opt_list::<usize>("sizes", &[])?;
+    let batch = args.opt_parse("batch", 0usize)?;
+    let threads = args.opt_parse("threads", 1usize)?;
+    let out = args.opt_str("out").map(|s| s.to_string());
+    args.finish()?;
+    let opts = benches::BenchOpts {
+        sizes: if sizes.is_empty() { None } else { Some(sizes) },
+        batch: if batch == 0 { None } else { Some(batch) },
+        threads,
+        json_out: out,
+    };
+    match fig.as_str() {
+        "1" => benches::fig1(&opts),
+        "2" => benches::fig2(&opts),
+        "3" => benches::fig3(&opts),
+        "4" => benches::fig4(&opts),
+        "k" => benches::k_sweep(&opts),
+        "all" => {
+            benches::fig1(&opts)?;
+            benches::fig2(&opts)?;
+            benches::fig3(&opts)?;
+            benches::fig4(&opts)?;
+            benches::k_sweep(&opts)
+        }
+        other => Err(anyhow!("unknown figure `{other}` (1|2|3|4|k|all)")),
+    }
+}
+
+fn cmd_model(args: &Args) -> Result<()> {
+    let device = args.opt_str("device").unwrap_or("v100").to_string();
+    args.finish()?;
+    let dev = match device.as_str() {
+        "v100" => DeviceModel::v100(),
+        "cpu" => DeviceModel::measured_cpu(),
+        other => return Err(anyhow!("unknown device `{other}` (v100|cpu)")),
+    };
+    println!("analytic model: {}\n", dev.name);
+
+    println!("— softmax speedup over safe (paper fig 1/2 bars) —");
+    let mut t = Table::new(&["V", "batch 4000: online/safe", "batch 10: online/safe"]);
+    for v in [10, 100, 1000, 4000, 10_000, 25_000, 50_000, 100_000] {
+        t.row(vec![
+            v.to_string(),
+            format!("{:.2}x", dev.speedup(Pipeline::SafeSoftmax, Pipeline::OnlineSoftmax, v, 4000)),
+            format!("{:.2}x", dev.speedup(Pipeline::SafeSoftmax, Pipeline::OnlineSoftmax, v, 10)),
+        ]);
+    }
+    println!("{}", t.render());
+
+    println!("— softmax+topk speedup over safe-unfused (paper fig 3/4 bars) —");
+    let mut t = Table::new(&[
+        "V",
+        "batch 4000: online-fused",
+        "batch 4000: safe-fused",
+        "batch 10: online-fused",
+    ]);
+    for v in [100, 1000, 4000, 10_000, 25_000, 50_000] {
+        t.row(vec![
+            v.to_string(),
+            format!(
+                "{:.2}x",
+                dev.speedup(Pipeline::SafeUnfusedTopK, Pipeline::OnlineFusedTopK, v, 4000)
+            ),
+            format!(
+                "{:.2}x",
+                dev.speedup(Pipeline::SafeUnfusedTopK, Pipeline::SafeFusedTopK, v, 4000)
+            ),
+            format!(
+                "{:.2}x",
+                dev.speedup(Pipeline::SafeUnfusedTopK, Pipeline::OnlineFusedTopK, v, 10)
+            ),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "paper-reported: softmax ~1.3x @ V≥4000 batch 4000, ~1.15x batch 10;\n\
+         fused ~5x @ V=25000 batch 4000, 1.5–2.5x batch 10."
+    );
+    Ok(())
+}
+
+fn cmd_accesses(args: &Args) -> Result<()> {
+    args.finish()?;
+    println!("memory accesses per input element (paper §2–§4):\n");
+    let mut t = Table::new(&["pipeline", "loads", "stores", "total", "passes", "launches"]);
+    for p in Pipeline::SOFTMAX.iter().chain(Pipeline::TOPK.iter()) {
+        let c = p.accesses();
+        t.row(vec![
+            p.name().to_string(),
+            c.loads.to_string(),
+            c.stores.to_string(),
+            c.total().to_string(),
+            c.passes.to_string(),
+            p.launches().to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("ratios: safe/online = 4/3 ≈ 1.33x; safe-unfused/online-fused = 5/1 = 5x");
+    Ok(())
+}
+
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let addr = args.opt_str("addr").unwrap_or("127.0.0.1:7070").to_string();
+    let requests: usize = args.opt_parse("requests", 200)?;
+    let concurrency: usize = args.opt_parse("concurrency", 4)?;
+    let op = args.opt_str("op").unwrap_or("decode").to_string();
+    args.finish()?;
+
+    // Probe connection (fail fast if the server is down).
+    let mut probe = Client::connect(&addr)?;
+    probe.ping()?;
+
+    let per_worker = requests.div_ceil(concurrency);
+    let t0 = Instant::now();
+    let latencies: Vec<Duration> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..concurrency)
+            .map(|w| {
+                let addr = addr.clone();
+                let op = op.clone();
+                scope.spawn(move || -> Result<Vec<Duration>> {
+                    let mut client = Client::connect(&addr)?;
+                    let mut rng =
+                        onlinesoftmax::rng::Xoshiro256pp::seed_from_u64(w as u64 + 1);
+                    let mut lats = Vec::with_capacity(per_worker);
+                    for _ in 0..per_worker {
+                        let t = Instant::now();
+                        match op.as_str() {
+                            "softmax" => {
+                                let logits = rng.logits(8192, 5.0);
+                                client.softmax(&logits)?;
+                            }
+                            _ => {
+                                let hidden = rng.logits(128, 1.0);
+                                client.decode(&hidden, Some(5))?;
+                            }
+                        }
+                        lats.push(t.elapsed());
+                    }
+                    Ok(lats)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("loadgen worker").unwrap_or_default())
+            .collect()
+    });
+    let wall = t0.elapsed();
+    let mut sorted = latencies.clone();
+    sorted.sort();
+    let total = sorted.len();
+    if total == 0 {
+        return Err(anyhow!("no successful requests"));
+    }
+    let pick = |q: f64| sorted[((q * (total - 1) as f64) as usize).min(total - 1)];
+    println!(
+        "loadgen: {} `{}` requests, concurrency {}, wall {:.2}s → {:.0} req/s",
+        total,
+        op,
+        concurrency,
+        wall.as_secs_f64(),
+        total as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "latency p50 {:.2}ms  p95 {:.2}ms  p99 {:.2}ms  max {:.2}ms",
+        pick(0.50).as_secs_f64() * 1e3,
+        pick(0.95).as_secs_f64() * 1e3,
+        pick(0.99).as_secs_f64() * 1e3,
+        sorted[total - 1].as_secs_f64() * 1e3
+    );
+    Ok(())
+}

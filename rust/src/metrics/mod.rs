@@ -1,0 +1,284 @@
+//! Metrics substrate: counters, gauges, and latency histograms with a
+//! process-global registry (`prometheus`-style, but in-crate).
+//!
+//! The coordinator records queue depths, batch sizes, merge latencies,
+//! and end-to-end request latencies here; `snapshot()` renders either a
+//! human table or JSON for the server's `stats` endpoint.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+/// Monotonic counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1)
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous value (queue depth, active sessions, ...).
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn dec(&self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Log-bucketed latency histogram: 2 buckets per octave from 1 µs to
+/// ~1 hour, constant-time record, percentile estimation at bucket
+/// resolution (≤ ~41% relative error worst case, fine for p50/p95/p99
+/// serving dashboards).
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+const BUCKETS: usize = 64;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(ns: u64) -> usize {
+        // Two buckets per octave of microseconds: [2^o, 1.5·2^o) and
+        // [1.5·2^o, 2^{o+1}).  <1µs → bucket 0.
+        let us = ns / 1_000;
+        if us == 0 {
+            return 0;
+        }
+        let octave = 63 - us.leading_zeros() as usize;
+        let mid = (3u64 << octave) / 2; // 1.5 · 2^octave
+        let half = usize::from(us >= mid);
+        (2 * octave + half).min(BUCKETS - 1)
+    }
+
+    fn bucket_upper_ns(idx: usize) -> u64 {
+        let octave = idx / 2;
+        let half = idx % 2;
+        let lo_us = 1u64 << octave;
+        let upper_us = if half == 0 { lo_us + lo_us / 2 } else { lo_us * 2 };
+        upper_us.max(1) * 1_000
+    }
+
+    pub fn record(&self, d: Duration) {
+        let ns = d.as_nanos().min(u64::MAX as u128) as u64;
+        self.buckets[Self::bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.sum_ns.load(Ordering::Relaxed) / c)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_nanos(self.max_ns.load(Ordering::Relaxed))
+    }
+
+    /// Percentile in [0, 100] estimated at bucket-boundary resolution.
+    pub fn percentile(&self, p: f64) -> Duration {
+        let total = self.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((p / 100.0) * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Duration::from_nanos(Self::bucket_upper_ns(i));
+            }
+        }
+        self.max()
+    }
+}
+
+/// Named metric registry.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        self.counters.lock().unwrap().entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        self.gauges.lock().unwrap().entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(Histogram::new()))
+            .clone()
+    }
+
+    /// JSON snapshot of every metric (served by the `stats` RPC).
+    pub fn snapshot_json(&self) -> crate::json::Value {
+        use crate::json::Value;
+        let mut root = Value::object();
+        let mut counters = Value::object();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            counters.set(k, Value::Number(v.get() as f64));
+        }
+        let mut gauges = Value::object();
+        for (k, v) in self.gauges.lock().unwrap().iter() {
+            gauges.set(k, Value::Number(v.get() as f64));
+        }
+        let mut hists = Value::object();
+        for (k, h) in self.histograms.lock().unwrap().iter() {
+            let mut entry = Value::object();
+            entry
+                .set("count", Value::Number(h.count() as f64))
+                .set("mean_us", Value::Number(h.mean().as_secs_f64() * 1e6))
+                .set("p50_us", Value::Number(h.percentile(50.0).as_secs_f64() * 1e6))
+                .set("p95_us", Value::Number(h.percentile(95.0).as_secs_f64() * 1e6))
+                .set("p99_us", Value::Number(h.percentile(99.0).as_secs_f64() * 1e6))
+                .set("max_us", Value::Number(h.max().as_secs_f64() * 1e6));
+            hists.set(k, entry);
+        }
+        root.set("counters", counters).set("gauges", gauges).set("histograms", hists);
+        root
+    }
+}
+
+/// Process-global registry.
+pub fn global() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(Registry::default)
+}
+
+/// Time a closure into a histogram.
+pub fn timed<R>(h: &Histogram, f: impl FnOnce() -> R) -> R {
+    let t0 = std::time::Instant::now();
+    let r = f();
+    h.record(t0.elapsed());
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let reg = Registry::default();
+        let c = reg.counter("reqs");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        assert_eq!(reg.counter("reqs").get(), 5, "same instance by name");
+        let g = reg.gauge("depth");
+        g.set(3);
+        g.inc();
+        g.dec();
+        assert_eq!(g.get(), 3);
+    }
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let h = Histogram::new();
+        for us in [10u64, 20, 50, 100, 100, 200, 500, 1000, 5000, 100_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 10);
+        let p50 = h.percentile(50.0);
+        let p95 = h.percentile(95.0);
+        let p99 = h.percentile(99.0);
+        assert!(p50 <= p95 && p95 <= p99, "{p50:?} {p95:?} {p99:?}");
+        assert!(h.mean() >= Duration::from_micros(100));
+        assert!(h.max() >= Duration::from_micros(100_000));
+        // p50 of this set is 100µs; bucket resolution allows ≤ 2x error.
+        assert!(p50 >= Duration::from_micros(50) && p50 <= Duration::from_micros(300), "{p50:?}");
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile(99.0), Duration::ZERO);
+        assert_eq!(h.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn bucket_mapping_monotone() {
+        let mut last = 0;
+        for us in [1u64, 2, 3, 5, 8, 16, 100, 1_000, 10_000, 1_000_000] {
+            let b = Histogram::bucket_of(us * 1_000);
+            assert!(b >= last, "bucket({us}µs)={b} < {last}");
+            last = b;
+        }
+    }
+
+    #[test]
+    fn snapshot_json_shape() {
+        let reg = Registry::default();
+        reg.counter("a").inc();
+        reg.histogram("lat").record(Duration::from_micros(42));
+        let snap = reg.snapshot_json();
+        assert_eq!(snap.get("counters").unwrap().get("a").unwrap().as_f64(), Some(1.0));
+        assert!(snap.get("histograms").unwrap().get("lat").unwrap().get("p50_us").is_some());
+    }
+
+    #[test]
+    fn timed_records() {
+        let h = Histogram::new();
+        let out = timed(&h, || 7);
+        assert_eq!(out, 7);
+        assert_eq!(h.count(), 1);
+    }
+}

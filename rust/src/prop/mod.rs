@@ -1,0 +1,292 @@
+//! Property-based testing substrate (no `proptest`/`quickcheck` offline).
+//!
+//! A compact generate-and-shrink harness:
+//!
+//! * [`Gen`] — composable random-value generators built on the crate
+//!   PRNG ([`crate::rng`]),
+//! * [`forall`] — runs a property over N generated cases; on failure it
+//!   greedily shrinks the input via the generator's [`Gen::shrink`]
+//!   candidates and reports the minimal counterexample,
+//! * stock generators for the shapes this crate cares about: logits
+//!   vectors (with adversarial magnitude mixes), batch/vocab sizes, and
+//!   (m, d) monoid elements.
+//!
+//! Used by the coordinator-invariant tests (routing, batching, merge)
+//! and the numeric-kernel tests.
+
+use crate::rng::Xoshiro256pp;
+
+/// A reproducible generator of `T` with shrinking.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+
+    /// Produce one value from the RNG.
+    fn generate(&self, rng: &mut Xoshiro256pp) -> Self::Value;
+
+    /// Candidate smaller values (tried in order during shrinking).
+    fn shrink(&self, value: &Self::Value) -> Vec<Self::Value> {
+        let _ = value;
+        Vec::new()
+    }
+}
+
+/// Outcome of a [`forall`] run.
+#[derive(Debug)]
+pub enum PropResult<T> {
+    Pass { cases: usize },
+    Fail { original: T, minimal: T, shrinks: usize, message: String },
+}
+
+impl<T: std::fmt::Debug> PropResult<T> {
+    /// Panic with a readable report on failure (for use in #[test]s).
+    pub fn unwrap(self) {
+        match self {
+            PropResult::Pass { .. } => {}
+            PropResult::Fail { original, minimal, shrinks, message } => panic!(
+                "property failed: {message}\n  original: {original:?}\n  minimal (after {shrinks} shrinks): {minimal:?}"
+            ),
+        }
+    }
+}
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrinks: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 200, seed: 0x05F7_A113, max_shrinks: 500 }
+    }
+}
+
+/// Check `prop` over `config.cases` generated inputs, shrinking on failure.
+///
+/// `prop` returns `Ok(())` or a failure message.
+pub fn forall_with<G: Gen>(
+    config: Config,
+    gen: &G,
+    prop: impl Fn(&G::Value) -> Result<(), String>,
+) -> PropResult<G::Value> {
+    let mut rng = Xoshiro256pp::seed_from_u64(config.seed);
+    for _ in 0..config.cases {
+        let value = gen.generate(&mut rng);
+        if let Err(first_msg) = prop(&value) {
+            // Greedy shrink loop.
+            let original = value.clone();
+            let mut current = value;
+            let mut message = first_msg;
+            let mut shrinks = 0;
+            'outer: while shrinks < config.max_shrinks {
+                for cand in gen.shrink(&current) {
+                    if let Err(m) = prop(&cand) {
+                        current = cand;
+                        message = m;
+                        shrinks += 1;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            return PropResult::Fail { original, minimal: current, shrinks, message };
+        }
+    }
+    PropResult::Pass { cases: config.cases }
+}
+
+/// [`forall_with`] under the default config.
+pub fn forall<G: Gen>(
+    gen: &G,
+    prop: impl Fn(&G::Value) -> Result<(), String>,
+) -> PropResult<G::Value> {
+    forall_with(Config::default(), gen, prop)
+}
+
+// ---------------------------------------------------------------------------
+// Stock generators
+// ---------------------------------------------------------------------------
+
+/// Uniform usize in [lo, hi]; shrinks toward lo.
+pub struct UsizeRange(pub usize, pub usize);
+
+impl Gen for UsizeRange {
+    type Value = usize;
+
+    fn generate(&self, rng: &mut Xoshiro256pp) -> usize {
+        self.0 + rng.below((self.1 - self.0 + 1) as u64) as usize
+    }
+
+    fn shrink(&self, &v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (v - self.0) / 2);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Logits vector generator covering the numeric regimes the paper's
+/// safety analysis cares about: moderate gaussians, large offsets
+/// (±80…±200, where naive softmax dies), constants (ties), and mixed
+/// per-element magnitudes.  Shrinks by halving length and zeroing tails.
+pub struct LogitsVec {
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+impl Gen for LogitsVec {
+    type Value = Vec<f32>;
+
+    fn generate(&self, rng: &mut Xoshiro256pp) -> Vec<f32> {
+        let len = self.min_len + rng.below((self.max_len - self.min_len + 1) as u64) as usize;
+        match rng.below(5) {
+            0 => rng.logits(len, 1.0),
+            1 => rng.logits(len, 12.0),
+            2 => {
+                let off = rng.range_f32(-150.0, 150.0);
+                let mut v = rng.logits(len, 2.0);
+                v.iter_mut().for_each(|x| *x += off);
+                v
+            }
+            3 => vec![rng.range_f32(-50.0, 50.0); len],
+            _ => (0..len)
+                .map(|_| {
+                    let scale = [0.01f32, 1.0, 40.0][rng.below(3) as usize];
+                    rng.next_normal() * scale
+                })
+                .collect(),
+        }
+    }
+
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            let half = self.min_len.max(v.len() / 2);
+            out.push(v[..half].to_vec());
+            out.push(v[..v.len() - 1].to_vec());
+        }
+        if v.iter().any(|&x| x != 0.0) {
+            let mut z = v.clone();
+            let n = z.len();
+            z[n / 2..].iter_mut().for_each(|x| *x = 0.0);
+            out.push(z);
+        }
+        out
+    }
+}
+
+/// Pair generator.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn generate(&self, rng: &mut Xoshiro256pp) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+
+    fn shrink(&self, (a, b): &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> =
+            self.0.shrink(a).into_iter().map(|a2| (a2, b.clone())).collect();
+        out.extend(self.1.shrink(b).into_iter().map(|b2| (a.clone(), b2)));
+        out
+    }
+}
+
+/// Vector of values from an inner generator.
+pub struct VecOf<G> {
+    pub inner: G,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+impl<G: Gen> Gen for VecOf<G> {
+    type Value = Vec<G::Value>;
+
+    fn generate(&self, rng: &mut Xoshiro256pp) -> Self::Value {
+        let len = self.min_len + rng.below((self.max_len - self.min_len + 1) as u64) as usize;
+        (0..len).map(|_| self.inner.generate(rng)).collect()
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            out.push(v[..v.len() - 1].to_vec());
+            out.push(v[..self.min_len.max(v.len() / 2)].to_vec());
+        }
+        // shrink one element
+        if let Some(first) = v.first() {
+            for cand in self.inner.shrink(first) {
+                let mut w = v.clone();
+                w[0] = cand;
+                out.push(w);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        let gen = UsizeRange(1, 100);
+        match forall(&gen, |&n| if n >= 1 { Ok(()) } else { Err("n < 1".into()) }) {
+            PropResult::Pass { cases } => assert_eq!(cases, 200),
+            f => panic!("{f:?}"),
+        }
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimum() {
+        let gen = UsizeRange(0, 1000);
+        let result = forall(&gen, |&n| if n < 50 { Ok(()) } else { Err(format!("{n} >= 50")) });
+        match result {
+            PropResult::Fail { minimal, .. } => {
+                // greedy shrink should land on a small counterexample
+                assert!(minimal >= 50 && minimal <= 75, "minimal={minimal}");
+            }
+            PropResult::Pass { .. } => panic!("property should fail"),
+        }
+    }
+
+    #[test]
+    fn logits_generator_hits_extreme_regime() {
+        let gen = LogitsVec { min_len: 4, max_len: 64 };
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        let mut saw_extreme = false;
+        for _ in 0..100 {
+            let v = gen.generate(&mut rng);
+            assert!(v.len() >= 4 && v.len() <= 64);
+            if v.iter().any(|&x| x.abs() > 80.0) {
+                saw_extreme = true;
+            }
+        }
+        assert!(saw_extreme, "extreme-magnitude regime must be generated");
+    }
+
+    #[test]
+    fn vec_shrink_reduces_length() {
+        let gen = VecOf { inner: UsizeRange(0, 9), min_len: 1, max_len: 8 };
+        let shrunk = gen.shrink(&vec![1, 2, 3, 4]);
+        assert!(shrunk.iter().any(|v| v.len() < 4));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let gen = LogitsVec { min_len: 1, max_len: 16 };
+        let run = |seed| {
+            let mut rng = Xoshiro256pp::seed_from_u64(seed);
+            gen.generate(&mut rng)
+        };
+        assert_eq!(run(9), run(9));
+    }
+}

@@ -1,0 +1,398 @@
+//! PJRT engine: a dedicated OS thread owning a `PjRtClient` (the xla
+//! crate's client is `Rc`-based and so thread-confined), fed through a
+//! channel by a clonable, `Send` [`Engine`] handle.
+//!
+//! * executables are compiled lazily from HLO **text** and cached,
+//! * inputs are validated against the manifest before dispatch,
+//! * an [`EnginePool`] runs one engine thread per shard so vocabulary
+//!   shards execute concurrently (each engine has its own client).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{ArtifactEntry, Manifest};
+use super::tensor::Tensor;
+use crate::exec::channel::{bounded, oneshot, OnceSender, Sender};
+
+/// One executable input: inline host data, or a reference to a
+/// device-resident parameter registered earlier (weights uploaded once —
+/// the serving path's hot-loop never re-transfers the projection matrix).
+#[derive(Clone, Debug)]
+pub enum Input {
+    Inline(Tensor),
+    Param(String),
+}
+
+enum Cmd {
+    Execute { name: String, inputs: Vec<Input>, reply: OnceSender<Result<Vec<Tensor>>> },
+    RegisterParam { key: String, tensor: Tensor, reply: OnceSender<Result<()>> },
+    Warmup { names: Vec<String>, reply: OnceSender<Result<()>> },
+    Stats { reply: OnceSender<EngineStats> },
+    Shutdown,
+}
+
+/// Counters exposed by each engine thread.
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    pub executions: u64,
+    pub compiled: u64,
+    pub compile_secs: f64,
+    pub execute_secs: f64,
+}
+
+/// Clonable, `Send` handle to one engine thread.
+#[derive(Clone)]
+pub struct Engine {
+    tx: Sender<Cmd>,
+    manifest: Arc<Manifest>,
+}
+
+impl Engine {
+    /// Spawn an engine thread over an artifacts directory.
+    pub fn start(artifacts_dir: &std::path::Path) -> Result<Engine> {
+        let manifest = Arc::new(Manifest::load(artifacts_dir)?);
+        Self::start_with_manifest(manifest, "engine")
+    }
+
+    /// Spawn with a shared manifest (used by [`EnginePool`]).
+    pub fn start_with_manifest(manifest: Arc<Manifest>, name: &str) -> Result<Engine> {
+        let (tx, rx) = bounded::<Cmd>(256);
+        let thread_manifest = manifest.clone();
+        std::thread::Builder::new()
+            .name(name.to_string())
+            .spawn(move || engine_loop(thread_manifest, rx))
+            .context("spawning engine thread")?;
+        Ok(Engine { tx, manifest })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute an artifact by name with inline host inputs.
+    pub fn execute(&self, name: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        self.execute_mixed(name, inputs.into_iter().map(Input::Inline).collect())
+    }
+
+    /// Execute with a mix of inline tensors and device-resident params.
+    /// Blocks until the result is ready.
+    pub fn execute_mixed(&self, name: &str, inputs: Vec<Input>) -> Result<Vec<Tensor>> {
+        // Validate inline inputs against the manifest *before* crossing
+        // the channel so callers get immediate, attributable errors.
+        let entry = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact `{name}` (run `make artifacts`?)"))?;
+        validate_inputs(entry, &inputs)?;
+        let (otx, orx) = oneshot();
+        self.tx
+            .send(Cmd::Execute { name: name.to_string(), inputs, reply: otx })
+            .map_err(|_| anyhow!("engine thread terminated"))?;
+        orx.recv().map_err(|_| anyhow!("engine thread dropped reply"))?
+    }
+
+    /// Upload a tensor to the engine's device once, for reuse by name
+    /// in [`Input::Param`] positions (projection weights, embeddings).
+    pub fn register_param(&self, key: &str, tensor: Tensor) -> Result<()> {
+        let (otx, orx) = oneshot();
+        self.tx
+            .send(Cmd::RegisterParam { key: key.to_string(), tensor, reply: otx })
+            .map_err(|_| anyhow!("engine thread terminated"))?;
+        orx.recv().map_err(|_| anyhow!("engine thread dropped reply"))?
+    }
+
+    /// Pre-compile a set of artifacts (avoids first-request latency).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        let (otx, orx) = oneshot();
+        self.tx
+            .send(Cmd::Warmup {
+                names: names.iter().map(|s| s.to_string()).collect(),
+                reply: otx,
+            })
+            .map_err(|_| anyhow!("engine thread terminated"))?;
+        orx.recv().map_err(|_| anyhow!("engine thread dropped reply"))?
+    }
+
+    pub fn stats(&self) -> Result<EngineStats> {
+        let (otx, orx) = oneshot();
+        self.tx
+            .send(Cmd::Stats { reply: otx })
+            .map_err(|_| anyhow!("engine thread terminated"))?;
+        orx.recv().map_err(|_| anyhow!("engine thread dropped reply"))
+    }
+
+    /// Ask the engine thread to exit once queued work drains.
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Cmd::Shutdown);
+    }
+}
+
+fn validate_inputs(entry: &ArtifactEntry, inputs: &[Input]) -> Result<()> {
+    if inputs.len() != entry.inputs.len() {
+        bail!(
+            "artifact `{}` expects {} inputs, got {}",
+            entry.name,
+            entry.inputs.len(),
+            inputs.len()
+        );
+    }
+    for (i, (input, spec)) in inputs.iter().zip(&entry.inputs).enumerate() {
+        if let Input::Inline(t) = input {
+            t.check_spec(spec, &format!("{} input {i}", entry.name))?;
+        }
+        // Param shapes are checked at registration + execute time on the
+        // engine thread (the buffer's on-device shape is authoritative).
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Engine thread
+// ---------------------------------------------------------------------------
+
+struct Loaded {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+fn engine_loop(manifest: Arc<Manifest>, rx: crate::exec::channel::Receiver<Cmd>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            crate::error!("runtime.engine", "failed to create PJRT client: {e}");
+            // Drain commands with errors so callers unblock.
+            while let Ok(cmd) = rx.recv() {
+                match cmd {
+                    Cmd::Execute { reply, .. } => {
+                        let _ = reply.send(Err(anyhow!("PJRT client unavailable")));
+                    }
+                    Cmd::RegisterParam { reply, .. } => {
+                        let _ = reply.send(Err(anyhow!("PJRT client unavailable")));
+                    }
+                    Cmd::Warmup { reply, .. } => {
+                        let _ = reply.send(Err(anyhow!("PJRT client unavailable")));
+                    }
+                    Cmd::Stats { reply } => {
+                        let _ = reply.send(EngineStats::default());
+                    }
+                    Cmd::Shutdown => return,
+                }
+            }
+            return;
+        }
+    };
+    let mut cache: HashMap<String, Loaded> = HashMap::new();
+    // (host literal, device buffer): the literal backs the async copy.
+    let mut params: HashMap<String, (xla::Literal, xla::PjRtBuffer)> = HashMap::new();
+    let mut stats = EngineStats::default();
+
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::Execute { name, inputs, reply } => {
+                let result =
+                    run_one(&client, &manifest, &mut cache, &params, &mut stats, &name, inputs);
+                let _ = reply.send(result);
+            }
+            Cmd::RegisterParam { key, tensor, reply } => {
+                // NOTE: PJRT's host→device transfer is asynchronous and
+                // borrows the source literal; the literal is kept alive
+                // in the params map for the buffer's entire lifetime.
+                let result = tensor.to_literal().and_then(|lit| {
+                    client
+                        .buffer_from_host_literal(None, &lit)
+                        .map(|buf| (lit, buf))
+                        .map_err(|e| anyhow!("uploading param `{key}`: {e}"))
+                });
+                match result {
+                    Ok(entry) => {
+                        params.insert(key, entry);
+                        let _ = reply.send(Ok(()));
+                    }
+                    Err(e) => {
+                        let _ = reply.send(Err(e));
+                    }
+                }
+            }
+            Cmd::Warmup { names, reply } => {
+                let mut result = Ok(());
+                for name in &names {
+                    if let Err(e) = ensure_loaded(&client, &manifest, &mut cache, &mut stats, name)
+                    {
+                        result = Err(e);
+                        break;
+                    }
+                }
+                let _ = reply.send(result);
+            }
+            Cmd::Stats { reply } => {
+                let _ = reply.send(stats.clone());
+            }
+            Cmd::Shutdown => break,
+        }
+    }
+}
+
+fn ensure_loaded<'a>(
+    client: &xla::PjRtClient,
+    manifest: &Manifest,
+    cache: &'a mut HashMap<String, Loaded>,
+    stats: &mut EngineStats,
+    name: &str,
+) -> Result<&'a Loaded> {
+    if !cache.contains_key(name) {
+        let entry = manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?;
+        let path = manifest.hlo_path(entry);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact `{name}`"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        stats.compiled += 1;
+        stats.compile_secs += dt;
+        crate::debug!("runtime.engine", "compiled `{name}` in {:.1}ms", dt * 1e3);
+        cache.insert(name.to_string(), Loaded { exe });
+    }
+    Ok(&cache[name])
+}
+
+fn run_one(
+    client: &xla::PjRtClient,
+    manifest: &Manifest,
+    cache: &mut HashMap<String, Loaded>,
+    params: &HashMap<String, (xla::Literal, xla::PjRtBuffer)>,
+    stats: &mut EngineStats,
+    name: &str,
+    inputs: Vec<Input>,
+) -> Result<Vec<Tensor>> {
+    let loaded = ensure_loaded(client, manifest, cache, stats, name)?;
+    let t0 = Instant::now();
+    // Stage inline tensors as device buffers, then splice in the
+    // pre-registered parameter buffers by reference.  The staged
+    // literals MUST outlive the execution: PJRT's host→device copy is
+    // asynchronous and reads the literal's memory until the compute
+    // consuming it has been synchronized (to_literal_sync below).
+    let mut staged_lits: Vec<xla::Literal> = Vec::new();
+    let mut staged: Vec<xla::PjRtBuffer> = Vec::new();
+    let mut arg_refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
+    let mut staged_idx: Vec<usize> = Vec::with_capacity(inputs.len());
+    const PARAM_SENTINEL: usize = usize::MAX;
+    for input in &inputs {
+        match input {
+            Input::Inline(t) => {
+                let lit = t.to_literal()?;
+                staged.push(
+                    client
+                        .buffer_from_host_literal(None, &lit)
+                        .map_err(|e| anyhow!("staging input for `{name}`: {e}"))?,
+                );
+                staged_lits.push(lit);
+                staged_idx.push(staged.len() - 1);
+            }
+            Input::Param(_) => staged_idx.push(PARAM_SENTINEL),
+        }
+    }
+    for (input, &si) in inputs.iter().zip(&staged_idx) {
+        match input {
+            Input::Inline(_) => arg_refs.push(&staged[si]),
+            Input::Param(key) => arg_refs.push(
+                params
+                    .get(key)
+                    .map(|(_lit, buf)| buf)
+                    .ok_or_else(|| anyhow!("param `{key}` not registered on this engine"))?,
+            ),
+        }
+    }
+    let result = loaded
+        .exe
+        .execute_b::<&xla::PjRtBuffer>(&arg_refs)
+        .with_context(|| format!("executing artifact `{name}`"))?;
+    let lit = result
+        .first()
+        .and_then(|d| d.first())
+        .ok_or_else(|| anyhow!("artifact `{name}` returned no buffers"))?
+        .to_literal_sync()?;
+    // Outputs are synchronized; the staged host literals may drop now.
+    drop(staged_lits);
+    stats.executions += 1;
+    stats.execute_secs += t0.elapsed().as_secs_f64();
+    // aot.py lowers with return_tuple=True: single tuple of outputs.
+    let parts = lit.to_tuple()?;
+    let entry = manifest.get(name).expect("validated above");
+    let outputs: Vec<Tensor> = parts
+        .iter()
+        .map(Tensor::from_literal)
+        .collect::<Result<_>>()
+        .with_context(|| format!("decoding outputs of `{name}`"))?;
+    if outputs.len() != entry.outputs.len() {
+        bail!(
+            "artifact `{name}` returned {} outputs, manifest says {}",
+            outputs.len(),
+            entry.outputs.len()
+        );
+    }
+    for (i, (t, spec)) in outputs.iter().zip(&entry.outputs).enumerate() {
+        t.check_spec(spec, &format!("{name} output {i}"))?;
+    }
+    Ok(outputs)
+}
+
+// ---------------------------------------------------------------------------
+// Engine pool
+// ---------------------------------------------------------------------------
+
+/// N engine threads (each with its own PJRT client) for concurrent
+/// shard execution.  Work is routed by index (`shard % n`).
+pub struct EnginePool {
+    engines: Vec<Engine>,
+}
+
+impl EnginePool {
+    pub fn start(artifacts_dir: &std::path::Path, n: usize) -> Result<EnginePool> {
+        assert!(n > 0);
+        let manifest = Arc::new(Manifest::load(artifacts_dir)?);
+        let engines = (0..n)
+            .map(|i| Engine::start_with_manifest(manifest.clone(), &format!("engine-{i}")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(EnginePool { engines })
+    }
+
+    pub fn len(&self) -> usize {
+        self.engines.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.engines.is_empty()
+    }
+
+    /// Engine serving shard/stream `i`.
+    pub fn engine(&self, i: usize) -> &Engine {
+        &self.engines[i % self.engines.len()]
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        self.engines[0].manifest()
+    }
+
+    pub fn shutdown(&self) {
+        for e in &self.engines {
+            e.shutdown();
+        }
+    }
+}
+
+/// Artifacts directory resolution: `$OSMAX_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("OSMAX_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

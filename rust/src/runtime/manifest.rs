@@ -1,0 +1,274 @@
+//! Artifact manifest: the machine-readable index emitted by
+//! `python/compile/aot.py` describing every AOT-compiled executable
+//! (shapes, dtypes, variant metadata).  The rust side trusts nothing
+//! implicit — shapes are validated here and re-validated against the
+//! actual HLO program shape after compilation.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::json::{self, Value};
+
+/// Element dtype of an artifact tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" | "f32" => Ok(DType::F32),
+            "int32" | "i32" => Ok(DType::I32),
+            _ => bail!("unsupported dtype `{s}`"),
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// Shape+dtype of one input/output tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Value) -> Result<TensorSpec> {
+        let shape = v
+            .require("shape")?
+            .as_array()
+            .ok_or_else(|| anyhow!("shape must be an array"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::parse(v.require("dtype")?.as_str().unwrap_or(""))?;
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One AOT executable's manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// HLO text file, relative to the artifacts directory.
+    pub file: PathBuf,
+    /// Variant key, e.g. `softmax_safe`, `decode_partial`.
+    pub variant: String,
+    pub batch: usize,
+    pub vocab: usize,
+    pub hidden: Option<usize>,
+    pub k: Option<usize>,
+    pub shard_count: Option<usize>,
+    pub full_vocab: Option<usize>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactEntry {
+    fn from_json(v: &Value) -> Result<ArtifactEntry> {
+        let name = v.require("name")?.as_str().unwrap_or("").to_string();
+        let get_usize = |key: &str| v.get(key).and_then(Value::as_usize);
+        Ok(ArtifactEntry {
+            file: PathBuf::from(v.require("file")?.as_str().unwrap_or("")),
+            variant: v.require("variant")?.as_str().unwrap_or("").to_string(),
+            batch: get_usize("batch")
+                .ok_or_else(|| anyhow!("artifact `{name}` missing batch"))?,
+            vocab: get_usize("vocab")
+                .ok_or_else(|| anyhow!("artifact `{name}` missing vocab"))?,
+            hidden: get_usize("hidden"),
+            k: get_usize("k"),
+            shard_count: get_usize("shard_count"),
+            full_vocab: get_usize("full_vocab"),
+            inputs: v
+                .require("inputs")?
+                .as_array()
+                .ok_or_else(|| anyhow!("inputs must be an array"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?,
+            outputs: v
+                .require("outputs")?
+                .as_array()
+                .ok_or_else(|| anyhow!("outputs must be an array"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?,
+            name,
+        })
+    }
+}
+
+/// The parsed manifest: entries indexed by name and by (variant, batch).
+#[derive(Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    entries: Vec<ArtifactEntry>,
+    by_name: BTreeMap<String, usize>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` to AOT-compile the models",
+                path.display()
+            )
+        })?;
+        let v = json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        let format = v.require("format")?.as_usize().unwrap_or(0);
+        if format != 1 {
+            bail!("unsupported manifest format {format} (expected 1)");
+        }
+        let mut entries = Vec::new();
+        let mut by_name = BTreeMap::new();
+        for e in v.require("artifacts")?.as_array().unwrap_or(&[]) {
+            let entry = ArtifactEntry::from_json(e)?;
+            if by_name.insert(entry.name.clone(), entries.len()).is_some() {
+                bail!("duplicate artifact name `{}`", entry.name);
+            }
+            entries.push(entry);
+        }
+        if entries.is_empty() {
+            bail!("manifest lists no artifacts");
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries, by_name })
+    }
+
+    pub fn entries(&self) -> &[ArtifactEntry] {
+        &self.entries
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.by_name.get(name).map(|&i| &self.entries[i])
+    }
+
+    /// All entries for a variant, sorted by batch size ascending.
+    pub fn variant(&self, variant: &str) -> Vec<&ArtifactEntry> {
+        let mut v: Vec<&ArtifactEntry> =
+            self.entries.iter().filter(|e| e.variant == variant).collect();
+        v.sort_by_key(|e| e.batch);
+        v
+    }
+
+    /// Smallest batch bucket ≥ `n` for a variant (the batcher's padding
+    /// target); falls back to the largest bucket if `n` exceeds all.
+    pub fn bucket_for(&self, variant: &str, n: usize) -> Option<&ArtifactEntry> {
+        let entries = self.variant(variant);
+        entries.iter().find(|e| e.batch >= n).copied().or_else(|| entries.last().copied())
+    }
+
+    /// Batch bucket list for a variant.
+    pub fn buckets(&self, variant: &str) -> Vec<usize> {
+        self.variant(variant).iter().map(|e| e.batch).collect()
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn hlo_path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest_json() -> String {
+        r#"{
+          "format": 1,
+          "artifacts": [
+            {"name": "softmax_safe_b1_v64", "file": "a.hlo.txt",
+             "variant": "softmax_safe", "batch": 1, "vocab": 64,
+             "inputs": [{"shape": [1, 64], "dtype": "float32"}],
+             "outputs": [{"shape": [1, 64], "dtype": "float32"}]},
+            {"name": "softmax_safe_b8_v64", "file": "b.hlo.txt",
+             "variant": "softmax_safe", "batch": 8, "vocab": 64,
+             "inputs": [{"shape": [8, 64], "dtype": "float32"}],
+             "outputs": [{"shape": [8, 64], "dtype": "float32"}]},
+            {"name": "decode_partial_b1", "file": "c.hlo.txt",
+             "variant": "decode_partial", "batch": 1, "vocab": 16,
+             "hidden": 8, "k": 3, "shard_count": 4, "full_vocab": 64,
+             "inputs": [{"shape": [1, 8], "dtype": "float32"},
+                         {"shape": [16, 8], "dtype": "float32"}],
+             "outputs": [{"shape": [1], "dtype": "float32"},
+                          {"shape": [1], "dtype": "float32"},
+                          {"shape": [1, 3], "dtype": "float32"},
+                          {"shape": [1, 3], "dtype": "int32"}]}
+          ]
+        }"#
+        .to_string()
+    }
+
+    fn load_sample() -> Manifest {
+        let dir = std::env::temp_dir().join(format!("osmax-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), sample_manifest_json()).unwrap();
+        Manifest::load(&dir).unwrap()
+    }
+
+    #[test]
+    fn loads_and_indexes() {
+        let m = load_sample();
+        assert_eq!(m.entries().len(), 3);
+        let e = m.get("decode_partial_b1").unwrap();
+        assert_eq!(e.k, Some(3));
+        assert_eq!(e.shard_count, Some(4));
+        assert_eq!(e.inputs[1].shape, vec![16, 8]);
+        assert_eq!(e.outputs[3].dtype, DType::I32);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let m = load_sample();
+        assert_eq!(m.bucket_for("softmax_safe", 1).unwrap().batch, 1);
+        assert_eq!(m.bucket_for("softmax_safe", 2).unwrap().batch, 8);
+        assert_eq!(m.bucket_for("softmax_safe", 100).unwrap().batch, 8, "clamps to largest");
+        assert!(m.bucket_for("nonexistent", 1).is_none());
+        assert_eq!(m.buckets("softmax_safe"), vec![1, 8]);
+    }
+
+    #[test]
+    fn tensor_spec_elements() {
+        let t = TensorSpec { shape: vec![4, 64], dtype: DType::F32 };
+        assert_eq!(t.elements(), 256);
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let dir = std::env::temp_dir().join(format!("osmax-badfmt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"format": 99, "artifacts": []}"#).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_has_helpful_error() {
+        let err = Manifest::load(Path::new("/nonexistent-dir-xyz")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn real_manifest_loads_if_present() {
+        // Integration-lite: if `make artifacts` has run, the real
+        // manifest must parse and contain the serving variants.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            for variant in ["softmax_safe", "decode_topk_safe", "decode_topk_online", "decode_partial"] {
+                assert!(!m.variant(variant).is_empty(), "missing variant {variant}");
+            }
+        }
+    }
+}

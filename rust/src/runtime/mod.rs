@@ -1,0 +1,21 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts (HLO text
+//! produced by `python/compile/aot.py`) into PJRT CPU clients and
+//! executes them from the serving hot path.  Python never runs here.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (shapes, variants,
+//!   batch buckets).
+//! * [`tensor`] — the host tensor type crossing the boundary.
+//! * [`engine`] — thread-confined PJRT clients behind `Send` handles,
+//!   plus the [`engine::EnginePool`] used for sharded execution.
+//!
+//! Interchange is HLO **text**: jax ≥ 0.5 emits protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see DESIGN.md and /opt/xla-example/README.md).
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::{default_artifacts_dir, Engine, EnginePool, EngineStats, Input};
+pub use manifest::{ArtifactEntry, DType, Manifest, TensorSpec};
+pub use tensor::Tensor;

@@ -1,0 +1,139 @@
+//! Host tensor type crossing the coordinator ↔ PJRT boundary.
+
+use anyhow::{anyhow, bail, Result};
+
+use super::manifest::{DType, TensorSpec};
+
+/// A host-resident dense tensor (row-major).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} wants {n} elements, got {}", data.len());
+        }
+        Ok(Tensor::F32 { shape, data })
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} wants {n} elements, got {}", data.len());
+        }
+        Ok(Tensor::I32 { shape, data })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32 { .. } => DType::F32,
+            Tensor::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 tensor, got {:?}", self.dtype()),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => bail!("expected i32 tensor, got {:?}", self.dtype()),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn into_i32(self) -> Result<Vec<i32>> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => bail!("expected i32 tensor"),
+        }
+    }
+
+    /// Validate against a manifest spec.
+    pub fn check_spec(&self, spec: &TensorSpec, what: &str) -> Result<()> {
+        if self.shape() != spec.shape.as_slice() {
+            bail!("{what}: shape {:?} does not match artifact spec {:?}", self.shape(), spec.shape);
+        }
+        if self.dtype() != spec.dtype {
+            bail!("{what}: dtype {:?} does not match artifact spec {:?}", self.dtype(), spec.dtype);
+        }
+        Ok(())
+    }
+
+    // ----- xla interop ----------------------------------------------------
+
+    pub(super) fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32 { data, .. } => xla::Literal::vec1(data),
+            Tensor::I32 { data, .. } => xla::Literal::vec1(data),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    pub(super) fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Tensor::f32(dims, lit.to_vec::<f32>()?),
+            xla::ElementType::S32 => Tensor::i32(dims, lit.to_vec::<i32>()?),
+            other => Err(anyhow!("unsupported artifact output element type {other:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_validates_element_count() {
+        assert!(Tensor::f32(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::f32(vec![2, 3], vec![0.0; 5]).is_err());
+        assert!(Tensor::i32(vec![4], vec![1, 2, 3, 4]).is_ok());
+    }
+
+    #[test]
+    fn spec_checking() {
+        let t = Tensor::f32(vec![2, 4], vec![0.0; 8]).unwrap();
+        let good = TensorSpec { shape: vec![2, 4], dtype: DType::F32 };
+        let bad_shape = TensorSpec { shape: vec![4, 2], dtype: DType::F32 };
+        let bad_dtype = TensorSpec { shape: vec![2, 4], dtype: DType::I32 };
+        assert!(t.check_spec(&good, "in0").is_ok());
+        assert!(t.check_spec(&bad_shape, "in0").is_err());
+        assert!(t.check_spec(&bad_dtype, "in0").is_err());
+    }
+
+    #[test]
+    fn accessors() {
+        let t = Tensor::i32(vec![3], vec![7, 8, 9]).unwrap();
+        assert_eq!(t.elements(), 3);
+        assert_eq!(t.as_i32().unwrap(), &[7, 8, 9]);
+        assert!(t.as_f32().is_err());
+        assert_eq!(t.into_i32().unwrap(), vec![7, 8, 9]);
+    }
+}

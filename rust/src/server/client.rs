@@ -1,0 +1,115 @@
+//! Blocking TCP client for the line-JSON protocol — used by the
+//! examples, the load generator, and the end-to-end tests.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use super::wire;
+use crate::json::Value;
+
+/// A connected client (one request in flight at a time).
+pub struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(Duration::from_secs(120)))?;
+        let writer = stream.try_clone()?;
+        Ok(Client { writer, reader: BufReader::new(stream) })
+    }
+
+    fn roundtrip(&mut self, line: &str) -> Result<Value> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut response = String::new();
+        let n = self.reader.read_line(&mut response)?;
+        if n == 0 {
+            return Err(anyhow!("server closed connection"));
+        }
+        wire::decode_response(&response)
+    }
+
+    pub fn ping(&mut self) -> Result<()> {
+        self.roundtrip(r#"{"op":"ping"}"#).map(|_| ())
+    }
+
+    pub fn stats(&mut self) -> Result<Value> {
+        self.roundtrip(r#"{"op":"stats"}"#)
+    }
+
+    pub fn softmax(&mut self, logits: &[f32]) -> Result<Vec<f32>> {
+        let mut v = Value::object();
+        v.set("op", Value::String("softmax".into()))
+            .set("logits", Value::from_f32_slice(logits));
+        let resp = self.roundtrip(&v.to_json())?;
+        resp.require("probs")?.to_f32_vec()
+    }
+
+    pub fn decode(&mut self, hidden: &[f32], k: Option<usize>) -> Result<(Vec<f32>, Vec<i64>)> {
+        let mut v = Value::object();
+        v.set("op", Value::String("decode".into()))
+            .set("hidden", Value::from_f32_slice(hidden));
+        if let Some(k) = k {
+            v.set("k", Value::Number(k as f64));
+        }
+        let resp = self.roundtrip(&v.to_json())?;
+        let vals = resp.require("vals")?.to_f32_vec()?;
+        let idx =
+            resp.require("idx")?.to_i32_vec()?.into_iter().map(|i| i as i64).collect();
+        Ok((vals, idx))
+    }
+
+    pub fn open_session(&mut self) -> Result<u64> {
+        let resp = self.roundtrip(r#"{"op":"open_session"}"#)?;
+        resp.require("session")?
+            .as_i64()
+            .map(|i| i as u64)
+            .ok_or_else(|| anyhow!("bad session id"))
+    }
+
+    pub fn fork_session(&mut self, src: u64) -> Result<u64> {
+        let mut v = Value::object();
+        v.set("op", Value::String("fork_session".into()))
+            .set("session", Value::Number(src as f64));
+        let resp = self.roundtrip(&v.to_json())?;
+        resp.require("session")?
+            .as_i64()
+            .map(|i| i as u64)
+            .ok_or_else(|| anyhow!("bad session id"))
+    }
+
+    pub fn close_session(&mut self, id: u64) -> Result<()> {
+        let mut v = Value::object();
+        v.set("op", Value::String("close_session".into()))
+            .set("session", Value::Number(id as f64));
+        self.roundtrip(&v.to_json()).map(|_| ())
+    }
+
+    pub fn lm_step(
+        &mut self,
+        session: u64,
+        token: i32,
+        k: Option<usize>,
+    ) -> Result<(Vec<f32>, Vec<i64>)> {
+        let mut v = Value::object();
+        v.set("op", Value::String("lm_step".into()))
+            .set("session", Value::Number(session as f64))
+            .set("token", Value::Number(token as f64));
+        if let Some(k) = k {
+            v.set("k", Value::Number(k as f64));
+        }
+        let resp = self.roundtrip(&v.to_json())?;
+        let vals = resp.require("vals")?.to_f32_vec()?;
+        let idx =
+            resp.require("idx")?.to_i32_vec()?.into_iter().map(|i| i as i64).collect();
+        Ok((vals, idx))
+    }
+}

@@ -1,0 +1,164 @@
+//! TCP serving frontend: newline-delimited JSON over a thread-per-
+//! connection listener, dispatching into the [`Coordinator`].
+//!
+//! * [`wire`] — the protocol codec (see its docs for the schema).
+//! * [`Server`] — listener lifecycle (bind, accept loop, graceful stop).
+//! * [`client::Client`] — blocking client used by the examples, the
+//!   load-generator, and the integration tests.
+
+pub mod client;
+pub mod wire;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::Coordinator;
+use crate::exec::ThreadPool;
+use crate::metrics;
+use crate::server::wire::Op;
+
+/// Request-handling deadline (protects connection threads from a stuck
+/// coordinator).
+const REQUEST_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// The TCP server.
+pub struct Server {
+    listener: TcpListener,
+    coordinator: Arc<Coordinator>,
+    stop: Arc<AtomicBool>,
+    pool: ThreadPool,
+}
+
+impl Server {
+    /// Bind to `addr` (e.g. `127.0.0.1:7070`).  `conn_threads` bounds
+    /// concurrently-served connections.
+    pub fn bind(addr: &str, coordinator: Arc<Coordinator>, conn_threads: usize) -> Result<Server> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        Ok(Server {
+            listener,
+            coordinator,
+            stop: Arc::new(AtomicBool::new(false)),
+            pool: ThreadPool::new(conn_threads.max(1), "conn"),
+        })
+    }
+
+    /// The bound address (useful when binding port 0 in tests).
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Handle for asking the accept loop to stop.
+    pub fn stop_handle(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// Run the accept loop until the stop flag is set.  Blocks.
+    pub fn serve(&self) -> Result<()> {
+        crate::info!("server", "listening on {}", self.listener.local_addr()?);
+        self.listener.set_nonblocking(true)?;
+        let conns = metrics::global().counter("server.connections");
+        loop {
+            if self.stop.load(Ordering::Relaxed) {
+                return Ok(());
+            }
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    conns.inc();
+                    crate::debug!("server", "connection from {peer}");
+                    let coord = self.coordinator.clone();
+                    let stop = self.stop.clone();
+                    self.pool.execute(move || {
+                        if let Err(e) = handle_connection(stream, &coord, &stop) {
+                            crate::debug!("server", "connection ended: {e:#}");
+                        }
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    coord: &Coordinator,
+    stop: &AtomicBool,
+) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    let requests = metrics::global().counter("server.requests");
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // EOF
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(e) => return Err(e.into()),
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        requests.inc();
+        let response = dispatch(&line, coord);
+        writer.write_all(response.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+}
+
+fn dispatch(line: &str, coord: &Coordinator) -> String {
+    match wire::decode_request(line) {
+        Err(e) => wire::encode_error(&format!("{e:#}")),
+        Ok(Op::Ping) => wire::encode_object(crate::json::Value::object()),
+        Ok(Op::Stats) => {
+            let mut v = crate::json::Value::object();
+            v.set("metrics", metrics::global().snapshot_json());
+            v.set(
+                "sessions",
+                crate::json::Value::Number(coord.executor().session_count() as f64),
+            );
+            wire::encode_object(v)
+        }
+        Ok(Op::OpenSession) => {
+            let id = coord.open_session();
+            let mut v = crate::json::Value::object();
+            v.set("session", crate::json::Value::Number(id as f64));
+            wire::encode_object(v)
+        }
+        Ok(Op::ForkSession(src)) => match coord.fork_session(src) {
+            Ok(id) => {
+                let mut v = crate::json::Value::object();
+                v.set("session", crate::json::Value::Number(id as f64));
+                wire::encode_object(v)
+            }
+            Err(e) => wire::encode_error(&format!("{e:#}")),
+        },
+        Ok(Op::CloseSession(id)) => {
+            coord.close_session(id);
+            wire::encode_object(crate::json::Value::object())
+        }
+        Ok(Op::Request(payload)) => match coord.call(payload, REQUEST_TIMEOUT) {
+            Ok(reply) => wire::encode_reply(&reply),
+            Err(e) => wire::encode_error(&e),
+        },
+    }
+}

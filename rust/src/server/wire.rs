@@ -1,0 +1,179 @@
+//! Wire protocol: newline-delimited JSON over TCP.
+//!
+//! Request (one per line):
+//! ```json
+//! {"op": "softmax",  "logits": [..]}
+//! {"op": "decode",   "hidden": [..], "k": 5}
+//! {"op": "open_session"}
+//! {"op": "fork_session", "session": 1}
+//! {"op": "lm_step",  "session": 1, "token": 42, "k": 5}
+//! {"op": "close_session", "session": 1}
+//! {"op": "stats"}
+//! {"op": "ping"}
+//! ```
+//!
+//! Response (one per line): `{"ok": true, ...}` or
+//! `{"ok": false, "error": "..."}`.
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{Payload, Reply};
+use crate::json::{self, Value};
+
+/// Parsed client operation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    Request(Payload),
+    OpenSession,
+    ForkSession(u64),
+    CloseSession(u64),
+    Stats,
+    Ping,
+}
+
+/// Decode one request line.
+pub fn decode_request(line: &str) -> Result<Op> {
+    let v = json::parse(line.trim()).map_err(|e| anyhow!("bad json: {e}"))?;
+    let op = v
+        .require("op")?
+        .as_str()
+        .ok_or_else(|| anyhow!("`op` must be a string"))?;
+    match op {
+        "softmax" => Ok(Op::Request(Payload::Softmax {
+            logits: v.require("logits")?.to_f32_vec()?,
+        })),
+        "decode" => Ok(Op::Request(Payload::DecodeTopK {
+            hidden: v.require("hidden")?.to_f32_vec()?,
+            k: v.get("k").and_then(Value::as_usize),
+        })),
+        "lm_step" => Ok(Op::Request(Payload::LmStep {
+            session: v
+                .require("session")?
+                .as_i64()
+                .ok_or_else(|| anyhow!("`session` must be an integer"))? as u64,
+            token: v
+                .require("token")?
+                .as_i64()
+                .ok_or_else(|| anyhow!("`token` must be an integer"))? as i32,
+            k: v.get("k").and_then(Value::as_usize),
+        })),
+        "open_session" => Ok(Op::OpenSession),
+        "fork_session" => Ok(Op::ForkSession(
+            v.require("session")?
+                .as_i64()
+                .ok_or_else(|| anyhow!("`session` must be an integer"))? as u64,
+        )),
+        "close_session" => Ok(Op::CloseSession(
+            v.require("session")?
+                .as_i64()
+                .ok_or_else(|| anyhow!("`session` must be an integer"))? as u64,
+        )),
+        "stats" => Ok(Op::Stats),
+        "ping" => Ok(Op::Ping),
+        other => Err(anyhow!("unknown op `{other}`")),
+    }
+}
+
+/// Encode a successful reply.
+pub fn encode_reply(reply: &Reply) -> String {
+    let mut v = Value::object();
+    v.set("ok", Value::Bool(true));
+    match reply {
+        Reply::Softmax { probs } => {
+            v.set("probs", Value::from_f32_slice(probs));
+        }
+        Reply::TopK { vals, idx } => {
+            v.set("vals", Value::from_f32_slice(vals));
+            v.set(
+                "idx",
+                Value::Array(idx.iter().map(|&i| Value::Number(i as f64)).collect()),
+            );
+        }
+    }
+    v.to_json()
+}
+
+/// Encode an error reply.
+pub fn encode_error(msg: &str) -> String {
+    let mut v = Value::object();
+    v.set("ok", Value::Bool(false)).set("error", Value::String(msg.to_string()));
+    v.to_json()
+}
+
+/// Encode a bare-object success (open_session, stats, ping).
+pub fn encode_object(mut fields: Value) -> String {
+    fields.set("ok", Value::Bool(true));
+    fields.to_json()
+}
+
+/// Decode a response line on the client side.
+pub fn decode_response(line: &str) -> Result<Value> {
+    let v = json::parse(line.trim()).map_err(|e| anyhow!("bad response json: {e}"))?;
+    match v.get("ok").and_then(Value::as_bool) {
+        Some(true) => Ok(v),
+        Some(false) => Err(anyhow!(
+            "server error: {}",
+            v.get("error").and_then(Value::as_str).unwrap_or("unknown")
+        )),
+        None => Err(anyhow!("response missing `ok` field")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_all_ops() {
+        assert_eq!(
+            decode_request(r#"{"op":"softmax","logits":[1,2]}"#).unwrap(),
+            Op::Request(Payload::Softmax { logits: vec![1.0, 2.0] })
+        );
+        assert_eq!(
+            decode_request(r#"{"op":"decode","hidden":[0.5],"k":3}"#).unwrap(),
+            Op::Request(Payload::DecodeTopK { hidden: vec![0.5], k: Some(3) })
+        );
+        assert_eq!(
+            decode_request(r#"{"op":"lm_step","session":7,"token":9}"#).unwrap(),
+            Op::Request(Payload::LmStep { session: 7, token: 9, k: None })
+        );
+        assert_eq!(decode_request(r#"{"op":"open_session"}"#).unwrap(), Op::OpenSession);
+        assert_eq!(
+            decode_request(r#"{"op":"fork_session","session":2}"#).unwrap(),
+            Op::ForkSession(2)
+        );
+        assert_eq!(
+            decode_request(r#"{"op":"close_session","session":3}"#).unwrap(),
+            Op::CloseSession(3)
+        );
+        assert_eq!(decode_request(r#"{"op":"ping"}"#).unwrap(), Op::Ping);
+        assert_eq!(decode_request(r#"{"op":"stats"}"#).unwrap(), Op::Stats);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(decode_request("not json").is_err());
+        assert!(decode_request(r#"{"op":"bogus"}"#).is_err());
+        assert!(decode_request(r#"{"op":"decode"}"#).is_err(), "missing hidden");
+        assert!(decode_request(r#"{"op":"lm_step","session":"x","token":1}"#).is_err());
+    }
+
+    #[test]
+    fn reply_roundtrip() {
+        let line = encode_reply(&Reply::TopK { vals: vec![0.5, 0.25], idx: vec![7, 3] });
+        let v = decode_response(&line).unwrap();
+        assert_eq!(v.get("vals").unwrap().to_f32_vec().unwrap(), vec![0.5, 0.25]);
+        assert_eq!(v.get("idx").unwrap().to_i32_vec().unwrap(), vec![7, 3]);
+
+        let line = encode_reply(&Reply::Softmax { probs: vec![1.0] });
+        let v = decode_response(&line).unwrap();
+        assert_eq!(v.get("probs").unwrap().to_f32_vec().unwrap(), vec![1.0]);
+    }
+
+    #[test]
+    fn error_roundtrip() {
+        let line = encode_error("boom");
+        let err = decode_response(&line).unwrap_err();
+        assert!(format!("{err}").contains("boom"));
+    }
+}

@@ -1,0 +1,183 @@
+//! Pass-wise batched softmax — the faithful CPU analog of the paper's
+//! GPU execution model.
+//!
+//! The paper's benchmark launches each algorithm pass as a grid over
+//! **all 4000 vectors**: every pass streams the entire batch through
+//! DRAM.  Processing row-by-row on a CPU accidentally defeats this —
+//! a 400 KB row stays cache-resident between its own passes, hiding
+//! exactly the effect the paper measures.  The functions here iterate
+//! **pass-major** over the whole `(batch, v)` matrix, so with a working
+//! set ≫ LLC each pass is a genuine DRAM sweep and the access-count
+//! ratios of §2–§4 become visible (see EXPERIMENTS.md §Perf L3 it. 8).
+//!
+//! Memory sweeps over the input matrix:
+//!
+//! | fn | sweeps | paper accesses/elem |
+//! |---|---|---|
+//! | [`naive`]  | 2 (+1 store) | 3 |
+//! | [`safe`]   | 3 (+1 store) | 4 |
+//! | [`online`] | 2 (+1 store) | 3 |
+//! | [`safe_unfused_topk`]   | 4 + store | 5 |
+//! | [`online_unfused_topk`] | 3 + store | 4 |
+//! | [`safe_fused_topk`]     | 2 | 2 |
+//! | [`online_fused_topk`]   | **1** | **1** |
+
+use super::monoid::MD;
+use super::{fused, vectorized};
+use crate::topk::heap_topk;
+
+fn rows(x: &[f32], v: usize) -> usize {
+    assert!(v > 0 && x.len() % v == 0, "x must be (batch, v) row-major");
+    x.len() / v
+}
+
+/// Algorithm 1, pass-major: sweep 1 computes every row's `d`, sweep 2
+/// scales.
+pub fn naive(x: &[f32], v: usize, out: &mut [f32]) {
+    assert_eq!(x.len(), out.len());
+    let b = rows(x, v);
+    let mut d = vec![0.0f32; b];
+    for (r, row) in x.chunks_exact(v).enumerate() {
+        d[r] = vectorized::expsum(row, 0.0);
+    }
+    for (r, (row, orow)) in x.chunks_exact(v).zip(out.chunks_exact_mut(v)).enumerate() {
+        vectorized::scale_pass(row, orow, 0.0, 1.0 / d[r]);
+    }
+}
+
+/// Algorithm 2, pass-major: max sweep, normalizer sweep, scale sweep.
+pub fn safe(x: &[f32], v: usize, out: &mut [f32]) {
+    assert_eq!(x.len(), out.len());
+    let b = rows(x, v);
+    let mut m = vec![f32::NEG_INFINITY; b];
+    for (r, row) in x.chunks_exact(v).enumerate() {
+        m[r] = vectorized::rowmax(row);
+    }
+    let mut d = vec![0.0f32; b];
+    for (r, row) in x.chunks_exact(v).enumerate() {
+        d[r] = vectorized::expsum(row, m[r]);
+    }
+    for (r, (row, orow)) in x.chunks_exact(v).zip(out.chunks_exact_mut(v)).enumerate() {
+        vectorized::scale_pass(row, orow, m[r], 1.0 / d[r]);
+    }
+}
+
+/// Algorithm 3, pass-major: ONE fused (m, d) sweep, then the scale sweep.
+pub fn online(x: &[f32], v: usize, out: &mut [f32]) {
+    assert_eq!(x.len(), out.len());
+    let b = rows(x, v);
+    let mut md = vec![MD::IDENTITY; b];
+    for (r, row) in x.chunks_exact(v).enumerate() {
+        md[r] = vectorized::online_normalizer(row);
+    }
+    for (r, (row, orow)) in x.chunks_exact(v).zip(out.chunks_exact_mut(v)).enumerate() {
+        vectorized::scale_pass(row, orow, md[r].m, 1.0 / md[r].d);
+    }
+}
+
+/// Batched results: per-row `(vals, idx)`.
+pub type TopKBatch = Vec<(Vec<f32>, Vec<i64>)>;
+
+/// Safe softmax then separate TopK, pass-major (the 5-access baseline):
+/// 3 sweeps of softmax + full store + a 4th sweep over the stored
+/// probabilities.
+pub fn safe_unfused_topk(x: &[f32], v: usize, k: usize, scratch: &mut Vec<f32>) -> TopKBatch {
+    scratch.resize(x.len(), 0.0);
+    safe(x, v, scratch);
+    scratch.chunks_exact(v).map(|row| heap_topk(row, k)).collect()
+}
+
+/// Online softmax then separate TopK (4 accesses).
+pub fn online_unfused_topk(x: &[f32], v: usize, k: usize, scratch: &mut Vec<f32>) -> TopKBatch {
+    scratch.resize(x.len(), 0.0);
+    online(x, v, scratch);
+    scratch.chunks_exact(v).map(|row| heap_topk(row, k)).collect()
+}
+
+/// Safe softmax fused with TopK, pass-major (2 sweeps): max sweep over
+/// the whole matrix, then one sweep carrying `(d, topk)` per row.
+pub fn safe_fused_topk(x: &[f32], v: usize, k: usize) -> TopKBatch {
+    use crate::topk::TopKBuffer;
+    let b = rows(x, v);
+    let mut m = vec![f32::NEG_INFINITY; b];
+    for (r, row) in x.chunks_exact(v).enumerate() {
+        m[r] = vectorized::rowmax(row);
+    }
+    x.chunks_exact(v)
+        .enumerate()
+        .map(|(r, row)| {
+            let mut buf = TopKBuffer::new(k);
+            let mut d = 0.0f32;
+            let mut base = 0i64;
+            for blk in row.chunks(512) {
+                d += vectorized::expsum(blk, m[r]);
+                let blk_max = vectorized::rowmax(blk);
+                let mut thr = buf.threshold();
+                if blk_max > thr {
+                    for (i, &xv) in blk.iter().enumerate() {
+                        if xv > thr {
+                            buf.push(xv, base + i as i64);
+                            thr = buf.threshold();
+                        }
+                    }
+                }
+                base += blk.len() as i64;
+            }
+            fused::finalize(&buf, MD { m: m[r], d })
+        })
+        .collect()
+}
+
+/// Algorithm 4 pass-major: a single sweep per row over one matrix pass.
+pub fn online_fused_topk(x: &[f32], v: usize, k: usize) -> TopKBatch {
+    x.chunks_exact(v).map(|row| fused::online_topk(row, k)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::softmax::scalar;
+
+    fn logits(n: usize, seed: u64) -> Vec<f32> {
+        crate::rng::Xoshiro256pp::seed_from_u64(seed).logits(n, 6.0)
+    }
+
+    fn assert_rows_close(a: &[f32], b: &[f32], rtol: f32) {
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() <= 1e-9 + rtol * x.abs().max(y.abs()), "idx {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn batched_forms_match_rowwise_reference() {
+        let (b, v) = (6, 333);
+        let x = logits(b * v, 1);
+        let mut want = vec![0.0; b * v];
+        for (row, orow) in x.chunks_exact(v).zip(want.chunks_exact_mut(v)) {
+            scalar::safe(row, orow);
+        }
+        let mut got = vec![0.0; b * v];
+        safe(&x, v, &mut got);
+        assert_rows_close(&got, &want, 1e-4);
+        online(&x, v, &mut got);
+        assert_rows_close(&got, &want, 1e-4);
+        naive(&x, v, &mut got);
+        assert_rows_close(&got, &want, 1e-4);
+    }
+
+    #[test]
+    fn batched_topk_forms_agree() {
+        let (b, v, k) = (4, 500, 5);
+        let x = logits(b * v, 2);
+        let mut scratch = Vec::new();
+        let a = safe_unfused_topk(&x, v, k, &mut scratch);
+        let c = online_unfused_topk(&x, v, k, &mut scratch);
+        let d = safe_fused_topk(&x, v, k);
+        let e = online_fused_topk(&x, v, k);
+        for (((ra, rc), rd), re) in a.iter().zip(&c).zip(&d).zip(&e) {
+            assert_eq!(ra.1, rc.1);
+            assert_eq!(ra.1, rd.1);
+            assert_eq!(ra.1, re.1);
+        }
+    }
+}

@@ -1,0 +1,261 @@
+//! Algorithm 4 — Online Softmax fused with TopK — and the baseline
+//! combinations of §4/§5.2 of the paper:
+//!
+//! | path                       | sweeps over x | accesses/elem |
+//! |----------------------------|---------------|---------------|
+//! | [`safe_unfused_topk`]      | 4 (3 + topk)  | 5             |
+//! | [`online_unfused_topk`]    | 3 (2 + topk)  | 4             |
+//! | [`safe_fused_topk`]        | 2             | 2             |
+//! | [`online_topk`] (Alg 4)    | **1**         | **1**         |
+//!
+//! All return `(vals, idx)` where `vals[i] = softmax(x)[idx[i]]`, sorted
+//! descending — eq. (5) applied to the softmax output.
+
+use super::fastexp::fast_exp;
+use super::monoid::MD;
+use super::vectorized;
+use crate::topk::{heap_topk, scan_topk, TopKBuffer};
+
+/// Result of a softmax+topk evaluation.
+pub type TopKResult = (Vec<f32>, Vec<i64>);
+
+/// Lines 17–19 of Algorithm 4: convert raw top-k logits into
+/// probabilities using the final `(m, d)`.
+pub fn finalize(buf: &TopKBuffer, md: MD) -> TopKResult {
+    let inv = 1.0 / md.d;
+    let mut vals = Vec::with_capacity(buf.k());
+    let mut idx = Vec::with_capacity(buf.k());
+    for (u, p) in buf.entries() {
+        if p >= 0 {
+            vals.push(fast_exp(u - md.m) * inv);
+            idx.push(p);
+        }
+    }
+    (vals, idx)
+}
+
+/// **Algorithm 4**, scalar-faithful: one pass keeping `(m, d)` and the
+/// (K+1)-slot insertion buffer side by side.
+pub fn online_topk_scalar(x: &[f32], k: usize) -> TopKResult {
+    let mut md = MD::IDENTITY;
+    let mut buf = TopKBuffer::new(k);
+    for (j, &xj) in x.iter().enumerate() {
+        // lines 6–7: online normalizer update
+        md = md.push(xj);
+        // lines 8–15: insertion into the candidate buffer
+        buf.push(xj, j as i64);
+    }
+    finalize(&buf, md)
+}
+
+/// **Algorithm 4**, production path: cache-blocked online normalizer
+/// (the ⊕ trick of §3.1 at tile granularity, same structure as the L1
+/// Pallas kernel) with the top-k insertion riding the same single DRAM
+/// sweep.  The normalizer tiles are fully vectorized; the buffer
+/// insertion is the scalar tail whose cost grows with K — exactly the
+/// effect §5.2's K-sweep measures.
+pub fn online_topk(x: &[f32], k: usize) -> TopKResult {
+    const BLOCK: usize = 512;
+    let mut md = MD::IDENTITY;
+    let mut buf = TopKBuffer::new(k);
+    let mut base = 0i64;
+    for blk in x.chunks(BLOCK) {
+        // Vectorized tile: (m_blk, d_blk), then ONE ⊕ fold (eq. 4).
+        let m_blk = vectorized::rowmax(blk);
+        if m_blk > f32::NEG_INFINITY {
+            let d_blk = vectorized::expsum(blk, m_blk);
+            md = md.combine(MD { m: m_blk, d: d_blk });
+        }
+        // Candidate scan, pre-filtered by the tile max we already have:
+        // once the buffer warms up, the running k-th value exceeds most
+        // tiles' maxima, so entire 512-element tiles are skipped for the
+        // price of one compare (EXPERIMENTS.md §Perf, L1 iteration 4).
+        let mut thr = buf.threshold();
+        if m_blk > thr {
+            for (i, &xv) in blk.iter().enumerate() {
+                if xv > thr {
+                    buf.push(xv, base + i as i64);
+                    thr = buf.threshold();
+                }
+            }
+        }
+        base += blk.len() as i64;
+    }
+    finalize(&buf, md)
+}
+
+/// Safe softmax fused with TopK: max pass, then one pass carrying both
+/// the normalizer and the candidate buffer (2 accesses/element).
+pub fn safe_fused_topk(x: &[f32], k: usize) -> TopKResult {
+    let m = vectorized::rowmax(x);
+    if m == f32::NEG_INFINITY {
+        return (Vec::new(), Vec::new());
+    }
+    const LANES: usize = vectorized::LANES;
+    let mut lane_d = [0.0f32; LANES];
+    let mut buf = TopKBuffer::new(k);
+    let chunks = x.chunks_exact(LANES);
+    let tail = chunks.remainder();
+    let mut base = 0i64;
+    let mut d_tail = 0.0f32;
+    for c in chunks {
+        for l in 0..LANES {
+            lane_d[l] += fast_exp(c[l] - m);
+        }
+        for (l, &xv) in c.iter().enumerate() {
+            buf.push(xv, base + l as i64);
+        }
+        base += LANES as i64;
+    }
+    for (t, &xv) in tail.iter().enumerate() {
+        d_tail += fast_exp(xv - m);
+        buf.push(xv, base + t as i64);
+    }
+    let d = lane_d.iter().sum::<f32>() + d_tail;
+    finalize(&buf, MD { m, d })
+}
+
+/// Safe softmax then TopK, run separately (the framework-default path:
+/// 4 + 1 = 5 accesses/element).  Materializes the full probability
+/// vector like a framework softmax kernel would.
+pub fn safe_unfused_topk(x: &[f32], k: usize, scratch: &mut Vec<f32>) -> TopKResult {
+    scratch.resize(x.len(), 0.0);
+    vectorized::safe(x, scratch);
+    heap_topk(scratch, k)
+}
+
+/// Online softmax then TopK, still separate (4 accesses/element) — the
+/// intermediate point the paper's §4 access-count table lists.
+pub fn online_unfused_topk(x: &[f32], k: usize, scratch: &mut Vec<f32>) -> TopKResult {
+    scratch.resize(x.len(), 0.0);
+    vectorized::online(x, scratch);
+    heap_topk(scratch, k)
+}
+
+/// Merge shard-level partials: each shard contributes its `(m, d)` and a
+/// top-k buffer with *global* indices; the results combine by ⊕ and
+/// buffer-merge, then finalize.  This is the coordinator's reduction.
+pub fn merge_partials(parts: &[(MD, TopKBuffer)]) -> TopKResult {
+    assert!(!parts.is_empty(), "merge of zero partials");
+    let mut md = MD::IDENTITY;
+    let mut buf = TopKBuffer::new(parts[0].1.k());
+    for (part_md, part_buf) in parts {
+        md = md.combine(*part_md);
+        buf.merge(part_buf);
+    }
+    finalize(&buf, md)
+}
+
+/// Compute one shard's partial for [`merge_partials`].
+pub fn shard_partial(x: &[f32], k: usize, base: i64) -> (MD, TopKBuffer) {
+    (vectorized::online_normalizer(x), scan_topk(x, k, base))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::softmax::scalar;
+
+    fn logits(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+        crate::rng::Xoshiro256pp::seed_from_u64(seed).logits(n, scale)
+    }
+
+    /// Reference: full safe softmax + exact sort.
+    fn reference(x: &[f32], k: usize) -> TopKResult {
+        let mut y = vec![0.0; x.len()];
+        scalar::safe(x, &mut y);
+        let mut pairs: Vec<(f32, i64)> =
+            y.iter().enumerate().map(|(i, &v)| (v, i as i64)).collect();
+        pairs.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+        pairs.truncate(k.min(x.len()));
+        pairs.into_iter().unzip()
+    }
+
+    fn assert_result_close(a: &TopKResult, b: &TopKResult, rtol: f32) {
+        assert_eq!(a.1, b.1, "indices differ");
+        for (x, y) in a.0.iter().zip(&b.0) {
+            assert!((x - y).abs() <= rtol * x.abs().max(*y), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn all_paths_agree_with_reference() {
+        let mut scratch = Vec::new();
+        for (n, k) in [(100, 5), (1000, 5), (4097, 8), (64, 1), (50, 50)] {
+            let x = logits(n, (n + k) as u64, 6.0);
+            let r = reference(&x, k);
+            assert_result_close(&online_topk_scalar(&x, k), &r, 1e-5);
+            assert_result_close(&online_topk(&x, k), &r, 1e-5);
+            assert_result_close(&safe_fused_topk(&x, k), &r, 1e-5);
+            assert_result_close(&safe_unfused_topk(&x, k, &mut scratch), &r, 1e-5);
+            assert_result_close(&online_unfused_topk(&x, k, &mut scratch), &r, 1e-5);
+        }
+    }
+
+    #[test]
+    fn probabilities_descending_and_bounded() {
+        let x = logits(2000, 3, 25.0);
+        let (vals, idx) = online_topk(&x, 10);
+        assert_eq!(vals.len(), 10);
+        assert_eq!(idx.len(), 10);
+        for w in vals.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+        assert!(vals.iter().all(|&v| v > 0.0 && v <= 1.0));
+    }
+
+    #[test]
+    fn extreme_magnitudes_safe() {
+        let mut x = logits(512, 4, 3.0);
+        x.iter_mut().for_each(|v| *v += 140.0);
+        let (vals, _) = online_topk(&x, 5);
+        assert!(vals.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn shard_merge_equals_whole() {
+        let x = logits(1200, 5, 8.0);
+        let k = 7;
+        let whole = online_topk(&x, k);
+        for shards in [2usize, 3, 5] {
+            let size = x.len() / shards;
+            let parts: Vec<_> = (0..shards)
+                .map(|s| {
+                    let lo = s * size;
+                    let hi = if s + 1 == shards { x.len() } else { lo + size };
+                    shard_partial(&x[lo..hi], k, lo as i64)
+                })
+                .collect();
+            let merged = merge_partials(&parts);
+            assert_eq!(merged.1, whole.1, "shards={shards}");
+            for (a, b) in merged.0.iter().zip(&whole.0) {
+                assert!((a - b).abs() <= 1e-5 * a.max(*b), "shards={shards}");
+            }
+        }
+    }
+
+    #[test]
+    fn k_exceeding_v_returns_v_entries() {
+        let x = logits(3, 6, 2.0);
+        let (vals, idx) = online_topk(&x, 10);
+        assert_eq!(vals.len(), 3);
+        assert_eq!(idx.len(), 3);
+        let s: f32 = vals.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5, "k≥V returns the whole distribution");
+    }
+
+    #[test]
+    fn paper_k_sweep_stays_correct() {
+        let x = logits(25_000, 8, 10.0);
+        for k in [5usize, 10, 15, 30] {
+            let r = reference(&x, k);
+            assert_result_close(&online_topk(&x, k), &r, 1e-5);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "zero partials")]
+    fn empty_merge_panics() {
+        merge_partials(&[]);
+    }
+}

@@ -1,0 +1,141 @@
+//! The paper's softmax algorithms (Algorithms 1–4) in every form the
+//! evaluation needs.
+//!
+//! * [`scalar`] — pseudocode-faithful loops (semantic reference).
+//! * [`vectorized`] — lane-parallel single-thread kernels over
+//!   [`fastexp`] (the CPU stand-in for the GPU's SFU `exp`).
+//! * [`parallel`] — multithreaded ⊕-reduction (§3.1).
+//! * [`fused`] — Algorithm 4 and the unfused/safe-fused baselines.
+//! * [`batched`] — pass-major whole-batch forms matching the paper's
+//!   GPU execution model (every pass streams the full batch).
+//! * [`monoid`] — the `(m, d)` ⊕ monoid itself.
+//!
+//! [`compute`]/[`compute_batch`] are the convenience entry points used
+//! by the examples and the serving fallback path.
+
+pub mod batched;
+pub mod fastexp;
+pub mod fused;
+pub mod monoid;
+pub mod parallel;
+pub mod scalar;
+pub mod vectorized;
+
+pub use monoid::MD;
+
+/// Which softmax algorithm to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    /// Algorithm 1: two passes, numerically unsafe.
+    Naive,
+    /// Algorithm 2: three passes, the framework default.
+    Safe,
+    /// Algorithm 3: single-pass online normalizer — the paper.
+    Online,
+}
+
+impl Algorithm {
+    pub const ALL: [Algorithm; 3] = [Algorithm::Naive, Algorithm::Safe, Algorithm::Online];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Algorithm::Naive => "naive",
+            Algorithm::Safe => "safe",
+            Algorithm::Online => "online",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        match s {
+            "naive" => Some(Algorithm::Naive),
+            "safe" => Some(Algorithm::Safe),
+            "online" => Some(Algorithm::Online),
+            _ => None,
+        }
+    }
+
+    /// Memory accesses per input element (the paper's §2–3 accounting).
+    pub fn accesses_per_element(self) -> u32 {
+        match self {
+            Algorithm::Naive => 3,
+            Algorithm::Safe => 4,
+            Algorithm::Online => 3,
+        }
+    }
+
+    /// Number of passes over the input vector.
+    pub fn passes(self) -> u32 {
+        match self {
+            Algorithm::Naive => 2,
+            Algorithm::Safe => 3,
+            Algorithm::Online => 2,
+        }
+    }
+}
+
+/// Softmax over one vector using the vectorized kernel for `algo`.
+pub fn compute(x: &[f32], algo: Algorithm) -> Vec<f32> {
+    let mut out = vec![0.0; x.len()];
+    compute_into(x, &mut out, algo);
+    out
+}
+
+/// In-place variant of [`compute`].
+pub fn compute_into(x: &[f32], out: &mut [f32], algo: Algorithm) {
+    match algo {
+        Algorithm::Naive => vectorized::naive(x, out),
+        Algorithm::Safe => vectorized::safe(x, out),
+        Algorithm::Online => vectorized::online(x, out),
+    }
+}
+
+/// Batched softmax over row-major `(batch, v)` data.
+pub fn compute_batch(x: &[f32], v: usize, algo: Algorithm, out: &mut [f32]) {
+    assert!(v > 0 && x.len() % v == 0, "x must be (batch, v) row-major");
+    assert_eq!(x.len(), out.len());
+    for (row_in, row_out) in x.chunks_exact(v).zip(out.chunks_exact_mut(v)) {
+        compute_into(row_in, row_out, algo);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn access_counts_match_paper() {
+        assert_eq!(Algorithm::Naive.accesses_per_element(), 3);
+        assert_eq!(Algorithm::Safe.accesses_per_element(), 4);
+        assert_eq!(Algorithm::Online.accesses_per_element(), 3);
+        assert_eq!(Algorithm::Safe.passes(), 3);
+        assert_eq!(Algorithm::Online.passes(), 2);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for a in Algorithm::ALL {
+            assert_eq!(Algorithm::parse(a.name()), Some(a));
+        }
+        assert_eq!(Algorithm::parse("bogus"), None);
+    }
+
+    #[test]
+    fn compute_batch_rows_independent() {
+        let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(1);
+        let v = 64;
+        let x = rng.logits(4 * v, 5.0);
+        let mut batched = vec![0.0; x.len()];
+        compute_batch(&x, v, Algorithm::Online, &mut batched);
+        for (i, row) in x.chunks_exact(v).enumerate() {
+            let single = compute(row, Algorithm::Online);
+            assert_eq!(&batched[i * v..(i + 1) * v], &single[..], "row {i}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "row-major")]
+    fn compute_batch_rejects_ragged() {
+        let mut out = vec![0.0; 10];
+        compute_batch(&[0.0; 10], 3, Algorithm::Safe, &mut out);
+    }
+}

@@ -1,0 +1,182 @@
+//! The (m, d) normalizer monoid — eq. (3)–(4) of the paper (§3.1).
+//!
+//! `MD { m, d }` carries a running maximum and a running normalizer
+//! `d = Σ e^{x_j − m}`.  [`MD::combine`] is the ⊕ operator: it is
+//! associative and commutative with identity `(−∞, 0)`, which is what
+//! licenses every parallel/vectorized/sharded evaluation order in this
+//! crate — tile carries in the Pallas kernel, SIMD lanes in
+//! [`super::vectorized`], worker threads in [`super::parallel`], and
+//! vocabulary shards in the coordinator's merge.
+
+/// Partial softmax normalizer state: running max `m` and normalizer `d`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MD {
+    /// Running maximum over the elements folded so far.
+    pub m: f32,
+    /// Running `Σ e^{x_j − m}` over the same elements.
+    pub d: f32,
+}
+
+impl MD {
+    /// The ⊕ identity: zero elements folded.
+    pub const IDENTITY: MD = MD { m: f32::NEG_INFINITY, d: 0.0 };
+
+    /// State after folding a single element `x` (leaf of the ⊕ tree).
+    #[inline]
+    pub fn of(x: f32) -> MD {
+        MD { m: x, d: 1.0 }
+    }
+
+    /// Fold one element into the state — lines 4–5 of Algorithm 3.
+    ///
+    /// `d_j = d_{j-1} · e^{m_{j-1} − m_j} + e^{x_j − m_j}`.
+    #[inline]
+    pub fn push(self, x: f32) -> MD {
+        let m_new = self.m.max(x);
+        // When self is the identity (m = −∞), e^{−∞ − m_new} = 0 and
+        // d = 0, so the first term vanishes without special-casing —
+        // UNLESS x is itself −∞ (whole-vector padding), where we keep
+        // the identity-safe form below.
+        let scale = exp_guard(self.m, m_new);
+        MD { m: m_new, d: self.d * scale + exp_guard(x, m_new) }
+    }
+
+    /// The ⊕ operator — eq. (4).
+    #[inline]
+    pub fn combine(self, other: MD) -> MD {
+        let m = self.m.max(other.m);
+        MD { m, d: self.d * exp_guard(self.m, m) + other.d * exp_guard(other.m, m) }
+    }
+
+    /// True if no element has been folded.
+    #[inline]
+    pub fn is_identity(self) -> bool {
+        self.m == f32::NEG_INFINITY && self.d == 0.0
+    }
+}
+
+/// `e^{a − b}` with the convention `e^{−∞ − −∞} = 0` (identity merge).
+///
+/// IEEE gives `−∞ − −∞ = NaN`; the monoid needs that corner to act as
+/// "no contribution", i.e. 0.
+#[inline]
+fn exp_guard(a: f32, b: f32) -> f32 {
+    if a == f32::NEG_INFINITY {
+        0.0
+    } else {
+        (a - b).exp()
+    }
+}
+
+/// Tree reduction of per-element states — the parallel form of eq. (3).
+///
+/// Pairwise tree order also improves fp accuracy vs the sequential fold
+/// (log-depth error growth), which the accuracy example measures.
+pub fn tree_reduce(states: &[MD]) -> MD {
+    match states.len() {
+        0 => MD::IDENTITY,
+        1 => states[0],
+        n => {
+            let (lo, hi) = states.split_at(n / 2);
+            tree_reduce(lo).combine(tree_reduce(hi))
+        }
+    }
+}
+
+/// Sequential left fold of raw elements (lines 1–6 of Algorithm 3).
+pub fn fold_slice(xs: &[f32]) -> MD {
+    xs.iter().fold(MD::IDENTITY, |acc, &x| acc.push(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f32, b: f32, rtol: f32) -> bool {
+        if a == b {
+            return true;
+        }
+        (a - b).abs() <= rtol * a.abs().max(b.abs()).max(1e-30)
+    }
+
+    fn assert_md_close(a: MD, b: MD) {
+        assert_eq!(a.m, b.m, "m mismatch: {a:?} vs {b:?}");
+        assert!(close(a.d, b.d, 1e-5), "d mismatch: {a:?} vs {b:?}");
+    }
+
+    #[test]
+    fn push_matches_direct_formula() {
+        let xs = [1.0f32, 3.0, -2.0, 3.5, 0.0];
+        let md = fold_slice(&xs);
+        let m = 3.5f32;
+        let d: f32 = xs.iter().map(|x| (x - m).exp()).sum();
+        assert_eq!(md.m, m);
+        assert!(close(md.d, d, 1e-6));
+    }
+
+    #[test]
+    fn identity_laws() {
+        let a = MD { m: 2.0, d: 5.0 };
+        assert_md_close(a.combine(MD::IDENTITY), a);
+        assert_md_close(MD::IDENTITY.combine(a), a);
+        assert!(MD::IDENTITY.is_identity());
+        assert!(!a.is_identity());
+    }
+
+    #[test]
+    fn commutativity() {
+        let a = MD { m: 1.0, d: 2.0 };
+        let b = MD { m: -3.0, d: 7.0 };
+        assert_md_close(a.combine(b), b.combine(a));
+    }
+
+    #[test]
+    fn associativity() {
+        let a = MD { m: 0.5, d: 1.5 };
+        let b = MD { m: 4.0, d: 2.0 };
+        let c = MD { m: -2.0, d: 9.0 };
+        assert_md_close(a.combine(b).combine(c), a.combine(b.combine(c)));
+    }
+
+    #[test]
+    fn tree_reduce_equals_fold() {
+        let xs: Vec<f32> = (0..97).map(|i| ((i * 37) % 23) as f32 - 11.0).collect();
+        let leaves: Vec<MD> = xs.iter().map(|&x| MD::of(x)).collect();
+        assert_md_close(tree_reduce(&leaves), fold_slice(&xs));
+    }
+
+    #[test]
+    fn paper_bound_1_le_d_le_n() {
+        // §3: 1 ≤ d_j ≤ j.
+        let xs: Vec<f32> = (0..1000).map(|i| ((i * 7919) % 200) as f32 - 100.0).collect();
+        let mut acc = MD::IDENTITY;
+        for (j, &x) in xs.iter().enumerate() {
+            acc = acc.push(x);
+            assert!(acc.d >= 1.0 - 1e-6, "d < 1 at j={j}");
+            assert!(acc.d <= (j + 1) as f32 * (1.0 + 1e-6), "d > j at j={j}");
+        }
+    }
+
+    #[test]
+    fn no_overflow_at_extreme_magnitudes() {
+        let md = fold_slice(&[300.0, 300.0, 300.0]);
+        assert!(md.d.is_finite() && md.m == 300.0 && (md.d - 3.0).abs() < 1e-6);
+        let md = fold_slice(&[-300.0, -299.0]);
+        assert!(md.d.is_finite() && md.d >= 1.0);
+    }
+
+    #[test]
+    fn neg_infinity_elements_are_padding() {
+        // −∞ elements act as padding: no effect on (m, d).
+        let a = fold_slice(&[1.0, f32::NEG_INFINITY, 2.0]);
+        let b = fold_slice(&[1.0, 2.0]);
+        assert_md_close(a, b);
+        // all-padding stays identity
+        assert!(fold_slice(&[f32::NEG_INFINITY; 4]).is_identity());
+    }
+
+    #[test]
+    fn empty_tree_reduce_is_identity() {
+        assert!(tree_reduce(&[]).is_identity());
+    }
+}

@@ -1,0 +1,134 @@
+//! Multithreaded online normalizer — §3.1 at thread granularity.
+//!
+//! The input vector is split into chunks; each worker folds its chunk
+//! with the vectorized single-pass kernel; partial `(m, d)` states (and
+//! top-k buffers, for the fused form) merge with ⊕.  This is the same
+//! reduction the coordinator performs across vocabulary *shards*, here
+//! applied across *threads* within one vector — both legal for the same
+//! reason: eq. (4) is associative and commutative.
+
+use super::fused;
+use super::monoid::MD;
+use super::vectorized;
+use crate::exec::parallel_chunks;
+use crate::topk::TopKBuffer;
+
+/// Minimum per-thread work; below this, threading overhead dominates and
+/// we fall back to the single-thread kernel.
+pub const MIN_CHUNK: usize = 16_384;
+
+/// Parallel single-pass normalizer over `threads` workers.
+pub fn online_normalizer(x: &[f32], threads: usize) -> MD {
+    if x.len() < 2 * MIN_CHUNK || threads <= 1 {
+        return vectorized::online_normalizer(x);
+    }
+    let chunk = x.len().div_ceil(threads).max(MIN_CHUNK);
+    let parts = parallel_chunks(threads, x, chunk, |_, c| vectorized::online_normalizer(c));
+    parts.into_iter().fold(MD::IDENTITY, MD::combine)
+}
+
+/// Parallel full online softmax: parallel normalizer + parallel scale.
+pub fn online(x: &[f32], out: &mut [f32], threads: usize) {
+    assert_eq!(x.len(), out.len());
+    let md = online_normalizer(x, threads);
+    scale(x, out, md, threads);
+}
+
+/// Parallel scale pass `y = e^{x−m}/d`.
+pub fn scale(x: &[f32], out: &mut [f32], md: MD, threads: usize) {
+    assert_eq!(x.len(), out.len());
+    let inv = 1.0 / md.d;
+    if x.len() < 2 * MIN_CHUNK || threads <= 1 {
+        vectorized::scale_pass(x, out, md.m, inv);
+        return;
+    }
+    let chunk = x.len().div_ceil(threads).max(MIN_CHUNK);
+    // Write into disjoint slices of `out` from worker threads.
+    let out_ptr = OutPtr(out.as_mut_ptr());
+    let out_ref = &out_ptr;
+    parallel_chunks(threads, x, chunk, |i, c| {
+        // SAFETY: chunks are disjoint ranges of out, len matches x.
+        let dst = unsafe { out_ref.slice(i * chunk, c.len()) };
+        vectorized::scale_pass(c, dst, md.m, inv);
+    });
+}
+
+struct OutPtr(*mut f32);
+unsafe impl Sync for OutPtr {}
+unsafe impl Send for OutPtr {}
+
+impl OutPtr {
+    /// SAFETY: caller guarantees [start, start+len) ranges are disjoint
+    /// across threads and in-bounds for the underlying allocation.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn slice(&self, start: usize, len: usize) -> &mut [f32] {
+        std::slice::from_raw_parts_mut(self.0.add(start), len)
+    }
+}
+
+/// Parallel fused online softmax + top-k (Algorithm 4 across threads).
+pub fn online_topk(x: &[f32], k: usize, threads: usize) -> (Vec<f32>, Vec<i64>) {
+    if x.len() < 2 * MIN_CHUNK || threads <= 1 {
+        return fused::online_topk(x, k);
+    }
+    let chunk = x.len().div_ceil(threads).max(MIN_CHUNK);
+    let parts: Vec<(MD, TopKBuffer)> =
+        parallel_chunks(threads, x, chunk, |i, c| fused::shard_partial(c, k, (i * chunk) as i64));
+    fused::merge_partials(&parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::softmax::scalar;
+
+    fn logits(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+        crate::rng::Xoshiro256pp::seed_from_u64(seed).logits(n, scale)
+    }
+
+    #[test]
+    fn parallel_normalizer_matches_scalar() {
+        let x = logits(200_000, 1, 9.0);
+        let serial = scalar::online_normalizer(&x);
+        for threads in [1, 2, 4, 8] {
+            let par = online_normalizer(&x, threads);
+            assert_eq!(par.m, serial.m, "threads={threads}");
+            assert!((par.d - serial.d).abs() <= 2e-5 * serial.d, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_softmax_matches_vectorized() {
+        let x = logits(150_000, 2, 5.0);
+        let mut y_par = vec![0.0; x.len()];
+        let mut y_vec = vec![0.0; x.len()];
+        online(&x, &mut y_par, 4);
+        vectorized::online(&x, &mut y_vec);
+        // Same fast_exp everywhere; only the (m, d) reassociation differs.
+        for (a, b) in y_par.iter().zip(&y_vec) {
+            assert!((a - b).abs() <= 1e-10 + 1e-5 * b.abs(), "{a} vs {b}");
+        }
+        let sum: f32 = y_par.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-3, "sum={sum}");
+    }
+
+    #[test]
+    fn parallel_topk_matches_single_thread() {
+        let x = logits(120_000, 3, 12.0);
+        let single = fused::online_topk(&x, 9);
+        let multi = online_topk(&x, 9, 6);
+        assert_eq!(single.1, multi.1);
+        for (a, b) in single.0.iter().zip(&multi.0) {
+            assert!((a - b).abs() <= 2e-5 * a.max(*b));
+        }
+    }
+
+    #[test]
+    fn small_inputs_take_fallback() {
+        let x = logits(100, 4, 3.0);
+        let md = online_normalizer(&x, 8);
+        let serial = vectorized::online_normalizer(&x);
+        assert_eq!(md.m, serial.m);
+        assert_eq!(md.d, serial.d, "fallback must be bitwise-identical");
+    }
+}

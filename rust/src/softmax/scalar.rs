@@ -1,0 +1,179 @@
+//! Scalar (one-element-at-a-time) renditions of Algorithms 1–3 —
+//! faithful to the paper's pseudocode, used as the semantic reference
+//! for the optimized paths and as the per-element cost baseline in the
+//! benches.
+//!
+//! Memory accesses per element (the paper's accounting, §2–3):
+//!
+//! | algorithm | loads | stores | total |
+//! |-----------|-------|--------|-------|
+//! | naive     | 2     | 1      | 3     |
+//! | safe      | 3     | 1      | 4     |
+//! | online    | 2     | 1      | 3     |
+
+use super::monoid::MD;
+
+/// Algorithm 1 — naive softmax.  Two passes; overflows for |x| ≳ 88.7.
+pub fn naive(x: &[f32], out: &mut [f32]) {
+    assert_eq!(x.len(), out.len());
+    // pass 1: d_V = Σ e^{x_j}
+    let mut d = 0.0f32;
+    for &v in x {
+        d += v.exp();
+    }
+    // pass 2: y_i = e^{x_i} / d_V
+    let inv = 1.0 / d;
+    for (y, &v) in out.iter_mut().zip(x) {
+        *y = v.exp() * inv;
+    }
+}
+
+/// Algorithm 2 — safe softmax.  Three passes.
+pub fn safe(x: &[f32], out: &mut [f32]) {
+    assert_eq!(x.len(), out.len());
+    // pass 1: m_V = max x
+    let mut m = f32::NEG_INFINITY;
+    for &v in x {
+        m = m.max(v);
+    }
+    // pass 2: d_V = Σ e^{x_j − m}
+    let mut d = 0.0f32;
+    for &v in x {
+        d += (v - m).exp();
+    }
+    // pass 3: y_i = e^{x_i − m} / d
+    let inv = 1.0 / d;
+    for (y, &v) in out.iter_mut().zip(x) {
+        *y = (v - m).exp() * inv;
+    }
+}
+
+/// Lines 1–6 of Algorithm 3: the single-pass online normalizer.
+pub fn online_normalizer(x: &[f32]) -> MD {
+    let mut acc = MD::IDENTITY;
+    for &v in x {
+        acc = acc.push(v);
+    }
+    acc
+}
+
+/// Algorithm 3 — online softmax.  Two passes (normalizer + scale).
+pub fn online(x: &[f32], out: &mut [f32]) {
+    assert_eq!(x.len(), out.len());
+    let MD { m, d } = online_normalizer(x);
+    let inv = 1.0 / d;
+    for (y, &v) in out.iter_mut().zip(x) {
+        *y = (v - m).exp() * inv;
+    }
+}
+
+/// Safe normalizer (passes 1–2 of Algorithm 2) — for comparing the two
+/// normalizer formulations directly (they are equal by Theorem 1).
+pub fn safe_normalizer(x: &[f32]) -> MD {
+    let mut m = f32::NEG_INFINITY;
+    for &v in x {
+        m = m.max(v);
+    }
+    if m == f32::NEG_INFINITY {
+        return MD::IDENTITY;
+    }
+    let mut d = 0.0f32;
+    for &v in x {
+        d += (v - m).exp();
+    }
+    MD { m, d }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: &[f32], b: &[f32], rtol: f32) {
+        assert_eq!(a.len(), b.len());
+        for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+            let tol = rtol * x.abs().max(y.abs()).max(1e-30);
+            assert!((x - y).abs() <= tol, "idx {i}: {x} vs {y}");
+        }
+    }
+
+    fn logits(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+        crate::rng::Xoshiro256pp::seed_from_u64(seed).logits(n, scale)
+    }
+
+    #[test]
+    fn all_three_agree_in_moderate_range() {
+        let x = logits(501, 1, 3.0);
+        let mut yn = vec![0.0; 501];
+        let mut ys = vec![0.0; 501];
+        let mut yo = vec![0.0; 501];
+        naive(&x, &mut yn);
+        safe(&x, &mut ys);
+        online(&x, &mut yo);
+        assert_close(&ys, &yo, 1e-5);
+        assert_close(&ys, &yn, 1e-5);
+    }
+
+    #[test]
+    fn probabilities_sum_to_one() {
+        for scale in [0.1, 5.0, 30.0] {
+            let x = logits(333, 2, scale);
+            let mut y = vec![0.0; 333];
+            online(&x, &mut y);
+            let s: f32 = y.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "scale={scale} sum={s}");
+            assert!(y.iter().all(|&p| p >= 0.0));
+        }
+    }
+
+    #[test]
+    fn theorem1_safe_equals_online_normalizer() {
+        for seed in 0..20 {
+            let x = logits(97, seed, 15.0);
+            let a = safe_normalizer(&x);
+            let b = online_normalizer(&x);
+            assert_eq!(a.m, b.m);
+            assert!((a.d - b.d).abs() <= 1e-5 * a.d, "{a:?} vs {b:?}");
+        }
+    }
+
+    #[test]
+    fn naive_overflows_where_safe_survives() {
+        let x = vec![100.0f32; 8];
+        let mut yn = vec![0.0; 8];
+        let mut ys = vec![0.0; 8];
+        naive(&x, &mut yn);
+        safe(&x, &mut ys);
+        assert!(yn.iter().any(|v| !v.is_finite()), "naive must overflow: {yn:?}");
+        assert!(ys.iter().all(|v| (v - 0.125).abs() < 1e-6), "safe stays exact: {ys:?}");
+    }
+
+    #[test]
+    fn online_shift_invariant() {
+        let x = logits(64, 3, 2.0);
+        let shifted: Vec<f32> = x.iter().map(|v| v + 500.0).collect();
+        let mut y1 = vec![0.0; 64];
+        let mut y2 = vec![0.0; 64];
+        online(&x, &mut y1);
+        online(&shifted, &mut y2);
+        // Adding 500 costs ~9 mantissa bits on the inputs themselves,
+        // so invariance holds only to ~1e-3 relative — that information
+        // loss happens before softmax ever runs.
+        assert_close(&y1, &y2, 1e-3);
+    }
+
+    #[test]
+    fn single_element() {
+        let mut y = [0.0f32];
+        online(&[42.0], &mut y);
+        assert_eq!(y[0], 1.0);
+        safe(&[-7.0], &mut y);
+        assert_eq!(y[0], 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "assertion")]
+    fn mismatched_lengths_panic() {
+        let mut y = [0.0f32; 2];
+        online(&[1.0, 2.0, 3.0], &mut y);
+    }
+}

@@ -1,0 +1,285 @@
+//! Lane-parallel (SIMD-friendly) renditions of Algorithms 1–3.
+//!
+//! The CPU adaptation the paper sketches in §7: keep the online
+//! normalizer *vectorized* by giving every SIMD lane its own `(m, d)`
+//! state and ⊕-merging the lanes once at the end — the associativity
+//! of eq. (4) is exactly what makes this legal.  All inner loops are
+//! branch-free over [`fast_exp`](super::fastexp::fast_exp) so LLVM
+//! auto-vectorizes them (verified by the >4x speedup over
+//! [`super::scalar`] in the benches).
+//!
+//! `LANES = 16` covers AVX-512/AVX2 with unrolling headroom.
+
+use super::fastexp::fast_exp;
+use super::monoid::MD;
+
+/// Lane count for the stripe-wise state arrays.
+pub const LANES: usize = 16;
+
+/// Vectorized Algorithm 1 (naive).  NOTE: uses saturating `fast_exp`,
+/// so unlike the scalar form it degrades (rather than Inf) past the fp32
+/// exp range — it remains a *performance* baseline only, like the paper's.
+#[inline]
+pub fn naive(x: &[f32], out: &mut [f32]) {
+    assert_eq!(x.len(), out.len());
+    let mut lane_d = [0.0f32; LANES];
+    let (chunks, tail) = split(x);
+    for c in chunks {
+        for l in 0..LANES {
+            lane_d[l] += fast_exp(c[l]);
+        }
+    }
+    let mut d: f32 = lane_d.iter().sum();
+    for &v in tail {
+        d += fast_exp(v);
+    }
+    scale_pass(x, out, 0.0, 1.0 / d);
+}
+
+/// Vectorized Algorithm 2 (safe): three vector passes.
+#[inline]
+pub fn safe(x: &[f32], out: &mut [f32]) {
+    assert_eq!(x.len(), out.len());
+    let m = rowmax(x);
+    let d = expsum(x, m);
+    scale_pass(x, out, m, 1.0 / d);
+}
+
+/// Vectorized max pass (pass 1 of Algorithm 2).
+#[inline]
+pub fn rowmax(x: &[f32]) -> f32 {
+    let mut lane_m = [f32::NEG_INFINITY; LANES];
+    let (chunks, tail) = split(x);
+    for c in chunks {
+        for l in 0..LANES {
+            lane_m[l] = lane_m[l].max(c[l]);
+        }
+    }
+    let mut m = lane_m.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    for &v in tail {
+        m = m.max(v);
+    }
+    m
+}
+
+/// Vectorized `Σ e^{x−m}` pass (pass 2 of Algorithm 2).
+#[inline]
+pub fn expsum(x: &[f32], m: f32) -> f32 {
+    let mut lane_d = [0.0f32; LANES];
+    let (chunks, tail) = split(x);
+    for c in chunks {
+        for l in 0..LANES {
+            lane_d[l] += fast_exp(c[l] - m);
+        }
+    }
+    let mut d: f32 = lane_d.iter().sum();
+    for &v in tail {
+        d += fast_exp(v - m);
+    }
+    d
+}
+
+/// Cache-blocked single-pass online normalizer — the production path.
+///
+/// Processes `BLOCK`-element tiles: per tile, a vectorized max pass and
+/// a vectorized `Σ e^{x−m_blk}` pass (the tile stays in L1, so DRAM is
+/// still touched exactly once per element — "single pass" in the
+/// paper's memory-access accounting), then ONE ⊕ fold into the running
+/// `(m, d)` (eq. 4).  This is the same tile structure as the L1 Pallas
+/// kernel's BlockSpec carry, and costs ~1 `exp` per element versus 2
+/// for the per-element recurrence in [`online_normalizer_streaming`]
+/// (measured ~1.6× faster; see EXPERIMENTS.md §Perf).
+#[inline]
+pub fn online_normalizer(x: &[f32]) -> MD {
+    /// 2 KiB of f32 — comfortably L1-resident alongside the stream.
+    const BLOCK: usize = 512;
+    let mut acc = MD::IDENTITY;
+    for blk in x.chunks(BLOCK) {
+        let m_blk = rowmax(blk);
+        if m_blk == f32::NEG_INFINITY {
+            continue; // all-padding tile contributes the identity
+        }
+        let d_blk = expsum(blk, m_blk);
+        acc = acc.combine(MD { m: m_blk, d: d_blk });
+    }
+    acc
+}
+
+/// Strictly-streaming lane-parallel online normalizer (lines 1–6 of
+/// Algorithm 3 verbatim at lane granularity: one ⊕ fold per element per
+/// lane).  Kept for the ablation bench and for single-visit streaming
+/// use cases where elements cannot be revisited even from L1.
+#[inline]
+pub fn online_normalizer_streaming(x: &[f32]) -> MD {
+    let mut lane_m = [f32::NEG_INFINITY; LANES];
+    let mut lane_d = [0.0f32; LANES];
+    let (chunks, tail) = split(x);
+    for c in chunks {
+        for l in 0..LANES {
+            // Branch-free lane update: m' = max(m, x);
+            // d' = d · e^{m−m'} + e^{x−m'}.
+            // With m = −∞ initially, fast_exp saturates to ~1e−38 and
+            // d = 0 annihilates it — no NaN, no branch.
+            let xv = c[l];
+            let m_new = lane_m[l].max(xv);
+            lane_d[l] = lane_d[l] * fast_exp(lane_m[l] - m_new) + fast_exp(xv - m_new);
+            lane_m[l] = m_new;
+        }
+    }
+    let mut acc = MD::IDENTITY;
+    for l in 0..LANES {
+        // lanes that never saw data stay (−∞, 0) = identity
+        acc = acc.combine(MD { m: lane_m[l], d: lane_d[l] });
+    }
+    for &v in tail {
+        acc = acc.push(v);
+    }
+    acc
+}
+
+/// Vectorized Algorithm 3 (online): normalizer pass + scale pass.
+#[inline]
+pub fn online(x: &[f32], out: &mut [f32]) {
+    assert_eq!(x.len(), out.len());
+    let MD { m, d } = online_normalizer(x);
+    scale_pass(x, out, m, 1.0 / d);
+}
+
+/// Shared final pass: `y = e^{x − m} · inv`, lane-chunked so the store
+/// loop vectorizes like the reduction loops.
+///
+/// Perf note (EXPERIMENTS.md §Perf, L3 iteration 3): this pass is
+/// *store-bound* on the testbed — the write stream pays read-for-
+/// ownership + writeback, capping it at ~10–13 GB/s versus ~50 GB/s for
+/// the read passes.  Non-temporal `_mm_stream_ps` stores were tried and
+/// measured 2.2× *slower* in this virtualized environment, so the plain
+/// cached-store form below is the practical roofline.  This asymmetry
+/// compresses the softmax-only speedups (Figures 1–2) relative to the
+/// paper's GPU, and is precisely why the fused Algorithm 4 — which
+/// eliminates the store pass entirely — shows the paper's effect most
+/// clearly here (Figures 3–4).
+#[inline]
+pub fn scale_pass(x: &[f32], out: &mut [f32], m: f32, inv: f32) {
+    assert_eq!(x.len(), out.len());
+    let mut xc = x.chunks_exact(LANES);
+    let mut yc = out.chunks_exact_mut(LANES);
+    for (c, y) in (&mut xc).zip(&mut yc) {
+        for l in 0..LANES {
+            y[l] = fast_exp(c[l] - m) * inv;
+        }
+    }
+    for (y, &v) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *y = fast_exp(v - m) * inv;
+    }
+}
+
+#[inline]
+fn split(x: &[f32]) -> (std::slice::ChunksExact<'_, f32>, &[f32]) {
+    let chunks = x.chunks_exact(LANES);
+    let tail = chunks.remainder();
+    (chunks, tail)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::softmax::scalar;
+
+    fn logits(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+        crate::rng::Xoshiro256pp::seed_from_u64(seed).logits(n, scale)
+    }
+
+    fn assert_close(a: &[f32], b: &[f32], rtol: f32, atol: f32) {
+        for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+            assert!(
+                (x - y).abs() <= atol + rtol * x.abs().max(y.abs()),
+                "idx {i}: {x} vs {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn online_matches_scalar_across_lengths() {
+        for n in [1, 2, 7, 15, 16, 17, 64, 100, 1023, 1024, 4097] {
+            let x = logits(n, n as u64, 6.0);
+            let mut yv = vec![0.0; n];
+            let mut ys = vec![0.0; n];
+            online(&x, &mut yv);
+            scalar::online(&x, &mut ys);
+            assert_close(&yv, &ys, 1e-5, 1e-9);
+        }
+    }
+
+    #[test]
+    fn safe_matches_scalar() {
+        let x = logits(777, 5, 12.0);
+        let mut yv = vec![0.0; 777];
+        let mut ys = vec![0.0; 777];
+        safe(&x, &mut yv);
+        scalar::safe(&x, &mut ys);
+        assert_close(&yv, &ys, 1e-5, 1e-9);
+    }
+
+    #[test]
+    fn naive_matches_scalar_in_safe_range() {
+        let x = logits(500, 6, 3.0);
+        let mut yv = vec![0.0; 500];
+        let mut ys = vec![0.0; 500];
+        naive(&x, &mut yv);
+        scalar::naive(&x, &mut ys);
+        assert_close(&yv, &ys, 1e-5, 1e-9);
+    }
+
+    #[test]
+    fn normalizer_equals_scalar_normalizer() {
+        for seed in 0..10 {
+            let x = logits(931, seed, 20.0);
+            let a = online_normalizer(&x);
+            let b = scalar::online_normalizer(&x);
+            assert_eq!(a.m, b.m);
+            assert!((a.d - b.d).abs() <= 2e-5 * b.d, "{a:?} vs {b:?}");
+        }
+    }
+
+    #[test]
+    fn streaming_normalizer_equals_blocked() {
+        for n in [1usize, 15, 511, 512, 513, 5000] {
+            let x = logits(n, n as u64, 12.0);
+            let a = online_normalizer(&x);
+            let b = online_normalizer_streaming(&x);
+            assert_eq!(a.m, b.m, "n={n}");
+            assert!((a.d - b.d).abs() <= 2e-5 * b.d.max(1.0), "n={n}: {a:?} vs {b:?}");
+        }
+        assert!(online_normalizer_streaming(&[]).is_identity());
+    }
+
+    #[test]
+    fn extreme_magnitudes_stay_finite() {
+        let mut x = logits(320, 9, 2.0);
+        x.iter_mut().for_each(|v| *v += 150.0);
+        let mut y = vec![0.0; 320];
+        online(&x, &mut y);
+        assert!(y.iter().all(|v| v.is_finite()));
+        let s: f32 = y.iter().sum();
+        assert!((s - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert!(online_normalizer(&[]).is_identity());
+        let mut y = [0.0f32];
+        online(&[3.0], &mut y);
+        assert!((y[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sub_lane_lengths_use_tail_path() {
+        for n in 1..LANES {
+            let x = logits(n, 100 + n as u64, 4.0);
+            let a = online_normalizer(&x);
+            let b = scalar::online_normalizer(&x);
+            assert_eq!(a.m, b.m, "n={n}");
+            assert!((a.d - b.d).abs() <= 1e-5 * b.d.max(1.0), "n={n}");
+        }
+    }
+}

@@ -1,0 +1,231 @@
+//! Top-K selection: the insertion buffer of Algorithm 4 plus heap-based
+//! and merge utilities used by the coordinator's shard reduction.
+//!
+//! [`TopKBuffer`] is the paper's (K+1)-slot structure (lines 3–4 and
+//! 8–15): a descending-sorted value/index array where each new candidate
+//! is written into slot K+1 and bubbled into place with a single
+//! insertion loop.  Cost grows with K — exactly the effect the paper's
+//! K-sweep (§5.2) measures, which the `k_sweep` bench reproduces.
+//!
+//! For large K (where the paper notes TopK dominates), [`heap_topk`]
+//! gives the O(V log K) alternative used by the unfused baseline.
+
+/// The running top-k candidate buffer of Algorithm 4.
+#[derive(Clone, Debug)]
+pub struct TopKBuffer {
+    /// Values, descending; length K+1 (slot K+1 is insertion scratch).
+    u: Vec<f32>,
+    /// Indices aligned with `u`.
+    p: Vec<i64>,
+    k: usize,
+}
+
+impl TopKBuffer {
+    /// Lines 3–4: initialize with −∞ values and −1 indices.
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0, "k must be positive");
+        Self { u: vec![f32::NEG_INFINITY; k + 1], p: vec![-1; k + 1], k }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Current k-th best value — candidates must strictly exceed this
+    /// to enter the buffer (the hot-loop rejection threshold).
+    #[inline]
+    pub fn threshold(&self) -> f32 {
+        self.u[self.k - 1]
+    }
+
+    /// Lines 8–15: place `(value, index)` in slot K+1 and bubble it up.
+    ///
+    /// Tie-breaking: on equal values the incumbent (earlier index in
+    /// scan order) wins, matching the strict `<` of line 11.
+    #[inline]
+    pub fn push(&mut self, value: f32, index: i64) {
+        let k = self.k;
+        // Fast reject: strictly-not-better than the current k-th value.
+        // (Equal values lose to the incumbent per line 11's strict `<`.)
+        if value <= self.u[k - 1] {
+            return;
+        }
+        self.u[k] = value;
+        self.p[k] = index;
+        let mut i = k;
+        while i >= 1 && self.u[i - 1] < self.u[i] {
+            self.u.swap(i - 1, i);
+            self.p.swap(i - 1, i);
+            i -= 1;
+        }
+    }
+
+    /// The first K (value, index) pairs — lines 17–19's source.
+    pub fn entries(&self) -> impl Iterator<Item = (f32, i64)> + '_ {
+        self.u[..self.k].iter().copied().zip(self.p[..self.k].iter().copied())
+    }
+
+    /// Values only (descending).
+    pub fn values(&self) -> &[f32] {
+        &self.u[..self.k]
+    }
+
+    /// Indices aligned with [`values`](Self::values).
+    pub fn indices(&self) -> &[i64] {
+        &self.p[..self.k]
+    }
+
+    /// Number of real (non-sentinel) entries.
+    pub fn len_filled(&self) -> usize {
+        self.p[..self.k].iter().filter(|&&i| i >= 0).count()
+    }
+
+    /// Merge another buffer into this one (associative: used for lane,
+    /// thread, and vocabulary-shard combination).
+    pub fn merge(&mut self, other: &TopKBuffer) {
+        assert_eq!(self.k, other.k, "cannot merge buffers of different k");
+        for (v, i) in other.entries() {
+            if i >= 0 {
+                self.push(v, i);
+            }
+        }
+    }
+}
+
+/// Scan a slice into a fresh buffer: `TopK(x)` with global indices
+/// offset by `base` (vocabulary shards pass their shard offset).
+pub fn scan_topk(x: &[f32], k: usize, base: i64) -> TopKBuffer {
+    let mut buf = TopKBuffer::new(k);
+    for (i, &v) in x.iter().enumerate() {
+        buf.push(v, base + i as i64);
+    }
+    buf
+}
+
+/// O(V log K) heap-based top-k (the conventional unfused TopK kernel).
+/// Returns (values, indices) sorted descending, ties broken by lower index.
+pub fn heap_topk(x: &[f32], k: usize) -> (Vec<f32>, Vec<i64>) {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    /// Min-heap entry ordered by (value, Reverse(index)) so the heap
+    /// root is the weakest entry: smallest value, then largest index.
+    #[derive(PartialEq)]
+    struct Entry(f32, Reverse<i64>);
+    impl Eq for Entry {}
+    impl PartialOrd for Entry {
+        fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(o))
+        }
+    }
+    impl Ord for Entry {
+        fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+            self.0.total_cmp(&o.0).then(self.1.cmp(&o.1))
+        }
+    }
+
+    let k = k.min(x.len());
+    let mut heap: BinaryHeap<Reverse<Entry>> = BinaryHeap::with_capacity(k + 1);
+    for (i, &v) in x.iter().enumerate() {
+        if heap.len() < k {
+            heap.push(Reverse(Entry(v, Reverse(i as i64))));
+        } else if let Some(Reverse(weakest)) = heap.peek() {
+            if Entry(v, Reverse(i as i64)) > *weakest {
+                heap.pop();
+                heap.push(Reverse(Entry(v, Reverse(i as i64))));
+            }
+        }
+    }
+    let mut pairs: Vec<(f32, i64)> =
+        heap.into_iter().map(|Reverse(Entry(v, Reverse(i)))| (v, i)).collect();
+    pairs.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+    pairs.into_iter().unzip()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffer_finds_true_topk() {
+        let x = [3.0f32, 9.0, -1.0, 7.0, 7.5, 0.0, 8.0];
+        let buf = scan_topk(&x, 3, 0);
+        assert_eq!(buf.values(), &[9.0, 8.0, 7.5]);
+        assert_eq!(buf.indices(), &[1, 6, 4]);
+        assert_eq!(buf.len_filled(), 3);
+    }
+
+    #[test]
+    fn ties_keep_earliest_index() {
+        let x = [5.0f32, 5.0, 5.0, 5.0];
+        let buf = scan_topk(&x, 2, 0);
+        assert_eq!(buf.indices(), &[0, 1], "line 11 strict `<` keeps incumbents");
+    }
+
+    #[test]
+    fn k_larger_than_input_leaves_sentinels() {
+        let buf = scan_topk(&[1.0, 2.0], 4, 0);
+        assert_eq!(buf.len_filled(), 2);
+        assert_eq!(buf.values()[..2], [2.0, 1.0]);
+        assert_eq!(buf.indices()[2..], [-1, -1]);
+    }
+
+    #[test]
+    fn base_offset_globalizes_indices() {
+        let buf = scan_topk(&[1.0, 9.0], 1, 1000);
+        assert_eq!(buf.indices(), &[1001]);
+    }
+
+    #[test]
+    fn merge_equals_whole_scan() {
+        let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(7);
+        let x = rng.logits(500, 10.0);
+        let whole = scan_topk(&x, 8, 0);
+        let mut merged = TopKBuffer::new(8);
+        for (c, chunk) in x.chunks(97).enumerate() {
+            let part = scan_topk(chunk, 8, (c * 97) as i64);
+            merged.merge(&part);
+        }
+        assert_eq!(whole.values(), merged.values());
+        assert_eq!(whole.indices(), merged.indices());
+    }
+
+    #[test]
+    fn heap_matches_buffer() {
+        let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(11);
+        for n in [1usize, 5, 100, 1000] {
+            let x = rng.logits(n, 5.0);
+            for k in [1usize, 3, 10] {
+                let keff = k.min(n);
+                let buf = scan_topk(&x, keff, 0);
+                let (hv, hi) = heap_topk(&x, k);
+                assert_eq!(hv.len(), keff);
+                assert_eq!(buf.values()[..keff], hv[..], "n={n} k={k}");
+                assert_eq!(buf.indices()[..keff], hi[..], "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn heap_tie_break_matches_buffer() {
+        let x = [2.0f32, 3.0, 3.0, 1.0, 3.0];
+        let (hv, hi) = heap_topk(&x, 3);
+        assert_eq!(hv, vec![3.0, 3.0, 3.0]);
+        assert_eq!(hi, vec![1, 2, 4]);
+        let buf = scan_topk(&x, 3, 0);
+        assert_eq!(buf.indices(), &hi[..]);
+    }
+
+    #[test]
+    #[should_panic(expected = "k must be positive")]
+    fn zero_k_panics() {
+        TopKBuffer::new(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "different k")]
+    fn merge_mismatched_k_panics() {
+        let mut a = TopKBuffer::new(2);
+        a.merge(&TopKBuffer::new(3));
+    }
+}

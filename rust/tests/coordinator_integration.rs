@@ -1,0 +1,227 @@
+//! Coordinator integration: the full L3 stack (batcher → executor →
+//! PJRT engines → ⊕ merge) against real artifacts.
+
+use std::time::Duration;
+
+use onlinesoftmax::config::{ServeConfig, ServingMode};
+use onlinesoftmax::coordinator::{beam, Coordinator, Payload, Reply};
+use onlinesoftmax::rng::Xoshiro256pp;
+use onlinesoftmax::softmax::{fused, scalar};
+
+fn artifacts_ready() -> bool {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+fn config(mode: ServingMode, shards: usize) -> ServeConfig {
+    let mut cfg = ServeConfig::default();
+    cfg.artifacts_dir =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    cfg.mode = mode;
+    cfg.shards = shards;
+    cfg.workers = 2;
+    cfg.max_wait = Duration::from_micros(500);
+    cfg
+}
+
+const TIMEOUT: Duration = Duration::from_secs(60);
+
+fn close(a: f32, b: f32, rtol: f32) -> bool {
+    (a - b).abs() <= 1e-7 + rtol * a.abs().max(b.abs())
+}
+
+#[test]
+fn softmax_request_matches_rust_reference() {
+    require_artifacts!();
+    let coord = Coordinator::start(&config(ServingMode::Online, 1)).unwrap();
+    let vocab = coord.executor().vocab();
+    let mut rng = Xoshiro256pp::seed_from_u64(1);
+    let logits = rng.logits(vocab, 8.0);
+    match coord.call(Payload::Softmax { logits: logits.clone() }, TIMEOUT).unwrap() {
+        Reply::Softmax { probs } => {
+            let mut want = vec![0.0; vocab];
+            scalar::safe(&logits, &mut want);
+            assert_eq!(probs.len(), vocab);
+            for (i, (a, b)) in probs.iter().zip(&want).enumerate() {
+                assert!(close(*a, *b, 1e-4), "idx {i}: {a} vs {b}");
+            }
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn sharded_softmax_equals_unsharded() {
+    require_artifacts!();
+    let coord1 = Coordinator::start(&config(ServingMode::Online, 1)).unwrap();
+    let coord4 = Coordinator::start(&config(ServingMode::Online, 4)).unwrap();
+    let vocab = coord1.executor().vocab();
+    let mut rng = Xoshiro256pp::seed_from_u64(2);
+    let logits = rng.logits(vocab, 10.0);
+    let p1 = match coord1.call(Payload::Softmax { logits: logits.clone() }, TIMEOUT).unwrap() {
+        Reply::Softmax { probs } => probs,
+        other => panic!("{other:?}"),
+    };
+    let p4 = match coord4.call(Payload::Softmax { logits }, TIMEOUT).unwrap() {
+        Reply::Softmax { probs } => probs,
+        other => panic!("{other:?}"),
+    };
+    for (i, (a, b)) in p1.iter().zip(&p4).enumerate() {
+        assert!(close(*a, *b, 1e-4), "idx {i}: {a} vs {b}");
+    }
+    coord1.shutdown();
+    coord4.shutdown();
+}
+
+#[test]
+fn decode_safe_online_and_sharded_all_agree() {
+    require_artifacts!();
+    let modes = [
+        config(ServingMode::Safe, 1),
+        config(ServingMode::Online, 1),
+        config(ServingMode::Online, 4),
+    ];
+    let mut rng = Xoshiro256pp::seed_from_u64(3);
+    let mut results: Vec<(Vec<f32>, Vec<i64>)> = Vec::new();
+    let hidden_len = 128;
+    let hidden = rng.logits(hidden_len, 1.0);
+    for cfg in &modes {
+        let coord = Coordinator::start(cfg).unwrap();
+        assert_eq!(coord.executor().hidden(), hidden_len);
+        match coord
+            .call(Payload::DecodeTopK { hidden: hidden.clone(), k: Some(5) }, TIMEOUT)
+            .unwrap()
+        {
+            Reply::TopK { vals, idx } => results.push((vals, idx)),
+            other => panic!("{other:?}"),
+        }
+        coord.shutdown();
+    }
+    for r in &results[1..] {
+        assert_eq!(r.1, results[0].1, "indices agree across modes");
+        for (a, b) in r.0.iter().zip(&results[0].0) {
+            assert!(close(*a, *b, 1e-3), "{a} vs {b}");
+        }
+    }
+    // cross-check against host-side reference
+    let coord = Coordinator::start(&modes[0]).unwrap();
+    let logits = coord.executor().model().project_row(&hidden);
+    let (want_vals, want_idx) = fused::online_topk(&logits, 5);
+    assert_eq!(results[0].1, want_idx);
+    for (a, b) in results[0].0.iter().zip(&want_vals) {
+        assert!(close(*a, *b, 1e-3), "{a} vs {b}");
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn batched_requests_get_individual_answers() {
+    require_artifacts!();
+    let mut cfg = config(ServingMode::Online, 1);
+    cfg.max_batch = 8;
+    cfg.max_wait = Duration::from_millis(20); // force batching window
+    let coord = Coordinator::start(&cfg).unwrap();
+    let vocab = coord.executor().vocab();
+    let mut rng = Xoshiro256pp::seed_from_u64(4);
+    let inputs: Vec<Vec<f32>> = (0..6).map(|_| rng.logits(vocab, 5.0)).collect();
+    let rxs: Vec<_> = inputs
+        .iter()
+        .map(|l| coord.submit(Payload::Softmax { logits: l.clone() }).unwrap())
+        .collect();
+    for (input, rx) in inputs.iter().zip(rxs) {
+        match rx.recv_timeout(TIMEOUT).unwrap().unwrap() {
+            Reply::Softmax { probs } => {
+                let mut want = vec![0.0; vocab];
+                scalar::safe(input, &mut want);
+                let max_i =
+                    probs.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0;
+                let want_i =
+                    want.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0;
+                assert_eq!(max_i, want_i, "each request got its own answer");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn per_request_errors_do_not_poison_batch() {
+    require_artifacts!();
+    let coord = Coordinator::start(&config(ServingMode::Online, 1)).unwrap();
+    let vocab = coord.executor().vocab();
+    let mut rng = Xoshiro256pp::seed_from_u64(5);
+    let good = coord.submit(Payload::Softmax { logits: rng.logits(vocab, 3.0) }).unwrap();
+    let bad = coord.submit(Payload::Softmax { logits: vec![1.0; 3] }).unwrap();
+    assert!(good.recv_timeout(TIMEOUT).unwrap().is_ok());
+    let err = bad.recv_timeout(TIMEOUT).unwrap().unwrap_err();
+    assert!(err.contains("length"), "{err}");
+    coord.shutdown();
+}
+
+#[test]
+fn lm_sessions_step_deterministically() {
+    require_artifacts!();
+    let coord = Coordinator::start(&config(ServingMode::Online, 1)).unwrap();
+    let s1 = coord.open_session();
+    let s2 = coord.open_session();
+    let r1 = coord.call(Payload::LmStep { session: s1, token: 17, k: Some(5) }, TIMEOUT).unwrap();
+    let r2 = coord.call(Payload::LmStep { session: s2, token: 17, k: Some(5) }, TIMEOUT).unwrap();
+    assert_eq!(r1, r2, "same token from same initial state → same distribution");
+    // diverge the sessions
+    let r1b =
+        coord.call(Payload::LmStep { session: s1, token: 3, k: Some(5) }, TIMEOUT).unwrap();
+    let r2b =
+        coord.call(Payload::LmStep { session: s2, token: 9, k: Some(5) }, TIMEOUT).unwrap();
+    assert_ne!(r1b, r2b, "different tokens diverge the state");
+    // unknown session errors
+    let err = coord
+        .call(Payload::LmStep { session: 999_999, token: 0, k: None }, TIMEOUT)
+        .unwrap_err();
+    assert!(err.contains("unknown session"), "{err}");
+    coord.shutdown();
+}
+
+#[test]
+fn beam_search_runs_and_is_deterministic() {
+    require_artifacts!();
+    let coord = Coordinator::start(&config(ServingMode::Online, 1)).unwrap();
+    let cfg = beam::BeamConfig { width: 3, steps: 4, k: 5, timeout: TIMEOUT };
+    let beam1 = beam::beam_search(&coord, cfg, 7).unwrap();
+    let tokens1: Vec<Vec<i32>> = beam1.iter().map(|h| h.tokens.clone()).collect();
+    beam::release(&coord, &beam1);
+    let beam2 = beam::beam_search(&coord, cfg, 7).unwrap();
+    let tokens2: Vec<Vec<i32>> = beam2.iter().map(|h| h.tokens.clone()).collect();
+    beam::release(&coord, &beam2);
+    assert_eq!(tokens1, tokens2, "beam search is deterministic");
+    assert_eq!(tokens1.len(), 3);
+    assert!(tokens1.iter().all(|t| t.len() == 5), "start + 4 steps");
+    // hypotheses sorted by logprob
+    for w in beam1.windows(2) {
+        assert!(w[0].logprob >= w[1].logprob);
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn invalid_k_rejected() {
+    require_artifacts!();
+    let coord = Coordinator::start(&config(ServingMode::Online, 1)).unwrap();
+    let hidden = vec![0.0; coord.executor().hidden()];
+    let err = coord
+        .call(Payload::DecodeTopK { hidden, k: Some(100) }, TIMEOUT)
+        .unwrap_err();
+    assert!(err.contains("k="), "{err}");
+    coord.shutdown();
+}

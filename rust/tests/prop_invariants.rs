@@ -1,0 +1,270 @@
+//! Property-based invariants over the core algorithms and coordinator
+//! data structures, via the in-crate [`onlinesoftmax::prop`] harness.
+
+use onlinesoftmax::prop::{forall, forall_with, Config, Gen, LogitsVec, Pair, PropResult, UsizeRange};
+use onlinesoftmax::rng::Xoshiro256pp;
+use onlinesoftmax::softmax::{fused, monoid::MD, scalar, vectorized};
+use onlinesoftmax::topk::{heap_topk, scan_topk, TopKBuffer};
+
+const LOGITS: LogitsVec = LogitsVec { min_len: 1, max_len: 800 };
+
+fn close(a: f32, b: f32, rtol: f32) -> bool {
+    (a - b).abs() <= 1e-9 + rtol * a.abs().max(b.abs())
+}
+
+// ---------------------------------------------------------------------------
+// Softmax numeric invariants (paper §3)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_online_softmax_is_distribution() {
+    forall(&LOGITS, |x| {
+        let mut y = vec![0.0; x.len()];
+        vectorized::online(x, &mut y);
+        let sum: f32 = y.iter().sum();
+        if !y.iter().all(|p| p.is_finite() && *p >= 0.0) {
+            return Err(format!("non-finite/negative probs: {y:?}"));
+        }
+        if !close(sum, 1.0, 1e-3) {
+            return Err(format!("sum {sum} != 1"));
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_online_equals_safe_normalizer() {
+    // Theorem 1: Algorithms 2 and 3 compute identical (m, d).
+    forall(&LOGITS, |x| {
+        let a = scalar::safe_normalizer(x);
+        let b = scalar::online_normalizer(x);
+        if a.m != b.m {
+            return Err(format!("m: {} vs {}", a.m, b.m));
+        }
+        if !close(a.d, b.d, 1e-4) {
+            return Err(format!("d: {} vs {}", a.d, b.d));
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_vectorized_equals_scalar_normalizer() {
+    forall(&LOGITS, |x| {
+        let a = scalar::online_normalizer(x);
+        let b = vectorized::online_normalizer(x);
+        if a.m != b.m {
+            return Err(format!("m: {} vs {}", a.m, b.m));
+        }
+        if !close(a.d, b.d, 1e-4) {
+            return Err(format!("d: {} vs {}", a.d, b.d));
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_d_bound_1_le_d_le_v() {
+    // §3's safety bound survives every evaluation order we use.
+    forall(&LOGITS, |x| {
+        let md = vectorized::online_normalizer(x);
+        if md.d < 1.0 - 1e-5 {
+            return Err(format!("d = {} < 1", md.d));
+        }
+        if md.d > x.len() as f32 * (1.0 + 1e-5) {
+            return Err(format!("d = {} > V = {}", md.d, x.len()));
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_split_merge_equals_whole() {
+    // ⊕ associativity in practice: any split point merges to the whole.
+    let gen = Pair(LOGITS, UsizeRange(0, 100));
+    forall(&gen, |(x, cut_pct)| {
+        let cut = x.len() * cut_pct / 100;
+        let whole = vectorized::online_normalizer(x);
+        let left = vectorized::online_normalizer(&x[..cut]);
+        let right = vectorized::online_normalizer(&x[cut..]);
+        let merged = left.combine(right);
+        if whole.m != merged.m {
+            return Err(format!("m: {} vs {}", whole.m, merged.m));
+        }
+        if !close(whole.d, merged.d, 1e-4) {
+            return Err(format!("d: {} vs {}", whole.d, merged.d));
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_monoid_laws_on_random_elements() {
+    struct MdGen;
+    impl Gen for MdGen {
+        type Value = (f32, f32);
+        fn generate(&self, rng: &mut Xoshiro256pp) -> (f32, f32) {
+            (rng.next_normal() * 50.0, rng.range_f32(0.0, 100.0))
+        }
+    }
+    let gen = onlinesoftmax::prop::VecOf { inner: MdGen, min_len: 3, max_len: 3 };
+    forall(&gen, |v| {
+        let a = MD { m: v[0].0, d: v[0].1 };
+        let b = MD { m: v[1].0, d: v[1].1 };
+        let c = MD { m: v[2].0, d: v[2].1 };
+        let l = a.combine(b).combine(c);
+        let r = a.combine(b.combine(c));
+        if l.m != r.m || !close(l.d, r.d, 1e-4) {
+            return Err(format!("assoc: {l:?} vs {r:?}"));
+        }
+        let ab = a.combine(b);
+        let ba = b.combine(a);
+        if ab.m != ba.m || !close(ab.d, ba.d, 1e-5) {
+            return Err(format!("comm: {ab:?} vs {ba:?}"));
+        }
+        let ae = a.combine(MD::IDENTITY);
+        if ae.m != a.m || !close(ae.d, a.d, 1e-6) {
+            return Err(format!("identity: {ae:?} vs {a:?}"));
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Top-k invariants (paper §4)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_fused_topk_equals_heap_topk() {
+    let gen = Pair(LOGITS, UsizeRange(1, 32));
+    forall(&gen, |(x, k)| {
+        let k = (*k).min(x.len());
+        let (fv, fi) = fused::online_topk(x, k);
+        let (hv, hi) = heap_topk(x, k);
+        // raw logits selected must coincide (value ties → same index rule)
+        if fi != hi {
+            return Err(format!("indices {fi:?} vs {hi:?}"));
+        }
+        let _ = (fv, hv);
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_buffer_merge_associative() {
+    let gen = Pair(LOGITS, UsizeRange(1, 8));
+    forall(&gen, |(x, k)| {
+        if x.len() < 3 {
+            return Ok(());
+        }
+        let k = *k;
+        let third = x.len() / 3;
+        let a = scan_topk(&x[..third], k, 0);
+        let b = scan_topk(&x[third..2 * third], k, third as i64);
+        let c = scan_topk(&x[2 * third..], k, 2 * third as i64);
+        // (a ⊎ b) ⊎ c
+        let mut left = TopKBuffer::new(k);
+        left.merge(&a);
+        left.merge(&b);
+        left.merge(&c);
+        // a ⊎ (b ⊎ c)
+        let mut right_inner = TopKBuffer::new(k);
+        right_inner.merge(&b);
+        right_inner.merge(&c);
+        let mut right = TopKBuffer::new(k);
+        right.merge(&a);
+        right.merge(&right_inner);
+        if left.indices() != right.indices() {
+            return Err(format!("{:?} vs {:?}", left.indices(), right.indices()));
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_topk_probs_are_the_k_largest() {
+    let gen = Pair(LOGITS, UsizeRange(1, 16));
+    forall(&gen, |(x, k)| {
+        let k = (*k).min(x.len());
+        let (vals, idx) = fused::online_topk(x, k);
+        let mut y = vec![0.0; x.len()];
+        scalar::safe(x, &mut y);
+        let mut sorted = y.clone();
+        sorted.sort_by(|a, b| b.total_cmp(a));
+        for (i, v) in vals.iter().enumerate() {
+            if !close(*v, sorted[i], 1e-3) {
+                return Err(format!("rank {i}: {} vs {}", v, sorted[i]));
+            }
+            if !close(y[idx[i] as usize], *v, 1e-4) {
+                return Err(format!("idx {} does not carry value {}", idx[i], v));
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator data-structure invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_batcher_preserves_fifo_and_loses_nothing() {
+    use onlinesoftmax::coordinator::{BatchPolicy, Batcher, Payload, Request};
+    use onlinesoftmax::exec::oneshot;
+    use std::time::Duration;
+
+    let gen = Pair(UsizeRange(1, 64), UsizeRange(1, 16));
+    let cfg = Config { cases: 40, ..Config::default() };
+    forall_with(cfg, &gen, |&(n, max_batch)| {
+        let b = Batcher::new(BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_millis(0),
+            queue_capacity: n.max(max_batch),
+        });
+        for id in 0..n as u64 {
+            let (tx, _rx) = oneshot();
+            b.submit(Request::new(id, Payload::Softmax { logits: vec![] }, tx))
+                .map_err(|_| "submit failed".to_string())?;
+        }
+        let mut seen = Vec::new();
+        while b.depth() > 0 {
+            let (_, batch, _) = b.next_batch().ok_or("unexpected end")?;
+            if batch.len() > max_batch {
+                return Err(format!("batch of {} exceeds max {}", batch.len(), max_batch));
+            }
+            seen.extend(batch.iter().map(|r| r.id));
+        }
+        let want: Vec<u64> = (0..n as u64).collect();
+        if seen != want {
+            return Err(format!("ids reordered/lost: {seen:?}"));
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_shrinking_produces_minimal_counterexample() {
+    // Meta-test: the harness shrinks a planted failure toward minimum.
+    let gen = UsizeRange(0, 10_000);
+    let result = forall(&gen, |&n| {
+        if n < 1000 {
+            Ok(())
+        } else {
+            Err("too big".into())
+        }
+    });
+    match result {
+        PropResult::Fail { minimal, .. } => assert!(minimal <= 1500, "minimal={minimal}"),
+        PropResult::Pass { .. } => panic!("must fail"),
+    }
+}

@@ -1,0 +1,267 @@
+//! Integration: the PJRT runtime executes real AOT artifacts and the
+//! numerics agree with the rust softmax implementations — closing the
+//! L1/L2 (python, build-time) ↔ L3 (rust, run-time) loop.
+//!
+//! Requires `make artifacts`; every test skips gracefully when the
+//! artifacts directory is absent so `cargo test` works pre-AOT.
+
+use onlinesoftmax::rng::Xoshiro256pp;
+use onlinesoftmax::runtime::{Engine, EnginePool, Input, Manifest, Tensor};
+use onlinesoftmax::softmax::{self, Algorithm};
+use onlinesoftmax::topk;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+fn assert_close(a: &[f32], b: &[f32], rtol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= 1e-7 + rtol * x.abs().max(y.abs()),
+            "{what}[{i}]: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn softmax_safe_artifact_matches_rust() {
+    let dir = require_artifacts!();
+    let engine = Engine::start(&dir).unwrap();
+    let entry = engine.manifest().bucket_for("softmax_safe", 4).unwrap();
+    let (b, v) = (entry.batch, entry.vocab);
+    let name = entry.name.clone();
+
+    let mut rng = Xoshiro256pp::seed_from_u64(1);
+    let x = rng.logits(b * v, 8.0);
+    let out = engine
+        .execute(&name, vec![Tensor::f32(vec![b, v], x.clone()).unwrap()])
+        .unwrap();
+    let y = out[0].as_f32().unwrap();
+
+    let mut expected = vec![0.0; b * v];
+    softmax::compute_batch(&x, v, Algorithm::Safe, &mut expected);
+    assert_close(y, &expected, 1e-4, "softmax_safe");
+    engine.shutdown();
+}
+
+#[test]
+fn decode_topk_artifacts_agree_with_each_other_and_rust() {
+    let dir = require_artifacts!();
+    let engine = Engine::start(&dir).unwrap();
+    let safe_e = engine.manifest().bucket_for("decode_topk_safe", 1).unwrap().clone();
+    let online_e = engine.manifest().bucket_for("decode_topk_online", 1).unwrap().clone();
+    let (b, h, v) = (safe_e.batch, safe_e.hidden.unwrap(), safe_e.vocab);
+    let k = safe_e.k.unwrap();
+
+    let mut rng = Xoshiro256pp::seed_from_u64(2);
+    let hvec = rng.logits(b * h, 1.0);
+    let wvec = rng.logits(v * h, 0.2);
+    let inputs = || {
+        vec![
+            Tensor::f32(vec![b, h], hvec.clone()).unwrap(),
+            Tensor::f32(vec![v, h], wvec.clone()).unwrap(),
+        ]
+    };
+    let out_safe = engine.execute(&safe_e.name, inputs()).unwrap();
+    let out_online = engine.execute(&online_e.name, inputs()).unwrap();
+
+    // the two serving variants must agree with each other
+    assert_close(
+        out_safe[0].as_f32().unwrap(),
+        out_online[0].as_f32().unwrap(),
+        1e-4,
+        "safe vs online vals",
+    );
+    assert_eq!(out_safe[1].as_i32().unwrap(), out_online[1].as_i32().unwrap());
+
+    // ... and with the rust implementation of projection + Alg 4
+    for row in 0..b {
+        let mut logits = vec![0.0f32; v];
+        for (j, l) in logits.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for d in 0..h {
+                acc += hvec[row * h + d] * wvec[j * h + d];
+            }
+            *l = acc;
+        }
+        let (vals, idx) = softmax::fused::online_topk(&logits, k);
+        let got_vals = &out_safe[0].as_f32().unwrap()[row * k..(row + 1) * k];
+        let got_idx = &out_safe[1].as_i32().unwrap()[row * k..(row + 1) * k];
+        let idx32: Vec<i32> = idx.iter().map(|&i| i as i32).collect();
+        assert_eq!(got_idx, &idx32[..], "row {row} indices");
+        assert_close(got_vals, &vals, 5e-4, "row vals");
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn pallas_lowered_kernel_executes_and_matches() {
+    let dir = require_artifacts!();
+    let engine = Engine::start(&dir).unwrap();
+    let entry = match engine.manifest().variant("softmax_online_pallas").first() {
+        Some(e) => (*e).clone(),
+        None => return,
+    };
+    let (b, v) = (entry.batch, entry.vocab);
+    let mut rng = Xoshiro256pp::seed_from_u64(3);
+    let x = rng.logits(b * v, 5.0);
+    let out = engine
+        .execute(&entry.name, vec![Tensor::f32(vec![b, v], x.clone()).unwrap()])
+        .unwrap();
+    let mut expected = vec![0.0; b * v];
+    softmax::compute_batch(&x, v, Algorithm::Safe, &mut expected);
+    assert_close(out[0].as_f32().unwrap(), &expected, 1e-4, "pallas softmax");
+    engine.shutdown();
+}
+
+#[test]
+fn decode_partial_shards_merge_to_full_vocab_answer() {
+    let dir = require_artifacts!();
+    let pool = EnginePool::start(&dir, 2).unwrap();
+    let part = pool.manifest().bucket_for("decode_partial", 1).unwrap().clone();
+    let full = pool.manifest().bucket_for("decode_topk_safe", 1).unwrap().clone();
+    let shards = part.shard_count.unwrap();
+    let (b, h, vs) = (part.batch, part.hidden.unwrap(), part.vocab);
+    let k = part.k.unwrap();
+    assert_eq!(part.full_vocab.unwrap(), full.vocab);
+
+    let mut rng = Xoshiro256pp::seed_from_u64(4);
+    let hvec = rng.logits(b * h, 1.0);
+    let wvec = rng.logits(full.vocab * h, 0.2);
+
+    // full-vocab reference through the runtime
+    let out_full = pool
+        .engine(0)
+        .execute(
+            &full.name,
+            vec![
+                Tensor::f32(vec![b, h], hvec.clone()).unwrap(),
+                Tensor::f32(vec![full.vocab, h], wvec.clone()).unwrap(),
+            ],
+        )
+        .unwrap();
+
+    // shard partials + rust-side ⊕ merge (the coordinator's reduction)
+    use onlinesoftmax::softmax::MD;
+    let mut per_row: Vec<(MD, topk::TopKBuffer)> =
+        (0..b).map(|_| (MD::IDENTITY, topk::TopKBuffer::new(k))).collect();
+    for s in 0..shards {
+        let w_shard = wvec[s * vs * h..(s + 1) * vs * h].to_vec();
+        let out = pool
+            .engine(s)
+            .execute(
+                &part.name,
+                vec![
+                    Tensor::f32(vec![b, h], hvec.clone()).unwrap(),
+                    Tensor::f32(vec![vs, h], w_shard).unwrap(),
+                ],
+            )
+            .unwrap();
+        let m = out[0].as_f32().unwrap();
+        let d = out[1].as_f32().unwrap();
+        let u = out[2].as_f32().unwrap();
+        let p = out[3].as_i32().unwrap();
+        for row in 0..b {
+            let (md, buf) = &mut per_row[row];
+            *md = md.combine(MD { m: m[row], d: d[row] });
+            for i in 0..k {
+                let idx = p[row * k + i];
+                if idx >= 0 {
+                    buf.push(u[row * k + i], idx as i64 + (s * vs) as i64);
+                }
+            }
+        }
+    }
+    for row in 0..b {
+        let (md, buf) = &per_row[row];
+        let (vals, idx) = onlinesoftmax::softmax::fused::finalize(buf, *md);
+        let want_vals = &out_full[0].as_f32().unwrap()[row * k..(row + 1) * k];
+        let want_idx = &out_full[1].as_i32().unwrap()[row * k..(row + 1) * k];
+        let idx32: Vec<i32> = idx.iter().map(|&i| i as i32).collect();
+        assert_eq!(&idx32[..], want_idx, "row {row}");
+        assert_close(&vals, want_vals, 5e-4, "merged vals");
+    }
+    pool.shutdown();
+}
+
+#[test]
+fn registered_params_give_identical_results() {
+    let dir = require_artifacts!();
+    let engine = Engine::start(&dir).unwrap();
+    let e = engine.manifest().bucket_for("decode_topk_online", 1).unwrap().clone();
+    let (b, h, v) = (e.batch, e.hidden.unwrap(), e.vocab);
+    let mut rng = Xoshiro256pp::seed_from_u64(5);
+    let hvec = rng.logits(b * h, 1.0);
+    let wvec = rng.logits(v * h, 0.2);
+    let w = Tensor::f32(vec![v, h], wvec).unwrap();
+
+    let inline = engine
+        .execute(
+            &e.name,
+            vec![Tensor::f32(vec![b, h], hvec.clone()).unwrap(), w.clone()],
+        )
+        .unwrap();
+
+    engine.register_param("W", w).unwrap();
+    let via_param = engine
+        .execute_mixed(
+            &e.name,
+            vec![
+                Input::Inline(Tensor::f32(vec![b, h], hvec).unwrap()),
+                Input::Param("W".into()),
+            ],
+        )
+        .unwrap();
+    assert_eq!(inline[1].as_i32().unwrap(), via_param[1].as_i32().unwrap());
+    assert_close(
+        inline[0].as_f32().unwrap(),
+        via_param[0].as_f32().unwrap(),
+        1e-6,
+        "param vs inline",
+    );
+    engine.shutdown();
+}
+
+#[test]
+fn unknown_artifact_and_bad_shapes_error_cleanly() {
+    let dir = require_artifacts!();
+    let engine = Engine::start(&dir).unwrap();
+    assert!(engine.execute("no_such_artifact", vec![]).is_err());
+    let entry = engine.manifest().bucket_for("softmax_safe", 1).unwrap();
+    let err = engine
+        .execute(&entry.name.clone(), vec![Tensor::f32(vec![1, 3], vec![0.0; 3]).unwrap()])
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("shape"), "{err:#}");
+    engine.shutdown();
+}
+
+#[test]
+fn manifest_loads_all_variants() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    for variant in [
+        "softmax_safe",
+        "softmax_partial",
+        "softmax_scale",
+        "decode_topk_safe",
+        "decode_topk_online",
+        "decode_partial",
+        "lm_step",
+    ] {
+        assert!(!m.variant(variant).is_empty(), "variant {variant} missing");
+    }
+}

@@ -1,0 +1,120 @@
+//! End-to-end over TCP: server + wire protocol + client.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use onlinesoftmax::config::{ServeConfig, ServingMode};
+use onlinesoftmax::coordinator::Coordinator;
+use onlinesoftmax::rng::Xoshiro256pp;
+use onlinesoftmax::server::{client::Client, Server};
+use onlinesoftmax::softmax::scalar;
+
+fn artifacts_ready() -> bool {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists()
+}
+
+struct Running {
+    addr: String,
+    stop: Arc<std::sync::atomic::AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Drop for Running {
+    fn drop(&mut self) {
+        self.stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn start_server() -> Running {
+    let mut cfg = ServeConfig::default();
+    cfg.artifacts_dir =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    cfg.mode = ServingMode::Online;
+    cfg.max_wait = Duration::from_micros(500);
+    cfg.addr = "127.0.0.1:0".into();
+    let coordinator = Arc::new(Coordinator::start(&cfg).unwrap());
+    let server = Server::bind(&cfg.addr, coordinator, 8).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let stop = server.stop_handle();
+    let thread = std::thread::spawn(move || {
+        let _ = server.serve();
+    });
+    Running { addr, stop, thread: Some(thread) }
+}
+
+#[test]
+fn full_protocol_over_tcp() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let server = start_server();
+    let mut client = Client::connect(&server.addr).unwrap();
+
+    // ping + stats
+    client.ping().unwrap();
+    let stats = client.stats().unwrap();
+    assert!(stats.get("metrics").is_some());
+
+    // softmax
+    let mut rng = Xoshiro256pp::seed_from_u64(1);
+    let logits = rng.logits(8192, 6.0);
+    let probs = client.softmax(&logits).unwrap();
+    let mut want = vec![0.0; logits.len()];
+    scalar::safe(&logits, &mut want);
+    assert_eq!(probs.len(), want.len());
+    let sum: f32 = probs.iter().sum();
+    assert!((sum - 1.0).abs() < 1e-3, "sum={sum}");
+
+    // decode
+    let hidden = rng.logits(128, 1.0);
+    let (vals, idx) = client.decode(&hidden, Some(5)).unwrap();
+    assert_eq!(vals.len(), 5);
+    assert_eq!(idx.len(), 5);
+    assert!(vals.windows(2).all(|w| w[0] >= w[1]));
+
+    // sessions
+    let sid = client.open_session().unwrap();
+    let (v1, _) = client.lm_step(sid, 4, Some(3)).unwrap();
+    assert_eq!(v1.len(), 3);
+    client.close_session(sid).unwrap();
+    let err = client.lm_step(sid, 4, Some(3)).unwrap_err();
+    assert!(format!("{err}").contains("unknown session"), "{err}");
+
+    // malformed input is an error, not a hang/disconnect
+    let bad = client.softmax(&[1.0, 2.0]);
+    assert!(bad.is_err());
+    client.ping().unwrap(); // connection still alive
+}
+
+#[test]
+fn concurrent_clients_are_batched_together() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let server = start_server();
+    let addr = server.addr.clone();
+    let n_clients = 8;
+    let correct: Vec<bool> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n_clients)
+            .map(|i| {
+                let addr = addr.clone();
+                scope.spawn(move || {
+                    let mut client = Client::connect(&addr).unwrap();
+                    let mut rng = Xoshiro256pp::seed_from_u64(100 + i);
+                    let hidden = rng.logits(128, 1.0);
+                    let (vals, idx) = client.decode(&hidden, Some(5)).unwrap();
+                    vals.len() == 5 && idx.iter().all(|&x| x >= 0 && (x as usize) < 8192)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert!(correct.iter().all(|&c| c));
+}
