@@ -1,0 +1,26 @@
+# Developer entry points.  `cargo build/test` work standalone (the host
+# backend needs no artifacts); python is only needed for the AOT
+# artifacts and for regenerating golden vectors.
+
+.PHONY: build test bench golden artifacts fmt
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench --bench shard_ablation
+
+# Golden vectors for rust/tests/golden_vectors.rs (committed; regenerate
+# after changing the python oracles or adding fixture cases).
+golden:
+	cd python && python3 -m compile.golden --out ../rust/tests/golden
+
+# AOT-compile the PJRT artifacts (requires jax; see python/compile/aot.py).
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../artifacts
+
+fmt:
+	cargo fmt

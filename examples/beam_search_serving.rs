@@ -117,9 +117,10 @@ fn run_mode(mode: ServingMode) -> (Vec<Vec<i32>>, f64, Vec<Duration>) {
 
 fn main() {
     let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !artifacts.join("manifest.json").exists() {
-        eprintln!("artifacts not built — run `make artifacts` first");
-        std::process::exit(1);
+    if artifacts.join("manifest.json").exists() {
+        println!("backend: AOT artifacts (PJRT engines)");
+    } else {
+        println!("backend: host kernels (build `make artifacts` for the PJRT path)");
     }
     println!(
         "end-to-end beam-search serving: {BEAMS} clients × width {WIDTH} × {STEPS} steps, K={K}"

@@ -70,4 +70,15 @@ fn main() {
         md = md.push(x);
     }
     println!("\nstreaming (m, d) after 100 elements: ({:.4}, {:.4})", md.m, md.d);
+
+    // --- the shard-reduction engine: ⊕ across a worker pool -------------
+    use onlinesoftmax::shard::{ShardEngine, ShardEngineConfig};
+    let engine = ShardEngine::new(ShardEngineConfig { threshold: 4096, ..Default::default() });
+    let (svals, sidx) = engine.fused_topk(&logits, 5);
+    assert_eq!(sidx, idx, "sharded Algorithm 4 selects the same tokens");
+    println!(
+        "sharded fused top-5 on {} workers agrees with single-thread (max Δp = {:.2e})",
+        engine.workers(),
+        vals.iter().zip(&svals).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max)
+    );
 }

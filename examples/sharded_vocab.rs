@@ -2,38 +2,61 @@
 //! distributed-system feature.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example sharded_vocab
+//! cargo run --release --example sharded_vocab            # host shard engine
+//! make artifacts && cargo run --release --example sharded_vocab   # PJRT path
 //! ```
 //!
-//! The projection matrix is split across 4 vocabulary shards, each on
-//! its own PJRT engine thread.  Every decode executes all shards in
-//! parallel; each returns a partial `(m, d, topk)` and the coordinator
-//! merges with the ⊕ operator (eq. 4) in rust.  The example verifies
-//! shard-merge answers equal single-engine answers bit-for-bit in the
-//! indices, and compares latency.
+//! The projection matrix is split across vocabulary shards; every
+//! decode executes all shards in parallel, each returning a partial
+//! `(m, d, topk)`, and the coordinator merges with the ⊕ operator
+//! (eq. 4) in rust.  With AOT artifacts built, the shards run on PJRT
+//! engine threads; without them, the in-process shard-reduction engine
+//! (`onlinesoftmax::shard`) runs the same per-shard fused scans on a
+//! worker pool.  Either way the example verifies shard-merge answers
+//! equal single-worker answers bit-for-bit in the indices, and compares
+//! latency.
 
 use std::time::{Duration, Instant};
 
-use onlinesoftmax::config::{ServeConfig, ServingMode};
+use onlinesoftmax::config::{BackendKind, ServeConfig, ServingMode};
 use onlinesoftmax::coordinator::{Coordinator, Payload, Reply};
 use onlinesoftmax::rng::Xoshiro256pp;
 
 const TIMEOUT: Duration = Duration::from_secs(60);
 const REQUESTS: usize = 64;
 
-fn run(shards: usize) -> (Vec<(Vec<f32>, Vec<i64>)>, Duration) {
+fn config(artifacts: bool, shards: usize) -> ServeConfig {
     let mut cfg = ServeConfig::default();
-    cfg.artifacts_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     cfg.mode = ServingMode::Online;
-    cfg.shards = shards;
     cfg.max_wait = Duration::from_micros(200);
-    let coord = Coordinator::start(&cfg).expect("coordinator");
+    if artifacts {
+        cfg.artifacts_dir =
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        cfg.backend = BackendKind::Artifacts;
+        cfg.shards = shards;
+    } else {
+        cfg.backend = BackendKind::Host;
+        // A deliberately large host vocabulary so the sharded path has
+        // real work per shard; threshold low enough that it engages.
+        cfg.vocab = 262_144;
+        cfg.hidden = 64;
+        cfg.shard_threshold = 16_384;
+        cfg.host_shards = shards; // 0 = one worker per core
+        if shards == 1 {
+            cfg.shard_threshold = usize::MAX; // force the serial kernel
+        }
+    }
+    cfg
+}
+
+fn run(cfg: &ServeConfig) -> (Vec<(Vec<f32>, Vec<i64>)>, Duration) {
+    let coord = Coordinator::start(cfg).expect("coordinator");
 
     let hidden_len = coord.executor().hidden();
     let mut rng = Xoshiro256pp::seed_from_u64(7);
     let inputs: Vec<Vec<f32>> = (0..REQUESTS).map(|_| rng.logits(hidden_len, 1.0)).collect();
 
-    // warmup (compile + param upload)
+    // warmup (compile + param upload on PJRT; pool spin-up on host)
     coord
         .call(Payload::DecodeTopK { hidden: inputs[0].clone(), k: Some(5) }, TIMEOUT)
         .expect("warmup");
@@ -52,19 +75,34 @@ fn run(shards: usize) -> (Vec<(Vec<f32>, Vec<i64>)>, Duration) {
 }
 
 fn main() {
-    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !artifacts.join("manifest.json").exists() {
-        eprintln!("artifacts not built — run `make artifacts` first");
-        std::process::exit(1);
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists();
+    if artifacts {
+        println!("decode top-5 over {REQUESTS} requests: PJRT engines, 1 vs 4 vocab shards\n");
+    } else {
+        println!(
+            "decode top-5 over {REQUESTS} requests: host shard engine \
+             (V=262144), serial vs sharded\n(build artifacts with `make artifacts` \
+             to run the same comparison on PJRT engines)\n"
+        );
     }
 
-    println!("decode top-5 over {REQUESTS} requests, unsharded vs 4 vocabulary shards\n");
-    let (r1, t1) = run(1);
-    println!("unsharded:   {:?} total, {:.2}ms/request", t1, t1.as_secs_f64() * 1e3 / REQUESTS as f64);
-    let (r4, t4) = run(4);
-    println!("4 shards:    {:?} total, {:.2}ms/request", t4, t4.as_secs_f64() * 1e3 / REQUESTS as f64);
+    let (r1, t1) = run(&config(artifacts, 1));
+    println!(
+        "serial:      {:?} total, {:.2}ms/request",
+        t1,
+        t1.as_secs_f64() * 1e3 / REQUESTS as f64
+    );
+    let (r4, t4) = run(&config(artifacts, if artifacts { 4 } else { 0 }));
+    println!(
+        "sharded:     {:?} total, {:.2}ms/request ({:.2}x)",
+        t4,
+        t4.as_secs_f64() * 1e3 / REQUESTS as f64,
+        t1.as_secs_f64() / t4.as_secs_f64()
+    );
 
-    // ⊕-merged shard results must equal the single-engine answers.
+    // ⊕-merged shard results must equal the single-worker answers.
     let mut max_rel = 0f32;
     for (a, b) in r1.iter().zip(&r4) {
         assert_eq!(a.1, b.1, "top-k indices must match exactly");

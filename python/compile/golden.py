@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .kernels import ref
+from .kernels import fused_topk, ref
 
 
 def _rng(seed: int) -> jax.Array:
@@ -75,9 +75,47 @@ def build(out_dir: str) -> None:
             "d": np.asarray(d).tolist(),
         })
 
+    # Sharded fused softmax+topk cases: per-shard (m, d, u, p) partials
+    # computed by the *Pallas* single-pass kernel
+    # (compile.kernels.fused_topk.online_fused_raw, built on
+    # compile.kernels.online's ⊕-carry), with the expected whole-row
+    # answer from the jnp oracle.  The rust side replays the shard merge
+    # (⊕ + buffer reduction) over these partials and must land on the
+    # same top-k — pinning the cross-shard reduction across languages.
+    shard_cases = []
+    for seed, (b, v, k, s) in enumerate([(2, 96, 5, 3), (1, 200, 7, 4), (2, 64, 3, 2), (1, 128, 1, 8)]):
+        assert v % s == 0, "fixture shard splits are exact"
+        x = (jax.random.normal(_rng(300 + seed), (b, v)) * 6.0).astype(jnp.float32)
+        m, d = ref.online_normalizer(x)
+        vals, idx = ref.softmax_topk(x, k)
+        vs = v // s
+        parts = []
+        for i in range(s):
+            pm, pd, pu, pp = fused_topk.online_fused_raw(x[:, i * vs : (i + 1) * vs], k)
+            parts.append({
+                "m": np.asarray(pm).tolist(),
+                "d": np.asarray(pd).tolist(),
+                "u": np.asarray(pu).tolist(),
+                # p is shard-local; the rust merge adds the shard offset
+                "p": np.asarray(pp).tolist(),
+            })
+        shard_cases.append({
+            "x": np.asarray(x).tolist(),
+            "k": k,
+            "shard_size": vs,
+            "parts": parts,
+            "m": np.asarray(m).tolist(),
+            "d": np.asarray(d).tolist(),
+            "topk_vals": np.asarray(vals).tolist(),
+            "topk_idx": np.asarray(idx).tolist(),
+        })
+
     with open(os.path.join(out_dir, "softmax_golden.json"), "w") as f:
-        json.dump({"cases": cases, "merges": merges}, f)
-    print(f"wrote {len(cases)} cases + {len(merges)} merges to {out_dir}")
+        json.dump({"cases": cases, "merges": merges, "sharded": shard_cases}, f)
+    print(
+        f"wrote {len(cases)} cases + {len(merges)} merges + "
+        f"{len(shard_cases)} sharded cases to {out_dir}"
+    )
 
 
 def main() -> None:

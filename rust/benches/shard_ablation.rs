@@ -1,0 +1,17 @@
+//! `cargo bench --bench shard_ablation` — sharded fused softmax+topk vs
+//! the single-thread fused kernel vs the unfused baseline.
+//! Thin wrapper over [`onlinesoftmax::benches::shard_ablation`]; options
+//! via env: OSMAX_BENCH_FAST=1 for a quick pass, OSMAX_BENCH_THREADS=N
+//! to pin the shard-worker count (default 0 = one worker per core).
+fn main() {
+    let threads = std::env::var("OSMAX_BENCH_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let opts = onlinesoftmax::benches::BenchOpts {
+        threads,
+        json_out: std::env::var("OSMAX_BENCH_JSON").ok(),
+        ..Default::default()
+    };
+    onlinesoftmax::benches::shard_ablation(&opts).expect("bench failed");
+}

@@ -39,6 +39,39 @@ impl ServingMode {
     }
 }
 
+/// Which execution backend serves requests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Artifacts when `artifacts_dir/manifest.json` exists, host
+    /// otherwise (the default).
+    Auto,
+    /// AOT-compiled PJRT artifacts (requires `make artifacts` and the
+    /// real xla bindings).
+    Artifacts,
+    /// In-process host kernels: the shard-reduction engine for large
+    /// vocabularies, single-thread kernels below the threshold.
+    Host,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "auto" => Ok(BackendKind::Auto),
+            "artifacts" => Ok(BackendKind::Artifacts),
+            "host" => Ok(BackendKind::Host),
+            _ => bail!("invalid backend `{s}` (expected `auto`, `artifacts`, or `host`)"),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BackendKind::Auto => "auto",
+            BackendKind::Artifacts => "artifacts",
+            BackendKind::Host => "host",
+        }
+    }
+}
+
 /// Full serving configuration.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -62,6 +95,19 @@ pub struct ServeConfig {
     pub default_k: usize,
     /// RNG seed for the built-in synthetic model weights.
     pub seed: u64,
+    /// Execution backend (auto = artifacts when built, host otherwise).
+    pub backend: BackendKind,
+    /// Served vocabulary size for the host backend (artifact backends
+    /// take theirs from the manifest).
+    pub vocab: usize,
+    /// Hidden-state width for the host backend.
+    pub hidden: usize,
+    /// Shard-engine worker threads for the host backend (0 = one per
+    /// available core).
+    pub host_shards: usize,
+    /// Vocabulary length at which host requests route onto the sharded
+    /// path; below it the single-thread kernels run inline.
+    pub shard_threshold: usize,
 }
 
 impl Default for ServeConfig {
@@ -77,6 +123,11 @@ impl Default for ServeConfig {
             workers: 2,
             default_k: 5,
             seed: 0xC0FFEE,
+            backend: BackendKind::Auto,
+            vocab: 8192,
+            hidden: 128,
+            host_shards: 0,
+            shard_threshold: 32_768,
         }
     }
 }
@@ -122,6 +173,21 @@ impl ServeConfig {
         if let Some(n) = v.get("seed").and_then(Value::as_i64) {
             cfg.seed = n as u64;
         }
+        if let Some(s) = v.get("backend").and_then(Value::as_str) {
+            cfg.backend = BackendKind::parse(s)?;
+        }
+        if let Some(n) = v.get("vocab").and_then(Value::as_usize) {
+            cfg.vocab = n;
+        }
+        if let Some(n) = v.get("hidden").and_then(Value::as_usize) {
+            cfg.hidden = n;
+        }
+        if let Some(n) = v.get("host_shards").and_then(Value::as_usize) {
+            cfg.host_shards = n;
+        }
+        if let Some(n) = v.get("shard_threshold").and_then(Value::as_usize) {
+            cfg.shard_threshold = n;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -145,6 +211,13 @@ impl ServeConfig {
         self.workers = args.opt_parse("workers", self.workers)?;
         self.default_k = args.opt_parse("k", self.default_k)?;
         self.seed = args.opt_parse("seed", self.seed)?;
+        if let Some(b) = args.opt_str("backend") {
+            self.backend = BackendKind::parse(b)?;
+        }
+        self.vocab = args.opt_parse("vocab", self.vocab)?;
+        self.hidden = args.opt_parse("hidden", self.hidden)?;
+        self.host_shards = args.opt_parse("host-shards", self.host_shards)?;
+        self.shard_threshold = args.opt_parse("shard-threshold", self.shard_threshold)?;
         self.validate()
     }
 
@@ -168,6 +241,15 @@ impl ServeConfig {
         if self.default_k == 0 {
             bail!("default_k must be >= 1");
         }
+        if self.vocab == 0 {
+            bail!("vocab must be >= 1");
+        }
+        if self.hidden == 0 {
+            bail!("hidden must be >= 1");
+        }
+        if self.shard_threshold == 0 {
+            bail!("shard_threshold must be >= 1");
+        }
         Ok(())
     }
 
@@ -182,7 +264,12 @@ impl ServeConfig {
             .set("queue_capacity", Value::Number(self.queue_capacity as f64))
             .set("workers", Value::Number(self.workers as f64))
             .set("default_k", Value::Number(self.default_k as f64))
-            .set("seed", Value::Number(self.seed as f64));
+            .set("seed", Value::Number(self.seed as f64))
+            .set("backend", Value::String(self.backend.as_str().to_string()))
+            .set("vocab", Value::Number(self.vocab as f64))
+            .set("hidden", Value::Number(self.hidden as f64))
+            .set("host_shards", Value::Number(self.host_shards as f64))
+            .set("shard_threshold", Value::Number(self.shard_threshold as f64));
         v
     }
 }
@@ -201,10 +288,19 @@ mod tests {
         let mut cfg = ServeConfig::default();
         cfg.shards = 4;
         cfg.mode = ServingMode::Safe;
+        cfg.backend = BackendKind::Host;
+        cfg.vocab = 4096;
+        cfg.host_shards = 6;
+        cfg.shard_threshold = 1024;
         let back = ServeConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.shards, 4);
         assert_eq!(back.mode, ServingMode::Safe);
         assert_eq!(back.addr, cfg.addr);
+        assert_eq!(back.backend, BackendKind::Host);
+        assert_eq!(back.vocab, 4096);
+        assert_eq!(back.hidden, cfg.hidden);
+        assert_eq!(back.host_shards, 6);
+        assert_eq!(back.shard_threshold, 1024);
     }
 
     #[test]
@@ -234,5 +330,37 @@ mod tests {
     fn mode_parse() {
         assert!(ServingMode::parse("bogus").is_err());
         assert_eq!(ServingMode::parse("online").unwrap(), ServingMode::Online);
+    }
+
+    #[test]
+    fn backend_parse_and_cli_override() {
+        assert!(BackendKind::parse("gpu").is_err());
+        assert_eq!(BackendKind::parse("host").unwrap(), BackendKind::Host);
+        assert_eq!(BackendKind::parse("artifacts").unwrap(), BackendKind::Artifacts);
+
+        let mut cfg = ServeConfig::default();
+        let raw: Vec<String> =
+            ["--backend", "host", "--vocab", "2048", "--shard-threshold", "512"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let args = Args::parse(&raw, &["backend", "vocab", "shard-threshold"]).unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.backend, BackendKind::Host);
+        assert_eq!(cfg.vocab, 2048);
+        assert_eq!(cfg.shard_threshold, 512);
+    }
+
+    #[test]
+    fn validation_rejects_zero_host_dims() {
+        let mut cfg = ServeConfig::default();
+        cfg.vocab = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ServeConfig::default();
+        cfg.hidden = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ServeConfig::default();
+        cfg.shard_threshold = 0;
+        assert!(cfg.validate().is_err());
     }
 }

@@ -1,16 +1,23 @@
-//! Batch executor: turns a formed batch into artifact executions and
-//! fans results back to each request's reply channel.
+//! Batch executor: turns a formed batch into kernel executions and fans
+//! results back to each request's reply channel.
 //!
-//! This is where the paper's §3.1 becomes a *system* feature: in
-//! sharded mode every vocabulary shard produces a partial
-//! `(m, d, topk)` on its own engine thread, and the coordinator merges
-//! them in rust with the ⊕ operator (eq. 4) — the parallel online
-//! normalizer calculation applied across the serving topology rather
-//! than across SIMD lanes.
+//! This is where the paper's §3.1 becomes a *system* feature.  Two
+//! backends implement the same request classes:
+//!
+//! * **Artifacts** — AOT-compiled PJRT executables (one engine thread
+//!   per vocabulary shard); in sharded mode every shard produces a
+//!   partial `(m, d, topk)` on its own engine and the coordinator
+//!   merges them in rust with the ⊕ operator (eq. 4).
+//! * **Host** — the in-process [`shard`](crate::shard) engine: requests
+//!   at or above `shard_threshold` fan out across the shard pool
+//!   (per-shard fused scan → ⊕ tree reduction, the cross-shard
+//!   Algorithm 4); smaller requests fall back to the single-thread
+//!   [`softmax::compute`]/[`fused`] kernels.  No artifacts, no python,
+//!   no PJRT — this is the default serving path on a bare build.
 //!
 //! Batching detail: requests are padded up to the artifact batch
 //! buckets compiled by `aot.py` (1/4/16 by default); pad rows are zeros
-//! and their outputs are discarded.
+//! and their outputs are discarded.  The host backend needs no padding.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
@@ -19,15 +26,31 @@ use anyhow::{anyhow, bail, Result};
 
 use super::model::SyntheticLm;
 use super::request::{BatchClass, Payload, Reply, ReplyResult, Request};
-use crate::config::{ServeConfig, ServingMode};
+use crate::config::{BackendKind, ServeConfig, ServingMode};
 use crate::runtime::{EnginePool, Input, Tensor};
-use crate::softmax::fused;
+use crate::shard::{self, ShardEngine, ShardEngineConfig, ShardPartial};
 use crate::softmax::monoid::MD;
+use crate::softmax::{self, fused, Algorithm};
 use crate::topk::TopKBuffer;
 
-/// Executes batches against the engine pool.
+/// Top-k ceiling for the host backend (artifact backends take theirs
+/// from the AOT-compiled `k`).
+const HOST_MAX_K: usize = 64;
+
+/// The execution substrate behind the request classes.
+enum Backend {
+    /// PJRT engine pool over AOT artifacts.
+    Artifacts(EnginePool),
+    /// In-process host kernels (shard engine + single-thread fallback).
+    Host,
+}
+
+/// Executes batches against the selected backend.
 pub struct Executor {
-    pool: EnginePool,
+    backend: Backend,
+    /// Present only on the host backend (the artifacts backend shards
+    /// across PJRT engines instead; an idle pool would waste threads).
+    shard_engine: Option<ShardEngine>,
     model: SyntheticLm,
     mode: ServingMode,
     shards: usize,
@@ -35,15 +58,74 @@ pub struct Executor {
     vocab: usize,
     hidden: usize,
     artifact_k: usize,
+    shard_threshold: usize,
     /// LM session states, (hidden,) per session.
     sessions: Mutex<HashMap<u64, Vec<f32>>>,
 }
 
 impl Executor {
-    /// Build from config: starts engine threads, generates the model,
-    /// registers weights as device-resident params, warms up the
-    /// executables the mode needs.
+    /// Build from config: selects the backend, generates the model,
+    /// and (for artifacts) starts engine threads, registers weights as
+    /// device-resident params, and warms up the executables.
     pub fn new(cfg: &ServeConfig) -> Result<Executor> {
+        let use_artifacts = match cfg.backend {
+            BackendKind::Artifacts => true,
+            BackendKind::Host => false,
+            BackendKind::Auto => cfg.artifacts_dir.join("manifest.json").exists(),
+        };
+        if use_artifacts {
+            Self::new_artifacts(cfg)
+        } else {
+            Self::new_host(cfg)
+        }
+    }
+
+    fn shard_engine_from(cfg: &ServeConfig) -> ShardEngine {
+        ShardEngine::new(ShardEngineConfig {
+            workers: cfg.host_shards,
+            threshold: cfg.shard_threshold,
+            // A row that just clears the threshold must actually split:
+            // size shards so the threshold row yields two, larger rows
+            // fan out toward the worker count.
+            min_shard: (cfg.shard_threshold / 2).max(1),
+            ..ShardEngineConfig::default()
+        })
+    }
+
+    /// Host backend: serve straight from the in-process kernels sized
+    /// by the config.  Large-vocab requests route onto the shard
+    /// engine; the rest run the single-thread kernels inline.
+    fn new_host(cfg: &ServeConfig) -> Result<Executor> {
+        let vocab = cfg.vocab;
+        let hidden = cfg.hidden;
+        let artifact_k = HOST_MAX_K.max(cfg.default_k).min(vocab);
+        if cfg.default_k > artifact_k {
+            bail!("default_k {} exceeds vocab {}", cfg.default_k, vocab);
+        }
+        let shard_engine = Self::shard_engine_from(cfg);
+        crate::info!(
+            "coordinator.executor",
+            "host backend: vocab {vocab}, hidden {hidden}, {} shard workers, threshold {}",
+            shard_engine.workers(),
+            shard_engine.threshold()
+        );
+        Ok(Executor {
+            backend: Backend::Host,
+            shard_engine: Some(shard_engine),
+            model: SyntheticLm::generate(vocab, hidden, cfg.seed),
+            mode: cfg.mode,
+            shards: 1,
+            default_k: cfg.default_k,
+            vocab,
+            hidden,
+            artifact_k,
+            shard_threshold: cfg.shard_threshold,
+            sessions: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Artifact backend: engine threads over `artifacts_dir`.
+    fn new_artifacts(cfg: &ServeConfig) -> Result<Executor> {
         let n_engines = if cfg.shards > 1 { cfg.shards } else { cfg.workers.max(1) };
         let pool = EnginePool::start(&cfg.artifacts_dir, n_engines)?;
         let manifest = pool.manifest();
@@ -85,6 +167,8 @@ impl Executor {
 
         let model = SyntheticLm::generate(vocab, hidden, cfg.seed);
         let executor = Executor {
+            backend: Backend::Artifacts(pool),
+            shard_engine: None,
             model,
             mode: cfg.mode,
             shards: cfg.shards,
@@ -92,25 +176,27 @@ impl Executor {
             vocab,
             hidden,
             artifact_k,
+            shard_threshold: cfg.shard_threshold,
             sessions: Mutex::new(HashMap::new()),
-            pool,
         };
         executor.register_params()?;
         Ok(executor)
     }
 
     fn register_params(&self) -> Result<()> {
+        let Backend::Artifacts(pool) = &self.backend else {
+            return Ok(());
+        };
         if self.shards > 1 {
             for s in 0..self.shards {
-                self.pool
-                    .engine(s)
+                pool.engine(s)
                     .register_param("W_shard", self.model.w_shard_tensor(s, self.shards))?;
             }
         }
         // Full-vocab weights + LM weights live on every engine so any
         // worker can run any class.
-        for i in 0..self.pool.len() {
-            let e = self.pool.engine(i);
+        for i in 0..pool.len() {
+            let e = pool.engine(i);
             e.register_param("W", self.model.w_tensor())?;
             e.register_param("emb", self.model.emb_tensor())?;
             e.register_param("w1", self.model.w1_tensor())?;
@@ -129,6 +215,16 @@ impl Executor {
 
     pub fn model(&self) -> &SyntheticLm {
         &self.model
+    }
+
+    /// True when serving from the in-process host kernels.
+    pub fn is_host_backend(&self) -> bool {
+        matches!(self.backend, Backend::Host)
+    }
+
+    /// The shard engine backing host-mode requests (host backend only).
+    fn host_shard_engine(&self) -> &ShardEngine {
+        self.shard_engine.as_ref().expect("shard engine exists on the host backend")
     }
 
     /// Create (or reset) an LM session with a zero state.
@@ -205,10 +301,14 @@ impl Executor {
         let live: Vec<&[f32]> = rows.iter().flatten().copied().collect();
         let probs: Vec<Vec<f32>> = if live.is_empty() {
             Vec::new()
-        } else if self.shards > 1 {
-            self.softmax_sharded(&live)?
         } else {
-            self.softmax_unsharded(&live, worker)?
+            match &self.backend {
+                Backend::Artifacts(pool) if self.shards > 1 => {
+                    self.softmax_sharded(pool, &live)?
+                }
+                Backend::Artifacts(pool) => self.softmax_unsharded(pool, &live, worker)?,
+                Backend::Host => self.softmax_host(&live),
+            }
         };
         let mut out = Vec::with_capacity(batch.len());
         let mut it = probs.into_iter();
@@ -222,9 +322,32 @@ impl Executor {
         Ok(out)
     }
 
-    fn softmax_unsharded(&self, rows: &[&[f32]], worker: usize) -> Result<Vec<Vec<f32>>> {
-        let entry = self
-            .pool
+    /// Host softmax.  In `online` mode, rows at/above the shard
+    /// threshold run on the shard engine (per-shard `(m, d)` partials,
+    /// ⊕ tree reduction, shard-parallel scale); smaller rows use the
+    /// single-thread online kernel.  `safe` mode is the paper's
+    /// baseline and therefore *always* runs the single-thread 3-pass
+    /// safe kernel — sharding is exactly the capability the online
+    /// normalizer's ⊕ monoid buys, so the baseline must not get it.
+    fn softmax_host(&self, rows: &[&[f32]]) -> Vec<Vec<f32>> {
+        rows.iter()
+            .map(|r| match self.mode {
+                ServingMode::Safe => softmax::compute(r, Algorithm::Safe),
+                ServingMode::Online if r.len() >= self.shard_threshold => {
+                    self.host_shard_engine().softmax(r)
+                }
+                ServingMode::Online => softmax::compute(r, Algorithm::Online),
+            })
+            .collect()
+    }
+
+    fn softmax_unsharded(
+        &self,
+        pool: &EnginePool,
+        rows: &[&[f32]],
+        worker: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let entry = pool
             .manifest()
             .bucket_for("softmax_safe", rows.len())
             .ok_or_else(|| anyhow!("no softmax_safe artifact"))?
@@ -234,8 +357,7 @@ impl Executor {
         for (i, r) in rows.iter().enumerate() {
             flat[i * self.vocab..(i + 1) * self.vocab].copy_from_slice(r);
         }
-        let out = self
-            .pool
+        let out = pool
             .engine(worker)
             .execute(&entry.name, vec![Tensor::f32(vec![b, self.vocab], flat)?])?;
         let y = out.into_iter().next().unwrap().into_f32()?;
@@ -249,16 +371,14 @@ impl Executor {
     /// Sharded softmax: per-shard single-pass partial (m, d) on each
     /// engine, rust-side ⊕ merge, then per-shard scale pass — the
     /// distributed rendition of Algorithm 3's two passes.
-    fn softmax_sharded(&self, rows: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+    fn softmax_sharded(&self, pool: &EnginePool, rows: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
         let vs = self.vocab / self.shards;
-        let part_entry = self
-            .pool
+        let part_entry = pool
             .manifest()
             .bucket_for("softmax_partial", rows.len())
             .ok_or_else(|| anyhow!("no softmax_partial artifact"))?
             .clone();
-        let scale_entry = self
-            .pool
+        let scale_entry = pool
             .manifest()
             .bucket_for("softmax_scale", rows.len())
             .ok_or_else(|| anyhow!("no softmax_scale artifact"))?
@@ -284,7 +404,7 @@ impl Executor {
                     .map(|s| {
                         let entry_name = part_entry.name.clone();
                         let input = shard_input(s);
-                        let engine = self.pool.engine(s).clone();
+                        let engine = pool.engine(s).clone();
                         scope.spawn(move || -> Result<(Vec<f32>, Vec<f32>)> {
                             let out = engine.execute(&entry_name, vec![input?])?;
                             let mut it = out.into_iter();
@@ -316,7 +436,7 @@ impl Executor {
                     let input = shard_input(s);
                     let m = Tensor::f32(vec![b], m_final.clone());
                     let d = Tensor::f32(vec![b], d_final.clone());
-                    let engine = self.pool.engine(s).clone();
+                    let engine = pool.engine(s).clone();
                     scope.spawn(move || -> Result<Vec<f32>> {
                         let out = engine.execute(&entry_name, vec![input?, m?, d?])?;
                         out.into_iter().next().unwrap().into_f32()
@@ -379,7 +499,10 @@ impl Executor {
             let full = self.decode_states(&states, worker)?;
             full.into_iter()
                 .zip(live.iter())
-                .map(|((vals, idx), (_, k))| (vals[..*k].to_vec(), idx[..*k].to_vec()))
+                .map(|((vals, idx), (_, k))| {
+                    let n = (*k).min(vals.len());
+                    (vals[..n].to_vec(), idx[..n].to_vec())
+                })
                 .collect()
         };
         let mut out = Vec::with_capacity(batch.len());
@@ -403,15 +526,51 @@ impl Executor {
         states: &[&[f32]],
         worker: usize,
     ) -> Result<Vec<(Vec<f32>, Vec<i64>)>> {
-        if self.shards > 1 {
-            self.decode_sharded(states)
-        } else {
-            self.decode_unsharded(states, worker)
+        match &self.backend {
+            Backend::Artifacts(pool) if self.shards > 1 => self.decode_sharded(pool, states),
+            Backend::Artifacts(pool) => self.decode_unsharded(pool, states, worker),
+            Backend::Host => Ok(self.decode_host(states)),
         }
+    }
+
+    /// Host decode.  In `online` mode with the vocabulary at/above the
+    /// threshold, each shard materializes only its slice of the logits
+    /// (sharded projection), scans it with Algorithm 4, and the
+    /// partials ⊕-merge in the tree reduction.  Smaller vocabularies
+    /// use the single-thread fused kernel.  `safe` mode always runs
+    /// the framework-baseline path (full projection, materialized safe
+    /// softmax, separate top-k) — the baseline the paper compares
+    /// against, deliberately unsharded (see [`Self::softmax_host`]).
+    fn decode_host(&self, states: &[&[f32]]) -> Vec<(Vec<f32>, Vec<i64>)> {
+        let k = self.artifact_k;
+        states
+            .iter()
+            .map(|h| match self.mode {
+                ServingMode::Safe => {
+                    let logits = self.model.project_row(h);
+                    let mut scratch = Vec::new();
+                    fused::safe_unfused_topk(&logits, k, &mut scratch)
+                }
+                ServingMode::Online if self.vocab >= self.shard_threshold => {
+                    let engine = self.host_shard_engine();
+                    let plan = engine.plan(self.vocab);
+                    let parts = engine.map(&plan, |r| {
+                        let logits = self.model.project_range(h, r.start, r.end);
+                        ShardPartial::scan(&logits, k, r.start as i64)
+                    });
+                    shard::tree_reduce(parts).finalize()
+                }
+                ServingMode::Online => {
+                    let logits = self.model.project_row(h);
+                    fused::online_topk(&logits, k)
+                }
+            })
+            .collect()
     }
 
     fn decode_unsharded(
         &self,
+        pool: &EnginePool,
         states: &[&[f32]],
         worker: usize,
     ) -> Result<Vec<(Vec<f32>, Vec<i64>)>> {
@@ -419,8 +578,7 @@ impl Executor {
             ServingMode::Safe => "decode_topk_safe",
             ServingMode::Online => "decode_topk_online",
         };
-        let entry = self
-            .pool
+        let entry = pool
             .manifest()
             .bucket_for(variant, states.len())
             .ok_or_else(|| anyhow!("no {variant} artifact"))?
@@ -431,7 +589,7 @@ impl Executor {
         for (i, s) in states.iter().enumerate() {
             flat[i * self.hidden..(i + 1) * self.hidden].copy_from_slice(s);
         }
-        let out = self.pool.engine(worker).execute_mixed(
+        let out = pool.engine(worker).execute_mixed(
             &entry.name,
             vec![
                 Input::Inline(Tensor::f32(vec![b, self.hidden], flat)?),
@@ -454,9 +612,12 @@ impl Executor {
     /// on its vocabulary slice via the single-pass partial artifact; the
     /// coordinator ⊕-merges normalizers and candidate buffers and
     /// finalizes `e^{u−m}/d` — Algorithm 4 distributed across engines.
-    fn decode_sharded(&self, states: &[&[f32]]) -> Result<Vec<(Vec<f32>, Vec<i64>)>> {
-        let entry = self
-            .pool
+    fn decode_sharded(
+        &self,
+        pool: &EnginePool,
+        states: &[&[f32]],
+    ) -> Result<Vec<(Vec<f32>, Vec<i64>)>> {
+        let entry = pool
             .manifest()
             .bucket_for("decode_partial", states.len())
             .ok_or_else(|| anyhow!("no decode_partial artifact"))?
@@ -475,7 +636,7 @@ impl Executor {
                 .map(|s| {
                     let name = entry.name.clone();
                     let h = Tensor::f32(vec![b, self.hidden], flat.clone());
-                    let engine = self.pool.engine(s).clone();
+                    let engine = pool.engine(s).clone();
                     scope.spawn(move || -> Result<Partial> {
                         let out = engine.execute_mixed(
                             &name,
@@ -549,35 +710,8 @@ impl Executor {
         let live: Vec<(u64, i32, usize)> = jobs.iter().flatten().copied().collect();
         let mut results: Vec<(Vec<f32>, Vec<i64>)> = Vec::new();
         if !live.is_empty() {
-            // 1. advance recurrent states via the lm_step artifact
-            let entry = self
-                .pool
-                .manifest()
-                .bucket_for("lm_step", live.len())
-                .ok_or_else(|| anyhow!("no lm_step artifact"))?
-                .clone();
-            let b = entry.batch;
-            let mut state_flat = vec![0.0f32; b * self.hidden];
-            let mut tokens = vec![0i32; b];
-            {
-                let sessions = self.sessions.lock().unwrap();
-                for (i, (sid, tok, _)) in live.iter().enumerate() {
-                    state_flat[i * self.hidden..(i + 1) * self.hidden]
-                        .copy_from_slice(&sessions[sid]);
-                    tokens[i] = *tok;
-                }
-            }
-            let out = self.pool.engine(worker).execute_mixed(
-                &entry.name,
-                vec![
-                    Input::Param("emb".into()),
-                    Input::Param("w1".into()),
-                    Input::Param("w2".into()),
-                    Input::Inline(Tensor::f32(vec![b, self.hidden], state_flat)?),
-                    Input::Inline(Tensor::i32(vec![b], tokens)?),
-                ],
-            )?;
-            let new_states = out.into_iter().next().unwrap().into_f32()?;
+            // 1. advance recurrent states (artifact graph or host math)
+            let new_states = self.advance_states(&live, worker)?;
 
             // 2. persist new states
             {
@@ -600,7 +734,10 @@ impl Executor {
             results = decoded
                 .into_iter()
                 .zip(live.iter())
-                .map(|((vals, idx), (_, _, k))| (vals[..*k].to_vec(), idx[..*k].to_vec()))
+                .map(|((vals, idx), (_, _, k))| {
+                    let n = (*k).min(vals.len());
+                    (vals[..n].to_vec(), idx[..n].to_vec())
+                })
                 .collect();
         }
         let mut out = Vec::with_capacity(batch.len());
@@ -618,7 +755,60 @@ impl Executor {
         Ok(out)
     }
 
+    /// Advance each live session's recurrent state by one token.
+    /// Returns row-major `(live.len() + padding, hidden)` states; rows
+    /// beyond `live.len()` (artifact batch padding) are ignored.
+    fn advance_states(&self, live: &[(u64, i32, usize)], worker: usize) -> Result<Vec<f32>> {
+        match &self.backend {
+            Backend::Host => {
+                // Copy the states out under the lock, compute after
+                // releasing it (matching the artifact arm) — lm_step_row
+                // is O(hidden²) per row and must not serialize sessions.
+                let states: Vec<Vec<f32>> = {
+                    let sessions = self.sessions.lock().unwrap();
+                    live.iter().map(|(sid, _, _)| sessions[sid].clone()).collect()
+                };
+                let mut flat = Vec::with_capacity(live.len() * self.hidden);
+                for (state, (_, tok, _)) in states.iter().zip(live) {
+                    flat.extend(self.model.lm_step_row(state, *tok));
+                }
+                Ok(flat)
+            }
+            Backend::Artifacts(pool) => {
+                let entry = pool
+                    .manifest()
+                    .bucket_for("lm_step", live.len())
+                    .ok_or_else(|| anyhow!("no lm_step artifact"))?
+                    .clone();
+                let b = entry.batch;
+                let mut state_flat = vec![0.0f32; b * self.hidden];
+                let mut tokens = vec![0i32; b];
+                {
+                    let sessions = self.sessions.lock().unwrap();
+                    for (i, (sid, tok, _)) in live.iter().enumerate() {
+                        state_flat[i * self.hidden..(i + 1) * self.hidden]
+                            .copy_from_slice(&sessions[sid]);
+                        tokens[i] = *tok;
+                    }
+                }
+                let out = pool.engine(worker).execute_mixed(
+                    &entry.name,
+                    vec![
+                        Input::Param("emb".into()),
+                        Input::Param("w1".into()),
+                        Input::Param("w2".into()),
+                        Input::Inline(Tensor::f32(vec![b, self.hidden], state_flat)?),
+                        Input::Inline(Tensor::i32(vec![b], tokens)?),
+                    ],
+                )?;
+                out.into_iter().next().unwrap().into_f32()
+            }
+        }
+    }
+
     pub fn shutdown(&self) {
-        self.pool.shutdown();
+        if let Backend::Artifacts(pool) = &self.backend {
+            pool.shutdown();
+        }
     }
 }

@@ -76,10 +76,19 @@ impl SyntheticLm {
     /// Host-side projection `logits = h · Wᵀ` for one row (reference /
     /// fallback path; the hot path runs the AOT artifact instead).
     pub fn project_row(&self, h: &[f32]) -> Vec<f32> {
+        self.project_range(h, 0, self.vocab)
+    }
+
+    /// Host-side projection restricted to vocabulary rows `[lo, hi)` —
+    /// the per-shard leaf of the host backend's sharded decode: each
+    /// shard materializes only its own slice of the logits before the
+    /// fused scan, so the full logits vector never exists in memory.
+    pub fn project_range(&self, h: &[f32], lo: usize, hi: usize) -> Vec<f32> {
         assert_eq!(h.len(), self.hidden);
-        let mut logits = vec![0.0f32; self.vocab];
+        assert!(lo <= hi && hi <= self.vocab, "range [{lo}, {hi}) outside vocab");
+        let mut logits = vec![0.0f32; hi - lo];
         for (j, out) in logits.iter_mut().enumerate() {
-            let row = &self.w[j * self.hidden..(j + 1) * self.hidden];
+            let row = &self.w[(lo + j) * self.hidden..(lo + j + 1) * self.hidden];
             let mut acc = 0.0f32;
             for (a, b) in row.iter().zip(h) {
                 acc += a * b;
@@ -87,6 +96,28 @@ impl SyntheticLm {
             *out = acc;
         }
         logits
+    }
+
+    /// One recurrent LM state update, mirroring the python graph
+    /// (`compile.model.toy_lm_step`): `s' = tanh(s·W1 + E[token]·W2)`.
+    /// Used by the host backend; the artifact backend executes the same
+    /// graph AOT-compiled.
+    pub fn lm_step_row(&self, state: &[f32], token: i32) -> Vec<f32> {
+        assert_eq!(state.len(), self.hidden);
+        let t = token as usize;
+        assert!(t < self.vocab, "token {token} outside vocab {}", self.vocab);
+        let h = self.hidden;
+        let e = &self.emb[t * h..(t + 1) * h];
+        let mut new = vec![0.0f32; h];
+        for (j, out) in new.iter_mut().enumerate() {
+            // column j of W1 / W2 (row-major (H, H) matrices)
+            let mut acc = 0.0f32;
+            for d in 0..h {
+                acc += state[d] * self.w1[d * h + j] + e[d] * self.w2[d * h + j];
+            }
+            *out = acc.tanh();
+        }
+        new
     }
 }
 
@@ -132,5 +163,33 @@ mod tests {
         assert_eq!(m.w_tensor().shape(), &[32, 8]);
         assert_eq!(m.w_shard_tensor(1, 4).shape(), &[8, 8]);
         assert_eq!(m.w1_tensor().shape(), &[8, 8]);
+    }
+
+    #[test]
+    fn project_range_slices_full_projection() {
+        let m = SyntheticLm::generate(24, 6, 5);
+        let h: Vec<f32> = (0..6).map(|i| (i as f32 * 0.7).cos()).collect();
+        let full = m.project_row(&h);
+        let mut joined = Vec::new();
+        for (lo, hi) in [(0usize, 10usize), (10, 11), (11, 24)] {
+            joined.extend(m.project_range(&h, lo, hi));
+        }
+        assert_eq!(joined, full, "shard slices must concatenate to the full row");
+        assert!(m.project_range(&h, 5, 5).is_empty());
+    }
+
+    #[test]
+    fn lm_step_row_is_deterministic_and_bounded() {
+        let m = SyntheticLm::generate(16, 8, 7);
+        let s0 = vec![0.0f32; 8];
+        let a = m.lm_step_row(&s0, 3);
+        let b = m.lm_step_row(&s0, 3);
+        let c = m.lm_step_row(&s0, 4);
+        assert_eq!(a, b);
+        assert_ne!(a, c, "different tokens diverge the state");
+        assert!(a.iter().all(|v| v.abs() <= 1.0), "tanh keeps state in [-1, 1]");
+        // step again from the new state — no panics, still bounded
+        let d = m.lm_step_row(&a, 0);
+        assert!(d.iter().all(|v| v.abs() <= 1.0));
     }
 }

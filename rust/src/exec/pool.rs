@@ -10,6 +10,8 @@ use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
+use super::waitgroup::WaitGroup;
+
 type Task = Box<dyn FnOnce() + Send + 'static>;
 
 struct Shared {
@@ -80,6 +82,36 @@ impl ThreadPool {
         while !st.tasks.is_empty() || st.active > 0 {
             st = self.shared.idle_cv.wait(st).unwrap();
         }
+    }
+
+    /// Run a batch of *borrowing* tasks on the pool and block until all
+    /// of them have completed — a scoped fan-out/fan-in on persistent
+    /// workers (no per-call thread spawns, unlike `std::thread::scope`).
+    ///
+    /// Used by the shard engine: each task scans one vocabulary shard of
+    /// a borrowed logits slice.  A panicking task is caught by the
+    /// worker loop (logged, pool survives) and still counts as
+    /// completed.
+    ///
+    /// Do NOT call this from inside a task running on the same pool:
+    /// the caller blocks a slot while waiting, which can deadlock.
+    pub fn run_scoped<'scope>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        let wg = WaitGroup::new();
+        for task in tasks {
+            let guard = wg.add();
+            // SAFETY: `wg.wait()` below does not return until every
+            // task has run (or unwound) and dropped its guard, so all
+            // 'scope borrows captured by `task` strictly outlive its
+            // execution on the worker thread.  The transmute only
+            // erases the lifetime; layout is identical.
+            let task: Box<dyn FnOnce() + Send + 'static> =
+                unsafe { std::mem::transmute(task) };
+            self.execute(move || {
+                let _guard = guard;
+                task();
+            });
+        }
+        wg.wait();
     }
 }
 
@@ -196,5 +228,43 @@ mod tests {
         pool.join_idle();
         assert_eq!(pool.queued(), 0);
         assert_eq!(pool.size(), 2);
+    }
+
+    #[test]
+    fn run_scoped_borrows_and_joins() {
+        let pool = ThreadPool::new(4, "t");
+        let data: Vec<u64> = (0..100).collect();
+        let partials = Mutex::new(vec![0u64; 4]);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+            .map(|i| {
+                let data = &data;
+                let partials = &partials;
+                Box::new(move || {
+                    let sum: u64 = data[i * 25..(i + 1) * 25].iter().sum();
+                    partials.lock().unwrap()[i] = sum;
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(tasks);
+        assert_eq!(partials.into_inner().unwrap().iter().sum::<u64>(), 4950);
+    }
+
+    #[test]
+    fn run_scoped_with_empty_task_list_returns() {
+        let pool = ThreadPool::new(1, "t");
+        pool.run_scoped(Vec::new());
+    }
+
+    #[test]
+    fn run_scoped_survives_panicking_task() {
+        crate::logging::init(crate::logging::Level::Error);
+        let pool = ThreadPool::new(2, "t");
+        let ok = Mutex::new(false);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+            Box::new(|| panic!("shard scan failed")),
+            Box::new(|| *ok.lock().unwrap() = true),
+        ];
+        pool.run_scoped(tasks); // must not hang or propagate the panic
+        assert!(*ok.lock().unwrap());
     }
 }

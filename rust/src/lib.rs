@@ -9,9 +9,15 @@
 //!
 //! * **Core algorithms** ([`softmax`], [`topk`]) — Algorithms 1–4 of the
 //!   paper in scalar, vectorized, multithreaded, and fused forms.
+//! * **Shard layer** ([`shard`]) — the shard-reduction execution engine:
+//!   vocabulary rows split into balanced shards, scanned in parallel on
+//!   a persistent pool, and merged with the ⊕ tree reduction (the
+//!   cross-shard Algorithm 4).  The coordinator routes large-vocab
+//!   requests here.
 //! * **Runtime** ([`runtime`]) — loads AOT-compiled JAX/Pallas decode
 //!   graphs (HLO text in `artifacts/`) into a PJRT CPU client; python is
-//!   never on the request path.
+//!   never on the request path.  (Offline builds link an API-compatible
+//!   `xla` stub; artifact execution requires the real bindings.)
 //! * **Coordinator** ([`coordinator`], [`server`]) — request routing,
 //!   continuous dynamic batching, beam-search decode scheduling, and
 //!   vocabulary-sharded execution whose partial normalizers are merged
@@ -53,6 +59,7 @@ pub mod prop;
 pub mod rng;
 pub mod runtime;
 pub mod server;
+pub mod shard;
 pub mod softmax;
 pub mod topk;
 

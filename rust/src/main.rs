@@ -25,7 +25,8 @@ use onlinesoftmax::{benches, logging};
 const VALUE_OPTS: &[&str] = &[
     "config", "addr", "artifacts", "mode", "shards", "max-batch", "max-wait-us",
     "queue-capacity", "workers", "k", "seed", "fig", "sizes", "batch", "threads",
-    "device", "requests", "concurrency", "op", "out",
+    "device", "requests", "concurrency", "op", "out", "backend", "vocab", "hidden",
+    "host-shards", "shard-threshold",
 ];
 
 fn main() {
@@ -73,16 +74,22 @@ fn print_help() {
            --config FILE        JSON config (defaults + CLI overrides)\n\
            --addr HOST:PORT     bind address        [127.0.0.1:7070]\n\
            --artifacts DIR      AOT artifacts dir   [artifacts]\n\
+           --backend B          auto|artifacts|host [auto]\n\
            --mode safe|online   softmax strategy    [online]\n\
-           --shards N           vocabulary shards   [1]\n\
+           --shards N           vocabulary shards (artifact backend) [1]\n\
+           --vocab N            served vocab (host backend)   [8192]\n\
+           --hidden N           hidden width (host backend)   [128]\n\
+           --host-shards N      shard-engine workers (0=auto) [0]\n\
+           --shard-threshold N  sharded-path vocab cutoff     [32768]\n\
            --max-batch N        dynamic batch bound [16]\n\
            --max-wait-us N      batch deadline      [2000]\n\
            --workers N          executor workers    [2]\n\n\
          BENCH OPTIONS:\n\
-           --fig 1|2|3|4|k|all  which paper figure  [all]\n\
+           --fig 1|2|3|4|k|ablation|all  which figure/study  [all]\n\
            --sizes a,b,c        vector sizes V override\n\
            --batch N            batch size override\n\
-           --threads N          worker threads for parallel variants [1]\n\
+           --threads N          worker threads for parallel/sharded variants\n\
+                                (0 = one per core)                           [1]\n\
            --out FILE           also append results as JSON lines\n",
         onlinesoftmax::VERSION
     );
@@ -122,14 +129,16 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "3" => benches::fig3(&opts),
         "4" => benches::fig4(&opts),
         "k" => benches::k_sweep(&opts),
+        "ablation" | "shard" => benches::shard_ablation(&opts),
         "all" => {
             benches::fig1(&opts)?;
             benches::fig2(&opts)?;
             benches::fig3(&opts)?;
             benches::fig4(&opts)?;
-            benches::k_sweep(&opts)
+            benches::k_sweep(&opts)?;
+            benches::shard_ablation(&opts)
         }
-        other => Err(anyhow!("unknown figure `{other}` (1|2|3|4|k|all)")),
+        other => Err(anyhow!("unknown figure `{other}` (1|2|3|4|k|ablation|all)")),
     }
 }
 

@@ -1,0 +1,312 @@
+//! The shard execution engine: runs per-shard scans on a persistent
+//! [`ThreadPool`](crate::exec::ThreadPool) and reduces the partials.
+//!
+//! This is the host-side execution layer behind the coordinator's
+//! sharded path: a query over a vocabulary-length row is planned into
+//! shards ([`super::plan`]), each shard is scanned on a pool worker
+//! (fused online-softmax + top-k, Algorithm 4), and the partials merge
+//! through the ⊕ tree reduction ([`super::reduce`]).  Rows below the
+//! configured threshold never fan out — the single-thread vectorized
+//! kernels are bitwise-identical in that regime and avoid all dispatch
+//! overhead.
+
+use crate::exec::{self, ThreadPool};
+use crate::softmax::monoid::{self, MD};
+use crate::softmax::vectorized;
+
+use super::plan::{ShardPlan, ShardRange};
+use super::reduce::{self, ShardPartial};
+
+/// Tuning knobs for a [`ShardEngine`].
+#[derive(Clone, Copy, Debug)]
+pub struct ShardEngineConfig {
+    /// Pool worker threads (0 = one per available core).
+    pub workers: usize,
+    /// Maximum shards per query (0 = same as `workers`).
+    pub max_shards: usize,
+    /// Minimum elements per shard (guards against over-splitting).
+    pub min_shard: usize,
+    /// Row length at which queries start sharding; below it the
+    /// single-thread kernel runs inline (bitwise-identical results).
+    pub threshold: usize,
+}
+
+impl Default for ShardEngineConfig {
+    fn default() -> Self {
+        Self {
+            workers: 0,
+            max_shards: 0,
+            min_shard: ShardPlan::DEFAULT_MIN_SHARD,
+            threshold: 32_768,
+        }
+    }
+}
+
+/// Persistent shard-parallel executor for vocabulary-length rows.
+pub struct ShardEngine {
+    pool: Option<ThreadPool>,
+    workers: usize,
+    max_shards: usize,
+    min_shard: usize,
+    threshold: usize,
+}
+
+impl ShardEngine {
+    pub fn new(cfg: ShardEngineConfig) -> ShardEngine {
+        let workers = if cfg.workers == 0 { exec::default_threads() } else { cfg.workers };
+        let max_shards = if cfg.max_shards == 0 { workers } else { cfg.max_shards };
+        ShardEngine {
+            pool: (workers > 1).then(|| ThreadPool::new(workers, "shard")),
+            workers,
+            max_shards,
+            min_shard: cfg.min_shard,
+            threshold: cfg.threshold.max(1),
+        }
+    }
+
+    /// Number of pool workers (1 = fully inline engine).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// The sharding threshold (row length) this engine was built with.
+    pub fn threshold(&self) -> usize {
+        self.threshold
+    }
+
+    /// Plan a query over a length-`v` row under this engine's config.
+    pub fn plan(&self, v: usize) -> ShardPlan {
+        if v < self.threshold || self.workers <= 1 {
+            ShardPlan::single(v)
+        } else {
+            ShardPlan::auto(v, self.max_shards, self.min_shard)
+        }
+    }
+
+    /// Run `f` over every shard of `plan` (on the pool when the plan is
+    /// sharded, inline otherwise), returning results in shard order.
+    ///
+    /// This is the engine's general fan-out primitive; the coordinator
+    /// uses it directly for sharded *projection + scan* decode, where
+    /// each shard materializes only its own slice of the logits.
+    pub fn map<R, F>(&self, plan: &ShardPlan, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(ShardRange) -> R + Sync,
+    {
+        let n = plan.shards();
+        let pool = match &self.pool {
+            Some(pool) if n > 1 => pool,
+            _ => return plan.ranges().map(f).collect(),
+        };
+        let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        let slots_ptr = SendPtr(slots.as_mut_ptr());
+        let f = &f;
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = plan
+            .ranges()
+            .map(|r| {
+                let slots_ptr = &slots_ptr;
+                Box::new(move || {
+                    let out = f(r);
+                    // SAFETY: each shard index is produced exactly once
+                    // and run_scoped joins all tasks before `slots` is
+                    // read, so writes are disjoint and complete.
+                    unsafe { *slots_ptr.0.add(r.index) = Some(out) };
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(tasks);
+        slots
+            .into_iter()
+            .map(|s| s.expect("shard task did not complete"))
+            .collect()
+    }
+
+    /// Fused online softmax + top-k over one row (Algorithm 4, sharded):
+    /// per-shard single-sweep partials, ⊕/buffer tree reduction, final
+    /// `e^{u−m}/d` scaling.  Returns `(vals, idx)` sorted descending.
+    pub fn fused_topk(&self, x: &[f32], k: usize) -> (Vec<f32>, Vec<i64>) {
+        self.fused_topk_planned(x, k, &self.plan(x.len()))
+    }
+
+    /// [`Self::fused_topk`] under an explicit plan (tests and benches
+    /// pin shard counts with this).
+    pub fn fused_topk_planned(
+        &self,
+        x: &[f32],
+        k: usize,
+        plan: &ShardPlan,
+    ) -> (Vec<f32>, Vec<i64>) {
+        assert_eq!(plan.v(), x.len(), "plan does not cover the row");
+        let parts =
+            self.map(plan, |r| ShardPartial::scan(&x[r.start..r.end], k, r.start as i64));
+        reduce::tree_reduce(parts).finalize()
+    }
+
+    /// Sharded online normalizer: per-shard `(m, d)` partials reduced
+    /// with the ⊕ tree (§3.1 across shards).
+    pub fn normalizer(&self, x: &[f32]) -> MD {
+        self.normalizer_planned(x, &self.plan(x.len()))
+    }
+
+    /// [`Self::normalizer`] under an explicit plan.
+    pub fn normalizer_planned(&self, x: &[f32], plan: &ShardPlan) -> MD {
+        assert_eq!(plan.v(), x.len(), "plan does not cover the row");
+        if !plan.is_sharded() {
+            return vectorized::online_normalizer(x);
+        }
+        let parts = self.map(plan, |r| vectorized::online_normalizer(&x[r.start..r.end]));
+        monoid::tree_reduce(&parts)
+    }
+
+    /// Full sharded online softmax: normalizer reduction, then a
+    /// shard-parallel scale pass into disjoint slices of `out`.
+    pub fn softmax_into(&self, x: &[f32], out: &mut [f32]) {
+        let plan = self.plan(x.len());
+        self.softmax_into_planned(x, out, &plan);
+    }
+
+    /// [`Self::softmax_into`] under an explicit plan.
+    pub fn softmax_into_planned(&self, x: &[f32], out: &mut [f32], plan: &ShardPlan) {
+        assert_eq!(x.len(), out.len());
+        if !plan.is_sharded() {
+            vectorized::online(x, out);
+            return;
+        }
+        let md = self.normalizer_planned(x, plan);
+        let inv = 1.0 / md.d;
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        let out_ref = &out_ptr;
+        self.map(plan, |r| {
+            // SAFETY: shard ranges are disjoint and in-bounds for `out`
+            // (same length as `x`); map joins before `out` is reused.
+            let dst = unsafe {
+                std::slice::from_raw_parts_mut(out_ref.0.add(r.start), r.len())
+            };
+            vectorized::scale_pass(&x[r.start..r.end], dst, md.m, inv);
+        });
+    }
+
+    /// Allocating convenience form of [`Self::softmax_into`].
+    pub fn softmax(&self, x: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0; x.len()];
+        self.softmax_into(x, &mut out);
+        out
+    }
+}
+
+/// Raw pointer wrapper asserting cross-thread transfer is safe under
+/// the disjoint-write discipline documented at each use site.
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Sync for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+    use crate::softmax::{self, fused, Algorithm};
+
+    fn logits(n: usize, seed: u64) -> Vec<f32> {
+        Xoshiro256pp::seed_from_u64(seed).logits(n, 7.0)
+    }
+
+    fn engine(workers: usize, threshold: usize) -> ShardEngine {
+        ShardEngine::new(ShardEngineConfig {
+            workers,
+            max_shards: 0,
+            min_shard: 64,
+            threshold,
+        })
+    }
+
+    #[test]
+    fn sharded_softmax_matches_single_thread() {
+        let eng = engine(4, 256);
+        for n in [256usize, 1000, 4097, 20_000] {
+            let x = logits(n, n as u64);
+            let sharded = eng.softmax(&x);
+            let serial = softmax::compute(&x, Algorithm::Online);
+            for (i, (a, b)) in sharded.iter().zip(&serial).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-9 + 1e-5 * b.abs(),
+                    "n={n} idx={i}: {a} vs {b}"
+                );
+            }
+            let sum: f32 = sharded.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-3, "n={n} sum={sum}");
+        }
+    }
+
+    #[test]
+    fn below_threshold_is_bitwise_identical() {
+        let eng = engine(4, 100_000);
+        let x = logits(5000, 5);
+        assert_eq!(eng.plan(x.len()).shards(), 1);
+        let a = eng.softmax(&x);
+        let b = softmax::compute(&x, Algorithm::Online);
+        assert_eq!(a, b, "serial fallback must be the identical kernel");
+        let md = eng.normalizer(&x);
+        let want = vectorized::online_normalizer(&x);
+        assert_eq!((md.m, md.d), (want.m, want.d));
+    }
+
+    #[test]
+    fn sharded_fused_topk_matches_single_sweep() {
+        let eng = engine(4, 256);
+        for (n, k) in [(300usize, 1usize), (2048, 5), (10_000, 16), (511, 50)] {
+            let x = logits(n, (n * k) as u64);
+            let (sv, si) = eng.fused_topk(&x, k);
+            let (wv, wi) = fused::online_topk(&x, k);
+            assert_eq!(si, wi, "n={n} k={k}");
+            for (a, b) in sv.iter().zip(&wv) {
+                assert!((a - b).abs() <= 2e-5 * a.max(*b), "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn explicit_plans_cover_odd_shard_counts() {
+        let eng = engine(3, 1);
+        let x = logits(1003, 9);
+        let whole = fused::online_topk(&x, 6);
+        for shards in [1usize, 2, 3, 5, 7, 11, 1003] {
+            let plan = ShardPlan::with_shards(x.len(), shards);
+            let (_, idx) = eng.fused_topk_planned(&x, 6, &plan);
+            assert_eq!(idx, whole.1, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn single_worker_engine_runs_inline() {
+        let eng = engine(1, 1);
+        assert_eq!(eng.workers(), 1);
+        let x = logits(9000, 2);
+        assert!(!eng.plan(x.len()).is_sharded());
+        let (_, idx) = eng.fused_topk(&x, 4);
+        assert_eq!(idx, fused::online_topk(&x, 4).1);
+    }
+
+    #[test]
+    fn map_preserves_shard_order() {
+        let eng = engine(4, 1);
+        let plan = ShardPlan::with_shards(1000, 7);
+        let spans = eng.map(&plan, |r| (r.index, r.start, r.end));
+        for (i, (idx, start, end)) in spans.iter().enumerate() {
+            assert_eq!(*idx, i);
+            assert!(start < end);
+        }
+        assert_eq!(spans.len(), 7);
+    }
+
+    #[test]
+    fn empty_and_tiny_rows() {
+        let eng = engine(2, 1);
+        assert!(eng.softmax(&[]).is_empty());
+        let (vals, idx) = eng.fused_topk(&[], 3);
+        assert!(vals.is_empty() && idx.is_empty());
+        let y = eng.softmax(&[4.0]);
+        assert_eq!(y, vec![1.0]);
+    }
+}

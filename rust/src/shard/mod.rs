@@ -1,0 +1,38 @@
+//! Shard-reduction execution layer — §3.1/§4 of the paper promoted to a
+//! system boundary.
+//!
+//! The paper proves the online normalizer `(m, d)` forms an associative,
+//! commutative monoid under ⊕ (eq. 4), and that the fused softmax+top-k
+//! state (Algorithm 4) merges the same way.  That licenses evaluating a
+//! vocabulary row in *any* partition order: SIMD lanes
+//! ([`crate::softmax::vectorized`]), worker threads within one vector
+//! ([`crate::softmax::parallel`]), and — this module — **vocabulary
+//! shards** distributed across a persistent worker pool:
+//!
+//! ```text
+//!   row x[0..V] ── ShardPlan ──► shard 0 ─ scan ─► (m₀, d₀, topk₀) ┐
+//!                               shard 1 ─ scan ─► (m₁, d₁, topk₁) ├─ ⊕ tree ─► finalize
+//!                               ...                               │   (reduce)
+//!                               shard S ─ scan ─► (m_S, d_S, topk_S) ┘
+//! ```
+//!
+//! * [`plan`] — balanced shard arithmetic ([`ShardPlan`]).
+//! * [`reduce`] — [`ShardPartial`] and the ⊕/buffer tree reduction,
+//!   the cross-shard analogue of the paper's Algorithm 4.
+//! * [`engine`] — [`ShardEngine`]: executes plans on an
+//!   [`exec::ThreadPool`](crate::exec::ThreadPool), with a
+//!   threshold-gated single-thread fallback that is bitwise-identical
+//!   to the unsharded kernels.
+//!
+//! The coordinator routes large-vocabulary requests here (see
+//! [`crate::coordinator::executor`]); the same partials arrive from
+//! PJRT engines when AOT artifacts are served, so the reduction code is
+//! shared between the host and accelerator backends.
+
+pub mod engine;
+pub mod plan;
+pub mod reduce;
+
+pub use engine::{ShardEngine, ShardEngineConfig};
+pub use plan::{ShardPlan, ShardRange};
+pub use reduce::{tree_reduce, ShardPartial};

@@ -1,0 +1,152 @@
+//! Shard planning: how a vocabulary-length row splits into per-worker
+//! slices.
+//!
+//! A [`ShardPlan`] is pure arithmetic — balanced contiguous ranges with
+//! the remainder spread over the leading shards — so the same plan can
+//! be replayed deterministically by the engine, the tests, and the
+//! benches.  Shard boundaries never affect results (the ⊕ merge is
+//! associative); they only affect parallelism and cache behaviour.
+
+/// One contiguous slice of the vocabulary axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardRange {
+    /// Shard index in `[0, plan.shards())`.
+    pub index: usize,
+    /// First element (inclusive).
+    pub start: usize,
+    /// One past the last element.
+    pub end: usize,
+}
+
+impl ShardRange {
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+}
+
+/// A balanced split of a length-`v` row into `shards` contiguous ranges.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    v: usize,
+    shards: usize,
+}
+
+impl ShardPlan {
+    /// Default minimum elements per shard: below this, per-shard
+    /// dispatch overhead exceeds the scan cost.
+    pub const DEFAULT_MIN_SHARD: usize = 4096;
+
+    /// Exactly `shards` ranges (clamped to `[1, max(v, 1)]` so no shard
+    /// is ever empty unless `v == 0`).
+    pub fn with_shards(v: usize, shards: usize) -> ShardPlan {
+        ShardPlan { v, shards: shards.clamp(1, v.max(1)) }
+    }
+
+    /// The degenerate single-shard plan (the serial fallback).
+    pub fn single(v: usize) -> ShardPlan {
+        ShardPlan { v, shards: 1 }
+    }
+
+    /// Pick a shard count automatically: as many shards as `max_shards`
+    /// allows while keeping every shard at least `min_shard` elements.
+    pub fn auto(v: usize, max_shards: usize, min_shard: usize) -> ShardPlan {
+        let by_size = if min_shard == 0 { v } else { v / min_shard };
+        ShardPlan::with_shards(v, by_size.clamp(1, max_shards.max(1)))
+    }
+
+    /// Total row length covered by the plan.
+    pub fn v(&self) -> usize {
+        self.v
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Whether the plan actually fans out.
+    pub fn is_sharded(&self) -> bool {
+        self.shards > 1
+    }
+
+    /// The `i`-th range.  Balanced: `v = base·shards + rem`, and the
+    /// first `rem` shards take one extra element.
+    pub fn range(&self, i: usize) -> ShardRange {
+        assert!(i < self.shards, "shard index {i} out of {}", self.shards);
+        let base = self.v / self.shards;
+        let rem = self.v % self.shards;
+        let start = i * base + i.min(rem);
+        let len = base + usize::from(i < rem);
+        ShardRange { index: i, start, end: start + len }
+    }
+
+    /// All ranges in order.
+    pub fn ranges(&self) -> impl Iterator<Item = ShardRange> + '_ {
+        (0..self.shards).map(|i| self.range(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_partition(plan: &ShardPlan) {
+        let mut next = 0;
+        for (i, r) in plan.ranges().enumerate() {
+            assert_eq!(r.index, i);
+            assert_eq!(r.start, next, "ranges must be contiguous");
+            assert!(r.end >= r.start);
+            next = r.end;
+        }
+        assert_eq!(next, plan.v(), "ranges must cover the row exactly");
+    }
+
+    #[test]
+    fn balanced_partition_all_shapes() {
+        for v in [0usize, 1, 2, 7, 100, 101, 4096, 100_000] {
+            for s in [1usize, 2, 3, 5, 8, 64] {
+                let plan = ShardPlan::with_shards(v, s);
+                assert_partition(&plan);
+                // balanced: lengths differ by at most one
+                let lens: Vec<usize> = plan.ranges().map(|r| r.len()).collect();
+                let (lo, hi) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+                assert!(hi - lo <= 1, "v={v} s={s}: {lens:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_count_clamps_to_row_length() {
+        assert_eq!(ShardPlan::with_shards(3, 10).shards(), 3);
+        assert_eq!(ShardPlan::with_shards(0, 10).shards(), 1);
+        assert_eq!(ShardPlan::with_shards(10, 0).shards(), 1);
+    }
+
+    #[test]
+    fn auto_respects_min_shard_and_cap() {
+        // 100k / 4096 = 24 shards by size, capped at 8 workers.
+        assert_eq!(ShardPlan::auto(100_000, 8, 4096).shards(), 8);
+        // small rows stay single-shard
+        assert_eq!(ShardPlan::auto(1000, 8, 4096).shards(), 1);
+        assert_eq!(ShardPlan::auto(8192, 8, 4096).shards(), 2);
+        // min_shard = 0 means "no size floor"
+        assert_eq!(ShardPlan::auto(16, 4, 0).shards(), 4);
+    }
+
+    #[test]
+    fn single_is_one_full_range() {
+        let plan = ShardPlan::single(77);
+        assert!(!plan.is_sharded());
+        assert_eq!(plan.range(0), ShardRange { index: 0, start: 0, end: 77 });
+    }
+
+    #[test]
+    #[should_panic(expected = "out of")]
+    fn range_index_bounds_checked() {
+        ShardPlan::with_shards(10, 2).range(2);
+    }
+}

@@ -1,0 +1,150 @@
+//! Cross-shard reduction: merging per-shard `(m, d, topk)` partials —
+//! the distributed analogue of the paper's Algorithm 4.
+//!
+//! Each shard contributes a [`ShardPartial`]: its online-normalizer
+//! state (eq. 3) and its top-k candidate buffer with *global* indices.
+//! Both components merge associatively — ⊕ (eq. 4) on the normalizer,
+//! incumbent-wins buffer merge on the candidates — so the reduction may
+//! run in any bracketing.  [`tree_reduce`] uses a pairwise bottom-up
+//! tree: log-depth (parallelizable) and slightly *better* fp accuracy
+//! than a left fold (error grows with tree depth, not shard count).
+
+use crate::softmax::fused;
+use crate::softmax::monoid::MD;
+use crate::topk::TopKBuffer;
+
+/// One vocabulary shard's contribution to a fused softmax+top-k query.
+#[derive(Clone, Debug)]
+pub struct ShardPartial {
+    /// Partial online normalizer over the shard's elements.
+    pub md: MD,
+    /// Shard-local top-k candidates carrying global indices.
+    pub topk: TopKBuffer,
+}
+
+impl ShardPartial {
+    /// Scan one shard slice in a single fused sweep (Algorithm 4's
+    /// loop over `[base, base + x.len())` of the global row).
+    pub fn scan(x: &[f32], k: usize, base: i64) -> ShardPartial {
+        let (md, topk) = fused::fused_partial(x, k, base);
+        ShardPartial { md, topk }
+    }
+
+    /// An empty partial (the reduction identity).
+    pub fn identity(k: usize) -> ShardPartial {
+        ShardPartial { md: MD::IDENTITY, topk: TopKBuffer::new(k) }
+    }
+
+    /// Associative merge: ⊕ on `(m, d)`, buffer-merge on the top-k.
+    ///
+    /// Ties between equal logit values resolve to `self`'s incumbent,
+    /// so merging shards in ascending vocabulary order preserves the
+    /// whole-row scan's earliest-index-wins convention.
+    pub fn merge(mut self, other: ShardPartial) -> ShardPartial {
+        self.md = self.md.combine(other.md);
+        self.topk.merge(&other.topk);
+        self
+    }
+
+    /// Lines 17–19 of Algorithm 4 over the merged state.
+    pub fn finalize(&self) -> (Vec<f32>, Vec<i64>) {
+        fused::finalize(&self.topk, self.md)
+    }
+}
+
+/// Pairwise bottom-up tree reduction of shard partials.
+///
+/// Equivalent (up to fp reassociation of `d`; indices exactly) to the
+/// sequential left fold for any input order; adjacent pairing preserves
+/// ascending-shard tie-breaking.
+pub fn tree_reduce(mut parts: Vec<ShardPartial>) -> ShardPartial {
+    assert!(!parts.is_empty(), "tree_reduce of zero shard partials");
+    while parts.len() > 1 {
+        let mut next = Vec::with_capacity(parts.len().div_ceil(2));
+        let mut it = parts.into_iter();
+        while let Some(a) = it.next() {
+            match it.next() {
+                Some(b) => next.push(a.merge(b)),
+                None => next.push(a),
+            }
+        }
+        parts = next;
+    }
+    parts.pop().expect("non-empty by construction")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+    use crate::shard::plan::ShardPlan;
+    use crate::softmax::fused::online_topk;
+
+    fn logits(n: usize, seed: u64) -> Vec<f32> {
+        Xoshiro256pp::seed_from_u64(seed).logits(n, 8.0)
+    }
+
+    fn partials(x: &[f32], k: usize, shards: usize) -> Vec<ShardPartial> {
+        ShardPlan::with_shards(x.len(), shards)
+            .ranges()
+            .map(|r| ShardPartial::scan(&x[r.start..r.end], k, r.start as i64))
+            .collect()
+    }
+
+    #[test]
+    fn tree_reduce_equals_whole_row_scan() {
+        let x = logits(5000, 1);
+        let k = 7;
+        let (want_vals, want_idx) = online_topk(&x, k);
+        for shards in [1usize, 2, 3, 4, 7, 16, 64] {
+            let merged = tree_reduce(partials(&x, k, shards));
+            let (vals, idx) = merged.finalize();
+            assert_eq!(idx, want_idx, "shards={shards}");
+            for (a, b) in vals.iter().zip(&want_vals) {
+                assert!((a - b).abs() <= 2e-5 * a.max(*b), "shards={shards}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn tree_reduce_equals_sequential_fold() {
+        let x = logits(2048, 2);
+        let k = 5;
+        let parts = partials(&x, k, 9);
+        let tree = tree_reduce(parts.clone());
+        let seq = parts
+            .into_iter()
+            .reduce(ShardPartial::merge)
+            .expect("non-empty");
+        assert_eq!(tree.md.m, seq.md.m);
+        assert!((tree.md.d - seq.md.d).abs() <= 1e-5 * seq.md.d);
+        assert_eq!(tree.topk.indices(), seq.topk.indices());
+    }
+
+    #[test]
+    fn merge_with_identity_is_noop() {
+        let x = logits(600, 3);
+        let part = ShardPartial::scan(&x, 4, 0);
+        let merged = part.clone().merge(ShardPartial::identity(4));
+        assert_eq!(merged.md, part.md);
+        assert_eq!(merged.topk.indices(), part.topk.indices());
+        let merged = ShardPartial::identity(4).merge(part.clone());
+        assert_eq!(merged.md, part.md);
+        assert_eq!(merged.topk.indices(), part.topk.indices());
+    }
+
+    #[test]
+    fn single_partial_passes_through() {
+        let x = logits(100, 4);
+        let part = ShardPartial::scan(&x, 3, 0);
+        let reduced = tree_reduce(vec![part.clone()]);
+        assert_eq!(reduced.md, part.md);
+        assert_eq!(reduced.topk.indices(), part.topk.indices());
+    }
+
+    #[test]
+    #[should_panic(expected = "zero shard partials")]
+    fn empty_reduction_panics() {
+        tree_reduce(Vec::new());
+    }
+}

@@ -55,10 +55,23 @@ pub fn online_topk_scalar(x: &[f32], k: usize) -> TopKResult {
 /// insertion is the scalar tail whose cost grows with K — exactly the
 /// effect §5.2's K-sweep measures.
 pub fn online_topk(x: &[f32], k: usize) -> TopKResult {
+    let (md, buf) = fused_partial(x, k, 0);
+    finalize(&buf, md)
+}
+
+/// The single-sweep core of [`online_topk`], exposed as a shard scan:
+/// one fused pass over `x` producing the partial `(m, d)` and the raw
+/// top-k candidate buffer, with global indices offset by `base`.
+///
+/// This is the per-shard leaf of the cross-shard reduction in
+/// [`crate::shard`]: each shard runs `fused_partial` over its slice of
+/// the vocabulary, and the partials merge associatively (⊕ on the
+/// normalizer, buffer-merge on the candidates) in any order.
+pub fn fused_partial(x: &[f32], k: usize, base: i64) -> (MD, TopKBuffer) {
     const BLOCK: usize = 512;
     let mut md = MD::IDENTITY;
     let mut buf = TopKBuffer::new(k);
-    let mut base = 0i64;
+    let mut pos = base;
     for blk in x.chunks(BLOCK) {
         // Vectorized tile: (m_blk, d_blk), then ONE ⊕ fold (eq. 4).
         let m_blk = vectorized::rowmax(blk);
@@ -74,14 +87,14 @@ pub fn online_topk(x: &[f32], k: usize) -> TopKResult {
         if m_blk > thr {
             for (i, &xv) in blk.iter().enumerate() {
                 if xv > thr {
-                    buf.push(xv, base + i as i64);
+                    buf.push(xv, pos + i as i64);
                     thr = buf.threshold();
                 }
             }
         }
-        base += blk.len() as i64;
+        pos += blk.len() as i64;
     }
-    finalize(&buf, md)
+    (md, buf)
 }
 
 /// Safe softmax fused with TopK: max pass, then one pass carrying both
@@ -250,6 +263,19 @@ mod tests {
         for k in [5usize, 10, 15, 30] {
             let r = reference(&x, k);
             assert_result_close(&online_topk(&x, k), &r, 1e-5);
+        }
+    }
+
+    #[test]
+    fn fused_partial_agrees_with_two_sweep_shard_partial() {
+        let x = logits(3000, 9, 7.0);
+        let k = 6;
+        for (lo, hi) in [(0usize, 3000usize), (100, 1500), (513, 514), (0, 0)] {
+            let (md_a, buf_a) = fused_partial(&x[lo..hi], k, lo as i64);
+            let (md_b, buf_b) = shard_partial(&x[lo..hi], k, lo as i64);
+            assert_eq!(md_a.m, md_b.m, "[{lo}, {hi})");
+            assert!((md_a.d - md_b.d).abs() <= 2e-5 * md_b.d.max(1.0), "[{lo}, {hi})");
+            assert_eq!(buf_a.indices(), buf_b.indices(), "[{lo}, {hi})");
         }
     }
 

@@ -12,6 +12,13 @@
 //!
 //! [`compute`]/[`compute_batch`] are the convenience entry points used
 //! by the examples and the serving fallback path.
+//!
+//! One level up, [`crate::shard`] applies the same ⊕ merge across
+//! **vocabulary shards** on a worker pool: [`fused::fused_partial`] is
+//! the per-shard leaf, and the coordinator routes requests whose
+//! vocabulary meets `shard_threshold` onto that engine, falling back to
+//! [`compute`]/[`fused::online_topk`] below it (where the single-thread
+//! kernels are bitwise-identical and dispatch-free).
 
 pub mod batched;
 pub mod fastexp;

@@ -217,6 +217,91 @@ mod tests {
     }
 
     #[test]
+    fn k_equals_one() {
+        let x = [0.5f32, -3.0, 9.0, 9.0, 2.0];
+        let buf = scan_topk(&x, 1, 0);
+        assert_eq!(buf.values(), &[9.0]);
+        assert_eq!(buf.indices(), &[2], "first occurrence wins the tie");
+        assert_eq!(buf.threshold(), 9.0);
+        // merge of two k=1 buffers keeps the global argmax
+        let mut left = scan_topk(&x[..2], 1, 0);
+        left.merge(&scan_topk(&x[2..], 1, 2));
+        assert_eq!(left.indices(), &[2]);
+    }
+
+    #[test]
+    fn k_at_and_above_v_returns_everything() {
+        let x = [2.0f32, 7.0, -1.0];
+        for k in [3usize, 4, 10] {
+            let buf = scan_topk(&x, k, 0);
+            assert_eq!(buf.len_filled(), 3, "k={k}");
+            assert_eq!(&buf.values()[..3], &[7.0, 2.0, -1.0], "k={k}");
+            assert_eq!(&buf.indices()[..3], &[1, 0, 2], "k={k}");
+            // sentinel tail stays untouched (indices() has length k ≥ 3)
+            assert!(buf.indices()[3..].iter().all(|&i| i == -1), "k={k}");
+        }
+    }
+
+    #[test]
+    fn all_equal_values_keep_scan_order_across_merge() {
+        // Incumbent-wins (line 11's strict `<`) must survive a
+        // cross-shard merge: shard 0's indices beat shard 1's.
+        let a = scan_topk(&[5.0f32; 4], 3, 0);
+        let b = scan_topk(&[5.0f32; 4], 3, 4);
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged.indices(), &[0, 1, 2]);
+        // ... and merge order decides nothing the values don't: b-first
+        // still yields b's earliest indices as incumbents.
+        let mut merged = b.clone();
+        merged.merge(&a);
+        assert_eq!(merged.indices(), &[4, 5, 6]);
+    }
+
+    #[test]
+    fn nan_candidates_are_dropped() {
+        // NaN fails every `>` comparison, so it can neither pass the
+        // rejection gate nor bubble past slot K+1 — the buffer stays
+        // NaN-free and ordered.
+        let x = [1.0f32, f32::NAN, 3.0, f32::NAN, 2.0];
+        let buf = scan_topk(&x, 2, 0);
+        assert_eq!(buf.values(), &[3.0, 2.0]);
+        assert_eq!(buf.indices(), &[2, 4]);
+        assert!(buf.values().iter().all(|v| !v.is_nan()));
+        // an all-NaN scan leaves only sentinels
+        let buf = scan_topk(&[f32::NAN; 3], 2, 0);
+        assert_eq!(buf.len_filled(), 0);
+    }
+
+    #[test]
+    fn neg_infinity_never_displaces_sentinels() {
+        // −∞ (vocabulary padding) ties the sentinel value and loses to
+        // the incumbent, so it never enters as a "real" entry.
+        let buf = scan_topk(&[f32::NEG_INFINITY; 5], 3, 0);
+        assert_eq!(buf.len_filled(), 0);
+        assert_eq!(buf.indices(), &[-1, -1, -1]);
+        // mixed: finite values fill, −∞ stays out
+        let buf = scan_topk(&[f32::NEG_INFINITY, 4.0, f32::NEG_INFINITY], 2, 0);
+        assert_eq!(buf.len_filled(), 1);
+        assert_eq!(buf.indices()[0], 1);
+    }
+
+    #[test]
+    fn cross_shard_merge_with_uneven_and_sentinel_shards() {
+        // Shards smaller than k contribute fewer than k real entries;
+        // the merge must take exactly the global top-k anyway.
+        let x = [9.0f32, 1.0, 8.0, 2.0, 7.0, 3.0, 6.0];
+        let k = 4;
+        let whole = scan_topk(&x, k, 0);
+        let mut merged = TopKBuffer::new(k);
+        for (base, chunk) in [(0usize, &x[..2]), (2, &x[2..3]), (3, &x[3..])] {
+            merged.merge(&scan_topk(chunk, k, base as i64));
+        }
+        assert_eq!(merged.values(), whole.values());
+        assert_eq!(merged.indices(), whole.indices());
+    }
+
+    #[test]
     #[should_panic(expected = "k must be positive")]
     fn zero_k_panics() {
         TopKBuffer::new(0);

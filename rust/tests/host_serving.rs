@@ -1,0 +1,261 @@
+//! Host-backend serving integration: the full coordinator stack
+//! (batcher → executor → shard engine → ⊕ reduction) with NO artifacts,
+//! NO PJRT, and NO python — this suite always runs, making the serving
+//! path part of the green `cargo test` gate rather than an
+//! artifact-gated extra.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use onlinesoftmax::config::{BackendKind, ServeConfig, ServingMode};
+use onlinesoftmax::coordinator::{beam, Coordinator, Payload, Reply};
+use onlinesoftmax::rng::Xoshiro256pp;
+use onlinesoftmax::server::{client::Client, Server};
+use onlinesoftmax::softmax::{fused, scalar};
+
+const TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Small, fast host config: vocabulary above the shard threshold so the
+/// sharded path actually engages.
+fn host_config(mode: ServingMode, shard_threshold: usize) -> ServeConfig {
+    let mut cfg = ServeConfig::default();
+    cfg.backend = BackendKind::Host;
+    cfg.mode = mode;
+    cfg.vocab = 2048;
+    cfg.hidden = 32;
+    cfg.host_shards = 4;
+    cfg.shard_threshold = shard_threshold;
+    cfg.workers = 2;
+    cfg.max_wait = Duration::from_micros(500);
+    cfg
+}
+
+fn close(a: f32, b: f32, rtol: f32) -> bool {
+    (a - b).abs() <= 1e-7 + rtol * a.abs().max(b.abs())
+}
+
+#[test]
+fn host_softmax_matches_scalar_reference() {
+    // Threshold 512 < vocab 2048: requests take the sharded path.
+    let coord = Coordinator::start(&host_config(ServingMode::Online, 512)).unwrap();
+    assert!(coord.executor().is_host_backend());
+    let vocab = coord.executor().vocab();
+    assert_eq!(vocab, 2048);
+    let mut rng = Xoshiro256pp::seed_from_u64(1);
+    let logits = rng.logits(vocab, 8.0);
+    match coord.call(Payload::Softmax { logits: logits.clone() }, TIMEOUT).unwrap() {
+        Reply::Softmax { probs } => {
+            let mut want = vec![0.0; vocab];
+            scalar::safe(&logits, &mut want);
+            assert_eq!(probs.len(), vocab);
+            for (i, (a, b)) in probs.iter().zip(&want).enumerate() {
+                assert!(close(*a, *b, 1e-4), "idx {i}: {a} vs {b}");
+            }
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn host_sharded_equals_serial_fallback() {
+    // Same request through the sharded path (low threshold) and the
+    // single-thread fallback (threshold above vocab): identical indices
+    // and near-identical probabilities.
+    let sharded = Coordinator::start(&host_config(ServingMode::Online, 512)).unwrap();
+    let serial = Coordinator::start(&host_config(ServingMode::Online, 1_000_000)).unwrap();
+    let mut rng = Xoshiro256pp::seed_from_u64(2);
+    let logits = rng.logits(2048, 10.0);
+    let ps = match sharded.call(Payload::Softmax { logits: logits.clone() }, TIMEOUT).unwrap() {
+        Reply::Softmax { probs } => probs,
+        other => panic!("{other:?}"),
+    };
+    let pu = match serial.call(Payload::Softmax { logits }, TIMEOUT).unwrap() {
+        Reply::Softmax { probs } => probs,
+        other => panic!("{other:?}"),
+    };
+    for (i, (a, b)) in ps.iter().zip(&pu).enumerate() {
+        assert!(close(*a, *b, 1e-4), "idx {i}: {a} vs {b}");
+    }
+
+    let hidden = rng.logits(32, 1.0);
+    let d_sharded = sharded
+        .call(Payload::DecodeTopK { hidden: hidden.clone(), k: Some(5) }, TIMEOUT)
+        .unwrap();
+    let d_serial = serial
+        .call(Payload::DecodeTopK { hidden, k: Some(5) }, TIMEOUT)
+        .unwrap();
+    match (d_sharded, d_serial) {
+        (Reply::TopK { vals: v1, idx: i1 }, Reply::TopK { vals: v2, idx: i2 }) => {
+            assert_eq!(i1, i2, "sharded and serial decode select the same tokens");
+            for (a, b) in v1.iter().zip(&v2) {
+                assert!(close(*a, *b, 1e-4), "{a} vs {b}");
+            }
+        }
+        other => panic!("{other:?}"),
+    }
+    sharded.shutdown();
+    serial.shutdown();
+}
+
+#[test]
+fn host_decode_matches_reference_and_modes_agree() {
+    let online = Coordinator::start(&host_config(ServingMode::Online, 512)).unwrap();
+    let safe = Coordinator::start(&host_config(ServingMode::Safe, 1_000_000)).unwrap();
+    let mut rng = Xoshiro256pp::seed_from_u64(3);
+    let hidden = rng.logits(32, 1.0);
+
+    let (vals_o, idx_o) = match online
+        .call(Payload::DecodeTopK { hidden: hidden.clone(), k: Some(5) }, TIMEOUT)
+        .unwrap()
+    {
+        Reply::TopK { vals, idx } => (vals, idx),
+        other => panic!("{other:?}"),
+    };
+    let (vals_s, idx_s) = match safe
+        .call(Payload::DecodeTopK { hidden: hidden.clone(), k: Some(5) }, TIMEOUT)
+        .unwrap()
+    {
+        Reply::TopK { vals, idx } => (vals, idx),
+        other => panic!("{other:?}"),
+    };
+    assert_eq!(idx_o, idx_s, "online and safe modes select the same tokens");
+    for (a, b) in vals_o.iter().zip(&vals_s) {
+        assert!(close(*a, *b, 1e-3), "{a} vs {b}");
+    }
+
+    // cross-check against the host-side reference projection + Alg 4
+    let logits = online.executor().model().project_row(&hidden);
+    let (want_vals, want_idx) = fused::online_topk(&logits, 5);
+    assert_eq!(idx_o, want_idx);
+    for (a, b) in vals_o.iter().zip(&want_vals) {
+        assert!(close(*a, *b, 1e-3), "{a} vs {b}");
+    }
+    online.shutdown();
+    safe.shutdown();
+}
+
+#[test]
+fn host_batched_requests_get_individual_answers() {
+    let mut cfg = host_config(ServingMode::Online, 512);
+    cfg.max_batch = 8;
+    cfg.max_wait = Duration::from_millis(20); // force a batching window
+    let coord = Coordinator::start(&cfg).unwrap();
+    let vocab = coord.executor().vocab();
+    let mut rng = Xoshiro256pp::seed_from_u64(4);
+    let inputs: Vec<Vec<f32>> = (0..6).map(|_| rng.logits(vocab, 5.0)).collect();
+    let rxs: Vec<_> = inputs
+        .iter()
+        .map(|l| coord.submit(Payload::Softmax { logits: l.clone() }).unwrap())
+        .collect();
+    for (input, rx) in inputs.iter().zip(rxs) {
+        match rx.recv_timeout(TIMEOUT).unwrap().unwrap() {
+            Reply::Softmax { probs } => {
+                let max_i =
+                    probs.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0;
+                let want_i =
+                    input.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0;
+                assert_eq!(max_i, want_i, "each request got its own answer");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn host_per_request_errors_do_not_poison_batch() {
+    let coord = Coordinator::start(&host_config(ServingMode::Online, 512)).unwrap();
+    let vocab = coord.executor().vocab();
+    let mut rng = Xoshiro256pp::seed_from_u64(5);
+    let good = coord.submit(Payload::Softmax { logits: rng.logits(vocab, 3.0) }).unwrap();
+    let bad = coord.submit(Payload::Softmax { logits: vec![1.0; 3] }).unwrap();
+    assert!(good.recv_timeout(TIMEOUT).unwrap().is_ok());
+    let err = bad.recv_timeout(TIMEOUT).unwrap().unwrap_err();
+    assert!(err.contains("length"), "{err}");
+
+    let err = coord
+        .call(Payload::DecodeTopK { hidden: vec![0.0; 32], k: Some(10_000) }, TIMEOUT)
+        .unwrap_err();
+    assert!(err.contains("k="), "{err}");
+    coord.shutdown();
+}
+
+#[test]
+fn host_lm_sessions_step_deterministically() {
+    let coord = Coordinator::start(&host_config(ServingMode::Online, 512)).unwrap();
+    let s1 = coord.open_session();
+    let s2 = coord.open_session();
+    let r1 = coord.call(Payload::LmStep { session: s1, token: 17, k: Some(5) }, TIMEOUT).unwrap();
+    let r2 = coord.call(Payload::LmStep { session: s2, token: 17, k: Some(5) }, TIMEOUT).unwrap();
+    assert_eq!(r1, r2, "same token from same initial state → same distribution");
+    // diverge the sessions
+    let r1b = coord.call(Payload::LmStep { session: s1, token: 3, k: Some(5) }, TIMEOUT).unwrap();
+    let r2b = coord.call(Payload::LmStep { session: s2, token: 9, k: Some(5) }, TIMEOUT).unwrap();
+    assert_ne!(r1b, r2b, "different tokens diverge the state");
+    // unknown session errors
+    let err = coord
+        .call(Payload::LmStep { session: 999_999, token: 0, k: None }, TIMEOUT)
+        .unwrap_err();
+    assert!(err.contains("unknown session"), "{err}");
+    coord.shutdown();
+}
+
+#[test]
+fn host_beam_search_runs_and_is_deterministic() {
+    let coord = Coordinator::start(&host_config(ServingMode::Online, 512)).unwrap();
+    let cfg = beam::BeamConfig { width: 3, steps: 4, k: 5, timeout: TIMEOUT };
+    let beam1 = beam::beam_search(&coord, cfg, 7).unwrap();
+    let tokens1: Vec<Vec<i32>> = beam1.iter().map(|h| h.tokens.clone()).collect();
+    beam::release(&coord, &beam1);
+    let beam2 = beam::beam_search(&coord, cfg, 7).unwrap();
+    let tokens2: Vec<Vec<i32>> = beam2.iter().map(|h| h.tokens.clone()).collect();
+    beam::release(&coord, &beam2);
+    assert_eq!(tokens1, tokens2, "beam search is deterministic");
+    assert_eq!(tokens1.len(), 3);
+    assert!(tokens1.iter().all(|t| t.len() == 5), "start + 4 steps");
+    coord.shutdown();
+}
+
+#[test]
+fn host_server_full_protocol_over_tcp() {
+    let mut cfg = host_config(ServingMode::Online, 512);
+    cfg.addr = "127.0.0.1:0".into();
+    let coordinator = Arc::new(Coordinator::start(&cfg).unwrap());
+    let server = Server::bind(&cfg.addr, coordinator, 8).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let stop = server.stop_handle();
+    let thread = std::thread::spawn(move || {
+        let _ = server.serve();
+    });
+
+    let mut client = Client::connect(&addr).unwrap();
+    client.ping().unwrap();
+    let stats = client.stats().unwrap();
+    assert!(stats.get("metrics").is_some());
+
+    // softmax over the wire
+    let mut rng = Xoshiro256pp::seed_from_u64(6);
+    let logits = rng.logits(2048, 6.0);
+    let probs = client.softmax(&logits).unwrap();
+    let sum: f32 = probs.iter().sum();
+    assert!((sum - 1.0).abs() < 1e-3, "sum={sum}");
+
+    // decode + sessions
+    let hidden = rng.logits(32, 1.0);
+    let (vals, idx) = client.decode(&hidden, Some(5)).unwrap();
+    assert_eq!(vals.len(), 5);
+    assert!(idx.iter().all(|&i| i >= 0 && (i as usize) < 2048));
+    assert!(vals.windows(2).all(|w| w[0] >= w[1]));
+    let sid = client.open_session().unwrap();
+    let (v1, _) = client.lm_step(sid, 4, Some(3)).unwrap();
+    assert_eq!(v1.len(), 3);
+    client.close_session(sid).unwrap();
+
+    // malformed input is an error, not a hang/disconnect
+    assert!(client.softmax(&[1.0, 2.0]).is_err());
+    client.ping().unwrap();
+
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let _ = thread.join();
+}

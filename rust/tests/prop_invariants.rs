@@ -1,9 +1,12 @@
 //! Property-based invariants over the core algorithms and coordinator
 //! data structures, via the in-crate [`onlinesoftmax::prop`] harness.
 
-use onlinesoftmax::prop::{forall, forall_with, Config, Gen, LogitsVec, Pair, PropResult, UsizeRange};
+use onlinesoftmax::prop::{
+    forall, forall_with, Config, Gen, LogitsVec, Pair, PropResult, UsizeRange,
+};
 use onlinesoftmax::rng::Xoshiro256pp;
-use onlinesoftmax::softmax::{fused, monoid::MD, scalar, vectorized};
+use onlinesoftmax::shard::{tree_reduce, ShardEngine, ShardEngineConfig, ShardPartial, ShardPlan};
+use onlinesoftmax::softmax::{self, fused, monoid::MD, scalar, vectorized, Algorithm};
 use onlinesoftmax::topk::{heap_topk, scan_topk, TopKBuffer};
 
 const LOGITS: LogitsVec = LogitsVec { min_len: 1, max_len: 800 };
@@ -206,6 +209,125 @@ fn prop_topk_probs_are_the_k_largest() {
             if !close(y[idx[i] as usize], *v, 1e-4) {
                 return Err(format!("idx {} does not carry value {}", idx[i], v));
             }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Shard-layer invariants (the cross-shard §3.1/§4 reduction)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_shard_plan_partitions_exactly() {
+    let gen = Pair(UsizeRange(0, 5000), UsizeRange(1, 64));
+    forall(&gen, |&(v, shards)| {
+        let plan = ShardPlan::with_shards(v, shards);
+        let mut next = 0usize;
+        for r in plan.ranges() {
+            if r.start != next {
+                return Err(format!("gap at {next} (v={v}, shards={shards})"));
+            }
+            next = r.end;
+        }
+        if next != v {
+            return Err(format!("covers {next} of {v}"));
+        }
+        let lens: Vec<usize> = plan.ranges().map(|r| r.len()).collect();
+        let (lo, hi) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+        if hi - lo > 1 {
+            return Err(format!("unbalanced: {lens:?}"));
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_sharded_softmax_matches_compute() {
+    // The tentpole invariant: for ANY shard count, the shard engine's
+    // softmax equals the single-thread kernel within fp reassociation
+    // tolerance (and the selected maxima bitwise).
+    let engine = ShardEngine::new(ShardEngineConfig {
+        workers: 4,
+        min_shard: 1,
+        threshold: 1,
+        ..Default::default()
+    });
+    let gen = Pair(LogitsVec { min_len: 1, max_len: 600 }, UsizeRange(1, 24));
+    let cfg = Config { cases: 120, ..Config::default() };
+    forall_with(cfg, &gen, |(x, shards)| {
+        let plan = ShardPlan::with_shards(x.len(), *shards);
+        let mut sharded = vec![0.0; x.len()];
+        engine.softmax_into_planned(x, &mut sharded, &plan);
+        let serial = softmax::compute(x, Algorithm::Online);
+        for (i, (a, b)) in sharded.iter().zip(&serial).enumerate() {
+            if (a - b).abs() > 1e-9 + 1e-4 * b.abs() {
+                return Err(format!("shards={shards} idx={i}: {a} vs {b}"));
+            }
+        }
+        let sum: f32 = sharded.iter().sum();
+        if !close(sum, 1.0, 1e-3) {
+            return Err(format!("shards={shards}: sum {sum} != 1"));
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_sharded_fused_topk_matches_single_sweep() {
+    let engine = ShardEngine::new(ShardEngineConfig {
+        workers: 3,
+        min_shard: 1,
+        threshold: 1,
+        ..Default::default()
+    });
+    let gen =
+        Pair(Pair(LogitsVec { min_len: 1, max_len: 500 }, UsizeRange(1, 16)), UsizeRange(1, 12));
+    let cfg = Config { cases: 120, ..Config::default() };
+    forall_with(cfg, &gen, |((x, k), shards)| {
+        let k = (*k).max(1);
+        let plan = ShardPlan::with_shards(x.len(), *shards);
+        let (sv, si) = engine.fused_topk_planned(x, k, &plan);
+        let (wv, wi) = fused::online_topk(x, k);
+        if si != wi {
+            return Err(format!("shards={shards} k={k}: {si:?} vs {wi:?}"));
+        }
+        for (a, b) in sv.iter().zip(&wv) {
+            if (a - b).abs() > 1e-9 + 1e-4 * a.abs().max(b.abs()) {
+                return Err(format!("shards={shards} k={k}: val {a} vs {b}"));
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_tree_reduce_is_bracketing_invariant() {
+    // ⊕ associativity at the partial level: the pairwise tree and the
+    // sequential left fold agree for any shard decomposition.
+    let gen =
+        Pair(Pair(LogitsVec { min_len: 2, max_len: 400 }, UsizeRange(1, 8)), UsizeRange(2, 10));
+    forall(&gen, |((x, k), shards)| {
+        let k = (*k).max(1);
+        let plan = ShardPlan::with_shards(x.len(), *shards);
+        let parts: Vec<ShardPartial> = plan
+            .ranges()
+            .map(|r| ShardPartial::scan(&x[r.start..r.end], k, r.start as i64))
+            .collect();
+        let tree = tree_reduce(parts.clone());
+        let seq = parts.into_iter().reduce(ShardPartial::merge).unwrap();
+        if tree.md.m != seq.md.m {
+            return Err(format!("m: {} vs {}", tree.md.m, seq.md.m));
+        }
+        if !close(tree.md.d, seq.md.d, 1e-4) {
+            return Err(format!("d: {} vs {}", tree.md.d, seq.md.d));
+        }
+        if tree.topk.indices() != seq.topk.indices() {
+            return Err(format!("{:?} vs {:?}", tree.topk.indices(), seq.topk.indices()));
         }
         Ok(())
     })

@@ -1,0 +1,264 @@
+//! Offline-vendored, dependency-free reimplementation of the `anyhow`
+//! error-handling surface this workspace actually uses.
+//!
+//! The build container ships no crate registry, so the real `anyhow` is
+//! unavailable; this crate provides an API-compatible subset:
+//!
+//! * [`Error`] — a boxed error with a context *chain*; `{e}` prints the
+//!   outermost message, `{e:#}` prints the full `outer: inner: …` chain
+//!   (matching anyhow's alternate formatting, which the test-suite
+//!   asserts on).
+//! * [`Result<T>`] — alias with the usual default error parameter.
+//! * [`anyhow!`] / [`bail!`] — ad-hoc error construction macros
+//!   supporting format literals (with inline captures) and bare
+//!   `Display` expressions.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result`
+//!   (both foreign error types and [`Error`] itself) and on `Option`.
+//!
+//! Unsupported (unused by this workspace): downcasting, backtraces,
+//! `ensure!`.
+
+use std::fmt;
+
+/// `Result` alias with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error message plus an optional chain of underlying causes.
+///
+/// Like `anyhow::Error`, this type deliberately does **not** implement
+/// `std::error::Error`: that keeps the blanket `From<E: std::error::Error>`
+/// conversion (which powers `?`) coherent.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg(message: impl fmt::Display) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context(self, context: impl fmt::Display) -> Error {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// Build an error from a `std::error::Error`, preserving its
+    /// `source()` chain as nested context.
+    pub fn from_std(err: &(dyn std::error::Error + 'static)) -> Error {
+        let mut chain: Vec<String> = Vec::new();
+        let mut cur: Option<&(dyn std::error::Error + 'static)> = Some(err);
+        while let Some(e) = cur {
+            chain.push(e.to_string());
+            cur = e.source();
+        }
+        let mut built: Option<Error> = None;
+        for msg in chain.into_iter().rev() {
+            built = Some(Error { msg, source: built.map(Box::new) });
+        }
+        built.expect("error chain has at least one element")
+    }
+
+    /// The outermost message.
+    pub fn message(&self) -> &str {
+        &self.msg
+    }
+
+    /// Iterate the context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut msgs = vec![self.msg.as_str()];
+        let mut cur = self.source.as_deref();
+        while let Some(e) = cur {
+            msgs.push(e.msg.as_str());
+            cur = e.source.as_deref();
+        }
+        msgs.into_iter()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{e:#}` — the full chain, anyhow-style.
+            for (i, msg) in self.chain().enumerate() {
+                if i > 0 {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{msg}")?;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = self.source.as_deref();
+        if cur.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {}", e.msg)?;
+            cur = e.source.as_deref();
+        }
+        Ok(())
+    }
+}
+
+/// `?`-conversion from any boxable standard error.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Error {
+        Error::from_std(&err)
+    }
+}
+
+/// `.context(..)` / `.with_context(..)` — anyhow's context extension.
+pub trait Context<T, E> {
+    /// Wrap the error value with additional context.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display;
+
+    /// Wrap the error value with lazily-evaluated context.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from_std(&e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from_std(&e).context(f()))
+    }
+}
+
+/// Context over `anyhow::Result` itself (chains another layer).
+impl<T> Context<T, Error> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+/// Context over `Option`: `None` becomes an error from the context.
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an ad-hoc [`Error`].
+///
+/// `anyhow!("literal with {captures}")`, `anyhow!("fmt {}", args)`, and
+/// `anyhow!(display_expr)` are all supported.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an ad-hoc error: `return Err(anyhow!(..))`.
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return Err($crate::anyhow!($($tt)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = anyhow!("outer {}", 42);
+        assert_eq!(format!("{e}"), "outer 42");
+        let wrapped = e.context("while testing");
+        assert_eq!(format!("{wrapped}"), "while testing");
+        assert_eq!(format!("{wrapped:#}"), "while testing: outer 42");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = f().unwrap_err();
+        assert!(format!("{e}").contains("file missing"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("opening {}", "x.json")).unwrap_err();
+        assert_eq!(format!("{e:#}"), "opening x.json: file missing");
+
+        let o: Option<u32> = None;
+        let e = o.context("missing value").unwrap_err();
+        assert_eq!(format!("{e}"), "missing value");
+        assert_eq!(Some(7u32).context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn context_layers_stack() {
+        fn inner() -> Result<()> {
+            bail!("root cause")
+        }
+        let e = inner().context("mid").context("top").unwrap_err();
+        assert_eq!(format!("{e:#}"), "top: mid: root cause");
+        assert_eq!(e.chain().count(), 3);
+    }
+
+    #[test]
+    fn bare_expression_form() {
+        let s = String::from("stringly error");
+        let e: Error = anyhow!(s);
+        assert_eq!(format!("{e}"), "stringly error");
+    }
+
+    #[test]
+    fn debug_shows_causes() {
+        let e = Error::msg("inner").context("outer");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("outer") && dbg.contains("Caused by") && dbg.contains("inner"));
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}
