@@ -108,6 +108,11 @@ pub struct ServeConfig {
     /// Vocabulary length at which host requests route onto the sharded
     /// path; below it the single-thread kernels run inline.
     pub shard_threshold: usize,
+    /// Maximum batch rows tiled into one batch×shard grid dispatch on
+    /// the host backend (0 = the whole batch; 1 = per-row dispatch, the
+    /// degenerate grid).  Results are bitwise-identical for every
+    /// setting — this only shapes scheduling.
+    pub grid_rows: usize,
 }
 
 impl Default for ServeConfig {
@@ -128,6 +133,7 @@ impl Default for ServeConfig {
             hidden: 128,
             host_shards: 0,
             shard_threshold: 32_768,
+            grid_rows: 0,
         }
     }
 }
@@ -188,6 +194,9 @@ impl ServeConfig {
         if let Some(n) = v.get("shard_threshold").and_then(Value::as_usize) {
             cfg.shard_threshold = n;
         }
+        if let Some(n) = v.get("grid_rows").and_then(Value::as_usize) {
+            cfg.grid_rows = n;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -218,6 +227,7 @@ impl ServeConfig {
         self.hidden = args.opt_parse("hidden", self.hidden)?;
         self.host_shards = args.opt_parse("host-shards", self.host_shards)?;
         self.shard_threshold = args.opt_parse("shard-threshold", self.shard_threshold)?;
+        self.grid_rows = args.opt_parse("grid-rows", self.grid_rows)?;
         self.validate()
     }
 
@@ -269,7 +279,8 @@ impl ServeConfig {
             .set("vocab", Value::Number(self.vocab as f64))
             .set("hidden", Value::Number(self.hidden as f64))
             .set("host_shards", Value::Number(self.host_shards as f64))
-            .set("shard_threshold", Value::Number(self.shard_threshold as f64));
+            .set("shard_threshold", Value::Number(self.shard_threshold as f64))
+            .set("grid_rows", Value::Number(self.grid_rows as f64));
         v
     }
 }
@@ -292,6 +303,7 @@ mod tests {
         cfg.vocab = 4096;
         cfg.host_shards = 6;
         cfg.shard_threshold = 1024;
+        cfg.grid_rows = 8;
         let back = ServeConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.shards, 4);
         assert_eq!(back.mode, ServingMode::Safe);
@@ -301,6 +313,7 @@ mod tests {
         assert_eq!(back.hidden, cfg.hidden);
         assert_eq!(back.host_shards, 6);
         assert_eq!(back.shard_threshold, 1024);
+        assert_eq!(back.grid_rows, 8);
     }
 
     #[test]
@@ -339,16 +352,20 @@ mod tests {
         assert_eq!(BackendKind::parse("artifacts").unwrap(), BackendKind::Artifacts);
 
         let mut cfg = ServeConfig::default();
-        let raw: Vec<String> =
-            ["--backend", "host", "--vocab", "2048", "--shard-threshold", "512"]
-                .iter()
-                .map(|s| s.to_string())
-                .collect();
-        let args = Args::parse(&raw, &["backend", "vocab", "shard-threshold"]).unwrap();
+        let raw: Vec<String> = [
+            "--backend", "host", "--vocab", "2048", "--shard-threshold", "512",
+            "--grid-rows", "4",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let args =
+            Args::parse(&raw, &["backend", "vocab", "shard-threshold", "grid-rows"]).unwrap();
         cfg.apply_args(&args).unwrap();
         assert_eq!(cfg.backend, BackendKind::Host);
         assert_eq!(cfg.vocab, 2048);
         assert_eq!(cfg.shard_threshold, 512);
+        assert_eq!(cfg.grid_rows, 4);
     }
 
     #[test]

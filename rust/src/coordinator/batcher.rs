@@ -11,6 +11,12 @@
 //!   different artifacts);
 //! * batches are padded up to the artifact bucket sizes by the executor
 //!   (see [`super::executor`]), so the batcher only bounds, never pads.
+//!
+//! On the host backend a formed batch becomes the **rows dimension** of
+//! the executor's batch×shard grid dispatch: `max_batch` therefore
+//! bounds rows-per-grid (further capped by `grid_rows`), and a larger
+//! `max_wait` trades first-request latency for wider grids and better
+//! pool occupancy.
 
 use std::collections::HashMap;
 use std::collections::VecDeque;

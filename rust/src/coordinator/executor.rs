@@ -8,12 +8,17 @@
 //!   per vocabulary shard); in sharded mode every shard produces a
 //!   partial `(m, d, topk)` on its own engine and the coordinator
 //!   merges them in rust with the ⊕ operator (eq. 4).
-//! * **Host** — the in-process [`shard`](crate::shard) engine: requests
-//!   at or above `shard_threshold` fan out across the shard pool
-//!   (per-shard fused scan → ⊕ tree reduction, the cross-shard
-//!   Algorithm 4); smaller requests fall back to the single-thread
-//!   [`softmax::compute`]/[`fused`] kernels.  No artifacts, no python,
-//!   no PJRT — this is the default serving path on a bare build.
+//! * **Host** — the in-process [`shard`](crate::shard) engine: batches
+//!   whose vocabulary is at or above `shard_threshold` tile onto the
+//!   shard pool as a **batch×shard grid** (rows × vocabulary shards,
+//!   all tiles in one scoped dispatch, per-row ⊕ tree reductions
+//!   running concurrently — the cross-shard Algorithm 4 at batch
+//!   scale); smaller requests fall back to the single-thread
+//!   [`softmax::compute`]/[`fused`] kernels.  `grid_rows` caps the
+//!   rows per dispatch (0 = whole batch; 1 = the degenerate per-row
+//!   grid, bitwise-identical by construction).  No artifacts, no
+//!   python, no PJRT — this is the default serving path on a bare
+//!   build.
 //!
 //! Batching detail: requests are padded up to the artifact batch
 //! buckets compiled by `aot.py` (1/4/16 by default); pad rows are zeros
@@ -59,6 +64,8 @@ pub struct Executor {
     hidden: usize,
     artifact_k: usize,
     shard_threshold: usize,
+    /// Rows per batch×shard grid dispatch (0 = whole batch).
+    grid_rows: usize,
     /// LM session states, (hidden,) per session.
     sessions: Mutex<HashMap<u64, Vec<f32>>>,
 }
@@ -105,9 +112,11 @@ impl Executor {
         let shard_engine = Self::shard_engine_from(cfg);
         crate::info!(
             "coordinator.executor",
-            "host backend: vocab {vocab}, hidden {hidden}, {} shard workers, threshold {}",
+            "host backend: vocab {vocab}, hidden {hidden}, {} shard workers, threshold {}, \
+             grid rows {}",
             shard_engine.workers(),
-            shard_engine.threshold()
+            shard_engine.threshold(),
+            if cfg.grid_rows == 0 { "auto".to_string() } else { cfg.grid_rows.to_string() }
         );
         Ok(Executor {
             backend: Backend::Host,
@@ -120,6 +129,7 @@ impl Executor {
             hidden,
             artifact_k,
             shard_threshold: cfg.shard_threshold,
+            grid_rows: cfg.grid_rows,
             sessions: Mutex::new(HashMap::new()),
         })
     }
@@ -177,6 +187,7 @@ impl Executor {
             hidden,
             artifact_k,
             shard_threshold: cfg.shard_threshold,
+            grid_rows: cfg.grid_rows,
             sessions: Mutex::new(HashMap::new()),
         };
         executor.register_params()?;
@@ -225,6 +236,16 @@ impl Executor {
     /// The shard engine backing host-mode requests (host backend only).
     fn host_shard_engine(&self) -> &ShardEngine {
         self.shard_engine.as_ref().expect("shard engine exists on the host backend")
+    }
+
+    /// Rows per grid dispatch for a batch of `batch` live rows:
+    /// `grid_rows` caps the fan-out, 0 means the whole batch at once.
+    fn grid_chunk(&self, batch: usize) -> usize {
+        if self.grid_rows == 0 {
+            batch.max(1)
+        } else {
+            self.grid_rows
+        }
     }
 
     /// Create (or reset) an LM session with a zero state.
@@ -322,23 +343,35 @@ impl Executor {
         Ok(out)
     }
 
-    /// Host softmax.  In `online` mode, rows at/above the shard
-    /// threshold run on the shard engine (per-shard `(m, d)` partials,
-    /// ⊕ tree reduction, shard-parallel scale); smaller rows use the
-    /// single-thread online kernel.  `safe` mode is the paper's
-    /// baseline and therefore *always* runs the single-thread 3-pass
-    /// safe kernel — sharding is exactly the capability the online
-    /// normalizer's ⊕ monoid buys, so the baseline must not get it.
+    /// Host softmax.  In `online` mode with the served vocabulary at or
+    /// above the shard threshold, the whole batch tiles onto the shard
+    /// pool as a batch×shard grid (chunked by `grid_rows`): per-tile
+    /// `(m, d)` partials, concurrent per-row ⊕ tree reductions, one
+    /// scoped join per pass — instead of one fan-out/join per row.
+    /// Below the threshold rows run the single-thread online kernel.
+    /// `safe` mode is the paper's baseline and therefore *always* runs
+    /// the single-thread 3-pass safe kernel — sharding and grid
+    /// batching are exactly the capabilities the online normalizer's ⊕
+    /// monoid buys, so the baseline must not get them.
     fn softmax_host(&self, rows: &[&[f32]]) -> Vec<Vec<f32>> {
-        rows.iter()
-            .map(|r| match self.mode {
-                ServingMode::Safe => softmax::compute(r, Algorithm::Safe),
-                ServingMode::Online if r.len() >= self.shard_threshold => {
-                    self.host_shard_engine().softmax(r)
+        match self.mode {
+            ServingMode::Safe => {
+                rows.iter().map(|r| softmax::compute(r, Algorithm::Safe)).collect()
+            }
+            // Live rows are validated to exactly `vocab` elements, so
+            // the threshold check is uniform across the batch.
+            ServingMode::Online if self.vocab >= self.shard_threshold => {
+                let engine = self.host_shard_engine();
+                let mut out = Vec::with_capacity(rows.len());
+                for chunk in rows.chunks(self.grid_chunk(rows.len())) {
+                    out.extend(engine.softmax_batch(chunk));
                 }
-                ServingMode::Online => softmax::compute(r, Algorithm::Online),
-            })
-            .collect()
+                out
+            }
+            ServingMode::Online => {
+                rows.iter().map(|r| softmax::compute(r, Algorithm::Online)).collect()
+            }
+        }
     }
 
     fn softmax_unsharded(
@@ -534,38 +567,56 @@ impl Executor {
     }
 
     /// Host decode.  In `online` mode with the vocabulary at/above the
-    /// threshold, each shard materializes only its slice of the logits
-    /// (sharded projection), scans it with Algorithm 4, and the
-    /// partials ⊕-merge in the tree reduction.  Smaller vocabularies
-    /// use the single-thread fused kernel.  `safe` mode always runs
-    /// the framework-baseline path (full projection, materialized safe
-    /// softmax, separate top-k) — the baseline the paper compares
-    /// against, deliberately unsharded (see [`Self::softmax_host`]).
+    /// threshold the whole batch executes as a batch×shard grid
+    /// (chunked by `grid_rows`): each (row, shard) tile materializes
+    /// only its own slice of the logits (sharded projection) and scans
+    /// it with Algorithm 4, and per-row partials ⊕-merge in concurrent
+    /// tree reductions under a single scoped join.  Smaller
+    /// vocabularies use the single-thread fused kernel per row.  `safe`
+    /// mode always runs the framework-baseline path (full projection,
+    /// materialized safe softmax, separate top-k) — the baseline the
+    /// paper compares against, deliberately unsharded (see
+    /// [`Self::softmax_host`]).
     fn decode_host(&self, states: &[&[f32]]) -> Vec<(Vec<f32>, Vec<i64>)> {
         let k = self.artifact_k;
-        states
-            .iter()
-            .map(|h| match self.mode {
-                ServingMode::Safe => {
+        match self.mode {
+            ServingMode::Safe => states
+                .iter()
+                .map(|h| {
                     let logits = self.model.project_row(h);
                     let mut scratch = Vec::new();
                     fused::safe_unfused_topk(&logits, k, &mut scratch)
+                })
+                .collect(),
+            ServingMode::Online if self.vocab >= self.shard_threshold => {
+                let engine = self.host_shard_engine();
+                let model = &self.model;
+                let mut out = Vec::with_capacity(states.len());
+                for chunk in states.chunks(self.grid_chunk(states.len())) {
+                    let grid = engine.grid_plan(chunk.len(), self.vocab);
+                    out.extend(engine.grid_map(
+                        &grid,
+                        |tile| {
+                            let logits = model.project_range(
+                                chunk[tile.row],
+                                tile.range.start,
+                                tile.range.end,
+                            );
+                            ShardPartial::scan(&logits, k, tile.range.start as i64)
+                        },
+                        |_row, parts| shard::tree_reduce(parts).finalize(),
+                    ));
                 }
-                ServingMode::Online if self.vocab >= self.shard_threshold => {
-                    let engine = self.host_shard_engine();
-                    let plan = engine.plan(self.vocab);
-                    let parts = engine.map(&plan, |r| {
-                        let logits = self.model.project_range(h, r.start, r.end);
-                        ShardPartial::scan(&logits, k, r.start as i64)
-                    });
-                    shard::tree_reduce(parts).finalize()
-                }
-                ServingMode::Online => {
+                out
+            }
+            ServingMode::Online => states
+                .iter()
+                .map(|h| {
                     let logits = self.model.project_row(h);
                     fused::online_topk(&logits, k)
-                }
-            })
-            .collect()
+                })
+                .collect(),
+        }
     }
 
     fn decode_unsharded(

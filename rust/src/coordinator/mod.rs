@@ -9,6 +9,9 @@
 //!                   ┌──────────────┬──────┴────────┬──────────────┐
 //!               softmax        decode topk      lm step        (classes)
 //!                   │              │               │
+//!         host backend: batch×shard GridPlan → shard pool tiles →
+//!         concurrent per-row ⊕ tree reductions (one scoped join)
+//!                   │
 //!             EnginePool (PJRT CPU clients, AOT artifacts)
 //!                   │
 //!          sharded mode: per-shard (m, d, topk) partials,

@@ -1,10 +1,14 @@
 //! Fixed-size worker pool with a shared FIFO injector queue.
 //!
-//! Semantics match the classic `ThreadPool` contract: [`execute`]
-//! enqueues a boxed `'static` task; workers drain the queue; dropping
-//! the pool signals shutdown and joins all workers after the queue is
-//! empty.  [`ThreadPool::join_idle`] lets tests and the coordinator
-//! quiesce without tearing the pool down.
+//! Semantics match the classic `ThreadPool` contract:
+//! [`ThreadPool::execute`] enqueues a boxed `'static` task; workers
+//! drain the queue; dropping the pool signals shutdown and joins all
+//! workers after the queue is empty.  [`ThreadPool::join_idle`] lets
+//! tests and the coordinator quiesce without tearing the pool down.
+//! [`ThreadPool::execute_all`] admits a whole batch of tasks under one
+//! lock acquisition — the enqueue path behind the shard layer's grid
+//! dispatch, where an R×S tile fan-out would otherwise pay R·S
+//! lock/notify round-trips.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
@@ -71,6 +75,20 @@ impl ThreadPool {
         self.shared.work_cv.notify_one();
     }
 
+    /// Enqueue a batch of tasks atomically: one lock acquisition, one
+    /// wake-all, FIFO order preserved.  Panics if called after shutdown
+    /// began (drop).
+    pub fn execute_all(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'static>>) {
+        if tasks.is_empty() {
+            return;
+        }
+        let mut st = self.shared.queue.lock().unwrap();
+        assert!(!st.shutdown, "execute on shut-down pool");
+        st.tasks.extend(tasks);
+        drop(st);
+        self.shared.work_cv.notify_all();
+    }
+
     /// Number of queued (not yet running) tasks.
     pub fn queued(&self) -> usize {
         self.shared.queue.lock().unwrap().tasks.len()
@@ -97,20 +115,25 @@ impl ThreadPool {
     /// the caller blocks a slot while waiting, which can deadlock.
     pub fn run_scoped<'scope>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
         let wg = WaitGroup::new();
-        for task in tasks {
-            let guard = wg.add();
-            // SAFETY: `wg.wait()` below does not return until every
-            // task has run (or unwound) and dropped its guard, so all
-            // 'scope borrows captured by `task` strictly outlive its
-            // execution on the worker thread.  The transmute only
-            // erases the lifetime; layout is identical.
-            let task: Box<dyn FnOnce() + Send + 'static> =
-                unsafe { std::mem::transmute(task) };
-            self.execute(move || {
-                let _guard = guard;
-                task();
-            });
-        }
+        let tasks: Vec<Task> = tasks
+            .into_iter()
+            .map(|task| {
+                let guard = wg.add();
+                // SAFETY: `wg.wait()` below does not return until every
+                // task has run (or unwound) and dropped its guard, so
+                // all 'scope borrows captured by `task` strictly
+                // outlive its execution on the worker thread.  The
+                // transmute only erases the lifetime; layout is
+                // identical.
+                let task: Box<dyn FnOnce() + Send + 'static> =
+                    unsafe { std::mem::transmute(task) };
+                Box::new(move || {
+                    let _guard = guard;
+                    task();
+                }) as Task
+            })
+            .collect();
+        self.execute_all(tasks);
         wg.wait();
     }
 }
@@ -253,6 +276,23 @@ mod tests {
     fn run_scoped_with_empty_task_list_returns() {
         let pool = ThreadPool::new(1, "t");
         pool.run_scoped(Vec::new());
+    }
+
+    #[test]
+    fn execute_all_runs_batch_in_fifo_order() {
+        let pool = ThreadPool::new(1, "t"); // one worker → strict FIFO
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let tasks: Vec<Box<dyn FnOnce() + Send + 'static>> = (0..16)
+            .map(|i| {
+                let order = order.clone();
+                Box::new(move || order.lock().unwrap().push(i))
+                    as Box<dyn FnOnce() + Send + 'static>
+            })
+            .collect();
+        pool.execute_all(tasks);
+        pool.execute_all(Vec::new()); // empty batch is a no-op
+        pool.join_idle();
+        assert_eq!(*order.lock().unwrap(), (0..16).collect::<Vec<i32>>());
     }
 
     #[test]

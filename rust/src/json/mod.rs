@@ -1,7 +1,7 @@
 //! Minimal-but-complete JSON substrate (no `serde` in the offline registry).
 //!
 //! Implements RFC 8259: a [`Value`] tree, a recursive-descent [`parse`]r
-//! with precise error positions, and a compact [`Value::to_string`] /
+//! with precise error positions, and a compact [`Value::to_json`] /
 //! pretty serializer.  Used by the artifact [`manifest`](crate::runtime),
 //! the wire protocol ([`server`](crate::server)), golden-vector tests,
 //! and the config loader.

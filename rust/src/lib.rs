@@ -12,7 +12,9 @@
 //! * **Shard layer** ([`shard`]) — the shard-reduction execution engine:
 //!   vocabulary rows split into balanced shards, scanned in parallel on
 //!   a persistent pool, and merged with the ⊕ tree reduction (the
-//!   cross-shard Algorithm 4).  The coordinator routes large-vocab
+//!   cross-shard Algorithm 4).  Whole batches tile as a batch×shard
+//!   grid ([`shard::GridPlan`]) dispatched in one scheduling pass with
+//!   concurrent per-row reductions.  The coordinator routes large-vocab
 //!   requests here.
 //! * **Runtime** ([`runtime`]) — loads AOT-compiled JAX/Pallas decode
 //!   graphs (HLO text in `artifacts/`) into a PJRT CPU client; python is

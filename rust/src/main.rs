@@ -26,7 +26,7 @@ const VALUE_OPTS: &[&str] = &[
     "config", "addr", "artifacts", "mode", "shards", "max-batch", "max-wait-us",
     "queue-capacity", "workers", "k", "seed", "fig", "sizes", "batch", "threads",
     "device", "requests", "concurrency", "op", "out", "backend", "vocab", "hidden",
-    "host-shards", "shard-threshold",
+    "host-shards", "shard-threshold", "grid-rows",
 ];
 
 fn main() {
@@ -81,11 +81,16 @@ fn print_help() {
            --hidden N           hidden width (host backend)   [128]\n\
            --host-shards N      shard-engine workers (0=auto) [0]\n\
            --shard-threshold N  sharded-path vocab cutoff     [32768]\n\
+           --grid-rows N        rows per batch×shard grid dispatch\n\
+                                (0=whole batch, 1=per-row)    [0]\n\
            --max-batch N        dynamic batch bound [16]\n\
            --max-wait-us N      batch deadline      [2000]\n\
-           --workers N          executor workers    [2]\n\n\
+           --queue-capacity N   admission queue bound         [1024]\n\
+           --workers N          executor workers    [2]\n\
+           --k N                default decode top-k          [5]\n\
+           --seed N             synthetic-model RNG seed      [0xC0FFEE]\n\n\
          BENCH OPTIONS:\n\
-           --fig 1|2|3|4|k|ablation|all  which figure/study  [all]\n\
+           --fig 1|2|3|4|k|ablation|grid|all  which figure/study  [all]\n\
            --sizes a,b,c        vector sizes V override\n\
            --batch N            batch size override\n\
            --threads N          worker threads for parallel/sharded variants\n\
@@ -130,15 +135,17 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "4" => benches::fig4(&opts),
         "k" => benches::k_sweep(&opts),
         "ablation" | "shard" => benches::shard_ablation(&opts),
+        "grid" => benches::grid_ablation(&opts),
         "all" => {
             benches::fig1(&opts)?;
             benches::fig2(&opts)?;
             benches::fig3(&opts)?;
             benches::fig4(&opts)?;
             benches::k_sweep(&opts)?;
-            benches::shard_ablation(&opts)
+            benches::shard_ablation(&opts)?;
+            benches::grid_ablation(&opts)
         }
-        other => Err(anyhow!("unknown figure `{other}` (1|2|3|4|k|ablation|all)")),
+        other => Err(anyhow!("unknown figure `{other}` (1|2|3|4|k|ablation|grid|all)")),
     }
 }
 

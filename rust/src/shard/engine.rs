@@ -9,11 +9,24 @@
 //! configured threshold never fan out — the single-thread vectorized
 //! kernels are bitwise-identical in that regime and avoid all dispatch
 //! overhead.
+//!
+//! Whole batches execute through the batch×shard grid
+//! ([`super::grid`]): every (row, shard) tile of a [`GridPlan`] is
+//! submitted to the pool in **one** scoped dispatch
+//! ([`ShardEngine::grid_map`]), each row's ⊕ tree reduction runs
+//! concurrently on whichever worker finishes that row's last tile, and
+//! the caller joins once.  The single-row entry points are the
+//! degenerate 1×S grid, so batched and per-row execution are
+//! bitwise-identical by construction.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::exec::{self, ThreadPool};
+use crate::metrics;
 use crate::softmax::monoid::{self, MD};
 use crate::softmax::vectorized;
 
+use super::grid::{GridPlan, GridTile};
 use super::plan::{ShardPlan, ShardRange};
 use super::reduce::{self, ShardPartial};
 
@@ -83,6 +96,19 @@ impl ShardEngine {
         }
     }
 
+    /// Plan a whole batch of `rows` length-`v` rows under this engine's
+    /// config.
+    ///
+    /// The per-row split equals [`Self::plan`] exactly — threshold
+    /// gating included, and deliberately **independent of `rows`**: the
+    /// shards dimension already saturates the pool, so extra rows only
+    /// multiply available tiles, and keeping the tile shape
+    /// row-count-invariant is what makes an R×S grid dispatch
+    /// bitwise-identical to R single-row dispatches.
+    pub fn grid_plan(&self, rows: usize, v: usize) -> GridPlan {
+        GridPlan::new(rows, self.plan(v))
+    }
+
     /// Run `f` over every shard of `plan` (on the pool when the plan is
     /// sharded, inline otherwise), returning results in shard order.
     ///
@@ -123,6 +149,110 @@ impl ShardEngine {
             .collect()
     }
 
+    /// Execute a [`GridPlan`] in one scoped dispatch: `scan` runs over
+    /// every (row, shard) tile on the pool, and `reduce` folds each
+    /// row's shard-ordered partials into that row's result **as soon as
+    /// the row's last tile lands** — per-row reductions run concurrently
+    /// with still-scanning rows, and the caller joins exactly once.
+    ///
+    /// Falls back to an inline row-major loop when the engine has no
+    /// pool or the grid has a single tile (bitwise-identical results —
+    /// `scan`/`reduce` are the same functions either way).
+    ///
+    /// Per-tile scan latency is recorded in the `shard.grid.tile_us`
+    /// histogram, per-row reductions in `shard.grid.row_reduce_us`, and
+    /// dispatch/tile counts in `shard.grid.{dispatches,tiles}` (pooled
+    /// path only; the inline path stays metrics-free).
+    pub fn grid_map<P, T, SF, RF>(&self, grid: &GridPlan, scan: SF, reduce: RF) -> Vec<T>
+    where
+        P: Send,
+        T: Send,
+        SF: Fn(GridTile) -> P + Sync,
+        RF: Fn(usize, Vec<P>) -> T + Sync,
+    {
+        let rows = grid.rows();
+        let s = grid.shards_per_row();
+        if rows == 0 {
+            return Vec::new();
+        }
+        let pool = match &self.pool {
+            Some(pool) if grid.is_parallel() => pool,
+            _ => {
+                return (0..rows)
+                    .map(|row| {
+                        let parts: Vec<P> =
+                            (0..s).map(|shard| scan(grid.tile(row, shard))).collect();
+                        reduce(row, parts)
+                    })
+                    .collect();
+            }
+        };
+
+        let reg = metrics::global();
+        reg.counter("shard.grid.dispatches").inc();
+        reg.counter("shard.grid.tiles").add(grid.tile_count() as u64);
+        let tile_hist = reg.histogram("shard.grid.tile_us");
+        let reduce_hist = reg.histogram("shard.grid.row_reduce_us");
+
+        let mut parts: Vec<Option<P>> = Vec::with_capacity(grid.tile_count());
+        parts.resize_with(grid.tile_count(), || None);
+        let mut results: Vec<Option<T>> = Vec::with_capacity(rows);
+        results.resize_with(rows, || None);
+        let remaining: Vec<AtomicUsize> = (0..rows).map(|_| AtomicUsize::new(s)).collect();
+
+        let parts_ptr = SendPtr(parts.as_mut_ptr());
+        let results_ptr = SendPtr(results.as_mut_ptr());
+        let scan = &scan;
+        let reduce = &reduce;
+        let remaining = &remaining;
+        let tile_hist = &tile_hist;
+        let reduce_hist = &reduce_hist;
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = grid
+            .tiles()
+            .map(|tile| {
+                let parts_ptr = &parts_ptr;
+                let results_ptr = &results_ptr;
+                Box::new(move || {
+                    let t0 = std::time::Instant::now();
+                    let out = scan(tile);
+                    tile_hist.record(t0.elapsed());
+                    // SAFETY: each (row, shard) slot is written exactly
+                    // once, and read only after the row's countdown hits
+                    // zero (below) or after run_scoped joins.
+                    unsafe { *parts_ptr.0.add(tile.row * s + tile.range.index) = Some(out) };
+                    // AcqRel: release our slot write to whichever task
+                    // ends up reducing the row; acquire every sibling's.
+                    if remaining[tile.row].fetch_sub(1, Ordering::AcqRel) == 1 {
+                        let t1 = std::time::Instant::now();
+                        let row_parts: Vec<P> = (0..s)
+                            .map(|shard| {
+                                // SAFETY: the countdown reached zero, so
+                                // all s sibling writes are visible and no
+                                // other task touches these slots again.
+                                unsafe {
+                                    (*parts_ptr.0.add(tile.row * s + shard))
+                                        .take()
+                                        .expect("sibling tile completed")
+                                }
+                            })
+                            .collect();
+                        let folded = reduce(tile.row, row_parts);
+                        // SAFETY: exactly one task per row observes the
+                        // countdown reach zero; run_scoped joins before
+                        // `results` is read.
+                        unsafe { *results_ptr.0.add(tile.row) = Some(folded) };
+                        reduce_hist.record(t1.elapsed());
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(tasks);
+        results
+            .into_iter()
+            .map(|r| r.expect("grid row did not complete"))
+            .collect()
+    }
+
     /// Fused online softmax + top-k over one row (Algorithm 4, sharded):
     /// per-shard single-sweep partials, ⊕/buffer tree reduction, final
     /// `e^{u−m}/d` scaling.  Returns `(vals, idx)` sorted descending.
@@ -131,7 +261,8 @@ impl ShardEngine {
     }
 
     /// [`Self::fused_topk`] under an explicit plan (tests and benches
-    /// pin shard counts with this).
+    /// pin shard counts with this).  Executes as the degenerate 1×S
+    /// grid.
     pub fn fused_topk_planned(
         &self,
         x: &[f32],
@@ -139,9 +270,43 @@ impl ShardEngine {
         plan: &ShardPlan,
     ) -> (Vec<f32>, Vec<i64>) {
         assert_eq!(plan.v(), x.len(), "plan does not cover the row");
-        let parts =
-            self.map(plan, |r| ShardPartial::scan(&x[r.start..r.end], k, r.start as i64));
-        reduce::tree_reduce(parts).finalize()
+        self.fused_topk_batch_planned(&[x], k, &GridPlan::single_row(*plan))
+            .pop()
+            .expect("one row")
+    }
+
+    /// Fused online softmax + top-k over a whole batch of same-length
+    /// rows, tiled as an R×S grid and dispatched to the pool in one
+    /// scheduling pass.  Results are bitwise-identical to calling
+    /// [`Self::fused_topk`] per row.
+    pub fn fused_topk_batch(&self, rows: &[&[f32]], k: usize) -> Vec<(Vec<f32>, Vec<i64>)> {
+        let v = rows.first().map_or(0, |r| r.len());
+        self.fused_topk_batch_planned(rows, k, &self.grid_plan(rows.len(), v))
+    }
+
+    /// [`Self::fused_topk_batch`] under an explicit grid.
+    pub fn fused_topk_batch_planned(
+        &self,
+        rows: &[&[f32]],
+        k: usize,
+        grid: &GridPlan,
+    ) -> Vec<(Vec<f32>, Vec<i64>)> {
+        assert_eq!(grid.rows(), rows.len(), "grid does not cover the batch");
+        for r in rows {
+            assert_eq!(r.len(), grid.v(), "all rows must match the planned length");
+        }
+        self.grid_map(
+            grid,
+            |tile| {
+                let x = rows[tile.row];
+                ShardPartial::scan(
+                    &x[tile.range.start..tile.range.end],
+                    k,
+                    tile.range.start as i64,
+                )
+            },
+            |_row, parts| reduce::tree_reduce(parts).finalize(),
+        )
     }
 
     /// Sharded online normalizer: per-shard `(m, d)` partials reduced
@@ -193,6 +358,92 @@ impl ShardEngine {
         let mut out = vec![0.0; x.len()];
         self.softmax_into(x, &mut out);
         out
+    }
+
+    /// Full online softmax over a whole batch of same-length rows, tiled
+    /// as an R×S grid.  Results are bitwise-identical to calling
+    /// [`Self::softmax`] per row.
+    pub fn softmax_batch(&self, rows: &[&[f32]]) -> Vec<Vec<f32>> {
+        let v = rows.first().map_or(0, |r| r.len());
+        self.softmax_batch_planned(rows, &self.grid_plan(rows.len(), v))
+    }
+
+    /// [`Self::softmax_batch`] under an explicit grid.
+    ///
+    /// Softmax needs each row's *global* `(m, d)` before any output can
+    /// be written, so the sharded form is two grid dispatches — a
+    /// normalizer grid (per-tile `(m, d)`, per-row ⊕ tree reduction)
+    /// and a scale grid writing into disjoint slices of preallocated
+    /// row buffers — rather than fused top-k's single one.  That is
+    /// still two scoped joins per **batch** instead of two per row, and
+    /// no output byte is ever copied.
+    pub fn softmax_batch_planned(&self, rows: &[&[f32]], grid: &GridPlan) -> Vec<Vec<f32>> {
+        assert_eq!(grid.rows(), rows.len(), "grid does not cover the batch");
+        for r in rows {
+            assert_eq!(r.len(), grid.v(), "all rows must match the planned length");
+        }
+        let mut outs: Vec<Vec<f32>> = rows.iter().map(|r| vec![0.0f32; r.len()]).collect();
+        let out_ptrs: Vec<SendPtr<f32>> =
+            outs.iter_mut().map(|o| SendPtr(o.as_mut_ptr())).collect();
+        let out_ptrs = &out_ptrs;
+        if !grid.row_plan().is_sharded() {
+            // Degenerate R×1 grid: the single-pass fused kernel per row
+            // (bitwise-identical to the unsharded [`Self::softmax_into`]
+            // path), with the rows themselves as the dispatch's tiles.
+            self.grid_map(
+                grid,
+                |tile| {
+                    // SAFETY: one tile per row → exclusive access to the
+                    // row's output buffer; grid_map joins before `outs`
+                    // is returned.
+                    let dst = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            out_ptrs[tile.row].0,
+                            tile.range.len(),
+                        )
+                    };
+                    vectorized::online(rows[tile.row], dst);
+                },
+                |_row, _parts| (),
+            );
+            return outs;
+        }
+        // Pass 1: per-tile (m, d) partials, per-row ⊕ tree reduction.
+        let mds: Vec<MD> = self.grid_map(
+            grid,
+            |tile| {
+                vectorized::online_normalizer(
+                    &rows[tile.row][tile.range.start..tile.range.end],
+                )
+            },
+            |_row, parts| monoid::tree_reduce(&parts),
+        );
+        // Pass 2: per-tile `e^{x−m}/d` scale with the row's global
+        // normalizer, each tile writing its own disjoint output slice.
+        let mds = &mds;
+        self.grid_map(
+            grid,
+            |tile| {
+                let md = mds[tile.row];
+                // SAFETY: tile ranges within a row are disjoint and
+                // in-bounds for its output buffer (same length as the
+                // row); grid_map joins before `outs` is returned.
+                let dst = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        out_ptrs[tile.row].0.add(tile.range.start),
+                        tile.range.len(),
+                    )
+                };
+                vectorized::scale_pass(
+                    &rows[tile.row][tile.range.start..tile.range.end],
+                    dst,
+                    md.m,
+                    1.0 / md.d,
+                );
+            },
+            |_row, _parts| (),
+        );
+        outs
     }
 }
 
@@ -308,5 +559,95 @@ mod tests {
         assert!(vals.is_empty() && idx.is_empty());
         let y = eng.softmax(&[4.0]);
         assert_eq!(y, vec![1.0]);
+    }
+
+    #[test]
+    fn grid_batch_matches_per_row_dispatch_bitwise() {
+        let eng = engine(4, 256);
+        for (rows_n, n, k) in [(1usize, 2048usize, 5usize), (3, 1003, 4), (8, 4097, 7)] {
+            let data: Vec<Vec<f32>> =
+                (0..rows_n).map(|i| logits(n, (n + i) as u64)).collect();
+            let rows: Vec<&[f32]> = data.iter().map(|r| r.as_slice()).collect();
+            let got = eng.fused_topk_batch(&rows, k);
+            assert_eq!(got.len(), rows_n);
+            for (row, out) in rows.iter().zip(&got) {
+                assert_eq!(*out, eng.fused_topk(row, k), "grid topk must be bitwise");
+            }
+            let probs = eng.softmax_batch(&rows);
+            for (row, out) in rows.iter().zip(&probs) {
+                assert_eq!(*out, eng.softmax(row), "grid softmax must be bitwise");
+            }
+        }
+    }
+
+    #[test]
+    fn grid_degenerate_shapes_run() {
+        // Threshold above every row: the grid is R×1 — rows themselves
+        // are the tiles, each running the unsharded fused kernel.
+        let eng = engine(4, 100_000);
+        let data: Vec<Vec<f32>> = (0..5).map(|i| logits(3000, i as u64)).collect();
+        let rows: Vec<&[f32]> = data.iter().map(|r| r.as_slice()).collect();
+        let grid = eng.grid_plan(rows.len(), 3000);
+        assert_eq!(grid.shards_per_row(), 1);
+        assert!(grid.is_parallel(), "rows alone still fan out");
+        let probs = eng.softmax_batch(&rows);
+        for (row, out) in rows.iter().zip(&probs) {
+            assert_eq!(*out, softmax::compute(row, Algorithm::Online));
+        }
+        assert!(eng.fused_topk_batch(&[], 3).is_empty());
+        assert!(eng.softmax_batch(&[]).is_empty());
+    }
+
+    #[test]
+    fn grid_plan_is_row_count_invariant_and_threshold_gated() {
+        // The bitwise-identity contract: the per-row split never
+        // changes when more rows join the grid, and threshold gating
+        // applies to grids exactly as to single rows.
+        let eng = engine(4, 256);
+        for rows in [1usize, 2, 8, 64] {
+            let grid = eng.grid_plan(rows, 20_000);
+            assert_eq!(grid.row_plan(), eng.plan(20_000));
+            assert_eq!(grid.rows(), rows);
+        }
+        assert_eq!(eng.grid_plan(16, 100).shards_per_row(), 1, "below threshold stays serial");
+    }
+
+    #[test]
+    fn grid_map_reduces_rows_in_shard_order() {
+        let eng = engine(4, 1);
+        let grid = GridPlan::new(3, ShardPlan::with_shards(100, 4));
+        let out = eng.grid_map(
+            &grid,
+            |tile| (tile.row, tile.range.index),
+            |row, parts| {
+                assert!(parts.iter().all(|&(r, _)| r == row), "row {row}: {parts:?}");
+                parts.iter().map(|&(_, s)| s).collect::<Vec<usize>>()
+            },
+        );
+        assert_eq!(out, vec![vec![0, 1, 2, 3]; 3]);
+    }
+
+    #[test]
+    fn grid_map_ragged_last_tiles_cover_row() {
+        // 7 shards over 1003 elements: ragged tile lengths; sums of the
+        // tile slices must reassemble each row's total exactly.
+        let eng = engine(3, 1);
+        let data: Vec<Vec<f32>> = (0..4).map(|i| logits(1003, 50 + i as u64)).collect();
+        let rows: Vec<&[f32]> = data.iter().map(|r| r.as_slice()).collect();
+        let grid = GridPlan::new(rows.len(), ShardPlan::with_shards(1003, 7));
+        let sums = eng.grid_map(
+            &grid,
+            |tile| {
+                rows[tile.row][tile.range.start..tile.range.end]
+                    .iter()
+                    .map(|v| *v as f64)
+                    .sum::<f64>()
+            },
+            |_row, parts| parts.into_iter().sum::<f64>(),
+        );
+        for (row, got) in rows.iter().zip(&sums) {
+            let want: f64 = row.iter().map(|v| *v as f64).sum();
+            assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+        }
     }
 }

@@ -1,0 +1,172 @@
+//! Batch×shard grid planning: tiling a whole coordinator batch over the
+//! worker pool in one scheduling pass.
+//!
+//! A [`GridPlan`] is the 2-D extension of [`ShardPlan`]: `rows` batch
+//! rows × one shared per-row shard split.  Each cell is a [`GridTile`]
+//! — (batch row, vocabulary slice) — and the engine dispatches *all*
+//! `rows × shards` tiles in a single scoped fan-out
+//! ([`ShardEngine::grid_map`](super::ShardEngine::grid_map)), instead of
+//! one fan-out/join per row.  With R rows in flight the pool never
+//! drains between rows, which is exactly the occupancy the paper buys
+//! by making the softmax state mergeable in any partition order.
+//!
+//! Two properties are deliberate:
+//!
+//! * **The per-row shard shape is independent of the row count.**  A
+//!   batch dispatched as one R×S grid is therefore bitwise-identical to
+//!   R independent 1×S dispatches (same tile boundaries → same scans →
+//!   same ⊕ bracketing).  The rows dimension only multiplies the number
+//!   of available tiles.
+//! * **Tiles enumerate row-major** ([`GridPlan::tiles`]): the earliest
+//!   row's tiles dequeue first from the pool's FIFO, so its ⊕ tree
+//!   reduction runs while later rows are still scanning — completions
+//!   pipeline instead of arriving in one burst, and the R×S
+//!   oversubscription lets idle workers backfill from later rows the
+//!   way a work-stealing deque would.
+
+use super::plan::{ShardPlan, ShardRange};
+
+/// One cell of a [`GridPlan`]: batch row `row` × vocabulary slice
+/// `range`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GridTile {
+    /// Batch-row index in `[0, grid.rows())`.
+    pub row: usize,
+    /// The vocabulary slice this tile scans (`range.index` is the shard
+    /// index within the row).
+    pub range: ShardRange,
+}
+
+/// A 2-D execution grid: `rows` batch rows, each split by the same
+/// [`ShardPlan`].
+///
+/// `rows == 1` is the degenerate single-row grid (the pre-grid serving
+/// path); `shards == 1` degenerates to plain row-level batching.  Both
+/// degenerate forms execute the identical kernels, so results never
+/// depend on which shape the scheduler picked.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GridPlan {
+    rows: usize,
+    row_plan: ShardPlan,
+}
+
+impl GridPlan {
+    /// A grid of `rows` rows, each split by `row_plan`.
+    pub fn new(rows: usize, row_plan: ShardPlan) -> GridPlan {
+        GridPlan { rows, row_plan }
+    }
+
+    /// The degenerate 1×S grid over one row.
+    pub fn single_row(row_plan: ShardPlan) -> GridPlan {
+        GridPlan::new(1, row_plan)
+    }
+
+    /// Number of batch rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// The shared per-row shard split.
+    pub fn row_plan(&self) -> ShardPlan {
+        self.row_plan
+    }
+
+    /// Row length covered by every row of the grid.
+    pub fn v(&self) -> usize {
+        self.row_plan.v()
+    }
+
+    /// Shards per row (the S in R×S).
+    pub fn shards_per_row(&self) -> usize {
+        self.row_plan.shards()
+    }
+
+    /// Total tile count, `rows × shards_per_row`.
+    pub fn tile_count(&self) -> usize {
+        self.rows * self.row_plan.shards()
+    }
+
+    /// Whether executing this grid fans out at all (more than one tile).
+    pub fn is_parallel(&self) -> bool {
+        self.tile_count() > 1
+    }
+
+    /// The tile at (`row`, `shard`).
+    pub fn tile(&self, row: usize, shard: usize) -> GridTile {
+        assert!(row < self.rows, "row index {row} out of {}", self.rows);
+        GridTile { row, range: self.row_plan.range(shard) }
+    }
+
+    /// All tiles in row-major order (row 0's shards first).  See the
+    /// module docs for why this ordering is the scheduling policy.
+    pub fn tiles(&self) -> impl Iterator<Item = GridTile> + '_ {
+        (0..self.rows).flat_map(move |row| {
+            self.row_plan.ranges().map(move |range| GridTile { row, range })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiles_cover_every_row_exactly() {
+        for rows in [1usize, 2, 3, 7] {
+            for shards in [1usize, 2, 5] {
+                let grid = GridPlan::new(rows, ShardPlan::with_shards(1003, shards));
+                assert_eq!(grid.tile_count(), rows * grid.shards_per_row());
+                let mut per_row_next = vec![0usize; rows];
+                let mut seen = 0usize;
+                for t in grid.tiles() {
+                    assert_eq!(
+                        t.range.start, per_row_next[t.row],
+                        "row {} tiles must be contiguous",
+                        t.row
+                    );
+                    per_row_next[t.row] = t.range.end;
+                    seen += 1;
+                }
+                assert_eq!(seen, grid.tile_count());
+                assert!(per_row_next.iter().all(|&end| end == 1003), "{per_row_next:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn tiles_enumerate_row_major() {
+        let grid = GridPlan::new(3, ShardPlan::with_shards(100, 4));
+        let order: Vec<(usize, usize)> =
+            grid.tiles().map(|t| (t.row, t.range.index)).collect();
+        let want: Vec<(usize, usize)> =
+            (0..3).flat_map(|r| (0..4).map(move |s| (r, s))).collect();
+        assert_eq!(order, want);
+    }
+
+    #[test]
+    fn tile_accessor_matches_iterator() {
+        let grid = GridPlan::new(2, ShardPlan::with_shards(77, 3));
+        let all: Vec<GridTile> = grid.tiles().collect();
+        for (i, t) in all.iter().enumerate() {
+            assert_eq!(*t, grid.tile(i / 3, i % 3));
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        let single = GridPlan::single_row(ShardPlan::with_shards(512, 4));
+        assert_eq!(single.rows(), 1);
+        assert!(single.is_parallel());
+        let serial = GridPlan::new(1, ShardPlan::single(512));
+        assert!(!serial.is_parallel());
+        let empty = GridPlan::new(0, ShardPlan::single(512));
+        assert_eq!(empty.tile_count(), 0);
+        assert_eq!(empty.tiles().count(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "row index")]
+    fn tile_row_bounds_checked() {
+        GridPlan::new(2, ShardPlan::single(10)).tile(2, 0);
+    }
+}

@@ -16,10 +16,23 @@
 //!                               shard S ─ scan ─► (m_S, d_S, topk_S) ┘
 //! ```
 //!
+//! Whole batches tile as a 2-D **batch×shard grid** ([`grid`]): R rows
+//! × S vocabulary shards dispatched to the pool in one scheduling pass,
+//! per-row ⊕ reductions running concurrently, one scoped join:
+//!
+//! ```text
+//!   batch of R rows ── GridPlan ──► tile(0,0) … tile(0,S) ─ ⊕ ─► row 0
+//!                                   tile(1,0) … tile(1,S) ─ ⊕ ─► row 1
+//!                                   ...        (one run_scoped join)
+//! ```
+//!
 //! * [`plan`] — balanced shard arithmetic ([`ShardPlan`]).
+//! * [`grid`] — the batch×shard tiling ([`GridPlan`]/[`GridTile`]):
+//!   per-row shard shape independent of the row count, so grid results
+//!   are bitwise-identical to per-row dispatch.
 //! * [`reduce`] — [`ShardPartial`] and the ⊕/buffer tree reduction,
 //!   the cross-shard analogue of the paper's Algorithm 4.
-//! * [`engine`] — [`ShardEngine`]: executes plans on an
+//! * [`engine`] — [`ShardEngine`]: executes plans and grids on an
 //!   [`exec::ThreadPool`](crate::exec::ThreadPool), with a
 //!   threshold-gated single-thread fallback that is bitwise-identical
 //!   to the unsharded kernels.
@@ -28,11 +41,33 @@
 //! [`crate::coordinator::executor`]); the same partials arrive from
 //! PJRT engines when AOT artifacts are served, so the reduction code is
 //! shared between the host and accelerator backends.
+//!
+//! ## ⊕ merge invariants
+//!
+//! The property tests (`rust/tests/prop_invariants.rs`) and the grid's
+//! bitwise-identity contract rest on these guarantees, stated once here
+//! and relied on everywhere:
+//!
+//! * **Associativity / commutativity** — `(m, d)` merges with ⊕
+//!   (eq. 4), associative and commutative with identity `(−∞, 0)`;
+//!   `m` is *exact* under any bracketing, `d` reassociates within fp
+//!   rounding.  Top-k buffer merge is associative in the selected
+//!   *indices* for any bracketing that preserves relative index order.
+//! * **−∞ handling** — `e^{−∞ − −∞}` is defined as 0 (identity merge,
+//!   not IEEE NaN), so all-(−∞) shards act as "no contribution".
+//! * **NaN handling** — NaN logits fail every `>` comparison: they
+//!   never become a shard's running max nor enter a top-k buffer, so
+//!   merged results are NaN-free wherever the serial kernels are.
+//! * **Tie-breaking** — equal logit values resolve to the *earliest
+//!   global index*; buffer merges keep the incumbent (left) side, so
+//!   shard-ordered reductions reproduce the whole-row scan exactly.
 
 pub mod engine;
+pub mod grid;
 pub mod plan;
 pub mod reduce;
 
 pub use engine::{ShardEngine, ShardEngineConfig};
+pub use grid::{GridPlan, GridTile};
 pub use plan::{ShardPlan, ShardRange};
 pub use reduce::{tree_reduce, ShardPartial};

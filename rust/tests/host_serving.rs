@@ -16,7 +16,9 @@ use onlinesoftmax::softmax::{fused, scalar};
 const TIMEOUT: Duration = Duration::from_secs(60);
 
 /// Small, fast host config: vocabulary above the shard threshold so the
-/// sharded path actually engages.
+/// sharded path actually engages, and `grid_rows > 1` so every batched
+/// request in this suite exercises the batch×shard grid scheduler (CI
+/// runs this suite as the grid e2e gate).
 fn host_config(mode: ServingMode, shard_threshold: usize) -> ServeConfig {
     let mut cfg = ServeConfig::default();
     cfg.backend = BackendKind::Host;
@@ -25,6 +27,7 @@ fn host_config(mode: ServingMode, shard_threshold: usize) -> ServeConfig {
     cfg.hidden = 32;
     cfg.host_shards = 4;
     cfg.shard_threshold = shard_threshold;
+    cfg.grid_rows = 4;
     cfg.workers = 2;
     cfg.max_wait = Duration::from_micros(500);
     cfg
@@ -161,6 +164,60 @@ fn host_batched_requests_get_individual_answers() {
         }
     }
     coord.shutdown();
+}
+
+#[test]
+fn host_grid_batches_are_bitwise_identical_to_per_row_dispatch() {
+    // The same burst of requests served through (a) the batch×shard
+    // grid (grid_rows > 1, whole batches tiled in one dispatch) and
+    // (b) forced per-row dispatch (grid_rows = 1, the degenerate 1×S
+    // grid) must produce byte-for-byte identical replies — the grid is
+    // a scheduling change, never a numerics change.
+    let mut grid_cfg = host_config(ServingMode::Online, 512);
+    grid_cfg.max_batch = 8;
+    grid_cfg.max_wait = Duration::from_millis(20); // force a batching window
+    let mut row_cfg = grid_cfg.clone();
+    grid_cfg.grid_rows = 0; // whole batch per grid
+    row_cfg.grid_rows = 1; // per-row dispatch
+    let grid = Coordinator::start(&grid_cfg).unwrap();
+    let per_row = Coordinator::start(&row_cfg).unwrap();
+
+    let vocab = grid.executor().vocab();
+    let mut rng = Xoshiro256pp::seed_from_u64(11);
+    let logits: Vec<Vec<f32>> = (0..6).map(|_| rng.logits(vocab, 6.0)).collect();
+    let hiddens: Vec<Vec<f32>> = (0..6).map(|_| rng.logits(32, 1.0)).collect();
+
+    let rx_a: Vec<_> = logits
+        .iter()
+        .map(|l| grid.submit(Payload::Softmax { logits: l.clone() }).unwrap())
+        .collect();
+    let rx_b: Vec<_> = logits
+        .iter()
+        .map(|l| per_row.submit(Payload::Softmax { logits: l.clone() }).unwrap())
+        .collect();
+    for (ra, rb) in rx_a.into_iter().zip(rx_b) {
+        let pa = ra.recv_timeout(TIMEOUT).unwrap().unwrap();
+        let pb = rb.recv_timeout(TIMEOUT).unwrap().unwrap();
+        assert_eq!(pa, pb, "grid and per-row softmax replies must match bitwise");
+    }
+
+    let rx_a: Vec<_> = hiddens
+        .iter()
+        .map(|h| grid.submit(Payload::DecodeTopK { hidden: h.clone(), k: Some(7) }).unwrap())
+        .collect();
+    let rx_b: Vec<_> = hiddens
+        .iter()
+        .map(|h| {
+            per_row.submit(Payload::DecodeTopK { hidden: h.clone(), k: Some(7) }).unwrap()
+        })
+        .collect();
+    for (ra, rb) in rx_a.into_iter().zip(rx_b) {
+        let da = ra.recv_timeout(TIMEOUT).unwrap().unwrap();
+        let db = rb.recv_timeout(TIMEOUT).unwrap().unwrap();
+        assert_eq!(da, db, "grid and per-row decode replies must match bitwise");
+    }
+    grid.shutdown();
+    per_row.shutdown();
 }
 
 #[test]

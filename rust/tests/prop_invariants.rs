@@ -5,7 +5,9 @@ use onlinesoftmax::prop::{
     forall, forall_with, Config, Gen, LogitsVec, Pair, PropResult, UsizeRange,
 };
 use onlinesoftmax::rng::Xoshiro256pp;
-use onlinesoftmax::shard::{tree_reduce, ShardEngine, ShardEngineConfig, ShardPartial, ShardPlan};
+use onlinesoftmax::shard::{
+    tree_reduce, GridPlan, ShardEngine, ShardEngineConfig, ShardPartial, ShardPlan,
+};
 use onlinesoftmax::softmax::{self, fused, monoid::MD, scalar, vectorized, Algorithm};
 use onlinesoftmax::topk::{heap_topk, scan_topk, TopKBuffer};
 
@@ -298,6 +300,64 @@ fn prop_sharded_fused_topk_matches_single_sweep() {
         for (a, b) in sv.iter().zip(&wv) {
             if (a - b).abs() > 1e-9 + 1e-4 * a.abs().max(b.abs()) {
                 return Err(format!("shards={shards} k={k}: val {a} vs {b}"));
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn prop_grid_batch_is_bitwise_identical_to_per_row_runs() {
+    // The grid contract: an R×S grid batch equals R independent
+    // single-row sharded runs *bitwise* — same tile boundaries → same
+    // scans → same ⊕ bracketing.  Covers batch = 1, shard counts that
+    // leave ragged last tiles, and k beyond the row length.
+    let engine = ShardEngine::new(ShardEngineConfig {
+        workers: 4,
+        min_shard: 1,
+        threshold: 1,
+        ..Default::default()
+    });
+    let gen = Pair(
+        Pair(UsizeRange(1, 6), LogitsVec { min_len: 1, max_len: 400 }),
+        Pair(UsizeRange(1, 9), UsizeRange(1, 12)),
+    );
+    let cfg = Config { cases: 80, ..Config::default() };
+    forall_with(cfg, &gen, |((rows_n, x), (shards, k))| {
+        let v = x.len();
+        let k = (*k).max(1);
+        // Derive R distinct same-length rows by rotating the generated
+        // one (row 0 is the original).
+        let derived: Vec<Vec<f32>> = (0..*rows_n)
+            .map(|i| {
+                let mut row = x.clone();
+                row.rotate_left(i % v);
+                row
+            })
+            .collect();
+        let rows: Vec<&[f32]> = derived.iter().map(|r| r.as_slice()).collect();
+        let plan = ShardPlan::with_shards(v, *shards);
+        let grid = GridPlan::new(rows.len(), plan);
+
+        let topk = engine.fused_topk_batch_planned(&rows, k, &grid);
+        let probs = engine.softmax_batch_planned(&rows, &grid);
+        for (i, row) in rows.iter().enumerate() {
+            let want_topk = engine.fused_topk_planned(row, k, &plan);
+            if topk[i] != want_topk {
+                return Err(format!(
+                    "rows={rows_n} shards={shards} k={k} row {i}: grid topk {:?} \
+                     != per-row {:?}",
+                    topk[i], want_topk
+                ));
+            }
+            let mut want_probs = vec![0.0f32; v];
+            engine.softmax_into_planned(row, &mut want_probs, &plan);
+            if probs[i] != want_probs {
+                return Err(format!(
+                    "rows={rows_n} shards={shards} row {i}: grid softmax diverges \
+                     from per-row run"
+                ));
             }
         }
         Ok(())
