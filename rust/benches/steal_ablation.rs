@@ -1,0 +1,20 @@
+//! `cargo bench --bench steal_ablation` — FIFO injector vs
+//! work-stealing deques under uniform and skewed tile costs.
+//! Thin wrapper over [`onlinesoftmax::benches::steal_ablation`]; options
+//! via env: OSMAX_BENCH_FAST=1 for a quick pass, OSMAX_BENCH_THREADS=N
+//! to pin the shard-worker count (default 0 = one worker per core),
+//! OSMAX_BENCH_BATCH=B to set the batch rows (default 16).
+fn main() {
+    let threads = std::env::var("OSMAX_BENCH_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let batch = std::env::var("OSMAX_BENCH_BATCH").ok().and_then(|s| s.parse().ok());
+    let opts = onlinesoftmax::benches::BenchOpts {
+        threads,
+        batch,
+        json_out: std::env::var("OSMAX_BENCH_JSON").ok(),
+        ..Default::default()
+    };
+    onlinesoftmax::benches::steal_ablation(&opts).expect("bench failed");
+}

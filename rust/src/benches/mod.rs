@@ -11,6 +11,8 @@
 //! * [`k_sweep`] — §5.2's fused-speedup-vs-K table (K=5/10/15/30)
 //! * [`shard_ablation`] — sharded fused scan vs single-thread vs unfused
 //! * [`grid_ablation`] — per-row dispatch vs the batch×shard grid
+//! * [`steal_ablation`] — FIFO injector vs work-stealing deques under
+//!   uniform and skewed tile costs
 //!
 //! **Hardware scaling** (DESIGN.md §Hardware-Adaptation): the paper's
 //! batch-4000 × V-100k workloads size the *GPU's* DRAM; on this CPU we
@@ -26,8 +28,9 @@ use std::io::Write;
 use anyhow::Result;
 
 use crate::benchkit::{bench, black_box, fmt_time, BenchConfig, Stats, Table};
+use crate::exec::SchedPolicy;
 use crate::rng::Xoshiro256pp;
-use crate::shard::{GridPlan, ShardEngine, ShardEngineConfig, ShardPlan};
+use crate::shard::{tree_reduce, GridPlan, ShardEngine, ShardEngineConfig, ShardPartial, ShardPlan};
 use crate::softmax::{batched, fused, parallel, vectorized};
 
 /// CLI/bench-target options.
@@ -39,6 +42,9 @@ pub struct BenchOpts {
     pub batch: Option<usize>,
     /// Threads for the parallel online variant (1 = off).
     pub threads: usize,
+    /// Minimal sizes and iteration budgets: the CI rot check for the
+    /// bench binaries, not a measurement.
+    pub smoke: bool,
     /// Append JSON-lines results to this path.
     pub json_out: Option<String>,
 }
@@ -477,13 +483,158 @@ pub fn grid_ablation(opts: &BenchOpts) -> Result<()> {
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// Steal ablation: FIFO injector vs work-stealing deques
+// ---------------------------------------------------------------------------
+
+/// Ablation over the pool scheduler ([`SchedPolicy`]): the same
+/// batch×shard fused softmax+top-k grid executed on a `fifo` engine
+/// (single shared injector) and a `steal` engine (per-worker deques,
+/// LIFO owner pop, FIFO steal), under two tile-cost shapes:
+///
+/// * **uniform** — every tile scans its slice once; the balanced plan
+///   makes all tile costs (near-)equal.  This is the no-regression
+///   guard: stealing must not cost anything when there is nothing to
+///   rebalance.
+/// * **skewed** — the plan is deliberately ragged (a shard count that
+///   does not divide V) *and* tile 0 of every row is a straggler,
+///   re-scanning its slice `SKEW`× (standing in for a cache-cold /
+///   NUMA-far / frequency-throttled shard).  Under FIFO the straggler
+///   pins its worker while the queue behind it drains unevenly; under
+///   steal the idle workers lift the pinned worker's remaining tiles
+///   from the far end of its deque.
+///
+/// Both arms run identical tile shapes and kernels, so results are
+/// bitwise-identical (asserted here on every iteration's output
+/// length); the delta is pure scheduling.  Reports p50 per arm.
+pub fn steal_ablation(opts: &BenchOpts) -> Result<()> {
+    let sizes = opts.sizes.clone().unwrap_or_else(|| {
+        if opts.smoke {
+            vec![8_192]
+        } else {
+            vec![50_000, 200_000]
+        }
+    });
+    let batch = opts.batch.unwrap_or(if opts.smoke { 3 } else { 16 });
+    let k = 5;
+    // Straggler rescan factor for the skewed arm.
+    const SKEW: usize = 8;
+    // Like grid_ablation: a 1-worker engine runs everything inline and
+    // the policies are indistinguishable, so upgrade the CLI default.
+    let workers =
+        if opts.threads <= 1 { crate::exec::default_threads() } else { opts.threads };
+    let cfg = BenchConfig::from_env();
+    let mk_engine = |sched| {
+        ShardEngine::new(ShardEngineConfig {
+            workers,
+            min_shard: 1,
+            threshold: 1, // the bench pins plans explicitly
+            sched,
+            ..ShardEngineConfig::default()
+        })
+    };
+    let fifo = mk_engine(SchedPolicy::Fifo);
+    let steal = mk_engine(SchedPolicy::Steal);
+    // Oversubscribe (~2 tiles per worker per row) so a straggler's
+    // owner has a backlog worth stealing, and pick an odd shard count
+    // so the last tile of every row is ragged.
+    let shards_per_row = (workers * 2 + 1).max(3);
+    println!(
+        "\n=== steal: fifo injector vs work-stealing deques \
+         (K={k}, batch {batch}, {workers} workers, {shards_per_row} shards/row, \
+         straggler x{SKEW}) ==="
+    );
+    let mut table = Table::new(&[
+        "V",
+        "cost shape",
+        "fifo p50",
+        "steal p50",
+        "steal/fifo",
+        "steals",
+    ]);
+    for &v in &sizes {
+        let data = make_batch(batch, v, v as u64);
+        let rows: Vec<&[f32]> = data.chunks_exact(v).collect();
+        let plan = ShardPlan::with_shards(v, shards_per_row);
+        let grid = GridPlan::new(batch, plan);
+
+        // One grid dispatch; under `skew`, tile 0 of each row re-scans
+        // its slice (identical partial, skewed cost).
+        let run = |engine: &ShardEngine, skew: usize| -> Vec<(Vec<f32>, Vec<i64>)> {
+            engine.grid_map(
+                &grid,
+                |tile| {
+                    let x = &rows[tile.row][tile.range.start..tile.range.end];
+                    let reps = if tile.range.index == 0 { skew } else { 1 };
+                    let mut part = ShardPartial::scan(x, k, tile.range.start as i64);
+                    for _ in 1..reps {
+                        part = ShardPartial::scan(x, k, tile.range.start as i64);
+                    }
+                    part
+                },
+                |_row, parts| tree_reduce(parts).finalize(),
+            )
+        };
+
+        for (shape, skew) in [("uniform", 1usize), ("skewed", SKEW)] {
+            // The scheduler must never change a result.
+            assert_eq!(
+                run(&fifo, skew),
+                run(&steal, skew),
+                "fifo and steal outputs diverged (v={v}, {shape})"
+            );
+            let steals_before = steal.pool_steal_count();
+            let fifo_t = bench(&cfg, || black_box(run(&fifo, skew).len()));
+            let steal_t = bench(&cfg, || black_box(run(&steal, skew).len()));
+            let stolen = steal.pool_steal_count() - steals_before;
+            let speedup = fifo_t.median / steal_t.median;
+            table.row(vec![
+                v.to_string(),
+                shape.to_string(),
+                fmt_time(fifo_t.median),
+                fmt_time(steal_t.median),
+                format!("{speedup:.2}x"),
+                stolen.to_string(),
+            ]);
+
+            let mut rec = crate::json::Value::object();
+            rec.set("bench", crate::json::Value::String("steal_ablation".into()))
+                .set("v", crate::json::Value::Number(v as f64))
+                .set("batch", crate::json::Value::Number(batch as f64))
+                .set("k", crate::json::Value::Number(k as f64))
+                .set("workers", crate::json::Value::Number(workers as f64))
+                .set("shards_per_row", crate::json::Value::Number(shards_per_row as f64))
+                .set("cost_shape", crate::json::Value::String(shape.into()))
+                .set("skew", crate::json::Value::Number(skew as f64))
+                .set("fifo_p50_s", crate::json::Value::Number(fifo_t.median))
+                .set("steal_p50_s", crate::json::Value::Number(steal_t.median))
+                .set("speedup_steal_vs_fifo", crate::json::Value::Number(speedup));
+            opts.emit(&rec)?;
+        }
+    }
+    println!("{}", table.render());
+    println!(
+        "expected shape: ~1.00x on uniform costs (stealing has nothing to\n\
+         rebalance and must not regress); > 1x on the skewed arm, growing with\n\
+         the straggler factor — idle workers drain the pinned worker's deque\n\
+         instead of waiting out the longest tile."
+    );
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn fast_opts() -> BenchOpts {
         std::env::set_var("OSMAX_BENCH_FAST", "1");
-        BenchOpts { sizes: Some(vec![256, 1024]), batch: Some(4), threads: 1, json_out: None }
+        BenchOpts {
+            sizes: Some(vec![256, 1024]),
+            batch: Some(4),
+            threads: 1,
+            smoke: false,
+            json_out: None,
+        }
     }
 
     #[test]
@@ -517,6 +668,16 @@ mod tests {
         o.batch = Some(3);
         o.threads = 2;
         grid_ablation(&o).unwrap();
+    }
+
+    #[test]
+    fn steal_ablation_runs() {
+        let mut o = fast_opts();
+        o.sizes = None; // exercise the smoke defaults
+        o.batch = None;
+        o.threads = 2;
+        o.smoke = true;
+        steal_ablation(&o).unwrap();
     }
 
     #[test]

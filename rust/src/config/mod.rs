@@ -11,6 +11,7 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use crate::cli::Args;
+use crate::exec::SchedPolicy;
 use crate::json::{self, Value};
 
 /// Which softmax strategy the serving path uses.
@@ -113,6 +114,11 @@ pub struct ServeConfig {
     /// degenerate grid).  Results are bitwise-identical for every
     /// setting — this only shapes scheduling.
     pub grid_rows: usize,
+    /// Shard-pool scheduling policy: `steal` (per-worker work-stealing
+    /// deques, the default) or `fifo` (single shared injector queue).
+    /// Results are bitwise-identical under either — only occupancy
+    /// under skewed tile costs changes.
+    pub pool_sched: SchedPolicy,
 }
 
 impl Default for ServeConfig {
@@ -134,6 +140,10 @@ impl Default for ServeConfig {
             host_shards: 0,
             shard_threshold: 32_768,
             grid_rows: 0,
+            // OSMAX_POOL_SCHED (CI's scheduler matrix) overrides the
+            // built-in default, exactly like the other env knobs; file
+            // and CLI layers still override the env.
+            pool_sched: SchedPolicy::from_env_or(SchedPolicy::Steal),
         }
     }
 }
@@ -197,6 +207,9 @@ impl ServeConfig {
         if let Some(n) = v.get("grid_rows").and_then(Value::as_usize) {
             cfg.grid_rows = n;
         }
+        if let Some(s) = v.get("pool_sched").and_then(Value::as_str) {
+            cfg.pool_sched = SchedPolicy::parse(s)?;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -228,6 +241,9 @@ impl ServeConfig {
         self.host_shards = args.opt_parse("host-shards", self.host_shards)?;
         self.shard_threshold = args.opt_parse("shard-threshold", self.shard_threshold)?;
         self.grid_rows = args.opt_parse("grid-rows", self.grid_rows)?;
+        if let Some(s) = args.opt_str("pool-sched") {
+            self.pool_sched = SchedPolicy::parse(s)?;
+        }
         self.validate()
     }
 
@@ -280,7 +296,8 @@ impl ServeConfig {
             .set("hidden", Value::Number(self.hidden as f64))
             .set("host_shards", Value::Number(self.host_shards as f64))
             .set("shard_threshold", Value::Number(self.shard_threshold as f64))
-            .set("grid_rows", Value::Number(self.grid_rows as f64));
+            .set("grid_rows", Value::Number(self.grid_rows as f64))
+            .set("pool_sched", Value::String(self.pool_sched.as_str().to_string()));
         v
     }
 }
@@ -304,6 +321,7 @@ mod tests {
         cfg.host_shards = 6;
         cfg.shard_threshold = 1024;
         cfg.grid_rows = 8;
+        cfg.pool_sched = SchedPolicy::Fifo;
         let back = ServeConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.shards, 4);
         assert_eq!(back.mode, ServingMode::Safe);
@@ -314,6 +332,7 @@ mod tests {
         assert_eq!(back.host_shards, 6);
         assert_eq!(back.shard_threshold, 1024);
         assert_eq!(back.grid_rows, 8);
+        assert_eq!(back.pool_sched, SchedPolicy::Fifo);
     }
 
     #[test]
@@ -354,18 +373,30 @@ mod tests {
         let mut cfg = ServeConfig::default();
         let raw: Vec<String> = [
             "--backend", "host", "--vocab", "2048", "--shard-threshold", "512",
-            "--grid-rows", "4",
+            "--grid-rows", "4", "--pool-sched", "fifo",
         ]
         .iter()
         .map(|s| s.to_string())
         .collect();
-        let args =
-            Args::parse(&raw, &["backend", "vocab", "shard-threshold", "grid-rows"]).unwrap();
+        let args = Args::parse(
+            &raw,
+            &["backend", "vocab", "shard-threshold", "grid-rows", "pool-sched"],
+        )
+        .unwrap();
         cfg.apply_args(&args).unwrap();
         assert_eq!(cfg.backend, BackendKind::Host);
         assert_eq!(cfg.vocab, 2048);
         assert_eq!(cfg.shard_threshold, 512);
         assert_eq!(cfg.grid_rows, 4);
+        assert_eq!(cfg.pool_sched, SchedPolicy::Fifo);
+    }
+
+    #[test]
+    fn pool_sched_rejects_unknown_values() {
+        let v = json::parse(r#"{"pool_sched": "lifo"}"#).unwrap();
+        assert!(ServeConfig::from_json(&v).is_err());
+        let v = json::parse(r#"{"pool_sched": "steal"}"#).unwrap();
+        assert_eq!(ServeConfig::from_json(&v).unwrap().pool_sched, SchedPolicy::Steal);
     }
 
     #[test]

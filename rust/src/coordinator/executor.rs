@@ -95,6 +95,7 @@ impl Executor {
             // size shards so the threshold row yields two, larger rows
             // fan out toward the worker count.
             min_shard: (cfg.shard_threshold / 2).max(1),
+            sched: cfg.pool_sched,
             ..ShardEngineConfig::default()
         })
     }
@@ -112,9 +113,10 @@ impl Executor {
         let shard_engine = Self::shard_engine_from(cfg);
         crate::info!(
             "coordinator.executor",
-            "host backend: vocab {vocab}, hidden {hidden}, {} shard workers, threshold {}, \
-             grid rows {}",
+            "host backend: vocab {vocab}, hidden {hidden}, {} shard workers ({} pool), \
+             threshold {}, grid rows {}",
             shard_engine.workers(),
+            shard_engine.sched().as_str(),
             shard_engine.threshold(),
             if cfg.grid_rows == 0 { "auto".to_string() } else { cfg.grid_rows.to_string() }
         );
@@ -354,6 +356,15 @@ impl Executor {
     /// batching are exactly the capabilities the online normalizer's ⊕
     /// monoid buys, so the baseline must not get them.
     fn softmax_host(&self, rows: &[&[f32]]) -> Vec<Vec<f32>> {
+        // Defensive short-circuit for batches where every request
+        // failed validation: `chunks(n)` panics on n == 0, and while
+        // `grid_chunk` clamps to ≥ 1 today, keeping the empty case out
+        // of the chunk/grid machinery makes the invariant local
+        // instead of resting on that clamp (and skips a pointless
+        // zero-row dispatch).
+        if rows.is_empty() {
+            return Vec::new();
+        }
         match self.mode {
             ServingMode::Safe => {
                 rows.iter().map(|r| softmax::compute(r, Algorithm::Safe)).collect()
@@ -578,6 +589,12 @@ impl Executor {
     /// paper compares against, deliberately unsharded (see
     /// [`Self::softmax_host`]).
     fn decode_host(&self, states: &[&[f32]]) -> Vec<(Vec<f32>, Vec<i64>)> {
+        // Same defensive empty-batch short-circuit as `softmax_host`:
+        // decode and lm_step batches where every request was rejected
+        // up front never reach the chunked grid dispatch.
+        if states.is_empty() {
+            return Vec::new();
+        }
         let k = self.artifact_k;
         match self.mode {
             ServingMode::Safe => states

@@ -1,0 +1,216 @@
+//! Per-worker work-stealing deques: LIFO for the owner, FIFO for
+//! thieves.
+//!
+//! Each [`ThreadPool`](super::ThreadPool) worker running under
+//! [`SchedPolicy::Steal`](super::SchedPolicy) owns one bounded
+//! [`StealDeque`].  Batch submissions scatter tasks across the deques;
+//! the owner pops its own back (LIFO — the most recently assigned task
+//! is the cache-warmest), while idle workers steal from the *front*
+//! (FIFO — the oldest task, the one the owner is furthest from
+//! reaching).  The two ends never compete for the same task until the
+//! deque is down to a single element, which is exactly the regime where
+//! a lock is cheap.
+//!
+//! The paper's ⊕ monoid is what makes this scheduler legal at all:
+//! shard partials merge associatively in any order, so tile *placement*
+//! and *execution order* are pure performance knobs — stealing can
+//! never change a result (the grid property tests pin this under both
+//! scheduling policies).
+//!
+//! Implementation note: the offline registry has no `crossbeam`, so
+//! this is a mutexed ring rather than a Chase–Lev array.  Every deque
+//! has its *own* mutex: in steady state the owner is the only thread
+//! touching it, so the lock is uncontended and the cost is one
+//! uncontended atomic RMW per push/pop — contention only appears when
+//! a thief shows up, i.e. when the owner is the straggler and paying a
+//! lock round-trip is irrelevant.  A SeqCst `len` mirror lets parking
+//! workers and `join_idle` poll emptiness without taking S locks (see
+//! the field docs for why the ordering matters).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// A bounded double-ended queue supporting owner LIFO pops and thief
+/// FIFO steals.
+pub struct StealDeque<T> {
+    inner: Mutex<VecDeque<T>>,
+    /// Mirror of `inner.len()`, updated under the lock, readable
+    /// without it.  SeqCst on both sides: the pool's idle/park
+    /// predicates interleave these reads with reads of its `active`
+    /// counter, and their correctness argument needs all of them to
+    /// sit in the single sequentially-consistent order (a relaxed
+    /// mirror could report a pop's `0` while an older `active` value
+    /// is still visible, making a claimed-but-running task invisible
+    /// to `join_idle`).
+    len: AtomicUsize,
+    cap: usize,
+}
+
+impl<T> StealDeque<T> {
+    /// An empty deque holding at most `cap` tasks (`push` rejects
+    /// beyond that so submitters overflow to the shared injector
+    /// instead of buffering unboundedly on one worker).
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "deque capacity must be positive");
+        Self { inner: Mutex::new(VecDeque::new()), len: AtomicUsize::new(0), cap }
+    }
+
+    /// Maximum number of queued tasks.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Queued-task count (lock-free snapshot; exact only to the holder
+    /// of the lock).
+    pub fn len(&self) -> usize {
+        self.len.load(Ordering::SeqCst)
+    }
+
+    /// Whether the snapshot length is zero.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Push onto the owner end (back).  Returns the task back to the
+    /// caller when the deque is full.
+    pub fn push(&self, t: T) -> Result<(), T> {
+        let mut q = self.inner.lock().unwrap();
+        if q.len() >= self.cap {
+            return Err(t);
+        }
+        q.push_back(t);
+        self.len.store(q.len(), Ordering::SeqCst);
+        Ok(())
+    }
+
+    /// Owner pop: newest task first (LIFO).
+    pub fn pop(&self) -> Option<T> {
+        let mut q = self.inner.lock().unwrap();
+        let t = q.pop_back();
+        self.len.store(q.len(), Ordering::SeqCst);
+        t
+    }
+
+    /// Thief pop: oldest task first (FIFO) — the opposite end from the
+    /// owner, so steals drain the work the owner is furthest from.
+    pub fn steal(&self) -> Option<T> {
+        let mut q = self.inner.lock().unwrap();
+        let t = q.pop_front();
+        self.len.store(q.len(), Ordering::SeqCst);
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+
+    #[test]
+    fn owner_pops_lifo() {
+        let d = StealDeque::new(16);
+        for i in 0..4 {
+            d.push(i).unwrap();
+        }
+        assert_eq!(d.len(), 4);
+        assert_eq!((d.pop(), d.pop(), d.pop(), d.pop()), (Some(3), Some(2), Some(1), Some(0)));
+        assert!(d.pop().is_none());
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn thief_steals_fifo_from_the_far_end() {
+        let d = StealDeque::new(16);
+        for i in 0..4 {
+            d.push(i).unwrap();
+        }
+        assert_eq!(d.steal(), Some(0), "thief takes the oldest");
+        assert_eq!(d.pop(), Some(3), "owner takes the newest");
+        assert_eq!(d.steal(), Some(1));
+        assert_eq!(d.pop(), Some(2));
+        assert!(d.steal().is_none());
+    }
+
+    #[test]
+    fn push_bounces_when_full() {
+        let d = StealDeque::new(2);
+        d.push("a").unwrap();
+        d.push("b").unwrap();
+        assert_eq!(d.push("c"), Err("c"), "overflow returns the task");
+        assert_eq!(d.len(), 2);
+        d.pop().unwrap();
+        d.push("c").unwrap();
+    }
+
+    #[test]
+    fn concurrent_steal_torture_conserves_tasks() {
+        // 1 owner pushing + popping, 3 thieves stealing: every pushed
+        // token is consumed exactly once, none duplicated or lost.
+        const N: usize = 10_000;
+        let d = Arc::new(StealDeque::new(64));
+        let done = Arc::new(AtomicBool::new(false));
+        let seen: Vec<AtomicUsize> = (0..N).map(|_| AtomicUsize::new(0)).collect();
+        let seen = Arc::new(seen);
+
+        let thieves: Vec<_> = (0..3)
+            .map(|_| {
+                let d = d.clone();
+                let done = done.clone();
+                let seen = seen.clone();
+                std::thread::spawn(move || {
+                    loop {
+                        match d.steal() {
+                            Some(i) => {
+                                seen[i].fetch_add(1, Ordering::SeqCst);
+                            }
+                            None if done.load(Ordering::SeqCst) => break,
+                            None => std::thread::yield_now(),
+                        }
+                    }
+                })
+            })
+            .collect();
+
+        let mut i = 0usize;
+        let mut pending = 0usize;
+        while i < N || pending > 0 {
+            if i < N {
+                match d.push(i) {
+                    Ok(()) => {
+                        pending += 1;
+                        i += 1;
+                    }
+                    Err(_) => {
+                        // full: drain one from the owner end instead
+                        if let Some(j) = d.pop() {
+                            seen[j].fetch_add(1, Ordering::SeqCst);
+                            pending -= 1;
+                        }
+                    }
+                }
+            } else if let Some(j) = d.pop() {
+                seen[j].fetch_add(1, Ordering::SeqCst);
+                pending -= 1;
+            } else {
+                // thieves may still hold the remaining tokens
+                pending = d.len();
+                if pending == 0 {
+                    break;
+                }
+            }
+        }
+        // let thieves drain whatever is left, then stop them
+        while !d.is_empty() {
+            std::thread::yield_now();
+        }
+        done.store(true, Ordering::SeqCst);
+        for t in thieves {
+            t.join().unwrap();
+        }
+        for (i, s) in seen.iter().enumerate() {
+            assert_eq!(s.load(Ordering::SeqCst), 1, "token {i} consumed exactly once");
+        }
+    }
+}

@@ -1,22 +1,29 @@
 //! Concurrency substrate (no `tokio`/`rayon` in the offline registry).
 //!
-//! * [`ThreadPool`] — fixed-size worker pool with a shared injector
-//!   queue for `'static` tasks; powers the server's connection handling
-//!   and the coordinator's background workers.
+//! * [`ThreadPool`] — fixed-size worker pool for `'static` tasks with a
+//!   pluggable [`SchedPolicy`] (shared FIFO injector, or per-worker
+//!   work-stealing deques); powers the server's connection handling,
+//!   the coordinator's background workers, and the shard engine.
+//! * [`StealDeque`] — the bounded per-worker deque behind
+//!   [`SchedPolicy::Steal`] (LIFO owner pop, FIFO steal).
 //! * [`oneshot`] — single-value rendezvous channel (request → response).
 //! * [`bounded`] — blocking MPMC channel with capacity-based
 //!   backpressure (the batcher's admission queue).
-//! * [`WaitGroup`] — Go-style completion barrier for fan-out/fan-in.
+//! * [`WaitGroup`] — Go-style completion barrier for fan-out/fan-in
+//!   (epoch-based: `wait()` covers exactly the guards registered
+//!   before the call).
 //! * [`parallel_chunks`] — scoped data-parallel map over slice chunks
 //!   with an atomic work queue (rayon-style, borrow-friendly); powers
 //!   the parallel ⊕ reduction of §3.1.
 
 pub mod channel;
+pub mod deque;
 pub mod pool;
 pub mod waitgroup;
 
 pub use channel::{bounded, oneshot, RecvError, SendError};
-pub use pool::ThreadPool;
+pub use deque::StealDeque;
+pub use pool::{SchedPolicy, ThreadPool};
 pub use waitgroup::WaitGroup;
 
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -73,9 +80,17 @@ where
 
 /// Raw pointer wrapper asserting cross-thread transfer is safe under the
 /// disjoint-write discipline documented at the use site.
+///
+/// SAFETY contract: holders may only *write* `T` values through the
+/// pointer, each index from exactly one thread (the atomic work counter
+/// guarantees disjointness), and the owning scope must join all workers
+/// before the pointee is read.  Writing a `T` on another thread is a
+/// cross-thread transfer of `T`, hence the `T: Send` bound — an
+/// unbounded impl would let `parallel_chunks` smuggle `!Send` types
+/// (e.g. `Rc` results) across threads.
 struct SendPtr<T>(*mut T);
-unsafe impl<T> Sync for SendPtr<T> {}
-unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+unsafe impl<T: Send> Send for SendPtr<T> {}
 
 /// Default parallelism: physical parallelism reported by the OS.
 pub fn default_threads() -> usize {

@@ -1,36 +1,141 @@
-//! Fixed-size worker pool with a shared FIFO injector queue.
+//! Fixed-size worker pool with a pluggable scheduling policy.
 //!
 //! Semantics match the classic `ThreadPool` contract:
 //! [`ThreadPool::execute`] enqueues a boxed `'static` task; workers
-//! drain the queue; dropping the pool signals shutdown and joins all
-//! workers after the queue is empty.  [`ThreadPool::join_idle`] lets
+//! drain the queues; dropping the pool signals shutdown and joins all
+//! workers after every queue is empty.  [`ThreadPool::join_idle`] lets
 //! tests and the coordinator quiesce without tearing the pool down.
-//! [`ThreadPool::execute_all`] admits a whole batch of tasks under one
-//! lock acquisition — the enqueue path behind the shard layer's grid
-//! dispatch, where an R×S tile fan-out would otherwise pay R·S
-//! lock/notify round-trips.
+//! [`ThreadPool::execute_all`] admits a whole batch of tasks in one
+//! scheduling pass — the enqueue path behind the shard layer's grid
+//! dispatch.
+//!
+//! Two policies ([`SchedPolicy`]) schedule the same contract:
+//!
+//! * **Fifo** — every task goes through one shared injector queue,
+//!   strictly oldest-first.  Deterministic dequeue order (the unit
+//!   tests rely on it with one worker), but every worker contends on
+//!   the single injector lock, and a straggler task pins its worker
+//!   while the queue behind it is served by the rest.
+//! * **Steal** — each worker owns a bounded [`StealDeque`]
+//!   (`exec::deque`): batch submissions scatter tasks round-robin
+//!   across the deques, owners pop LIFO, and an idle worker steals
+//!   FIFO from its siblings before sleeping.  The shared injector is
+//!   demoted to a submission/overflow channel ([`ThreadPool::execute`]
+//!   and deque overflow land there; workers drain it between own-deque
+//!   and steal attempts).  Under skewed tile costs this keeps every
+//!   core fed: the deque of a worker stuck on a long tile is emptied
+//!   from the far end by its idle siblings.
+//!
+//! Task *results* never depend on the policy — the shard layer's ⊕
+//! merge is associative and its bracketing is fixed by the plan, not
+//! by arrival order (the grid property tests pin bitwise identity
+//! under both policies).  Only completion order and occupancy change.
+//!
+//! Observability (`metrics::global()`, process-wide across pools):
+//! `exec.pool.steal.steals` (tasks obtained from a sibling's deque),
+//! `exec.pool.steal.failed` (steal sweeps that found every sibling
+//! empty), `exec.pool.steal.overflows` (tasks bounced from a full
+//! deque to the injector).
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
+use anyhow::{bail, Result};
+
+use super::deque::StealDeque;
 use super::waitgroup::WaitGroup;
+use crate::metrics::{self, Counter};
 
 type Task = Box<dyn FnOnce() + Send + 'static>;
 
+/// Per-worker deque capacity under [`SchedPolicy::Steal`].  Submissions
+/// beyond it overflow to the shared injector, so one worker can never
+/// buffer an unbounded backlog that its siblings cannot reach quickly.
+const DEQUE_CAP: usize = 256;
+
+/// How a [`ThreadPool`] routes tasks to workers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// One shared FIFO injector queue (strict submission order).
+    Fifo,
+    /// Per-worker deques, LIFO owner pop, FIFO steal; injector as the
+    /// submission/overflow channel.
+    Steal,
+}
+
+impl SchedPolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "fifo" => Ok(SchedPolicy::Fifo),
+            "steal" => Ok(SchedPolicy::Steal),
+            _ => bail!("invalid pool scheduler `{s}` (expected `fifo` or `steal`)"),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SchedPolicy::Fifo => "fifo",
+            SchedPolicy::Steal => "steal",
+        }
+    }
+
+    /// The policy named by the `OSMAX_POOL_SCHED` environment variable
+    /// (how CI's scheduler matrix threads a policy through the e2e
+    /// suites), or `default` when unset.  An unparsable value panics —
+    /// a matrix job silently testing the wrong scheduler is worse than
+    /// a loud failure.
+    pub fn from_env_or(default: SchedPolicy) -> SchedPolicy {
+        Self::resolve(std::env::var("OSMAX_POOL_SCHED").ok().as_deref(), default)
+    }
+
+    /// Testable core of [`Self::from_env_or`] — kept free of
+    /// environment reads so tests never mutate process-global env vars
+    /// (`set_var` races the other threads of the test binary, and
+    /// clobbering `OSMAX_POOL_SCHED` would defeat CI's scheduler
+    /// matrix for every test that runs afterwards).
+    fn resolve(value: Option<&str>, default: SchedPolicy) -> SchedPolicy {
+        match value {
+            Some(s) => SchedPolicy::parse(s).expect("OSMAX_POOL_SCHED"),
+            None => default,
+        }
+    }
+}
+
 struct Shared {
+    /// The injector: sole queue under `Fifo`, submission/overflow
+    /// channel under `Steal`.  Also guards `shutdown`, and serializes
+    /// the sleep/notify handshake for both condvars.
     queue: Mutex<State>,
     /// Signals workers when tasks arrive or shutdown begins.
     work_cv: Condvar,
     /// Signals joiners when the pool drains to idle.
     idle_cv: Condvar,
+    /// One deque per worker (`Steal` only; empty under `Fifo`).
+    deques: Vec<StealDeque<Task>>,
+    /// Tasks claimed or executing.  A task is counted here *before* it
+    /// leaves any queue (claim protocol), so `join_idle` can never
+    /// observe "all queues empty, nothing active" while a task is in
+    /// flight between a queue and its worker.
+    active: AtomicUsize,
+    /// Rotates the scatter origin across batch submissions so repeated
+    /// small batches don't all land on worker 0.
+    cursor: AtomicUsize,
+    steals: Arc<Counter>,
+    failed_steals: Arc<Counter>,
+    overflows: Arc<Counter>,
 }
 
 struct State {
     tasks: VecDeque<Task>,
     shutdown: bool,
-    /// Tasks currently executing (for join_idle).
-    active: usize,
+}
+
+impl Shared {
+    fn any_deque_nonempty(&self) -> bool {
+        self.deques.iter().any(|d| !d.is_empty())
+    }
 }
 
 /// A fixed pool of named worker threads.
@@ -38,27 +143,48 @@ pub struct ThreadPool {
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
     size: usize,
+    policy: SchedPolicy,
 }
 
 impl ThreadPool {
-    /// Spawn `size` workers named `{name}-{i}`.
+    /// Spawn `size` workers named `{name}-{i}` under the default
+    /// [`SchedPolicy::Fifo`] (strict submission order — what the
+    /// server/coordinator pools and the ordering-sensitive unit tests
+    /// expect).  The shard engine opts into `Steal` via
+    /// [`ThreadPool::with_policy`].
     pub fn new(size: usize, name: &str) -> Self {
+        Self::with_policy(size, name, SchedPolicy::Fifo)
+    }
+
+    /// Spawn `size` workers named `{name}-{i}` under `policy`.
+    pub fn with_policy(size: usize, name: &str, policy: SchedPolicy) -> Self {
         assert!(size > 0, "pool must have at least one worker");
+        let reg = metrics::global();
+        let deques = match policy {
+            SchedPolicy::Fifo => Vec::new(),
+            SchedPolicy::Steal => (0..size).map(|_| StealDeque::new(DEQUE_CAP)).collect(),
+        };
         let shared = Arc::new(Shared {
-            queue: Mutex::new(State { tasks: VecDeque::new(), shutdown: false, active: 0 }),
+            queue: Mutex::new(State { tasks: VecDeque::new(), shutdown: false }),
             work_cv: Condvar::new(),
             idle_cv: Condvar::new(),
+            deques,
+            active: AtomicUsize::new(0),
+            cursor: AtomicUsize::new(0),
+            steals: reg.counter("exec.pool.steal.steals"),
+            failed_steals: reg.counter("exec.pool.steal.failed"),
+            overflows: reg.counter("exec.pool.steal.overflows"),
         });
         let workers = (0..size)
             .map(|i| {
                 let shared = shared.clone();
                 std::thread::Builder::new()
                     .name(format!("{name}-{i}"))
-                    .spawn(move || worker_loop(shared))
+                    .spawn(move || worker_loop(shared, i))
                     .expect("failed to spawn pool worker")
             })
             .collect();
-        Self { shared, workers, size }
+        Self { shared, workers, size, policy }
     }
 
     /// Number of worker threads.
@@ -66,7 +192,13 @@ impl ThreadPool {
         self.size
     }
 
-    /// Enqueue a task.  Panics if called after shutdown began (drop).
+    /// The scheduling policy this pool runs.
+    pub fn policy(&self) -> SchedPolicy {
+        self.policy
+    }
+
+    /// Enqueue a task on the injector (the submission channel under
+    /// both policies).  Panics if called after shutdown began (drop).
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
         let mut st = self.shared.queue.lock().unwrap();
         assert!(!st.shutdown, "execute on shut-down pool");
@@ -75,29 +207,87 @@ impl ThreadPool {
         self.shared.work_cv.notify_one();
     }
 
-    /// Enqueue a batch of tasks atomically: one lock acquisition, one
-    /// wake-all, FIFO order preserved.  Panics if called after shutdown
-    /// began (drop).
+    /// Enqueue a batch of tasks in one scheduling pass, then wake all
+    /// workers.  `Fifo`: one injector lock acquisition, submission
+    /// order preserved.  `Steal`: tasks scatter round-robin across the
+    /// worker deques (rotating origin), overflow beyond a deque's bound
+    /// lands on the injector; dequeue order is a scheduling detail.
+    /// Panics if called after shutdown began (drop).
     pub fn execute_all(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'static>>) {
         if tasks.is_empty() {
             return;
         }
-        let mut st = self.shared.queue.lock().unwrap();
-        assert!(!st.shutdown, "execute on shut-down pool");
-        st.tasks.extend(tasks);
-        drop(st);
+        match self.policy {
+            SchedPolicy::Fifo => {
+                let mut st = self.shared.queue.lock().unwrap();
+                assert!(!st.shutdown, "execute on shut-down pool");
+                st.tasks.extend(tasks);
+                drop(st);
+            }
+            SchedPolicy::Steal => {
+                {
+                    let st = self.shared.queue.lock().unwrap();
+                    assert!(!st.shutdown, "execute on shut-down pool");
+                }
+                let n = self.shared.deques.len();
+                let start = self.shared.cursor.fetch_add(1, Ordering::Relaxed) % n;
+                let mut overflow: Vec<Task> = Vec::new();
+                for (i, t) in tasks.into_iter().enumerate() {
+                    if let Err(t) = self.shared.deques[(start + i) % n].push(t) {
+                        overflow.push(t);
+                    }
+                }
+                if !overflow.is_empty() {
+                    self.shared.overflows.add(overflow.len() as u64);
+                }
+                // Acquire the queue mutex even when there is no
+                // overflow: a worker parks only while holding it, so
+                // passing through the lock guarantees every parked (or
+                // parking) worker either sees the deque lengths written
+                // above or receives the notify below — no lost wakeups.
+                let mut st = self.shared.queue.lock().unwrap();
+                st.tasks.extend(overflow);
+                drop(st);
+            }
+        }
         self.shared.work_cv.notify_all();
     }
 
-    /// Number of queued (not yet running) tasks.
+    /// Number of queued (not yet claimed) tasks across the injector and
+    /// every worker deque.
     pub fn queued(&self) -> usize {
-        self.shared.queue.lock().unwrap().tasks.len()
+        let injected = self.shared.queue.lock().unwrap().tasks.len();
+        injected + self.shared.deques.iter().map(|d| d.len()).sum::<usize>()
     }
 
-    /// Block until the queue is empty and no task is executing.
+    /// Snapshot of the steal metrics `(steals, failed_sweeps,
+    /// overflows)`.  Process-wide counters shared by every pool (they
+    /// live in the global metrics registry), so tests assert on deltas
+    /// or lower bounds, not exact values.
+    pub fn steal_stats(&self) -> (u64, u64, u64) {
+        (
+            self.shared.steals.get(),
+            self.shared.failed_steals.get(),
+            self.shared.overflows.get(),
+        )
+    }
+
+    /// Block until every queue is empty and no task is executing.
     pub fn join_idle(&self) {
+        // Ordering matters: scan the deques BEFORE loading `active`.
+        // A steal-policy claim goes fetch_add(active) → pop(len := 0),
+        // both SeqCst, so in the seq-cst total order a deque observed
+        // empty means any claim of its last task has already bumped
+        // `active` — the subsequent `active` load cannot miss it.  Read
+        // the other way around, a task claimed between the two loads
+        // would be invisible to both and join_idle could return while
+        // it is still executing.  (Injector claims need no such care:
+        // they run under the mutex held here.)
         let mut st = self.shared.queue.lock().unwrap();
-        while !st.tasks.is_empty() || st.active > 0 {
+        while !st.tasks.is_empty()
+            || self.shared.any_deque_nonempty()
+            || self.shared.active.load(Ordering::SeqCst) > 0
+        {
             st = self.shared.idle_cv.wait(st).unwrap();
         }
     }
@@ -151,38 +341,116 @@ impl Drop for ThreadPool {
     }
 }
 
-fn worker_loop(shared: Arc<Shared>) {
+fn worker_loop(shared: Arc<Shared>, id: usize) {
+    while let Some(task) = next_task(&shared, id) {
+        run_task(&shared, task);
+    }
+}
+
+/// Claim the next task for worker `id`: own deque (LIFO) → injector →
+/// steal sweep (FIFO from siblings) → park.  Returns `None` only at
+/// shutdown with every queue drained (the drop-drains contract).
+///
+/// Claim protocol: `active` is incremented *before* attempting to pop
+/// from any queue and rolled back if the pop comes up empty, so the
+/// idle predicate ("all queues empty and active == 0") is never
+/// transiently true while a task is moving from a queue to a worker.
+fn next_task(shared: &Shared, id: usize) -> Option<Task> {
     loop {
-        let task = {
+        // 1. Own deque, newest first (Steal policy only).
+        if let Some(own) = shared.deques.get(id) {
+            shared.active.fetch_add(1, Ordering::SeqCst);
+            if let Some(t) = own.pop() {
+                return Some(t);
+            }
+            shared.active.fetch_sub(1, Ordering::SeqCst);
+        }
+
+        // 2. Shared injector, oldest first.
+        {
+            let mut st = shared.queue.lock().unwrap();
+            shared.active.fetch_add(1, Ordering::SeqCst);
+            if let Some(t) = st.tasks.pop_front() {
+                return Some(t);
+            }
+            shared.active.fetch_sub(1, Ordering::SeqCst);
+        }
+
+        // 3. Steal sweep: siblings' deques, oldest first, starting just
+        // past our own slot.
+        let n = shared.deques.len();
+        if n > 1 {
+            let mut stolen = None;
+            for off in 1..n {
+                let victim = &shared.deques[(id + off) % n];
+                if victim.is_empty() {
+                    continue; // cheap skip without touching its lock
+                }
+                shared.active.fetch_add(1, Ordering::SeqCst);
+                if let Some(t) = victim.steal() {
+                    shared.steals.inc();
+                    stolen = Some(t);
+                    break;
+                }
+                // lost the race for the victim's last task
+                shared.active.fetch_sub(1, Ordering::SeqCst);
+            }
+            match stolen {
+                Some(t) => return Some(t),
+                None => shared.failed_steals.inc(),
+            }
+        }
+
+        // 4. Park.  The checks below run under the queue mutex, and
+        // every submission passes through that mutex before notifying,
+        // so a task can never be published between our checks and the
+        // wait (no lost wakeups).
+        {
             let mut st = shared.queue.lock().unwrap();
             loop {
+                shared.active.fetch_add(1, Ordering::SeqCst);
                 if let Some(t) = st.tasks.pop_front() {
-                    st.active += 1;
-                    break t;
+                    return Some(t);
+                }
+                shared.active.fetch_sub(1, Ordering::SeqCst);
+                if shared.any_deque_nonempty() {
+                    break; // retry the fast paths instead of sleeping
+                }
+                // Everything is empty and nothing is claimed: the pool
+                // is genuinely idle at this instant.  Wake joiners —
+                // they may have gone to sleep after observing a
+                // *transient* `active > 0` from one of the lock-free
+                // claim probes above (steps 1/3 roll their claim back
+                // without ever notifying), and `run_task` only notifies
+                // after real task completions.
+                if shared.active.load(Ordering::SeqCst) == 0 {
+                    shared.idle_cv.notify_all();
                 }
                 if st.shutdown {
-                    return;
+                    return None;
                 }
                 st = shared.work_cv.wait(st).unwrap();
             }
-        };
-        // Panics in tasks poison nothing: catch and continue, matching
-        // production pool behaviour (a bad request must not kill workers).
-        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(task));
-        let mut st = shared.queue.lock().unwrap();
-        st.active -= 1;
-        let idle = st.tasks.is_empty() && st.active == 0;
-        drop(st);
-        if idle {
-            shared.idle_cv.notify_all();
         }
-        if let Err(p) = result {
-            crate::error!(
-                "exec.pool",
-                "worker task panicked: {}",
-                panic_message(&p)
-            );
-        }
+    }
+}
+
+fn run_task(shared: &Shared, task: Task) {
+    // Panics in tasks poison nothing: catch and continue, matching
+    // production pool behaviour (a bad request must not kill workers).
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(task));
+    shared.active.fetch_sub(1, Ordering::SeqCst);
+    let st = shared.queue.lock().unwrap();
+    // Deques before `active` — same reasoning as `join_idle`.
+    let idle = st.tasks.is_empty()
+        && !shared.any_deque_nonempty()
+        && shared.active.load(Ordering::SeqCst) == 0;
+    drop(st);
+    if idle {
+        shared.idle_cv.notify_all();
+    }
+    if let Err(p) = result {
+        crate::error!("exec.pool", "worker task panicked: {}", panic_message(&p));
     }
 }
 
@@ -251,6 +519,7 @@ mod tests {
         pool.join_idle();
         assert_eq!(pool.queued(), 0);
         assert_eq!(pool.size(), 2);
+        assert_eq!(pool.policy(), SchedPolicy::Fifo);
     }
 
     #[test]
@@ -306,5 +575,108 @@ mod tests {
         ];
         pool.run_scoped(tasks); // must not hang or propagate the panic
         assert!(*ok.lock().unwrap());
+    }
+
+    // --- Steal policy ----------------------------------------------------
+
+    #[test]
+    fn sched_policy_parses() {
+        assert_eq!(SchedPolicy::parse("fifo").unwrap(), SchedPolicy::Fifo);
+        assert_eq!(SchedPolicy::parse("steal").unwrap(), SchedPolicy::Steal);
+        assert!(SchedPolicy::parse("lifo").is_err());
+        assert_eq!(SchedPolicy::Steal.as_str(), "steal");
+        assert_eq!(SchedPolicy::Fifo.as_str(), "fifo");
+    }
+
+    #[test]
+    fn steal_pool_executes_all_tasks() {
+        let pool = ThreadPool::with_policy(4, "t", SchedPolicy::Steal);
+        assert_eq!(pool.policy(), SchedPolicy::Steal);
+        let counter = Arc::new(AtomicUsize::new(0));
+        // execute() lands on the injector, execute_all scatters across
+        // the deques — both must drain.
+        for _ in 0..40 {
+            let c = counter.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        let tasks: Vec<Box<dyn FnOnce() + Send + 'static>> = (0..60)
+            .map(|_| {
+                let c = counter.clone();
+                Box::new(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + 'static>
+            })
+            .collect();
+        pool.execute_all(tasks);
+        pool.join_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+        assert_eq!(pool.queued(), 0);
+    }
+
+    #[test]
+    fn steal_pool_drop_drains_deques_and_injector() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = ThreadPool::with_policy(3, "t", SchedPolicy::Steal);
+            // More tasks than DEQUE_CAP·workers would hold per deque
+            // slot parity, so both the deques and (potentially) the
+            // injector overflow path carry work at drop time.
+            let tasks: Vec<Box<dyn FnOnce() + Send + 'static>> = (0..900)
+                .map(|_| {
+                    let c = counter.clone();
+                    Box::new(move || {
+                        std::thread::sleep(std::time::Duration::from_micros(10));
+                        c.fetch_add(1, Ordering::Relaxed);
+                    }) as Box<dyn FnOnce() + Send + 'static>
+                })
+                .collect();
+            pool.execute_all(tasks);
+        } // drop: must finish queued work before join returns
+        assert_eq!(counter.load(Ordering::Relaxed), 900);
+    }
+
+    #[test]
+    fn steal_pool_run_scoped_borrows_and_joins() {
+        let pool = ThreadPool::with_policy(4, "t", SchedPolicy::Steal);
+        let data: Vec<u64> = (0..1000).collect();
+        let total = AtomicUsize::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = data
+            .chunks(100)
+            .map(|chunk| {
+                let total = &total;
+                Box::new(move || {
+                    let sum: u64 = chunk.iter().sum();
+                    total.fetch_add(sum as usize, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(tasks);
+        assert_eq!(total.load(Ordering::Relaxed), 499_500);
+    }
+
+    #[test]
+    fn steal_pool_survives_panicking_task() {
+        crate::logging::init(crate::logging::Level::Error);
+        let pool = ThreadPool::with_policy(2, "t", SchedPolicy::Steal);
+        let ok = Mutex::new(false);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+            Box::new(|| panic!("tile scan failed")),
+            Box::new(|| *ok.lock().unwrap() = true),
+        ];
+        pool.run_scoped(tasks);
+        assert!(*ok.lock().unwrap());
+        pool.join_idle();
+    }
+
+    #[test]
+    fn env_policy_resolution() {
+        // Pure-value test of the env resolution — deliberately no
+        // set_var/remove_var (see SchedPolicy::resolve docs).
+        assert_eq!(SchedPolicy::resolve(None, SchedPolicy::Steal), SchedPolicy::Steal);
+        assert_eq!(SchedPolicy::resolve(None, SchedPolicy::Fifo), SchedPolicy::Fifo);
+        assert_eq!(SchedPolicy::resolve(Some("fifo"), SchedPolicy::Steal), SchedPolicy::Fifo);
+        assert_eq!(SchedPolicy::resolve(Some("steal"), SchedPolicy::Fifo), SchedPolicy::Steal);
     }
 }

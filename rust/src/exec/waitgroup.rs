@@ -1,11 +1,34 @@
 //! Go-style WaitGroup: `add()` hands out RAII guards, `wait()` blocks
 //! until every guard has dropped.  Used for fan-out/fan-in joins in the
 //! coordinator and the scoped parallel helpers.
+//!
+//! `wait()` is an *epoch* barrier, not a zero-crossing watch: guards
+//! carry monotonically-assigned ids, `wait()` latches the id horizon at
+//! the moment of the call, and returns when no guard below that horizon
+//! is still live.  A plain outstanding-count condition (`count == 0`)
+//! has two failure modes when `add()` races with completions: a waiter
+//! can miss a transient zero between registrations and then block on
+//! guards registered *after* its call (potentially forever if those are
+//! long-lived), and the "what am I waiting for" set silently shifts
+//! under it.  (A subtler pair of monotone added/done tallies fails too:
+//! a later guard's drop bumps `done` and satisfies an earlier epoch's
+//! count while one of its own guards still runs.)  Tracking the live
+//! ids makes the contract exact: `wait()` returns when, and only when,
+//! every guard registered before the call has dropped.
 
+use std::collections::BTreeSet;
 use std::sync::{Arc, Condvar, Mutex};
 
+struct State {
+    /// Next guard id == total guards ever registered; ids below this
+    /// at `wait()` time are that waiter's epoch.
+    next_id: u64,
+    /// Ids of live (not-yet-dropped) guards.
+    outstanding: BTreeSet<u64>,
+}
+
 struct Inner {
-    count: Mutex<usize>,
+    state: Mutex<State>,
     cv: Condvar,
 }
 
@@ -15,9 +38,10 @@ pub struct WaitGroup {
     inner: Arc<Inner>,
 }
 
-/// RAII task guard; dropping it decrements the group.
+/// RAII task guard; dropping it marks one task complete.
 pub struct WaitGuard {
     inner: Arc<Inner>,
+    id: u64,
 }
 
 impl Default for WaitGroup {
@@ -28,35 +52,54 @@ impl Default for WaitGroup {
 
 impl WaitGroup {
     pub fn new() -> Self {
-        Self { inner: Arc::new(Inner { count: Mutex::new(0), cv: Condvar::new() }) }
+        Self {
+            inner: Arc::new(Inner {
+                state: Mutex::new(State { next_id: 0, outstanding: BTreeSet::new() }),
+                cv: Condvar::new(),
+            }),
+        }
     }
 
     /// Register one task; drop the returned guard on completion.
     pub fn add(&self) -> WaitGuard {
-        *self.inner.count.lock().unwrap() += 1;
-        WaitGuard { inner: self.inner.clone() }
+        let mut st = self.inner.state.lock().unwrap();
+        let id = st.next_id;
+        st.next_id += 1;
+        st.outstanding.insert(id);
+        drop(st);
+        WaitGuard { inner: self.inner.clone(), id }
     }
 
-    /// Block until the count returns to zero.
+    /// Block until every guard registered before this call has dropped.
+    /// Guards registered after the call are a later epoch: they are not
+    /// waited for, and their drops cannot satisfy this wait.
     pub fn wait(&self) {
-        let mut count = self.inner.count.lock().unwrap();
-        while *count > 0 {
-            count = self.inner.cv.wait(count).unwrap();
+        let mut st = self.inner.state.lock().unwrap();
+        let horizon = st.next_id;
+        while st.outstanding.range(..horizon).next().is_some() {
+            st = self.inner.cv.wait(st).unwrap();
         }
     }
 
     /// Current outstanding count (diagnostics only — racy by nature).
     pub fn pending(&self) -> usize {
-        *self.inner.count.lock().unwrap()
+        self.inner.state.lock().unwrap().outstanding.len()
     }
 }
 
 impl Drop for WaitGuard {
     fn drop(&mut self) {
-        let mut count = self.inner.count.lock().unwrap();
-        *count -= 1;
-        if *count == 0 {
-            drop(count);
+        let mut st = self.inner.state.lock().unwrap();
+        st.outstanding.remove(&self.id);
+        // Only removing the minimum live id can empty some waiter's
+        // `range(..horizon)`: while a smaller id stays live, it keeps
+        // blocking every horizon this id was below.  Skipping the
+        // broadcast otherwise spares the scoped-dispatch hot path
+        // O(tiles) futile waiter wakeups per grid (the waiter would
+        // just re-scan and sleep again).
+        let may_unblock = st.outstanding.iter().next().map_or(true, |&m| m > self.id);
+        drop(st);
+        if may_unblock {
             self.inner.cv.notify_all();
         }
     }
@@ -100,5 +143,111 @@ mod tests {
         }));
         assert!(r.is_err());
         wg.wait(); // must not hang
+    }
+
+    #[test]
+    fn transient_zero_between_registrations_is_not_an_early_return() {
+        // add → drop → add: the outstanding count dips to zero between
+        // the registrations.  A wait() issued after the second add must
+        // still block until the second guard drops.
+        let wg = WaitGroup::new();
+        let g1 = wg.add();
+        drop(g1);
+        let g2 = wg.add();
+
+        let finished = Arc::new(AtomicUsize::new(0));
+        let waiter = {
+            let wg = wg.clone();
+            let finished = finished.clone();
+            std::thread::spawn(move || {
+                wg.wait();
+                finished.store(1, Ordering::SeqCst);
+            })
+        };
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert_eq!(finished.load(Ordering::SeqCst), 0, "wait returned with a live guard");
+        drop(g2);
+        waiter.join().unwrap();
+        assert_eq!(finished.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn later_epoch_churn_does_not_satisfy_an_earlier_epoch() {
+        // Two pre-wait guards; after the waiter latches its horizon, a
+        // later guard is added AND dropped, then one pre-wait guard
+        // drops.  A drop-tally implementation would count the churn
+        // (two drops ≥ target two) and return with g2 still live; the
+        // id-set must keep waiting until g2 itself drops.
+        let wg = WaitGroup::new();
+        let g1 = wg.add();
+        let g2 = wg.add();
+        let entered = Arc::new(AtomicUsize::new(0));
+        let finished = Arc::new(AtomicUsize::new(0));
+        let waiter = {
+            let wg = wg.clone();
+            let entered = entered.clone();
+            let finished = finished.clone();
+            std::thread::spawn(move || {
+                entered.store(1, Ordering::SeqCst);
+                wg.wait();
+                finished.store(1, Ordering::SeqCst);
+            })
+        };
+        while entered.load(Ordering::SeqCst) == 0 {
+            std::thread::yield_now();
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let g3 = wg.add();
+        drop(g3); // later-epoch churn
+        drop(g1); // one of the two the waiter actually covers
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert_eq!(
+            finished.load(Ordering::SeqCst),
+            0,
+            "wait returned while a pre-call guard was still live"
+        );
+        drop(g2);
+        waiter.join().unwrap();
+        assert_eq!(finished.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn wait_ignores_guards_added_after_the_call() {
+        // The race the epoch counter fixes: a waiter whose epoch is
+        // {g1} must not block on g2, a guard registered after wait()
+        // latched its target.  Under the old zero-crossing condition
+        // this interleaving (g1 drops while g2 is live) blocked the
+        // waiter until g2 dropped — forever, for a long-lived g2.
+        let wg = WaitGroup::new();
+        let g1 = wg.add();
+        let entered = Arc::new(AtomicUsize::new(0));
+        let finished = Arc::new(AtomicUsize::new(0));
+        let waiter = {
+            let wg = wg.clone();
+            let entered = entered.clone();
+            let finished = finished.clone();
+            std::thread::spawn(move || {
+                entered.store(1, Ordering::SeqCst);
+                wg.wait();
+                finished.store(1, Ordering::SeqCst);
+            })
+        };
+        while entered.load(Ordering::SeqCst) == 0 {
+            std::thread::yield_now();
+        }
+        // Give the waiter ample time to latch its epoch inside wait().
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let g2 = wg.add(); // next epoch — not the waiter's problem
+        drop(g1);
+
+        // The waiter must finish while g2 is still alive.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while finished.load(Ordering::SeqCst) == 0 && std::time::Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+        let ok = finished.load(Ordering::SeqCst) == 1;
+        drop(g2); // release before asserting so a failure can't hang the join
+        waiter.join().unwrap();
+        assert!(ok, "wait blocked on a guard registered after the call");
     }
 }

@@ -26,7 +26,7 @@ const VALUE_OPTS: &[&str] = &[
     "config", "addr", "artifacts", "mode", "shards", "max-batch", "max-wait-us",
     "queue-capacity", "workers", "k", "seed", "fig", "sizes", "batch", "threads",
     "device", "requests", "concurrency", "op", "out", "backend", "vocab", "hidden",
-    "host-shards", "shard-threshold", "grid-rows",
+    "host-shards", "shard-threshold", "grid-rows", "pool-sched",
 ];
 
 fn main() {
@@ -83,6 +83,8 @@ fn print_help() {
            --shard-threshold N  sharded-path vocab cutoff     [32768]\n\
            --grid-rows N        rows per batch×shard grid dispatch\n\
                                 (0=whole batch, 1=per-row)    [0]\n\
+           --pool-sched P       shard-pool scheduler: steal|fifo\n\
+                                (env default: OSMAX_POOL_SCHED) [steal]\n\
            --max-batch N        dynamic batch bound [16]\n\
            --max-wait-us N      batch deadline      [2000]\n\
            --queue-capacity N   admission queue bound         [1024]\n\
@@ -90,11 +92,12 @@ fn print_help() {
            --k N                default decode top-k          [5]\n\
            --seed N             synthetic-model RNG seed      [0xC0FFEE]\n\n\
          BENCH OPTIONS:\n\
-           --fig 1|2|3|4|k|ablation|grid|all  which figure/study  [all]\n\
+           --fig 1|2|3|4|k|ablation|grid|steal|all  which figure/study  [all]\n\
            --sizes a,b,c        vector sizes V override\n\
            --batch N            batch size override\n\
            --threads N          worker threads for parallel/sharded variants\n\
                                 (0 = one per core)                           [1]\n\
+           --smoke              minimal sizes/iterations (CI rot check)\n\
            --out FILE           also append results as JSON lines\n",
         onlinesoftmax::VERSION
     );
@@ -120,12 +123,19 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let sizes = args.opt_list::<usize>("sizes", &[])?;
     let batch = args.opt_parse("batch", 0usize)?;
     let threads = args.opt_parse("threads", 1usize)?;
+    let smoke = args.flag("smoke");
     let out = args.opt_str("out").map(|s| s.to_string());
     args.finish()?;
+    if smoke {
+        // Smoke runs exist to prove the bench binaries still build and
+        // execute (CI), not to measure — shrink the harness budgets.
+        std::env::set_var("OSMAX_BENCH_FAST", "1");
+    }
     let opts = benches::BenchOpts {
         sizes: if sizes.is_empty() { None } else { Some(sizes) },
         batch: if batch == 0 { None } else { Some(batch) },
         threads,
+        smoke,
         json_out: out,
     };
     match fig.as_str() {
@@ -136,6 +146,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "k" => benches::k_sweep(&opts),
         "ablation" | "shard" => benches::shard_ablation(&opts),
         "grid" => benches::grid_ablation(&opts),
+        "steal" => benches::steal_ablation(&opts),
         "all" => {
             benches::fig1(&opts)?;
             benches::fig2(&opts)?;
@@ -143,9 +154,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
             benches::fig4(&opts)?;
             benches::k_sweep(&opts)?;
             benches::shard_ablation(&opts)?;
-            benches::grid_ablation(&opts)
+            benches::grid_ablation(&opts)?;
+            benches::steal_ablation(&opts)
         }
-        other => Err(anyhow!("unknown figure `{other}` (1|2|3|4|k|ablation|grid|all)")),
+        other => Err(anyhow!("unknown figure `{other}` (1|2|3|4|k|ablation|grid|steal|all)")),
     }
 }
 

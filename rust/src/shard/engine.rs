@@ -21,7 +21,7 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use crate::exec::{self, ThreadPool};
+use crate::exec::{self, SchedPolicy, ThreadPool};
 use crate::metrics;
 use crate::softmax::monoid::{self, MD};
 use crate::softmax::vectorized;
@@ -42,6 +42,12 @@ pub struct ShardEngineConfig {
     /// Row length at which queries start sharding; below it the
     /// single-thread kernel runs inline (bitwise-identical results).
     pub threshold: usize,
+    /// Scheduling policy for the shard pool.  `Steal` (the default)
+    /// keeps workers fed under skewed tile costs; `Fifo` preserves
+    /// strict submission order.  Results are bitwise-identical under
+    /// either — the ⊕ bracketing is fixed by the plan, not by which
+    /// worker runs which tile when.
+    pub sched: SchedPolicy,
 }
 
 impl Default for ShardEngineConfig {
@@ -51,6 +57,7 @@ impl Default for ShardEngineConfig {
             max_shards: 0,
             min_shard: ShardPlan::DEFAULT_MIN_SHARD,
             threshold: 32_768,
+            sched: SchedPolicy::Steal,
         }
     }
 }
@@ -62,6 +69,7 @@ pub struct ShardEngine {
     max_shards: usize,
     min_shard: usize,
     threshold: usize,
+    sched: SchedPolicy,
 }
 
 impl ShardEngine {
@@ -69,17 +77,30 @@ impl ShardEngine {
         let workers = if cfg.workers == 0 { exec::default_threads() } else { cfg.workers };
         let max_shards = if cfg.max_shards == 0 { workers } else { cfg.max_shards };
         ShardEngine {
-            pool: (workers > 1).then(|| ThreadPool::new(workers, "shard")),
+            pool: (workers > 1).then(|| ThreadPool::with_policy(workers, "shard", cfg.sched)),
             workers,
             max_shards,
             min_shard: cfg.min_shard,
             threshold: cfg.threshold.max(1),
+            sched: cfg.sched,
         }
     }
 
     /// Number of pool workers (1 = fully inline engine).
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// The scheduling policy the shard pool runs under.
+    pub fn sched(&self) -> SchedPolicy {
+        self.sched
+    }
+
+    /// Cumulative task-steal count from the pool metrics (the
+    /// process-wide `exec.pool.steal.steals` counter; 0 for an inline
+    /// engine).  Monotone — consumers compare before/after deltas.
+    pub fn pool_steal_count(&self) -> u64 {
+        self.pool.as_ref().map_or(0, |p| p.steal_stats().0)
     }
 
     /// The sharding threshold (row length) this engine was built with.
@@ -449,9 +470,28 @@ impl ShardEngine {
 
 /// Raw pointer wrapper asserting cross-thread transfer is safe under
 /// the disjoint-write discipline documented at each use site.
+///
+/// SAFETY contract (all three clauses required at every construction
+/// site, which is why the type and its tuple constructor are private to
+/// this module):
+///
+/// 1. **Disjoint writes** — each element index reachable through the
+///    pointer is written by at most one task; tasks never read another
+///    task's slot until a synchronization point (the row countdown in
+///    [`ShardEngine::grid_map`], or the scoped join) orders the write
+///    before the read.
+/// 2. **Outlives the fan-out** — the pointee is owned by the dispatching
+///    frame and is only read back after `run_scoped`/`grid_map` joins
+///    every task.
+/// 3. **`T: Send`** — writing (or `take()`-ing) a `T` through the
+///    pointer on a worker thread transfers a `T` across threads.  The
+///    bound makes an attempt to fan out a `!Send` payload (`Rc`,
+///    `RefCell` guards, raw-pointer-holding partials …) a compile
+///    error instead of undefined behaviour; an unbounded
+///    `unsafe impl<T> Send/Sync` silently erased exactly that check.
 struct SendPtr<T>(*mut T);
-unsafe impl<T> Sync for SendPtr<T> {}
-unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+unsafe impl<T: Send> Send for SendPtr<T> {}
 
 #[cfg(test)]
 mod tests {
@@ -469,6 +509,7 @@ mod tests {
             max_shards: 0,
             min_shard: 64,
             threshold,
+            ..ShardEngineConfig::default()
         })
     }
 
@@ -625,6 +666,31 @@ mod tests {
             },
         );
         assert_eq!(out, vec![vec![0, 1, 2, 3]; 3]);
+    }
+
+    #[test]
+    fn fifo_and_steal_pools_are_bitwise_identical() {
+        // Scheduling policy is a pure performance knob: the ⊕
+        // bracketing is fixed by the plan, so fifo and steal engines
+        // must agree byte-for-byte on every output.
+        let mk = |sched| {
+            ShardEngine::new(ShardEngineConfig {
+                workers: 4,
+                max_shards: 0,
+                min_shard: 64,
+                threshold: 256,
+                sched,
+            })
+        };
+        let fifo = mk(SchedPolicy::Fifo);
+        let steal = mk(SchedPolicy::Steal);
+        assert_eq!(fifo.sched(), SchedPolicy::Fifo);
+        assert_eq!(steal.sched(), SchedPolicy::Steal);
+        let data: Vec<Vec<f32>> = (0..6).map(|i| logits(4097, 70 + i as u64)).collect();
+        let rows: Vec<&[f32]> = data.iter().map(|r| r.as_slice()).collect();
+        assert_eq!(fifo.fused_topk_batch(&rows, 7), steal.fused_topk_batch(&rows, 7));
+        assert_eq!(fifo.softmax_batch(&rows), steal.softmax_batch(&rows));
+        assert_eq!(fifo.fused_topk(&rows[0], 5), steal.fused_topk(&rows[0], 5));
     }
 
     #[test]

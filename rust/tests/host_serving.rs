@@ -19,6 +19,11 @@ const TIMEOUT: Duration = Duration::from_secs(60);
 /// sharded path actually engages, and `grid_rows > 1` so every batched
 /// request in this suite exercises the batch×shard grid scheduler (CI
 /// runs this suite as the grid e2e gate).
+///
+/// The shard-pool scheduling policy is inherited from
+/// `ServeConfig::default()`, which honours `OSMAX_POOL_SCHED` — CI's
+/// scheduler matrix runs this whole suite under both `fifo` and
+/// `steal` without the tests naming a policy.
 fn host_config(mode: ServingMode, shard_threshold: usize) -> ServeConfig {
     let mut cfg = ServeConfig::default();
     cfg.backend = BackendKind::Host;
@@ -235,6 +240,59 @@ fn host_per_request_errors_do_not_poison_batch() {
         .call(Payload::DecodeTopK { hidden: vec![0.0; 32], k: Some(10_000) }, TIMEOUT)
         .unwrap_err();
     assert!(err.contains("k="), "{err}");
+    coord.shutdown();
+}
+
+#[test]
+fn host_all_invalid_batch_is_errors_not_a_panic() {
+    // Regression: a formed batch in which EVERY request fails
+    // validation leaves zero live rows.  The executor must
+    // short-circuit before the chunked grid dispatch (`chunks(0)` /
+    // zero-row grids) and still deliver a per-request error for each
+    // member — for all three request classes.
+    let mut cfg = host_config(ServingMode::Online, 512);
+    cfg.max_batch = 8;
+    cfg.max_wait = Duration::from_millis(20); // coalesce into one batch
+    let coord = Coordinator::start(&cfg).unwrap();
+
+    // Softmax: every row has the wrong length → live set is empty.
+    let rxs: Vec<_> = (0..5)
+        .map(|i| coord.submit(Payload::Softmax { logits: vec![0.5; 3 + i] }).unwrap())
+        .collect();
+    for rx in rxs {
+        let err = rx.recv_timeout(TIMEOUT).unwrap().unwrap_err();
+        assert!(err.contains("length"), "{err}");
+    }
+
+    // Decode: every hidden state has the wrong width.
+    let rxs: Vec<_> = (0..5)
+        .map(|_| {
+            coord.submit(Payload::DecodeTopK { hidden: vec![0.0; 7], k: Some(3) }).unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        let err = rx.recv_timeout(TIMEOUT).unwrap().unwrap_err();
+        assert!(err.contains("length"), "{err}");
+    }
+
+    // LmStep: every session id is unknown → the decode stage sees an
+    // empty batch.
+    let rxs: Vec<_> = (0..5u64)
+        .map(|i| {
+            coord
+                .submit(Payload::LmStep { session: 777_000 + i, token: 1, k: Some(3) })
+                .unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        let err = rx.recv_timeout(TIMEOUT).unwrap().unwrap_err();
+        assert!(err.contains("unknown session"), "{err}");
+    }
+
+    // The coordinator survived all three empty-live batches.
+    let mut rng = Xoshiro256pp::seed_from_u64(21);
+    let logits = rng.logits(coord.executor().vocab(), 4.0);
+    assert!(coord.call(Payload::Softmax { logits }, TIMEOUT).is_ok());
     coord.shutdown();
 }
 

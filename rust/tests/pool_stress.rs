@@ -1,0 +1,213 @@
+//! Stress suite for the [`exec::ThreadPool`] scheduling policies: the
+//! contracts the shard layer leans on (scoped joins, drop-drains,
+//! panic isolation) exercised under concurrency, for both the FIFO
+//! injector and the work-stealing deques, plus a torture case that
+//! deterministically forces steals.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use onlinesoftmax::exec::{SchedPolicy, ThreadPool};
+
+const POLICIES: [SchedPolicy; 2] = [SchedPolicy::Fifo, SchedPolicy::Steal];
+
+/// Spin until `cond` holds, panicking after `secs` seconds — keeps a
+/// scheduler bug a loud failure instead of a hung test binary.
+fn spin_until(secs: u64, what: &str, cond: impl Fn() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::yield_now();
+    }
+}
+
+#[test]
+fn concurrent_run_scoped_from_many_threads() {
+    // Several caller threads fan out scoped batches on ONE shared pool
+    // concurrently: every batch must see exactly its own tasks join.
+    for policy in POLICIES {
+        let pool = ThreadPool::with_policy(4, "stress", policy);
+        let pool = &pool;
+        std::thread::scope(|scope| {
+            for caller in 0..6usize {
+                scope.spawn(move || {
+                    for round in 0..20usize {
+                        let n = 1 + (caller + round) % 7;
+                        let hits = AtomicUsize::new(0);
+                        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..n)
+                            .map(|_| {
+                                let hits = &hits;
+                                Box::new(move || {
+                                    hits.fetch_add(1, Ordering::SeqCst);
+                                })
+                                    as Box<dyn FnOnce() + Send + '_>
+                            })
+                            .collect();
+                        pool.run_scoped(tasks);
+                        // The scoped join covers exactly this batch —
+                        // no lost tasks, no early return.
+                        assert_eq!(
+                            hits.load(Ordering::SeqCst),
+                            n,
+                            "{policy:?} caller {caller} round {round}"
+                        );
+                    }
+                });
+            }
+        });
+        pool.join_idle();
+        assert_eq!(pool.queued(), 0);
+    }
+}
+
+#[test]
+fn drop_while_queued_runs_everything() {
+    // Drop the pool while most of the batch is still queued: the
+    // drop-drains contract says every accepted task runs before the
+    // drop returns, under either policy.
+    for policy in POLICIES {
+        let ran = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = ThreadPool::with_policy(2, "stress", policy);
+            let tasks: Vec<Box<dyn FnOnce() + Send + 'static>> = (0..600)
+                .map(|_| {
+                    let ran = ran.clone();
+                    Box::new(move || {
+                        std::thread::sleep(Duration::from_micros(20));
+                        ran.fetch_add(1, Ordering::SeqCst);
+                    }) as Box<dyn FnOnce() + Send + 'static>
+                })
+                .collect();
+            pool.execute_all(tasks);
+            // A few singles through the injector submission channel too.
+            for _ in 0..10 {
+                let ran = ran.clone();
+                pool.execute(move || {
+                    ran.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        } // drop here, with the queues still deep
+        assert_eq!(ran.load(Ordering::SeqCst), 610, "{policy:?}");
+    }
+}
+
+#[test]
+fn steal_torture_one_long_tile_many_short() {
+    // Deterministically force steals: 4 workers, a batch whose LAST two
+    // tasks are stragglers that spin until every short task has
+    // completed.  The stragglers land at the owner end (LIFO) of two
+    // deques, so those deques' owners claim them next and pin
+    // themselves; the shorts buried beneath the stragglers can then
+    // ONLY run if the free workers steal them (FIFO, from the far
+    // end).  If stealing is broken this deadlocks — caught by the spin
+    // timeout inside the straggler.
+    //
+    // Shorts additionally gate on `go` (set only after the whole batch
+    // is submitted): an eagerly-woken worker can claim at most one
+    // short before the stragglers are in place, so no deque can be
+    // drained early and the ≥ 1 steal below is deterministic, not
+    // timing-dependent.
+    const SHORTS: usize = 120;
+    let pool = ThreadPool::with_policy(4, "torture", SchedPolicy::Steal);
+    let (steals_before, _, _) = pool.steal_stats();
+    let go = Arc::new(AtomicUsize::new(0));
+    let done_shorts = Arc::new(AtomicUsize::new(0));
+
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + 'static>> = Vec::new();
+    for _ in 0..SHORTS {
+        let go = go.clone();
+        let done_shorts = done_shorts.clone();
+        tasks.push(Box::new(move || {
+            while go.load(Ordering::SeqCst) == 0 {
+                std::thread::yield_now();
+            }
+            done_shorts.fetch_add(1, Ordering::SeqCst);
+        }));
+    }
+    for _ in 0..2 {
+        let done_shorts = done_shorts.clone();
+        tasks.push(Box::new(move || {
+            let deadline = Instant::now() + Duration::from_secs(30);
+            while done_shorts.load(Ordering::SeqCst) < SHORTS {
+                assert!(
+                    Instant::now() < deadline,
+                    "straggler starved: shorts not stolen from its deque"
+                );
+                std::thread::yield_now();
+            }
+        }));
+    }
+    pool.execute_all(tasks);
+    go.store(1, Ordering::SeqCst);
+    pool.join_idle();
+
+    assert_eq!(done_shorts.load(Ordering::SeqCst), SHORTS);
+    assert_eq!(pool.queued(), 0);
+    // Metric sanity: the scenario cannot complete without stealing, and
+    // steals can never exceed the tasks that existed.  (The counter is
+    // process-global, hence the before/after delta and the loose upper
+    // bound across concurrently-running tests.)
+    let (steals_after, _, overflows) = pool.steal_stats();
+    assert!(
+        steals_after > steals_before,
+        "completing the torture batch requires at least one steal"
+    );
+    let _ = overflows; // bounded deques may or may not overflow here
+}
+
+#[test]
+fn steal_pool_handles_burst_of_scoped_grids() {
+    // Many back-to-back scoped dispatches (the shard engine's dispatch
+    // pattern) with mixed task durations: exercises scatter, LIFO pop,
+    // steal, park, and re-wake transitions repeatedly.
+    let pool = ThreadPool::with_policy(3, "burst", SchedPolicy::Steal);
+    let total = AtomicUsize::new(0);
+    for round in 0..40usize {
+        let n = 1 + round % 11;
+        let total = &total;
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..n)
+            .map(|i| {
+                Box::new(move || {
+                    if i % 3 == 0 {
+                        std::thread::sleep(Duration::from_micros(50));
+                    }
+                    total.fetch_add(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(tasks);
+    }
+    let want: usize = (0..40usize).map(|r| 1 + r % 11).sum();
+    assert_eq!(total.load(Ordering::SeqCst), want);
+    pool.join_idle();
+    assert_eq!(pool.queued(), 0);
+}
+
+#[test]
+fn panicking_tasks_do_not_wedge_either_policy() {
+    for policy in POLICIES {
+        let pool = ThreadPool::with_policy(2, "stress", policy);
+        let ok = AtomicUsize::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..20)
+            .map(|i| {
+                let ok = &ok;
+                Box::new(move || {
+                    if i % 4 == 0 {
+                        panic!("tile {i} failed");
+                    }
+                    ok.fetch_add(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(tasks); // must join despite the 5 panics
+        assert_eq!(ok.load(Ordering::SeqCst), 15, "{policy:?}");
+        // and the pool still accepts work afterwards
+        let after = Arc::new(AtomicUsize::new(0));
+        let a = after.clone();
+        pool.execute(move || {
+            a.store(1, Ordering::SeqCst);
+        });
+        spin_until(10, "post-panic task", || after.load(Ordering::SeqCst) == 1);
+    }
+}

@@ -1,6 +1,7 @@
 //! Property-based invariants over the core algorithms and coordinator
 //! data structures, via the in-crate [`onlinesoftmax::prop`] harness.
 
+use onlinesoftmax::exec::SchedPolicy;
 use onlinesoftmax::prop::{
     forall, forall_with, Config, Gen, LogitsVec, Pair, PropResult, UsizeRange,
 };
@@ -313,10 +314,24 @@ fn prop_grid_batch_is_bitwise_identical_to_per_row_runs() {
     // single-row sharded runs *bitwise* — same tile boundaries → same
     // scans → same ⊕ bracketing.  Covers batch = 1, shard counts that
     // leave ragged last tiles, and k beyond the row length.
-    let engine = ShardEngine::new(ShardEngineConfig {
+    //
+    // Runs under BOTH pool scheduling policies: tile execution order is
+    // completely different between the FIFO injector and the
+    // work-stealing deques, but the ⊕ bracketing is fixed by the plan,
+    // so every output must match the per-row run byte for byte either
+    // way — and therefore across policies too.
+    let fifo = ShardEngine::new(ShardEngineConfig {
         workers: 4,
         min_shard: 1,
         threshold: 1,
+        sched: SchedPolicy::Fifo,
+        ..Default::default()
+    });
+    let steal = ShardEngine::new(ShardEngineConfig {
+        workers: 4,
+        min_shard: 1,
+        threshold: 1,
+        sched: SchedPolicy::Steal,
         ..Default::default()
     });
     let gen = Pair(
@@ -340,25 +355,38 @@ fn prop_grid_batch_is_bitwise_identical_to_per_row_runs() {
         let plan = ShardPlan::with_shards(v, *shards);
         let grid = GridPlan::new(rows.len(), plan);
 
-        let topk = engine.fused_topk_batch_planned(&rows, k, &grid);
-        let probs = engine.softmax_batch_planned(&rows, &grid);
-        for (i, row) in rows.iter().enumerate() {
-            let want_topk = engine.fused_topk_planned(row, k, &plan);
-            if topk[i] != want_topk {
-                return Err(format!(
-                    "rows={rows_n} shards={shards} k={k} row {i}: grid topk {:?} \
-                     != per-row {:?}",
-                    topk[i], want_topk
-                ));
+        for engine in [&fifo, &steal] {
+            let policy = engine.sched().as_str();
+            let topk = engine.fused_topk_batch_planned(&rows, k, &grid);
+            let probs = engine.softmax_batch_planned(&rows, &grid);
+            for (i, row) in rows.iter().enumerate() {
+                let want_topk = engine.fused_topk_planned(row, k, &plan);
+                if topk[i] != want_topk {
+                    return Err(format!(
+                        "[{policy}] rows={rows_n} shards={shards} k={k} row {i}: \
+                         grid topk {:?} != per-row {:?}",
+                        topk[i], want_topk
+                    ));
+                }
+                let mut want_probs = vec![0.0f32; v];
+                engine.softmax_into_planned(row, &mut want_probs, &plan);
+                if probs[i] != want_probs {
+                    return Err(format!(
+                        "[{policy}] rows={rows_n} shards={shards} row {i}: grid \
+                         softmax diverges from per-row run"
+                    ));
+                }
             }
-            let mut want_probs = vec![0.0f32; v];
-            engine.softmax_into_planned(row, &mut want_probs, &plan);
-            if probs[i] != want_probs {
-                return Err(format!(
-                    "rows={rows_n} shards={shards} row {i}: grid softmax diverges \
-                     from per-row run"
-                ));
-            }
+        }
+        // Cross-policy: the two schedulers agree bitwise on the whole
+        // batch (implied by the per-row identities above, asserted
+        // directly for a sharper failure message).
+        let tf = fifo.fused_topk_batch_planned(&rows, k, &grid);
+        let ts = steal.fused_topk_batch_planned(&rows, k, &grid);
+        if tf != ts {
+            return Err(format!(
+                "rows={rows_n} shards={shards} k={k}: fifo and steal grids diverge"
+            ));
         }
         Ok(())
     })
