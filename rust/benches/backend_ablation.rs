@@ -1,0 +1,21 @@
+//! `cargo bench --bench backend_ablation` — scalar (fused blocked) vs
+//! vectorized (lane-split streaming) shard-scan backends across vocab
+//! sizes.  Thin wrapper over
+//! [`onlinesoftmax::benches::backend_ablation`]; options via env:
+//! OSMAX_BENCH_FAST=1 for a quick pass, OSMAX_BENCH_THREADS=N to pin
+//! the shard-worker count (default 0 = one worker per core),
+//! OSMAX_BENCH_BATCH=B to set the batch rows (default 8).
+fn main() {
+    let threads = std::env::var("OSMAX_BENCH_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let batch = std::env::var("OSMAX_BENCH_BATCH").ok().and_then(|s| s.parse().ok());
+    let opts = onlinesoftmax::benches::BenchOpts {
+        threads,
+        batch,
+        json_out: std::env::var("OSMAX_BENCH_JSON").ok(),
+        ..Default::default()
+    };
+    onlinesoftmax::benches::backend_ablation(&opts).expect("bench failed");
+}

@@ -13,6 +13,8 @@
 //! * [`grid_ablation`] — per-row dispatch vs the batch×shard grid
 //! * [`steal_ablation`] — FIFO injector vs work-stealing deques under
 //!   uniform and skewed tile costs
+//! * [`backend_ablation`] — scalar (fused blocked) vs vectorized
+//!   (lane-split streaming) shard scan backends across vocab sizes
 //!
 //! **Hardware scaling** (DESIGN.md §Hardware-Adaptation): the paper's
 //! batch-4000 × V-100k workloads size the *GPU's* DRAM; on this CPU we
@@ -30,7 +32,10 @@ use anyhow::Result;
 use crate::benchkit::{bench, black_box, fmt_time, BenchConfig, Stats, Table};
 use crate::exec::SchedPolicy;
 use crate::rng::Xoshiro256pp;
-use crate::shard::{tree_reduce, GridPlan, ShardEngine, ShardEngineConfig, ShardPartial, ShardPlan};
+use crate::shard::{
+    tree_reduce, GridPlan, ShardBackendKind, ShardEngine, ShardEngineConfig, ShardPartial,
+    ShardPlan,
+};
 use crate::softmax::{batched, fused, parallel, vectorized};
 
 /// CLI/bench-target options.
@@ -622,6 +627,122 @@ pub fn steal_ablation(opts: &BenchOpts) -> Result<()> {
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// Backend ablation: scalar vs vectorized per-tile scan backends
+// ---------------------------------------------------------------------------
+
+/// Ablation over the shard-scan backend ([`ShardBackendKind`]): the
+/// same batch×shard fused softmax+top-k grid executed by a `scalar`
+/// engine (the fused cache-blocked scan — one ⊕ fold per 512-element
+/// tile, threshold-filtered candidate insertion riding the same sweep)
+/// and a `vectorized` engine (the §7 lane-split streaming scan — one ⊕
+/// fold per element per lane, plus a separate candidate sweep).
+///
+/// Both backends run identical plans and select identical indices
+/// (asserted here on every size), so the delta is pure kernel choice —
+/// exactly the per-ISA tuning question the related softmax work
+/// (Dukhan & Ablavatski; Czaja et al.) answers per hardware target, and
+/// the reason backend selection is a runtime knob rather than a
+/// compile-time choice.
+pub fn backend_ablation(opts: &BenchOpts) -> Result<()> {
+    let sizes = opts.sizes.clone().unwrap_or_else(|| {
+        if opts.smoke {
+            vec![8_192]
+        } else {
+            vec![25_000, 100_000, 400_000]
+        }
+    });
+    let batch = opts.batch.unwrap_or(if opts.smoke { 3 } else { 8 });
+    let k = 5;
+    // Like the other scheduler/backend comparisons: a 1-worker engine
+    // runs everything inline, so upgrade the CLI default.
+    let workers =
+        if opts.threads <= 1 { crate::exec::default_threads() } else { opts.threads };
+    let cfg = BenchConfig::from_env();
+    let mk = |backend| {
+        ShardEngine::new(ShardEngineConfig {
+            workers,
+            // Tiles stay ≥ 4096 elements, so the vectorized backend's
+            // lane-geometry gate always passes and no arm silently
+            // measures the fallback path instead of its own kernel.
+            min_shard: 4096,
+            threshold: 1, // the bench pins plans explicitly
+            backend,
+            ..ShardEngineConfig::default()
+        })
+    };
+    let scalar = mk(ShardBackendKind::Scalar);
+    let vector = mk(ShardBackendKind::Vectorized);
+    println!(
+        "\n=== backend: scalar (fused blocked) vs vectorized (lane streaming) shard \
+         scans (K={k}, batch {batch}, {workers} shard workers) ==="
+    );
+    // "vec speedup" = scalar_p50 / vectorized_p50, the same ratio
+    // convention as the sibling tables (>1 ⇒ the vectorized arm is
+    // faster), spelled out because "vec/scalar" reads as a time ratio.
+    let mut table = Table::new(&[
+        "V",
+        "scalar p50",
+        "vectorized p50",
+        "tiles",
+        "vec speedup",
+        "GB/s scalar",
+    ]);
+    for &v in &sizes {
+        let data = make_batch(batch, v, v as u64);
+        let rows: Vec<&[f32]> = data.chunks_exact(v).collect();
+        let plan = ShardPlan::auto(v, workers, 4096);
+        let grid = GridPlan::new(batch, plan);
+
+        // The backend must never change a *selection*: pin identical
+        // indices before timing anything.
+        let a = scalar.fused_topk_batch_planned(&rows, k, &grid);
+        let b = vector.fused_topk_batch_planned(&rows, k, &grid);
+        for (row_a, row_b) in a.iter().zip(&b) {
+            assert_eq!(row_a.1, row_b.1, "backends diverged on selected indices (v={v})");
+        }
+
+        let scalar_t = bench(&cfg, || {
+            black_box(scalar.fused_topk_batch_planned(&rows, k, &grid).len())
+        });
+        let vector_t = bench(&cfg, || {
+            black_box(vector.fused_topk_batch_planned(&rows, k, &grid).len())
+        });
+
+        let ratio = scalar_t.median / vector_t.median;
+        let gbs = scalar_t.throughput_gbs((batch * v) as f64 * 4.0);
+        table.row(vec![
+            v.to_string(),
+            fmt_time(scalar_t.median),
+            fmt_time(vector_t.median),
+            format!("{}x{}", grid.rows(), grid.shards_per_row()),
+            format!("{ratio:.2}x"),
+            format!("{gbs:.1}"),
+        ]);
+
+        let mut rec = crate::json::Value::object();
+        rec.set("bench", crate::json::Value::String("backend_ablation".into()))
+            .set("v", crate::json::Value::Number(v as f64))
+            .set("batch", crate::json::Value::Number(batch as f64))
+            .set("k", crate::json::Value::Number(k as f64))
+            .set("workers", crate::json::Value::Number(workers as f64))
+            .set("shards_per_row", crate::json::Value::Number(plan.shards() as f64))
+            .set("scalar_p50_s", crate::json::Value::Number(scalar_t.median))
+            .set("vectorized_p50_s", crate::json::Value::Number(vector_t.median))
+            .set("speedup_vectorized_vs_scalar", crate::json::Value::Number(ratio));
+        opts.emit(&rec)?;
+    }
+    println!("{}", table.render());
+    println!(
+        "expected shape: the blocked scalar scan amortizes its ⊕ folds over\n\
+         512-element tiles and skips candidate-cold tiles for one compare, so it\n\
+         usually leads; the streaming arm pays one fold per element per lane but\n\
+         never revisits an element, the trade `--shard-backend` exposes (auto\n\
+         picks per tile geometry; see docs/BACKENDS.md)."
+    );
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -678,6 +799,16 @@ mod tests {
         o.threads = 2;
         o.smoke = true;
         steal_ablation(&o).unwrap();
+    }
+
+    #[test]
+    fn backend_ablation_runs() {
+        let mut o = fast_opts();
+        o.sizes = None; // exercise the smoke defaults
+        o.batch = None;
+        o.threads = 2;
+        o.smoke = true;
+        backend_ablation(&o).unwrap();
     }
 
     #[test]

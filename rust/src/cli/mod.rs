@@ -151,6 +151,59 @@ impl Args {
     }
 }
 
+/// The top-level `help` text, rendered with the crate `version`.
+///
+/// Lives in the library (rather than `main.rs`) so the knob inventory
+/// is testable: `docs/CONFIG.md` documents every flag in its tables,
+/// and the `help_names_every_documented_knob` test below asserts each
+/// one appears here — the help text and CONFIG.md cannot silently
+/// drift apart.
+pub fn help_text(version: &str) -> String {
+    format!(
+        "onlinesoftmax {version} — Online Normalizer Calculation for Softmax (reproduction)\n\n\
+         USAGE:\n  onlinesoftmax <command> [options]\n\n\
+         COMMANDS:\n\
+           serve      start the vocabulary-softmax serving system\n\
+           bench      run the paper's benchmark figures on this CPU\n\
+           model      analytic V100/CPU predictions for every figure\n\
+           accesses   print the paper's memory-access table\n\
+           loadgen    drive a running server with synthetic load\n\
+           help       this message\n\n\
+         SERVE OPTIONS:\n\
+           --config FILE        JSON config (defaults + CLI overrides)\n\
+           --addr HOST:PORT     bind address        [127.0.0.1:7070]\n\
+           --artifacts DIR      AOT artifacts dir   [artifacts]\n\
+           --backend B          auto|artifacts|host [auto]\n\
+           --mode safe|online   softmax strategy    [online]\n\
+           --shards N           vocabulary shards (artifact backend) [1]\n\
+           --vocab N            served vocab (host backend)   [8192]\n\
+           --hidden N           hidden width (host backend)   [128]\n\
+           --host-shards N      shard-engine workers (0=auto) [0]\n\
+           --shard-threshold N  sharded-path vocab cutoff     [32768]\n\
+           --shard-backend B    per-tile shard scan backend:\n\
+                                auto|scalar|vectorized|artifacts-stub\n\
+                                (env default: OSMAX_SHARD_BACKEND) [auto]\n\
+           --grid-rows N        rows per batch×shard grid dispatch\n\
+                                (0=whole batch, 1=per-row)    [0]\n\
+           --pool-sched P       shard-pool scheduler: steal|fifo\n\
+                                (env default: OSMAX_POOL_SCHED) [steal]\n\
+           --max-batch N        dynamic batch bound [16]\n\
+           --max-wait-us N      batch deadline      [2000]\n\
+           --queue-capacity N   admission queue bound         [1024]\n\
+           --workers N          executor workers    [2]\n\
+           --k N                default decode top-k          [5]\n\
+           --seed N             synthetic-model RNG seed      [0xC0FFEE]\n\n\
+         BENCH OPTIONS:\n\
+           --fig 1|2|3|4|k|ablation|grid|steal|backend|all  figure/study  [all]\n\
+           --sizes a,b,c        vector sizes V override\n\
+           --batch N            batch size override\n\
+           --threads N          worker threads for parallel/sharded variants\n\
+                                (0 = one per core)                           [1]\n\
+           --smoke              minimal sizes/iterations (CI rot check)\n\
+           --out FILE           also append results as JSON lines\n"
+    )
+}
+
 /// Split argv into `(subcommand, rest)`.
 pub fn subcommand(argv: &[String]) -> Result<(&str, &[String])> {
     let cmd = argv
@@ -219,6 +272,35 @@ mod tests {
     fn required_option() {
         let a = Args::parse(&sv(&[]), &[]).unwrap();
         assert!(a.opt_require::<usize>("n").is_err());
+    }
+
+    #[test]
+    fn help_names_every_documented_knob() {
+        // Every flag documented in docs/CONFIG.md's tables must appear
+        // in `--help` — the test that stops CONFIG.md from silently
+        // rotting.  Table rows start `| `--flag ...`` by convention.
+        let md = include_str!(concat!(env!("CARGO_MANIFEST_DIR"), "/docs/CONFIG.md"));
+        let help = help_text("0.0.0-test");
+        let mut checked = 0usize;
+        for line in md.lines() {
+            let Some(rest) = line.strip_prefix("| `--") else { continue };
+            let name: String = rest
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '-')
+                .collect();
+            assert!(!name.is_empty(), "malformed CONFIG.md table row: {line}");
+            let flag = format!("--{name}");
+            assert!(
+                help.contains(&flag),
+                "docs/CONFIG.md documents `{flag}` but `--help` does not mention it"
+            );
+            checked += 1;
+        }
+        assert!(
+            checked >= 20,
+            "expected ≥ 20 documented flags in docs/CONFIG.md tables, found {checked} — \
+             did the table format change?"
+        );
     }
 
     #[test]

@@ -13,6 +13,7 @@ use anyhow::{bail, Context, Result};
 use crate::cli::Args;
 use crate::exec::SchedPolicy;
 use crate::json::{self, Value};
+use crate::shard::ShardBackendKind;
 
 /// Which softmax strategy the serving path uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -119,6 +120,15 @@ pub struct ServeConfig {
     /// Results are bitwise-identical under either — only occupancy
     /// under skewed tile costs changes.
     pub pool_sched: SchedPolicy,
+    /// Per-tile scan backend for the host shard engine: `auto` (pick
+    /// the vectorized lane-split scan whenever the tile geometry
+    /// allows, scalar otherwise), `scalar` (the fused host scan —
+    /// reference numerics), `vectorized` (lane-split streaming scan),
+    /// or `artifacts-stub` (PJRT contract adapter that declines every
+    /// tile at runtime, exercising the per-tile host fallback).
+    /// Selected indices are identical across backends; see
+    /// docs/BACKENDS.md for the per-backend identity guarantees.
+    pub shard_backend: ShardBackendKind,
 }
 
 impl Default for ServeConfig {
@@ -144,6 +154,10 @@ impl Default for ServeConfig {
             // built-in default, exactly like the other env knobs; file
             // and CLI layers still override the env.
             pool_sched: SchedPolicy::from_env_or(SchedPolicy::Steal),
+            // OSMAX_SHARD_BACKEND (CI's backend matrix) works the same
+            // way: env overrides the built-in `auto`, file and CLI
+            // layers override the env.
+            shard_backend: ShardBackendKind::from_env_or(ShardBackendKind::Auto),
         }
     }
 }
@@ -210,6 +224,9 @@ impl ServeConfig {
         if let Some(s) = v.get("pool_sched").and_then(Value::as_str) {
             cfg.pool_sched = SchedPolicy::parse(s)?;
         }
+        if let Some(s) = v.get("shard_backend").and_then(Value::as_str) {
+            cfg.shard_backend = ShardBackendKind::parse(s)?;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -243,6 +260,9 @@ impl ServeConfig {
         self.grid_rows = args.opt_parse("grid-rows", self.grid_rows)?;
         if let Some(s) = args.opt_str("pool-sched") {
             self.pool_sched = SchedPolicy::parse(s)?;
+        }
+        if let Some(s) = args.opt_str("shard-backend") {
+            self.shard_backend = ShardBackendKind::parse(s)?;
         }
         self.validate()
     }
@@ -297,7 +317,8 @@ impl ServeConfig {
             .set("host_shards", Value::Number(self.host_shards as f64))
             .set("shard_threshold", Value::Number(self.shard_threshold as f64))
             .set("grid_rows", Value::Number(self.grid_rows as f64))
-            .set("pool_sched", Value::String(self.pool_sched.as_str().to_string()));
+            .set("pool_sched", Value::String(self.pool_sched.as_str().to_string()))
+            .set("shard_backend", Value::String(self.shard_backend.as_str().to_string()));
         v
     }
 }
@@ -322,6 +343,7 @@ mod tests {
         cfg.shard_threshold = 1024;
         cfg.grid_rows = 8;
         cfg.pool_sched = SchedPolicy::Fifo;
+        cfg.shard_backend = ShardBackendKind::Vectorized;
         let back = ServeConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.shards, 4);
         assert_eq!(back.mode, ServingMode::Safe);
@@ -333,6 +355,7 @@ mod tests {
         assert_eq!(back.shard_threshold, 1024);
         assert_eq!(back.grid_rows, 8);
         assert_eq!(back.pool_sched, SchedPolicy::Fifo);
+        assert_eq!(back.shard_backend, ShardBackendKind::Vectorized);
     }
 
     #[test]
@@ -373,14 +396,15 @@ mod tests {
         let mut cfg = ServeConfig::default();
         let raw: Vec<String> = [
             "--backend", "host", "--vocab", "2048", "--shard-threshold", "512",
-            "--grid-rows", "4", "--pool-sched", "fifo",
+            "--grid-rows", "4", "--pool-sched", "fifo", "--shard-backend", "scalar",
         ]
         .iter()
         .map(|s| s.to_string())
         .collect();
         let args = Args::parse(
             &raw,
-            &["backend", "vocab", "shard-threshold", "grid-rows", "pool-sched"],
+            &["backend", "vocab", "shard-threshold", "grid-rows", "pool-sched",
+              "shard-backend"],
         )
         .unwrap();
         cfg.apply_args(&args).unwrap();
@@ -389,6 +413,18 @@ mod tests {
         assert_eq!(cfg.shard_threshold, 512);
         assert_eq!(cfg.grid_rows, 4);
         assert_eq!(cfg.pool_sched, SchedPolicy::Fifo);
+        assert_eq!(cfg.shard_backend, ShardBackendKind::Scalar);
+    }
+
+    #[test]
+    fn shard_backend_rejects_unknown_values() {
+        let v = json::parse(r#"{"shard_backend": "tpu"}"#).unwrap();
+        assert!(ServeConfig::from_json(&v).is_err());
+        let v = json::parse(r#"{"shard_backend": "artifacts-stub"}"#).unwrap();
+        assert_eq!(
+            ServeConfig::from_json(&v).unwrap().shard_backend,
+            ShardBackendKind::ArtifactsStub
+        );
     }
 
     #[test]

@@ -16,9 +16,12 @@
 //!   scale); smaller requests fall back to the single-thread
 //!   [`softmax::compute`]/[`fused`] kernels.  `grid_rows` caps the
 //!   rows per dispatch (0 = whole batch; 1 = the degenerate per-row
-//!   grid, bitwise-identical by construction).  No artifacts, no
-//!   python, no PJRT — this is the default serving path on a bare
-//!   build.
+//!   grid, bitwise-identical by construction).  The per-tile scan
+//!   implementation is pluggable (`shard_backend` config /
+//!   `--shard-backend`: `auto`, `scalar`, `vectorized`, or
+//!   `artifacts-stub`, with a per-tile fallback to the host scalar
+//!   scan — see `docs/BACKENDS.md`).  No artifacts, no python, no
+//!   PJRT — this is the default serving path on a bare build.
 //!
 //! Batching detail: requests are padded up to the artifact batch
 //! buckets compiled by `aot.py` (1/4/16 by default); pad rows are zeros
@@ -33,7 +36,7 @@ use super::model::SyntheticLm;
 use super::request::{BatchClass, Payload, Reply, ReplyResult, Request};
 use crate::config::{BackendKind, ServeConfig, ServingMode};
 use crate::runtime::{EnginePool, Input, Tensor};
-use crate::shard::{self, ShardEngine, ShardEngineConfig, ShardPartial};
+use crate::shard::{self, ShardEngine, ShardEngineConfig};
 use crate::softmax::monoid::MD;
 use crate::softmax::{self, fused, Algorithm};
 use crate::topk::TopKBuffer;
@@ -96,6 +99,7 @@ impl Executor {
             // fan out toward the worker count.
             min_shard: (cfg.shard_threshold / 2).max(1),
             sched: cfg.pool_sched,
+            backend: cfg.shard_backend,
             ..ShardEngineConfig::default()
         })
     }
@@ -113,10 +117,11 @@ impl Executor {
         let shard_engine = Self::shard_engine_from(cfg);
         crate::info!(
             "coordinator.executor",
-            "host backend: vocab {vocab}, hidden {hidden}, {} shard workers ({} pool), \
-             threshold {}, grid rows {}",
+            "host backend: vocab {vocab}, hidden {hidden}, {} shard workers ({} pool, \
+             {} shard backend), threshold {}, grid rows {}",
             shard_engine.workers(),
             shard_engine.sched().as_str(),
+            shard_engine.backend_name(),
             shard_engine.threshold(),
             if cfg.grid_rows == 0 { "auto".to_string() } else { cfg.grid_rows.to_string() }
         );
@@ -614,12 +619,21 @@ impl Executor {
                     out.extend(engine.grid_map(
                         &grid,
                         |tile| {
+                            // Sharded projection: only this tile's slice
+                            // of the logits is ever materialized, then
+                            // the engine's backend (host scalar/
+                            // vectorized, with per-tile fallback) scans
+                            // it into the (m, d, topk) partial.
                             let logits = model.project_range(
                                 chunk[tile.row],
                                 tile.range.start,
                                 tile.range.end,
                             );
-                            ShardPartial::scan(&logits, k, tile.range.start as i64)
+                            engine.scan_tile(
+                                &logits,
+                                tile.range.start..tile.range.end,
+                                k,
+                            )
                         },
                         |_row, parts| shard::tree_reduce(parts).finalize(),
                     ));

@@ -11,7 +11,10 @@ use std::time::{Duration, Instant};
 
 /// Send failed because all receivers hung up (payload returned).
 #[derive(Debug, PartialEq, Eq)]
-pub struct SendError<T>(pub T);
+pub struct SendError<T>(
+    /// The value that could not be delivered.
+    pub T,
+);
 
 /// Receive failed.
 #[derive(Debug, PartialEq, Eq)]
@@ -124,10 +127,12 @@ impl<T> Sender<T> {
         self.0.inner.lock().unwrap().queue.len()
     }
 
+    /// Whether the queue currently holds no values.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// The fixed capacity the channel was created with.
     pub fn capacity(&self) -> usize {
         self.0.capacity
     }
@@ -201,10 +206,12 @@ impl<T> Receiver<T> {
         out
     }
 
+    /// Queue occupancy (for metrics/backpressure decisions).
     pub fn len(&self) -> usize {
         self.0.inner.lock().unwrap().queue.len()
     }
 
+    /// Whether the queue currently holds no values.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

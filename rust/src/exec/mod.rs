@@ -16,6 +16,8 @@
 //!   with an atomic work queue (rayon-style, borrow-friendly); powers
 //!   the parallel ⊕ reduction of §3.1.
 
+#![warn(missing_docs)]
+
 pub mod channel;
 pub mod deque;
 pub mod pool;

@@ -66,6 +66,7 @@ pub enum SchedPolicy {
 }
 
 impl SchedPolicy {
+    /// Parse a config/CLI value (`fifo` or `steal`).
     pub fn parse(s: &str) -> Result<Self> {
         match s {
             "fifo" => Ok(SchedPolicy::Fifo),
@@ -74,6 +75,7 @@ impl SchedPolicy {
         }
     }
 
+    /// The canonical config/CLI spelling of this policy.
     pub fn as_str(self) -> &'static str {
         match self {
             SchedPolicy::Fifo => "fifo",

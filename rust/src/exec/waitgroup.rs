@@ -51,6 +51,7 @@ impl Default for WaitGroup {
 }
 
 impl WaitGroup {
+    /// Create an empty group (no outstanding guards).
     pub fn new() -> Self {
         Self {
             inner: Arc::new(Inner {

@@ -26,7 +26,7 @@ const VALUE_OPTS: &[&str] = &[
     "config", "addr", "artifacts", "mode", "shards", "max-batch", "max-wait-us",
     "queue-capacity", "workers", "k", "seed", "fig", "sizes", "batch", "threads",
     "device", "requests", "concurrency", "op", "out", "backend", "vocab", "hidden",
-    "host-shards", "shard-threshold", "grid-rows", "pool-sched",
+    "host-shards", "shard-threshold", "grid-rows", "pool-sched", "shard-backend",
 ];
 
 fn main() {
@@ -60,47 +60,9 @@ fn run(argv: &[String]) -> Result<()> {
 }
 
 fn print_help() {
-    println!(
-        "onlinesoftmax {} — Online Normalizer Calculation for Softmax (reproduction)\n\n\
-         USAGE:\n  onlinesoftmax <command> [options]\n\n\
-         COMMANDS:\n\
-           serve      start the vocabulary-softmax serving system\n\
-           bench      run the paper's benchmark figures on this CPU\n\
-           model      analytic V100/CPU predictions for every figure\n\
-           accesses   print the paper's memory-access table\n\
-           loadgen    drive a running server with synthetic load\n\
-           help       this message\n\n\
-         SERVE OPTIONS:\n\
-           --config FILE        JSON config (defaults + CLI overrides)\n\
-           --addr HOST:PORT     bind address        [127.0.0.1:7070]\n\
-           --artifacts DIR      AOT artifacts dir   [artifacts]\n\
-           --backend B          auto|artifacts|host [auto]\n\
-           --mode safe|online   softmax strategy    [online]\n\
-           --shards N           vocabulary shards (artifact backend) [1]\n\
-           --vocab N            served vocab (host backend)   [8192]\n\
-           --hidden N           hidden width (host backend)   [128]\n\
-           --host-shards N      shard-engine workers (0=auto) [0]\n\
-           --shard-threshold N  sharded-path vocab cutoff     [32768]\n\
-           --grid-rows N        rows per batch×shard grid dispatch\n\
-                                (0=whole batch, 1=per-row)    [0]\n\
-           --pool-sched P       shard-pool scheduler: steal|fifo\n\
-                                (env default: OSMAX_POOL_SCHED) [steal]\n\
-           --max-batch N        dynamic batch bound [16]\n\
-           --max-wait-us N      batch deadline      [2000]\n\
-           --queue-capacity N   admission queue bound         [1024]\n\
-           --workers N          executor workers    [2]\n\
-           --k N                default decode top-k          [5]\n\
-           --seed N             synthetic-model RNG seed      [0xC0FFEE]\n\n\
-         BENCH OPTIONS:\n\
-           --fig 1|2|3|4|k|ablation|grid|steal|all  which figure/study  [all]\n\
-           --sizes a,b,c        vector sizes V override\n\
-           --batch N            batch size override\n\
-           --threads N          worker threads for parallel/sharded variants\n\
-                                (0 = one per core)                           [1]\n\
-           --smoke              minimal sizes/iterations (CI rot check)\n\
-           --out FILE           also append results as JSON lines\n",
-        onlinesoftmax::VERSION
-    );
+    // The text lives in `cli::help_text` so the knob inventory is
+    // testable against docs/CONFIG.md.
+    println!("{}", onlinesoftmax::cli::help_text(onlinesoftmax::VERSION));
 }
 
 // ---------------------------------------------------------------------------
@@ -147,6 +109,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "ablation" | "shard" => benches::shard_ablation(&opts),
         "grid" => benches::grid_ablation(&opts),
         "steal" => benches::steal_ablation(&opts),
+        "backend" => benches::backend_ablation(&opts),
         "all" => {
             benches::fig1(&opts)?;
             benches::fig2(&opts)?;
@@ -155,9 +118,12 @@ fn cmd_bench(args: &Args) -> Result<()> {
             benches::k_sweep(&opts)?;
             benches::shard_ablation(&opts)?;
             benches::grid_ablation(&opts)?;
-            benches::steal_ablation(&opts)
+            benches::steal_ablation(&opts)?;
+            benches::backend_ablation(&opts)
         }
-        other => Err(anyhow!("unknown figure `{other}` (1|2|3|4|k|ablation|grid|steal|all)")),
+        other => Err(anyhow!(
+            "unknown figure `{other}` (1|2|3|4|k|ablation|grid|steal|backend|all)"
+        )),
     }
 }
 

@@ -1,0 +1,593 @@
+//! Pluggable per-tile scan backends for the shard engine — the layer
+//! boundary that makes [`ShardEngine`](super::ShardEngine) execution
+//! substrate-agnostic.
+//!
+//! The paper's Algorithm 4 works because the partial `(m, d, topk)`
+//! state merges under an associative ⊕ regardless of *where* each
+//! partial was computed.  This module promotes that fact to an
+//! interface: a [`ShardBackend`] produces one [`ShardPartial`] per
+//! (vocabulary-tile × request) and nothing else — planning, the ⊕ tree
+//! reduction, scheduling, and finalization all stay in the engine, so a
+//! backend author only writes the scan.
+//!
+//! Three implementations ship in-tree:
+//!
+//! * [`HostScalar`] — the engine's original fused single-sweep scan
+//!   (cache-blocked normalizer + scalar candidate insertion,
+//!   Algorithm 4).  **Total**: it accepts every tile geometry, which is
+//!   what makes it the engine's per-tile fallback.
+//! * [`HostVectorized`] — the §7 CPU adaptation: the lane-split
+//!   streaming online normalizer
+//!   ([`vectorized::online_normalizer_streaming`]) plus a separate
+//!   candidate scan.  Declines tiles shorter than one
+//!   [`LANES`](vectorized::LANES)-element stripe.
+//! * [`ArtifactsStub`] — an adapter over the vendored `xla` stub that
+//!   validates the tensor-interop contract shape a real PJRT shard
+//!   executable would use, then reports [`Unsupported`] at runtime.  It
+//!   exists so the engine's per-tile fallback path is exercised on
+//!   every build, and so the future real-PJRT backend has a pinned
+//!   slot-in point (see `docs/BACKENDS.md`).
+//!
+//! Selection is [`ShardBackendKind`]: config/CLI (`--shard-backend`),
+//! the `OSMAX_SHARD_BACKEND` environment variable (CI's backend
+//! matrix), with `auto` picking the vectorized scan whenever the tile
+//! geometry allows and the scalar scan otherwise.
+//!
+//! The full backend-author contract — the ⊕ merge law a partial must
+//! satisfy, per-backend bitwise-identity expectations, and the fallback
+//! protocol — is documented in `docs/BACKENDS.md`.
+
+use std::fmt;
+use std::ops::Range;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::softmax::monoid::MD;
+use crate::softmax::vectorized;
+use crate::topk::scan_topk;
+
+use super::reduce::ShardPartial;
+
+/// A backend declined a tile at runtime.
+///
+/// This is the **fallback protocol**'s signal, not a request failure:
+/// on receiving it the engine reruns the same tile on [`HostScalar`]
+/// (which is total) and increments the backend's
+/// `shard.backend.<name>.fallbacks` counter.  Results are therefore
+/// always produced; `Unsupported` only moves *where*.
+#[derive(Debug, Clone)]
+pub struct Unsupported {
+    /// Name of the backend that declined the tile.
+    pub backend: &'static str,
+    /// Human-readable reason (logged/inspected, never parsed).
+    pub reason: String,
+}
+
+impl Unsupported {
+    /// Construct a decline signal for backend `backend`.
+    pub fn new(backend: &'static str, reason: impl Into<String>) -> Unsupported {
+        Unsupported { backend, reason: reason.into() }
+    }
+}
+
+impl fmt::Display for Unsupported {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "shard backend `{}` declined the tile: {}", self.backend, self.reason)
+    }
+}
+
+impl std::error::Error for Unsupported {}
+
+/// One per-tile scan implementation behind the shard engine.
+///
+/// ## Contract (normative; see `docs/BACKENDS.md` for the full guide)
+///
+/// * `logits` holds exactly the tile's elements and `range` is the
+///   *global* vocabulary interval they cover, so
+///   `logits.len() == range.end - range.start` (asserted by the engine)
+///   and the element at `logits[i]` has global index `range.start + i`.
+///   Backends that materialize their own logits (sharded projection,
+///   device memory) receive only the slice they are responsible for.
+/// * The returned [`ShardPartial`] must satisfy the ⊕ merge law: the
+///   normalizer pair obeys Algorithm 3's recurrence
+///   `d_j = d_{j-1}·e^{m_{j-1}−m_j} + e^{x_j−m_j}` up to fp
+///   reassociation (so `m` is exact and `d` is tolerance-equal under
+///   any bracketing), and the top-k buffer carries **global** indices
+///   with NaN candidates excluded and ties resolved to the earliest
+///   global index.
+/// * A backend may decline any tile with [`Unsupported`]; it must not
+///   panic on geometry it dislikes.  Declining is cheap and safe — the
+///   engine reruns the tile on the host scalar scan.
+pub trait ShardBackend: Send + Sync {
+    /// Stable identifier used in config values, metric names
+    /// (`shard.backend.<name>.*`), bench labels, and logs.
+    fn name(&self) -> &'static str;
+
+    /// Capability hook: whether this backend expects to accept a tile
+    /// of `tile_len` elements at top-`k` (`k == 0` asks about a
+    /// normalizer-only scan).  Advisory — `auto` selection consults it
+    /// up front, but the runtime truth is still the `Result` of the
+    /// scan methods, so a backend may decline at scan time things it
+    /// advertised here.
+    fn supports(&self, tile_len: usize, k: usize) -> bool;
+
+    /// Scan one tile in a single conceptual sweep: the fused
+    /// online-normalizer + top-k partial of Algorithm 4 over
+    /// `logits`, with candidate indices globalized by `range.start`.
+    fn scan_tile(
+        &self,
+        logits: &[f32],
+        range: Range<usize>,
+        k: usize,
+    ) -> std::result::Result<ShardPartial, Unsupported>;
+
+    /// Normalizer-only scan of one tile (the first pass of a sharded
+    /// softmax, where no candidates are needed).
+    fn normalizer_tile(
+        &self,
+        logits: &[f32],
+        range: Range<usize>,
+    ) -> std::result::Result<MD, Unsupported>;
+
+    /// Output pass: `out[i] = e^{logits[i] − m} · inv` over one tile.
+    /// Always total — it is a pure store pass with no partial state, so
+    /// the default host implementation serves every backend until a
+    /// device-resident output path exists.
+    fn scale_tile(&self, logits: &[f32], out: &mut [f32], m: f32, inv: f32) {
+        vectorized::scale_pass(logits, out, m, inv);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Host scalar: the original fused scan, extracted
+// ---------------------------------------------------------------------------
+
+/// The engine's original per-tile scan, extracted behind the trait: the
+/// fused cache-blocked sweep of [`ShardPartial::scan`] for fused
+/// queries and the blocked [`vectorized::online_normalizer`] for
+/// normalizer-only tiles.
+///
+/// **Total** (accepts every tile geometry) and **bitwise-identical** to
+/// the pre-backend engine and to the single-thread kernels on unsharded
+/// plans — this is the reference numerics every other backend is
+/// compared against, and the target of the engine's per-tile fallback.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct HostScalar;
+
+impl ShardBackend for HostScalar {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn supports(&self, _tile_len: usize, _k: usize) -> bool {
+        true
+    }
+
+    fn scan_tile(
+        &self,
+        logits: &[f32],
+        range: Range<usize>,
+        k: usize,
+    ) -> std::result::Result<ShardPartial, Unsupported> {
+        Ok(ShardPartial::scan(logits, k, range.start as i64))
+    }
+
+    fn normalizer_tile(
+        &self,
+        logits: &[f32],
+        _range: Range<usize>,
+    ) -> std::result::Result<MD, Unsupported> {
+        Ok(vectorized::online_normalizer(logits))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Host vectorized: the lane-split streaming scan
+// ---------------------------------------------------------------------------
+
+/// The §7 CPU adaptation as a backend: every SIMD lane keeps its own
+/// `(m, d)` state through one streaming pass
+/// ([`vectorized::online_normalizer_streaming`]) and the lanes ⊕-merge
+/// once at the end; top-k candidates come from a separate
+/// [`scan_topk`] sweep over the same tile.
+///
+/// Declines tiles shorter than one [`LANES`](vectorized::LANES)-element
+/// stripe (`supports` is false and `scan_tile` returns
+/// [`Unsupported`]), so sub-stripe tiles exercise the engine's host
+/// fallback.  Selected indices are identical to [`HostScalar`]'s; `d`
+/// differs within fp reassociation (lane bracketing vs block
+/// bracketing) — see `docs/BACKENDS.md` for the per-backend identity
+/// table.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct HostVectorized;
+
+impl ShardBackend for HostVectorized {
+    fn name(&self) -> &'static str {
+        "vectorized"
+    }
+
+    fn supports(&self, tile_len: usize, _k: usize) -> bool {
+        tile_len >= vectorized::LANES
+    }
+
+    fn scan_tile(
+        &self,
+        logits: &[f32],
+        range: Range<usize>,
+        k: usize,
+    ) -> std::result::Result<ShardPartial, Unsupported> {
+        if !self.supports(logits.len(), k) {
+            return Err(Unsupported::new(
+                self.name(),
+                format!(
+                    "tile of {} elements is below one {}-lane stripe",
+                    logits.len(),
+                    vectorized::LANES
+                ),
+            ));
+        }
+        Ok(ShardPartial {
+            md: vectorized::online_normalizer_streaming(logits),
+            topk: scan_topk(logits, k, range.start as i64),
+        })
+    }
+
+    fn normalizer_tile(
+        &self,
+        logits: &[f32],
+        _range: Range<usize>,
+    ) -> std::result::Result<MD, Unsupported> {
+        if !self.supports(logits.len(), 0) {
+            return Err(Unsupported::new(
+                self.name(),
+                format!(
+                    "tile of {} elements is below one {}-lane stripe",
+                    logits.len(),
+                    vectorized::LANES
+                ),
+            ));
+        }
+        Ok(vectorized::online_normalizer_streaming(logits))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Artifacts stub: the pinned slot-in point for the real PJRT path
+// ---------------------------------------------------------------------------
+
+/// Adapter over the vendored `xla` stub: performs the host-side tensor
+/// interop a real PJRT shard executable would need (literal
+/// construction + reshape to the `(1, tile_len)` input shape the AOT
+/// partial executables take), then attempts to reach a PJRT client and
+/// reports [`Unsupported`] when — as in every offline build — none is
+/// available.
+///
+/// Its purpose is twofold: the contract *shape* for the future
+/// real-PJRT backend is validated on every build (the interop code
+/// path is real even though execution is not), and the engine's
+/// per-tile fallback-to-host protocol is exercised end-to-end rather
+/// than only in unit tests.  Swapping in the real bindings turns the
+/// client probe into a live engine; the partial-executable wiring then
+/// lands behind this same `name()` without touching the engine.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ArtifactsStub;
+
+impl ArtifactsStub {
+    /// Shared decline path for both scan flavours: validate the
+    /// host-side tensor shape, then probe for a PJRT client.
+    fn decline(&self, logits: &[f32]) -> Unsupported {
+        // The interop a real backend performs before dispatch: a dense
+        // rank-1 literal reshaped to the (1, tile_len) batch-of-one the
+        // AOT partial executables accept.  Fully functional on the
+        // stub, so shape bugs surface here rather than on first contact
+        // with real bindings.
+        let lit = xla::Literal::vec1(logits);
+        if let Err(e) = lit.reshape(&[1, logits.len() as i64]) {
+            return Unsupported::new(self.name(), format!("literal interop failed: {e}"));
+        }
+        match xla::PjRtClient::cpu() {
+            // Real bindings linked but the shard executables are not
+            // wired yet — still a decline, with a reason that names the
+            // remaining work.
+            Ok(_client) => Unsupported::new(
+                self.name(),
+                "PJRT client available but shard partial executables are not wired",
+            ),
+            Err(e) => Unsupported::new(self.name(), e.to_string()),
+        }
+    }
+}
+
+impl ShardBackend for ArtifactsStub {
+    fn name(&self) -> &'static str {
+        "artifacts-stub"
+    }
+
+    /// Claims support so selection never filters it out — the decline
+    /// happens at scan time, which is exactly what drives the engine's
+    /// runtime fallback path.
+    fn supports(&self, _tile_len: usize, _k: usize) -> bool {
+        true
+    }
+
+    fn scan_tile(
+        &self,
+        logits: &[f32],
+        _range: Range<usize>,
+        _k: usize,
+    ) -> std::result::Result<ShardPartial, Unsupported> {
+        Err(self.decline(logits))
+    }
+
+    fn normalizer_tile(
+        &self,
+        logits: &[f32],
+        _range: Range<usize>,
+    ) -> std::result::Result<MD, Unsupported> {
+        Err(self.decline(logits))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Auto: geometry-driven composite
+// ---------------------------------------------------------------------------
+
+/// Geometry-driven composite backend: routes each tile to
+/// [`HostVectorized`] when the vocab/lane geometry allows (the tile
+/// covers at least one full lane stripe) and to [`HostScalar`]
+/// otherwise.  Total by construction, so it never triggers the
+/// engine-level fallback.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct AutoBackend {
+    vectorized: HostVectorized,
+    scalar: HostScalar,
+}
+
+impl ShardBackend for AutoBackend {
+    fn name(&self) -> &'static str {
+        "auto"
+    }
+
+    fn supports(&self, _tile_len: usize, _k: usize) -> bool {
+        true
+    }
+
+    fn scan_tile(
+        &self,
+        logits: &[f32],
+        range: Range<usize>,
+        k: usize,
+    ) -> std::result::Result<ShardPartial, Unsupported> {
+        if self.vectorized.supports(logits.len(), k) {
+            self.vectorized.scan_tile(logits, range, k)
+        } else {
+            self.scalar.scan_tile(logits, range, k)
+        }
+    }
+
+    fn normalizer_tile(
+        &self,
+        logits: &[f32],
+        range: Range<usize>,
+    ) -> std::result::Result<MD, Unsupported> {
+        if self.vectorized.supports(logits.len(), 0) {
+            self.vectorized.normalizer_tile(logits, range)
+        } else {
+            self.scalar.normalizer_tile(logits, range)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Selection
+// ---------------------------------------------------------------------------
+
+/// Which [`ShardBackend`] an engine instantiates — the value behind
+/// `shard_backend` in the config file, `--shard-backend` on the CLI,
+/// and `OSMAX_SHARD_BACKEND` in the environment (CI's backend matrix).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardBackendKind {
+    /// Per-tile geometry-driven choice between the vectorized and
+    /// scalar host scans ([`AutoBackend`]).
+    Auto,
+    /// The fused cache-blocked host scan ([`HostScalar`]) — reference
+    /// numerics, total, and the fallback target.
+    Scalar,
+    /// The lane-split streaming host scan ([`HostVectorized`]).
+    Vectorized,
+    /// The PJRT contract-shape stub ([`ArtifactsStub`]) — always falls
+    /// back to host at runtime.
+    ArtifactsStub,
+}
+
+impl ShardBackendKind {
+    /// Every selectable kind, in documentation order.  The
+    /// backend-iteration test harness runs the shard-layer edge-case
+    /// suite over exactly this list, so a newly registered backend is
+    /// covered the moment it is added here.
+    pub fn all() -> [ShardBackendKind; 4] {
+        [
+            ShardBackendKind::Scalar,
+            ShardBackendKind::Vectorized,
+            ShardBackendKind::ArtifactsStub,
+            ShardBackendKind::Auto,
+        ]
+    }
+
+    /// Parse a config/CLI value.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "auto" => Ok(ShardBackendKind::Auto),
+            "scalar" => Ok(ShardBackendKind::Scalar),
+            "vectorized" => Ok(ShardBackendKind::Vectorized),
+            "artifacts-stub" => Ok(ShardBackendKind::ArtifactsStub),
+            _ => bail!(
+                "invalid shard backend `{s}` (expected `auto`, `scalar`, \
+                 `vectorized`, or `artifacts-stub`)"
+            ),
+        }
+    }
+
+    /// The canonical config/CLI/metric spelling of this kind.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ShardBackendKind::Auto => "auto",
+            ShardBackendKind::Scalar => "scalar",
+            ShardBackendKind::Vectorized => "vectorized",
+            ShardBackendKind::ArtifactsStub => "artifacts-stub",
+        }
+    }
+
+    /// The kind named by the `OSMAX_SHARD_BACKEND` environment variable
+    /// (how CI's backend matrix threads a backend through the e2e
+    /// suites), or `default` when unset.  An unparsable value panics —
+    /// a matrix job silently testing the wrong backend is worse than a
+    /// loud failure (same convention as `OSMAX_POOL_SCHED`).
+    pub fn from_env_or(default: ShardBackendKind) -> ShardBackendKind {
+        Self::resolve(std::env::var("OSMAX_SHARD_BACKEND").ok().as_deref(), default)
+    }
+
+    /// Testable core of [`Self::from_env_or`] — kept free of
+    /// environment reads so tests never mutate process-global env vars.
+    fn resolve(value: Option<&str>, default: ShardBackendKind) -> ShardBackendKind {
+        match value {
+            Some(s) => ShardBackendKind::parse(s).expect("OSMAX_SHARD_BACKEND"),
+            None => default,
+        }
+    }
+
+    /// Build the backend object this kind names.
+    pub fn instantiate(self) -> Arc<dyn ShardBackend> {
+        match self {
+            ShardBackendKind::Auto => Arc::new(AutoBackend::default()),
+            ShardBackendKind::Scalar => Arc::new(HostScalar),
+            ShardBackendKind::Vectorized => Arc::new(HostVectorized),
+            ShardBackendKind::ArtifactsStub => Arc::new(ArtifactsStub),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+    use crate::softmax::fused;
+
+    fn logits(n: usize, seed: u64) -> Vec<f32> {
+        Xoshiro256pp::seed_from_u64(seed).logits(n, 7.0)
+    }
+
+    #[test]
+    fn kind_parse_and_as_str_roundtrip() {
+        for kind in ShardBackendKind::all() {
+            assert_eq!(ShardBackendKind::parse(kind.as_str()).unwrap(), kind);
+            assert_eq!(kind.instantiate().name(), kind.as_str());
+        }
+        assert_eq!(ShardBackendKind::parse("auto").unwrap(), ShardBackendKind::Auto);
+        assert!(ShardBackendKind::parse("gpu").is_err());
+        assert!(ShardBackendKind::parse("").is_err());
+    }
+
+    #[test]
+    fn env_resolution_mirrors_pool_sched() {
+        assert_eq!(
+            ShardBackendKind::resolve(None, ShardBackendKind::Auto),
+            ShardBackendKind::Auto
+        );
+        assert_eq!(
+            ShardBackendKind::resolve(Some("scalar"), ShardBackendKind::Auto),
+            ShardBackendKind::Scalar
+        );
+        assert_eq!(
+            ShardBackendKind::resolve(Some("vectorized"), ShardBackendKind::Scalar),
+            ShardBackendKind::Vectorized
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "OSMAX_SHARD_BACKEND")]
+    fn env_resolution_rejects_garbage_loudly() {
+        ShardBackendKind::resolve(Some("cuda"), ShardBackendKind::Auto);
+    }
+
+    #[test]
+    fn scalar_backend_is_the_reference_scan() {
+        let x = logits(3000, 1);
+        let part = HostScalar.scan_tile(&x, 0..x.len(), 5).unwrap();
+        let (md, buf) = fused::fused_partial(&x, 5, 0);
+        assert_eq!(part.md, md);
+        assert_eq!(part.topk.indices(), buf.indices());
+        let md2 = HostScalar.normalizer_tile(&x, 0..x.len()).unwrap();
+        assert_eq!(md2, vectorized::online_normalizer(&x));
+    }
+
+    #[test]
+    fn vectorized_backend_selects_identical_indices() {
+        for n in [16usize, 100, 513, 4097] {
+            let x = logits(n, n as u64);
+            let part = HostVectorized.scan_tile(&x, 0..n, 6).unwrap();
+            let reference = HostScalar.scan_tile(&x, 0..n, 6).unwrap();
+            assert_eq!(part.topk.indices(), reference.topk.indices(), "n={n}");
+            assert_eq!(part.md.m, reference.md.m, "n={n}");
+            let (a, b) = (part.md.d, reference.md.d);
+            assert!((a - b).abs() <= 1e-4 * b.max(1.0), "n={n}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn vectorized_backend_declines_sub_stripe_tiles() {
+        let x = logits(vectorized::LANES - 1, 9);
+        assert!(!HostVectorized.supports(x.len(), 3));
+        let err = HostVectorized.scan_tile(&x, 0..x.len(), 3).unwrap_err();
+        assert_eq!(err.backend, "vectorized");
+        assert!(HostVectorized.normalizer_tile(&x, 0..x.len()).is_err());
+        assert!(HostVectorized.supports(vectorized::LANES, 3));
+    }
+
+    #[test]
+    fn vectorized_backend_globalizes_indices() {
+        let x = logits(64, 4);
+        let part = HostVectorized.scan_tile(&x, 1000..1064, 3).unwrap();
+        assert!(part.topk.indices().iter().all(|&i| (1000..1064).contains(&(i as usize))));
+    }
+
+    #[test]
+    fn artifacts_stub_always_declines_at_runtime() {
+        let x = logits(512, 2);
+        assert!(ArtifactsStub.supports(x.len(), 5), "claims support up front");
+        let err = ArtifactsStub.scan_tile(&x, 0..512, 5).unwrap_err();
+        assert_eq!(err.backend, "artifacts-stub");
+        assert!(ArtifactsStub.normalizer_tile(&x, 0..512).is_err());
+        // Empty tiles exercise the interop path too, without panicking.
+        assert!(ArtifactsStub.scan_tile(&[], 0..0, 1).is_err());
+    }
+
+    #[test]
+    fn auto_backend_routes_by_geometry_and_is_total() {
+        let auto = AutoBackend::default();
+        // Big tile → vectorized numerics (streaming d).
+        let x = logits(512, 3);
+        let got = auto.scan_tile(&x, 0..512, 4).unwrap();
+        let vec = HostVectorized.scan_tile(&x, 0..512, 4).unwrap();
+        assert_eq!(got.md, vec.md);
+        assert_eq!(got.topk.indices(), vec.topk.indices());
+        // Sub-stripe tile → scalar numerics, not an error.
+        let tiny = logits(5, 6);
+        let got = auto.scan_tile(&tiny, 0..5, 2).unwrap();
+        let scalar = HostScalar.scan_tile(&tiny, 0..5, 2).unwrap();
+        assert_eq!(got.md, scalar.md);
+        assert_eq!(got.topk.indices(), scalar.topk.indices());
+    }
+
+    #[test]
+    fn scale_tile_default_matches_scale_pass() {
+        let x = logits(100, 8);
+        let md = vectorized::online_normalizer(&x);
+        let mut a = vec![0.0f32; 100];
+        let mut b = vec![0.0f32; 100];
+        HostScalar.scale_tile(&x, &mut a, md.m, 1.0 / md.d);
+        vectorized::scale_pass(&x, &mut b, md.m, 1.0 / md.d);
+        assert_eq!(a, b);
+    }
+}

@@ -18,14 +18,26 @@
 //! the caller joins once.  The single-row entry points are the
 //! degenerate 1×S grid, so batched and per-row execution are
 //! bitwise-identical by construction.
+//!
+//! Per-tile scans are delegated to a pluggable [`ShardBackend`]
+//! (selected by [`ShardEngineConfig::backend`]): every tile dispatch —
+//! fused scans, normalizer passes, and scale passes alike — goes
+//! through the backend object, and a tile the backend declines at
+//! runtime ([`backend::Unsupported`]) is transparently rerun on the
+//! total [`backend::HostScalar`] scan (the **per-tile fallback**,
+//! counted in `shard.backend.<name>.fallbacks`).  Planning, the ⊕
+//! reduction, and scheduling never move — only the leaf scan does.
+//! See `docs/BACKENDS.md` for the backend-author contract.
 
+use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use crate::exec::{self, SchedPolicy, ThreadPool};
-use crate::metrics;
+use crate::metrics::{self, Counter};
 use crate::softmax::monoid::{self, MD};
-use crate::softmax::vectorized;
 
+use super::backend::{self, ShardBackend, ShardBackendKind};
 use super::grid::{GridPlan, GridTile};
 use super::plan::{ShardPlan, ShardRange};
 use super::reduce::{self, ShardPartial};
@@ -48,6 +60,11 @@ pub struct ShardEngineConfig {
     /// either — the ⊕ bracketing is fixed by the plan, not by which
     /// worker runs which tile when.
     pub sched: SchedPolicy,
+    /// Which per-tile scan backend the engine dispatches to.  `Scalar`
+    /// (the default) is the original fused host scan and keeps every
+    /// output bitwise-identical to the pre-backend engine; the serving
+    /// layer selects its own default via `ServeConfig::shard_backend`.
+    pub backend: ShardBackendKind,
 }
 
 impl Default for ShardEngineConfig {
@@ -58,6 +75,7 @@ impl Default for ShardEngineConfig {
             min_shard: ShardPlan::DEFAULT_MIN_SHARD,
             threshold: 32_768,
             sched: SchedPolicy::Steal,
+            backend: ShardBackendKind::Scalar,
         }
     }
 }
@@ -70,12 +88,28 @@ pub struct ShardEngine {
     min_shard: usize,
     threshold: usize,
     sched: SchedPolicy,
+    /// The selected per-tile scan backend.
+    backend: Arc<dyn ShardBackend>,
+    /// The total host scan every declined tile falls back to.
+    fallback: backend::HostScalar,
+    /// `shard.backend.<name>.tiles` — tiles dispatched to `backend`.
+    tile_ctr: Arc<Counter>,
+    /// `shard.backend.<name>.fallbacks` — tiles `backend` declined at
+    /// runtime and the host scalar scan reran.
+    fallback_ctr: Arc<Counter>,
 }
 
 impl ShardEngine {
+    /// Build an engine from `cfg`: spawns the shard pool (when more
+    /// than one worker is configured) and instantiates the selected
+    /// per-tile scan backend.
     pub fn new(cfg: ShardEngineConfig) -> ShardEngine {
         let workers = if cfg.workers == 0 { exec::default_threads() } else { cfg.workers };
         let max_shards = if cfg.max_shards == 0 { workers } else { cfg.max_shards };
+        let backend_obj = cfg.backend.instantiate();
+        let reg = metrics::global();
+        let tile_ctr = reg.counter(&format!("shard.backend.{}.tiles", backend_obj.name()));
+        let fallback_ctr = reg.counter(&format!("shard.backend.{}.fallbacks", backend_obj.name()));
         ShardEngine {
             pool: (workers > 1).then(|| ThreadPool::with_policy(workers, "shard", cfg.sched)),
             workers,
@@ -83,6 +117,10 @@ impl ShardEngine {
             min_shard: cfg.min_shard,
             threshold: cfg.threshold.max(1),
             sched: cfg.sched,
+            backend: backend_obj,
+            fallback: backend::HostScalar,
+            tile_ctr,
+            fallback_ctr,
         }
     }
 
@@ -94,6 +132,80 @@ impl ShardEngine {
     /// The scheduling policy the shard pool runs under.
     pub fn sched(&self) -> SchedPolicy {
         self.sched
+    }
+
+    /// Name of the per-tile scan backend this engine dispatches to
+    /// (the `shard.backend.<name>.*` metric prefix).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Cumulative count of tiles the selected backend declined at
+    /// runtime and the host scalar scan reran (the process-wide
+    /// `shard.backend.<name>.fallbacks` counter — monotone, shared by
+    /// every engine running the same backend; consumers compare
+    /// before/after deltas).
+    pub fn backend_fallbacks(&self) -> u64 {
+        self.fallback_ctr.get()
+    }
+
+    /// Dispatch one fused scan tile to the selected backend, falling
+    /// back to the total [`backend::HostScalar`] scan if the backend
+    /// declines the tile at runtime.
+    ///
+    /// `tile` holds exactly the elements of the *global* vocabulary
+    /// interval `range` (callers that materialize their own logits —
+    /// sharded projection decode — hand in just their slice), and the
+    /// returned partial carries global candidate indices.  This is the
+    /// engine's only path to a backend for fused queries, so every
+    /// tile is counted in `shard.backend.<name>.tiles`.
+    pub fn scan_tile(&self, tile: &[f32], range: Range<usize>, k: usize) -> ShardPartial {
+        assert_eq!(
+            tile.len(),
+            range.end - range.start,
+            "tile slice must cover exactly its vocabulary range"
+        );
+        self.tile_ctr.inc();
+        match self.backend.scan_tile(tile, range.clone(), k) {
+            Ok(part) => part,
+            Err(unsupported) => {
+                self.fallback_ctr.inc();
+                // Debug level: the stub backend declines every tile by
+                // design, so anything louder would flood the log; the
+                // fallbacks counter is the always-on signal.
+                crate::debug!("shard.backend", "host fallback: {unsupported}");
+                self.fallback
+                    .scan_tile(tile, range, k)
+                    .expect("HostScalar is total over every tile geometry")
+            }
+        }
+    }
+
+    /// Normalizer-only flavour of [`Self::scan_tile`] (pass 1 of a
+    /// sharded softmax), with the same fallback protocol.
+    pub fn normalizer_tile(&self, tile: &[f32], range: Range<usize>) -> MD {
+        assert_eq!(
+            tile.len(),
+            range.end - range.start,
+            "tile slice must cover exactly its vocabulary range"
+        );
+        self.tile_ctr.inc();
+        match self.backend.normalizer_tile(tile, range.clone()) {
+            Ok(md) => md,
+            Err(unsupported) => {
+                self.fallback_ctr.inc();
+                crate::debug!("shard.backend", "host fallback: {unsupported}");
+                self.fallback
+                    .normalizer_tile(tile, range)
+                    .expect("HostScalar is total over every tile geometry")
+            }
+        }
+    }
+
+    /// Output scale pass for one tile, through the backend (total — no
+    /// fallback needed; see [`ShardBackend::scale_tile`]).
+    fn scale_tile(&self, tile: &[f32], out: &mut [f32], m: f32, inv: f32) {
+        self.backend.scale_tile(tile, out, m, inv);
     }
 
     /// Cumulative task-steal count from the pool metrics (the
@@ -320,10 +432,10 @@ impl ShardEngine {
             grid,
             |tile| {
                 let x = rows[tile.row];
-                ShardPartial::scan(
+                self.scan_tile(
                     &x[tile.range.start..tile.range.end],
+                    tile.range.start..tile.range.end,
                     k,
-                    tile.range.start as i64,
                 )
             },
             |_row, parts| reduce::tree_reduce(parts).finalize(),
@@ -340,9 +452,9 @@ impl ShardEngine {
     pub fn normalizer_planned(&self, x: &[f32], plan: &ShardPlan) -> MD {
         assert_eq!(plan.v(), x.len(), "plan does not cover the row");
         if !plan.is_sharded() {
-            return vectorized::online_normalizer(x);
+            return self.normalizer_tile(x, 0..x.len());
         }
-        let parts = self.map(plan, |r| vectorized::online_normalizer(&x[r.start..r.end]));
+        let parts = self.map(plan, |r| self.normalizer_tile(&x[r.start..r.end], r.start..r.end));
         monoid::tree_reduce(&parts)
     }
 
@@ -357,7 +469,11 @@ impl ShardEngine {
     pub fn softmax_into_planned(&self, x: &[f32], out: &mut [f32], plan: &ShardPlan) {
         assert_eq!(x.len(), out.len());
         if !plan.is_sharded() {
-            vectorized::online(x, out);
+            // Single-tile path: normalizer + scale through the backend
+            // (for the scalar backend this is exactly the unsharded
+            // `vectorized::online` kernel, bitwise).
+            let md = self.normalizer_tile(x, 0..x.len());
+            self.scale_tile(x, out, md.m, 1.0 / md.d);
             return;
         }
         let md = self.normalizer_planned(x, plan);
@@ -370,7 +486,7 @@ impl ShardEngine {
             let dst = unsafe {
                 std::slice::from_raw_parts_mut(out_ref.0.add(r.start), r.len())
             };
-            vectorized::scale_pass(&x[r.start..r.end], dst, md.m, inv);
+            self.scale_tile(&x[r.start..r.end], dst, md.m, inv);
         });
     }
 
@@ -408,12 +524,15 @@ impl ShardEngine {
             outs.iter_mut().map(|o| SendPtr(o.as_mut_ptr())).collect();
         let out_ptrs = &out_ptrs;
         if !grid.row_plan().is_sharded() {
-            // Degenerate R×1 grid: the single-pass fused kernel per row
-            // (bitwise-identical to the unsharded [`Self::softmax_into`]
-            // path), with the rows themselves as the dispatch's tiles.
+            // Degenerate R×1 grid: one normalizer + scale visit per row
+            // through the backend (for the scalar backend this is the
+            // unsharded `vectorized::online` kernel, bitwise), with the
+            // rows themselves as the dispatch's tiles.
             self.grid_map(
                 grid,
                 |tile| {
+                    let row = rows[tile.row];
+                    let md = self.normalizer_tile(row, 0..row.len());
                     // SAFETY: one tile per row → exclusive access to the
                     // row's output buffer; grid_map joins before `outs`
                     // is returned.
@@ -423,7 +542,7 @@ impl ShardEngine {
                             tile.range.len(),
                         )
                     };
-                    vectorized::online(rows[tile.row], dst);
+                    self.scale_tile(row, dst, md.m, 1.0 / md.d);
                 },
                 |_row, _parts| (),
             );
@@ -433,8 +552,9 @@ impl ShardEngine {
         let mds: Vec<MD> = self.grid_map(
             grid,
             |tile| {
-                vectorized::online_normalizer(
+                self.normalizer_tile(
                     &rows[tile.row][tile.range.start..tile.range.end],
+                    tile.range.start..tile.range.end,
                 )
             },
             |_row, parts| monoid::tree_reduce(&parts),
@@ -455,7 +575,7 @@ impl ShardEngine {
                         tile.range.len(),
                     )
                 };
-                vectorized::scale_pass(
+                self.scale_tile(
                     &rows[tile.row][tile.range.start..tile.range.end],
                     dst,
                     md.m,
@@ -497,6 +617,7 @@ unsafe impl<T: Send> Send for SendPtr<T> {}
 mod tests {
     use super::*;
     use crate::rng::Xoshiro256pp;
+    use crate::softmax::vectorized;
     use crate::softmax::{self, fused, Algorithm};
 
     fn logits(n: usize, seed: u64) -> Vec<f32> {
@@ -680,6 +801,7 @@ mod tests {
                 min_shard: 64,
                 threshold: 256,
                 sched,
+                ..ShardEngineConfig::default()
             })
         };
         let fifo = mk(SchedPolicy::Fifo);
@@ -691,6 +813,78 @@ mod tests {
         assert_eq!(fifo.fused_topk_batch(&rows, 7), steal.fused_topk_batch(&rows, 7));
         assert_eq!(fifo.softmax_batch(&rows), steal.softmax_batch(&rows));
         assert_eq!(fifo.fused_topk(&rows[0], 5), steal.fused_topk(&rows[0], 5));
+    }
+
+    #[test]
+    fn artifacts_stub_engine_serves_via_per_tile_host_fallback() {
+        // The stub backend declines every tile at runtime; the engine
+        // must transparently rerun each tile on the host scalar scan,
+        // count the fallbacks, and produce the scalar backend's exact
+        // selections.
+        let mk = |backend| {
+            ShardEngine::new(ShardEngineConfig {
+                workers: 3,
+                min_shard: 64,
+                threshold: 256,
+                backend,
+                ..ShardEngineConfig::default()
+            })
+        };
+        let stub = mk(ShardBackendKind::ArtifactsStub);
+        let scalar = mk(ShardBackendKind::Scalar);
+        assert_eq!(stub.backend_name(), "artifacts-stub");
+        let before = stub.backend_fallbacks();
+        let x = logits(4097, 77);
+        assert_eq!(stub.fused_topk(&x, 6), scalar.fused_topk(&x, 6));
+        assert_eq!(stub.softmax(&x), scalar.softmax(&x));
+        assert!(
+            stub.backend_fallbacks() > before,
+            "every stub tile must be counted as a fallback"
+        );
+    }
+
+    #[test]
+    fn vectorized_engine_matches_indices_and_falls_back_below_stripe() {
+        let eng = ShardEngine::new(ShardEngineConfig {
+            workers: 2,
+            min_shard: 1,
+            threshold: 1,
+            backend: ShardBackendKind::Vectorized,
+            ..ShardEngineConfig::default()
+        });
+        assert_eq!(eng.backend_name(), "vectorized");
+        // Lane-aligned tiles: same selections as the whole-row scan.
+        let x = logits(2048, 5);
+        let (_, idx) = eng.fused_topk_planned(&x, 7, &ShardPlan::with_shards(2048, 4));
+        assert_eq!(idx, fused::online_topk(&x, 7).1);
+        // Sub-stripe tiles (40 / 8 = 5 elements each): the vectorized
+        // backend declines and the host fallback answers.
+        let before = eng.backend_fallbacks();
+        let y = logits(40, 6);
+        let (_, idx) = eng.fused_topk_planned(&y, 3, &ShardPlan::with_shards(40, 8));
+        assert_eq!(idx, fused::online_topk(&y, 3).1);
+        assert!(eng.backend_fallbacks() > before);
+    }
+
+    #[test]
+    fn every_backend_kind_produces_reference_selections() {
+        let x = logits(3000, 42);
+        let plan = ShardPlan::with_shards(3000, 5);
+        let want = fused::online_topk(&x, 5).1;
+        for kind in ShardBackendKind::all() {
+            let eng = ShardEngine::new(ShardEngineConfig {
+                workers: 2,
+                min_shard: 1,
+                threshold: 1,
+                backend: kind,
+                ..ShardEngineConfig::default()
+            });
+            let (_, idx) = eng.fused_topk_planned(&x, 5, &plan);
+            assert_eq!(idx, want, "backend {}", kind.as_str());
+            let probs = eng.softmax(&x);
+            let sum: f32 = probs.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-3, "backend {}: sum={sum}", kind.as_str());
+        }
     }
 
     #[test]

@@ -61,12 +61,26 @@
 //! * **Tie-breaking** — equal logit values resolve to the *earliest
 //!   global index*; buffer merges keep the incumbent (left) side, so
 //!   shard-ordered reductions reproduce the whole-row scan exactly.
+//!
+//! ## Pluggable scan backends
+//!
+//! *Where* each per-tile partial is computed is a pluggable layer
+//! ([`backend`]): the engine dispatches every tile to a
+//! [`ShardBackend`] object (`scalar` fused scan, `vectorized`
+//! lane-split scan, the `artifacts-stub` PJRT contract adapter, or
+//! `auto`), and a tile the backend declines is rerun on the total host
+//! scalar scan — the per-tile fallback protocol.  The backend-author
+//! contract lives in `docs/BACKENDS.md`.
 
+#![warn(missing_docs)]
+
+pub mod backend;
 pub mod engine;
 pub mod grid;
 pub mod plan;
 pub mod reduce;
 
+pub use backend::{ShardBackend, ShardBackendKind, Unsupported};
 pub use engine::{ShardEngine, ShardEngineConfig};
 pub use grid::{GridPlan, GridTile};
 pub use plan::{ShardPlan, ShardRange};

@@ -19,16 +19,33 @@ pub struct ShardRange {
 }
 
 impl ShardRange {
+    /// Number of elements the range covers.
     pub fn len(&self) -> usize {
         self.end - self.start
     }
 
+    /// Whether the range covers zero elements (only the `v == 0` plan).
     pub fn is_empty(&self) -> bool {
         self.start == self.end
     }
 }
 
 /// A balanced split of a length-`v` row into `shards` contiguous ranges.
+///
+/// Ranges partition `[0, v)` exactly, lengths differ by at most one,
+/// and the split is pure arithmetic — replayable anywhere:
+///
+/// ```
+/// use onlinesoftmax::shard::ShardPlan;
+///
+/// let plan = ShardPlan::with_shards(10, 3);
+/// let lens: Vec<usize> = plan.ranges().map(|r| r.len()).collect();
+/// assert_eq!(lens, [4, 3, 3]); // remainder spread over leading shards
+/// assert_eq!(plan.range(1).start, 4);
+/// assert_eq!(plan.range(2).end, 10);
+/// assert!(plan.is_sharded());
+/// assert!(!ShardPlan::single(10).is_sharded());
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ShardPlan {
     v: usize,

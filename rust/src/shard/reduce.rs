@@ -40,6 +40,29 @@ impl ShardPartial {
     /// Ties between equal logit values resolve to `self`'s incumbent,
     /// so merging shards in ascending vocabulary order preserves the
     /// whole-row scan's earliest-index-wins convention.
+    ///
+    /// Merging two shard scans recovers the whole-row scan (the law
+    /// every [`ShardBackend`](super::backend::ShardBackend) partial
+    /// must satisfy — `m` and the selected indices exactly, `d` up to
+    /// fp reassociation):
+    ///
+    /// ```
+    /// use onlinesoftmax::shard::ShardPartial;
+    ///
+    /// let x = [1.0f32, 4.0, -2.0, 4.0, 3.0, 0.5];
+    /// let whole = ShardPartial::scan(&x, 2, 0);
+    /// let merged = ShardPartial::scan(&x[..3], 2, 0)
+    ///     .merge(ShardPartial::scan(&x[3..], 2, 3));
+    /// assert_eq!(merged.md.m, whole.md.m);
+    /// assert!((merged.md.d - whole.md.d).abs() <= 1e-5 * whole.md.d);
+    /// // the tied 4.0s resolve to the earliest global index, 1 then 3
+    /// assert_eq!(merged.topk.indices(), whole.topk.indices());
+    /// assert_eq!(merged.topk.indices(), &[1, 3]);
+    ///
+    /// // ⊕ identity: merging the empty partial changes nothing
+    /// let with_id = whole.clone().merge(ShardPartial::identity(2));
+    /// assert_eq!(with_id.md, whole.md);
+    /// ```
     pub fn merge(mut self, other: ShardPartial) -> ShardPartial {
         self.md = self.md.combine(other.md);
         self.topk.merge(&other.topk);

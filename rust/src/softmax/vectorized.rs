@@ -122,7 +122,14 @@ pub fn online_normalizer_streaming(x: &[f32]) -> MD {
             // d = 0 annihilates it — no NaN, no branch.
             let xv = c[l];
             let m_new = lane_m[l].max(xv);
-            lane_d[l] = lane_d[l] * fast_exp(lane_m[l] - m_new) + fast_exp(xv - m_new);
+            // e^{xv − m'} with the ⊕ identity corner pinned: when xv
+            // AND m' are both −∞ (an all-padding lane), the IEEE
+            // −∞ − −∞ = NaN would hit fast_exp's input clamp and come
+            // back as e^88, silently poisoning d.  The comparison
+            // lowers to a select, so the loop still vectorizes; this
+            // matches MD::push's exp_guard convention exactly.
+            let e_x = if xv == f32::NEG_INFINITY { 0.0 } else { fast_exp(xv - m_new) };
+            lane_d[l] = lane_d[l] * fast_exp(lane_m[l] - m_new) + e_x;
             lane_m[l] = m_new;
         }
     }
@@ -251,6 +258,31 @@ mod tests {
             assert!((a.d - b.d).abs() <= 2e-5 * b.d.max(1.0), "n={n}: {a:?} vs {b:?}");
         }
         assert!(online_normalizer_streaming(&[]).is_identity());
+    }
+
+    #[test]
+    fn streaming_normalizer_treats_neg_infinity_as_identity() {
+        // Regression: −∞ lanes used to hit fast_exp(−∞ − −∞ = NaN),
+        // whose input clamp returns e^88 — an all-padding vector came
+        // back with a huge garbage d instead of the ⊕ identity.
+        for n in [1usize, 7, LANES, LANES + 3, 64, 700] {
+            let all_pad = vec![f32::NEG_INFINITY; n];
+            assert!(
+                online_normalizer_streaming(&all_pad).is_identity(),
+                "n={n}: all-padding input must reduce to the identity"
+            );
+        }
+        // Mixed: padding elements contribute (at most fp-saturation
+        // dust) nothing; m and d match the blocked kernel.
+        let mut x = logits(300, 17, 8.0);
+        for i in (0..300).step_by(7) {
+            x[i] = f32::NEG_INFINITY;
+        }
+        let a = online_normalizer(&x);
+        let b = online_normalizer_streaming(&x);
+        assert_eq!(a.m, b.m);
+        assert!(b.d.is_finite());
+        assert!((a.d - b.d).abs() <= 2e-5 * b.d.max(1.0), "{a:?} vs {b:?}");
     }
 
     #[test]

@@ -7,7 +7,8 @@ use onlinesoftmax::prop::{
 };
 use onlinesoftmax::rng::Xoshiro256pp;
 use onlinesoftmax::shard::{
-    tree_reduce, GridPlan, ShardEngine, ShardEngineConfig, ShardPartial, ShardPlan,
+    tree_reduce, GridPlan, ShardBackendKind, ShardEngine, ShardEngineConfig, ShardPartial,
+    ShardPlan,
 };
 use onlinesoftmax::softmax::{self, fused, monoid::MD, scalar, vectorized, Algorithm};
 use onlinesoftmax::topk::{heap_topk, scan_topk, TopKBuffer};
@@ -315,25 +316,30 @@ fn prop_grid_batch_is_bitwise_identical_to_per_row_runs() {
     // scans → same ⊕ bracketing.  Covers batch = 1, shard counts that
     // leave ragged last tiles, and k beyond the row length.
     //
-    // Runs under BOTH pool scheduling policies: tile execution order is
+    // Runs under BOTH pool scheduling policies × BOTH production scan
+    // backends (scalar / vectorized): tile execution order is
     // completely different between the FIFO injector and the
-    // work-stealing deques, but the ⊕ bracketing is fixed by the plan,
-    // so every output must match the per-row run byte for byte either
-    // way — and therefore across policies too.
-    let fifo = ShardEngine::new(ShardEngineConfig {
-        workers: 4,
-        min_shard: 1,
-        threshold: 1,
-        sched: SchedPolicy::Fifo,
-        ..Default::default()
-    });
-    let steal = ShardEngine::new(ShardEngineConfig {
-        workers: 4,
-        min_shard: 1,
-        threshold: 1,
-        sched: SchedPolicy::Steal,
-        ..Default::default()
-    });
+    // work-stealing deques, and the per-tile kernels differ between
+    // backends, but within one engine the ⊕ bracketing and the leaf
+    // scan are fixed by the plan + backend — so every grid output must
+    // match that engine's per-row run byte for byte, and the two
+    // schedulers must agree bitwise per backend.
+    let mk = |sched, backend| {
+        ShardEngine::new(ShardEngineConfig {
+            workers: 4,
+            min_shard: 1,
+            threshold: 1,
+            sched,
+            backend,
+            ..Default::default()
+        })
+    };
+    let engines = [
+        mk(SchedPolicy::Fifo, ShardBackendKind::Scalar),
+        mk(SchedPolicy::Steal, ShardBackendKind::Scalar),
+        mk(SchedPolicy::Fifo, ShardBackendKind::Vectorized),
+        mk(SchedPolicy::Steal, ShardBackendKind::Vectorized),
+    ];
     let gen = Pair(
         Pair(UsizeRange(1, 6), LogitsVec { min_len: 1, max_len: 400 }),
         Pair(UsizeRange(1, 9), UsizeRange(1, 12)),
@@ -355,15 +361,15 @@ fn prop_grid_batch_is_bitwise_identical_to_per_row_runs() {
         let plan = ShardPlan::with_shards(v, *shards);
         let grid = GridPlan::new(rows.len(), plan);
 
-        for engine in [&fifo, &steal] {
-            let policy = engine.sched().as_str();
+        for engine in &engines {
+            let label = format!("{}/{}", engine.backend_name(), engine.sched().as_str());
             let topk = engine.fused_topk_batch_planned(&rows, k, &grid);
             let probs = engine.softmax_batch_planned(&rows, &grid);
             for (i, row) in rows.iter().enumerate() {
                 let want_topk = engine.fused_topk_planned(row, k, &plan);
                 if topk[i] != want_topk {
                     return Err(format!(
-                        "[{policy}] rows={rows_n} shards={shards} k={k} row {i}: \
+                        "[{label}] rows={rows_n} shards={shards} k={k} row {i}: \
                          grid topk {:?} != per-row {:?}",
                         topk[i], want_topk
                     ));
@@ -372,25 +378,176 @@ fn prop_grid_batch_is_bitwise_identical_to_per_row_runs() {
                 engine.softmax_into_planned(row, &mut want_probs, &plan);
                 if probs[i] != want_probs {
                     return Err(format!(
-                        "[{policy}] rows={rows_n} shards={shards} row {i}: grid \
+                        "[{label}] rows={rows_n} shards={shards} row {i}: grid \
                          softmax diverges from per-row run"
                     ));
                 }
             }
         }
-        // Cross-policy: the two schedulers agree bitwise on the whole
-        // batch (implied by the per-row identities above, asserted
-        // directly for a sharper failure message).
-        let tf = fifo.fused_topk_batch_planned(&rows, k, &grid);
-        let ts = steal.fused_topk_batch_planned(&rows, k, &grid);
-        if tf != ts {
-            return Err(format!(
-                "rows={rows_n} shards={shards} k={k}: fifo and steal grids diverge"
-            ));
+        // Cross-policy per backend: the two schedulers agree bitwise on
+        // the whole batch (implied by the per-row identities above,
+        // asserted directly for a sharper failure message).  Engines
+        // [0]/[1] are the scalar pair, [2]/[3] the vectorized pair.
+        for pair in engines.chunks(2) {
+            let tf = pair[0].fused_topk_batch_planned(&rows, k, &grid);
+            let ts = pair[1].fused_topk_batch_planned(&rows, k, &grid);
+            if tf != ts {
+                return Err(format!(
+                    "[{}] rows={rows_n} shards={shards} k={k}: fifo and steal \
+                     grids diverge",
+                    pair[0].backend_name()
+                ));
+            }
         }
         Ok(())
     })
     .unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Backend-iteration harness: the shard layer's edge-case semantics
+// (NaN / −∞ / ties / k ≥ V) must hold under EVERY registered backend,
+// not just the scalar path the suite originally pinned.
+// ---------------------------------------------------------------------------
+
+/// One engine per registered [`ShardBackendKind`] (including the
+/// artifacts stub, whose tiles all route through the per-tile host
+/// fallback — so the fallback path inherits this whole suite too).
+fn engines_for_every_backend(workers: usize) -> Vec<ShardEngine> {
+    ShardBackendKind::all()
+        .into_iter()
+        .map(|backend| {
+            ShardEngine::new(ShardEngineConfig {
+                workers,
+                min_shard: 1,
+                threshold: 1,
+                backend,
+                ..Default::default()
+            })
+        })
+        .collect()
+}
+
+#[test]
+fn prop_every_backend_selects_the_single_sweep_indices() {
+    let engines = engines_for_every_backend(3);
+    let gen =
+        Pair(Pair(LogitsVec { min_len: 1, max_len: 400 }, UsizeRange(1, 10)), UsizeRange(1, 8));
+    let cfg = Config { cases: 60, ..Config::default() };
+    forall_with(cfg, &gen, |((x, k), shards)| {
+        let k = (*k).max(1);
+        let plan = ShardPlan::with_shards(x.len(), *shards);
+        let (wv, wi) = fused::online_topk(x, k);
+        for engine in &engines {
+            let name = engine.backend_name();
+            let (sv, si) = engine.fused_topk_planned(x, k, &plan);
+            if si != wi {
+                return Err(format!("[{name}] shards={shards} k={k}: {si:?} vs {wi:?}"));
+            }
+            for (a, b) in sv.iter().zip(&wv) {
+                if (a - b).abs() > 1e-9 + 1e-4 * a.abs().max(b.abs()) {
+                    return Err(format!("[{name}] shards={shards} k={k}: val {a} vs {b}"));
+                }
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn backend_nan_logits_are_never_selected() {
+    // NaN fails every `>` comparison, so it must neither enter a top-k
+    // buffer nor become a shard max — under any backend, any split.
+    let mut x: Vec<f32> = (0..60).map(|i| ((i * 13) % 29) as f32 * 0.5).collect();
+    for i in [1usize, 7, 20, 21, 40, 59] {
+        x[i] = f32::NAN;
+    }
+    let want = fused::online_topk(&x, 5);
+    for engine in &engines_for_every_backend(2) {
+        let name = engine.backend_name();
+        for shards in [1usize, 2, 3, 5, 9] {
+            let plan = ShardPlan::with_shards(x.len(), shards);
+            let (vals, idx) = engine.fused_topk_planned(&x, 5, &plan);
+            assert_eq!(idx, want.1, "[{name}] shards={shards}");
+            assert!(
+                idx.iter().all(|&i| !x[i as usize].is_nan()),
+                "[{name}] shards={shards}: selected a NaN position"
+            );
+            assert!(
+                vals.iter().all(|v| !v.is_nan()),
+                "[{name}] shards={shards}: returned NaN probabilities"
+            );
+        }
+    }
+}
+
+#[test]
+fn backend_neg_infinity_rows_and_padding_act_as_identity() {
+    let engines = engines_for_every_backend(2);
+    // An all-(−∞) row selects nothing, under every backend and split.
+    let ninf = vec![f32::NEG_INFINITY; 37];
+    for engine in &engines {
+        let name = engine.backend_name();
+        for shards in [1usize, 2, 5, 16] {
+            let (vals, idx) =
+                engine.fused_topk_planned(&ninf, 3, &ShardPlan::with_shards(37, shards));
+            assert!(
+                vals.is_empty() && idx.is_empty(),
+                "[{name}] shards={shards}: −∞ row must select nothing"
+            );
+        }
+    }
+    // −∞ padding merges as "no contribution": the reduced normalizer
+    // matches the serial scan (m exactly, d within reassociation),
+    // even when one shard is entirely padding.
+    let mut padded: Vec<f32> = (0..60).map(|i| ((i * 7) % 13) as f32 - 3.0).collect();
+    padded.extend(std::iter::repeat(f32::NEG_INFINITY).take(20));
+    let want = scalar::online_normalizer(&padded);
+    for engine in &engines {
+        let name = engine.backend_name();
+        for shards in [2usize, 4, 8] {
+            let md = engine.normalizer_planned(&padded, &ShardPlan::with_shards(80, shards));
+            assert_eq!(md.m, want.m, "[{name}] shards={shards}");
+            assert!(md.d.is_finite(), "[{name}] shards={shards}: d = {}", md.d);
+            assert!(
+                (md.d - want.d).abs() <= 1e-4 * want.d.max(1.0),
+                "[{name}] shards={shards}: {} vs {}",
+                md.d,
+                want.d
+            );
+        }
+    }
+}
+
+#[test]
+fn backend_ties_resolve_to_earliest_global_index() {
+    // Equal logits everywhere: the selected indices must be the
+    // earliest global positions regardless of backend or shard count —
+    // the incumbent-wins merge convention crossing every tile boundary.
+    let ties = vec![5.0f32; 64];
+    for engine in &engines_for_every_backend(2) {
+        let name = engine.backend_name();
+        for shards in [1usize, 2, 4, 7, 16] {
+            let (_, idx) = engine.fused_topk_planned(&ties, 3, &ShardPlan::with_shards(64, shards));
+            assert_eq!(idx, vec![0, 1, 2], "[{name}] shards={shards}");
+        }
+    }
+}
+
+#[test]
+fn backend_k_at_or_above_v_returns_whole_distribution() {
+    let x = [2.0f32, 7.0, -1.0];
+    for engine in &engines_for_every_backend(2) {
+        let name = engine.backend_name();
+        for k in [3usize, 4, 10] {
+            let (vals, idx) = engine.fused_topk_planned(&x, k, &ShardPlan::with_shards(3, 2));
+            assert_eq!(idx, vec![1, 0, 2], "[{name}] k={k}");
+            assert_eq!(vals.len(), 3, "[{name}] k={k}");
+            let sum: f32 = vals.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-4, "[{name}] k={k}: sum={sum}");
+        }
+    }
 }
 
 #[test]
