@@ -19,7 +19,7 @@
 use std::time::{Duration, Instant};
 
 use onlinesoftmax::config::{BackendKind, ServeConfig, ServingMode};
-use onlinesoftmax::coordinator::{Coordinator, Payload, Reply};
+use onlinesoftmax::coordinator::{Coordinator, Payload, Reply, RequestOptions};
 use onlinesoftmax::rng::Xoshiro256pp;
 
 const TIMEOUT: Duration = Duration::from_secs(60);
@@ -58,13 +58,21 @@ fn run(cfg: &ServeConfig) -> (Vec<(Vec<f32>, Vec<i64>)>, Duration) {
 
     // warmup (compile + param upload on PJRT; pool spin-up on host)
     coord
-        .call(Payload::DecodeTopK { hidden: inputs[0].clone(), k: Some(5) }, TIMEOUT)
+        .call_opts(
+            Payload::DecodeTopK { hidden: inputs[0].clone() },
+            RequestOptions::with_k(5),
+            TIMEOUT,
+        )
         .expect("warmup");
 
     let t0 = Instant::now();
     let mut results = Vec::with_capacity(REQUESTS);
     for h in &inputs {
-        match coord.call(Payload::DecodeTopK { hidden: h.clone(), k: Some(5) }, TIMEOUT) {
+        match coord.call_opts(
+            Payload::DecodeTopK { hidden: h.clone() },
+            RequestOptions::with_k(5),
+            TIMEOUT,
+        ) {
             Ok(Reply::TopK { vals, idx }) => results.push((vals, idx)),
             other => panic!("unexpected {other:?}"),
         }

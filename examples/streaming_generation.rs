@@ -1,0 +1,112 @@
+//! Server-side streaming generation (protocol v2): one request frame,
+//! N streamed token frames, decode batched across concurrent streams.
+//!
+//! ```bash
+//! cargo run --release --example streaming_generation
+//! ```
+//!
+//! What it does:
+//! 1. starts the host-backend server (no artifacts needed),
+//! 2. streams a generation over one connection and prints each token
+//!    frame as it arrives,
+//! 3. replays the same trajectory with per-token v1-style `lm_step`
+//!    round-trips and verifies the selections are identical,
+//! 4. runs several concurrent streams and reads the batch-occupancy
+//!    metrics from the `stats` RPC to show cross-stream batching.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use onlinesoftmax::config::{BackendKind, ServeConfig, ServingMode};
+use onlinesoftmax::coordinator::Coordinator;
+use onlinesoftmax::json::Value;
+use onlinesoftmax::server::{client::Client, Server};
+
+const TOKENS: usize = 16;
+const K: usize = 5;
+const STREAMS: usize = 4;
+
+fn main() {
+    let mut cfg = ServeConfig::default();
+    cfg.backend = BackendKind::Host;
+    cfg.mode = ServingMode::Online;
+    cfg.vocab = 8192;
+    cfg.hidden = 64;
+    cfg.shard_threshold = 2048;
+    cfg.max_wait = Duration::from_millis(2);
+    cfg.addr = "127.0.0.1:0".into();
+
+    let coordinator = Arc::new(Coordinator::start(&cfg).expect("coordinator"));
+    let server = Server::bind(&cfg.addr, coordinator, STREAMS + 2).expect("bind");
+    let addr = server.local_addr().unwrap().to_string();
+    let stop = server.stop_handle();
+    let server_thread = std::thread::spawn(move || {
+        let _ = server.serve();
+    });
+
+    // --- one stream, one connection round-trip ---------------------------
+    let mut client = Client::connect(&addr).expect("connect");
+    let sid = client.open_session().expect("session");
+    println!("streaming {TOKENS} tokens from prompt [7, 42] (k={K}):");
+    let t0 = Instant::now();
+    let mut stream = client.generate(sid, &[7, 42], TOKENS, Some(K)).expect("generate");
+    let mut streamed = Vec::new();
+    for frame in &mut stream {
+        let frame = frame.expect("token frame");
+        println!(
+            "  #{:<2} token {:>6}  p = {:.5}",
+            frame.index, frame.token, frame.vals[0]
+        );
+        streamed.push(frame);
+    }
+    let stream_time = t0.elapsed();
+    let final_tokens = stream.tokens().to_vec();
+    println!("stream done in {stream_time:?} — one request frame on the wire");
+
+    // --- the v1 equivalent: one round-trip per token ---------------------
+    let sid2 = client.open_session().expect("session");
+    let t0 = Instant::now();
+    client.lm_step(sid2, 7, Some(K)).expect("prompt feed");
+    let mut cur = 42i32;
+    let mut stepped = Vec::new();
+    for _ in 0..TOKENS {
+        let (_vals, idx) = client.lm_step(sid2, cur, Some(K)).expect("lm_step");
+        cur = idx[0] as i32;
+        stepped.push(cur);
+    }
+    let step_time = t0.elapsed();
+    assert_eq!(final_tokens, stepped, "streamed and stepped selections are identical");
+    println!(
+        "per-token lm_step replay: {step_time:?} over {} round-trips → identical tokens ✓",
+        TOKENS + 1
+    );
+
+    // --- concurrent streams share decode batches -------------------------
+    println!("\nrunning {STREAMS} concurrent streams of {TOKENS} tokens...");
+    std::thread::scope(|scope| {
+        for w in 0..STREAMS {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                let mut c = Client::connect(&addr).expect("connect");
+                let sid = c.open_session().expect("session");
+                let frames = c
+                    .generate_all(sid, &[17 * (w as i32 + 1)], TOKENS, Some(K))
+                    .expect("stream");
+                assert_eq!(frames.len(), TOKENS);
+            });
+        }
+    });
+    let stats = client.stats().expect("stats");
+    let peak = stats
+        .get("metrics")
+        .and_then(|m| m.get("gauges"))
+        .and_then(|g| g.get("coordinator.batch.lm_step.peak"))
+        .and_then(Value::as_i64)
+        .unwrap_or(0);
+    println!(
+        "peak lm_step batch occupancy: {peak} (>1 ⇒ streams shared decode batches)"
+    );
+
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let _ = server_thread.join();
+}

@@ -192,6 +192,9 @@ pub fn help_text(version: &str) -> String {
            --queue-capacity N   admission queue bound         [1024]\n\
            --workers N          executor workers    [2]\n\
            --k N                default decode top-k          [5]\n\
+           --request-timeout MS per-request handling budget; per-request\n\
+                                deadline_ms tightens it\n\
+                                (env default: OSMAX_REQUEST_TIMEOUT) [60000]\n\
            --seed N             synthetic-model RNG seed      [0xC0FFEE]\n\n\
          BENCH OPTIONS:\n\
            --fig 1|2|3|4|k|ablation|grid|steal|backend|all  figure/study  [all]\n\

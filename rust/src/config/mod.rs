@@ -129,6 +129,24 @@ pub struct ServeConfig {
     /// Selected indices are identical across backends; see
     /// docs/BACKENDS.md for the per-backend identity guarantees.
     pub shard_backend: ShardBackendKind,
+    /// Default per-request handling budget (connection threads give up
+    /// on a reply after this long; per-request `deadline_ms` tightens
+    /// it, never extends it).  JSON `request_timeout_ms`, CLI
+    /// `--request-timeout` (ms), env default `OSMAX_REQUEST_TIMEOUT`.
+    pub request_timeout: Duration,
+}
+
+/// `OSMAX_REQUEST_TIMEOUT` (integer milliseconds) overrides the
+/// built-in default request timeout; file and CLI layers still
+/// override the env.  An invalid value fails fast at startup, same
+/// convention as `OSMAX_POOL_SCHED` / `OSMAX_SHARD_BACKEND`.
+fn request_timeout_from_env_or(default: Duration) -> Duration {
+    match std::env::var("OSMAX_REQUEST_TIMEOUT") {
+        Ok(s) => Duration::from_millis(
+            s.parse::<u64>().expect("OSMAX_REQUEST_TIMEOUT must be integer milliseconds"),
+        ),
+        Err(_) => default,
+    }
 }
 
 impl Default for ServeConfig {
@@ -158,6 +176,7 @@ impl Default for ServeConfig {
             // way: env overrides the built-in `auto`, file and CLI
             // layers override the env.
             shard_backend: ShardBackendKind::from_env_or(ShardBackendKind::Auto),
+            request_timeout: request_timeout_from_env_or(Duration::from_secs(60)),
         }
     }
 }
@@ -227,6 +246,9 @@ impl ServeConfig {
         if let Some(s) = v.get("shard_backend").and_then(Value::as_str) {
             cfg.shard_backend = ShardBackendKind::parse(s)?;
         }
+        if let Some(n) = v.get("request_timeout_ms").and_then(Value::as_usize) {
+            cfg.request_timeout = Duration::from_millis(n as u64);
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -264,6 +286,9 @@ impl ServeConfig {
         if let Some(s) = args.opt_str("shard-backend") {
             self.shard_backend = ShardBackendKind::parse(s)?;
         }
+        self.request_timeout = Duration::from_millis(
+            args.opt_parse("request-timeout", self.request_timeout.as_millis() as u64)?,
+        );
         self.validate()
     }
 
@@ -296,6 +321,9 @@ impl ServeConfig {
         if self.shard_threshold == 0 {
             bail!("shard_threshold must be >= 1");
         }
+        if self.request_timeout.is_zero() {
+            bail!("request_timeout must be > 0");
+        }
         Ok(())
     }
 
@@ -318,7 +346,11 @@ impl ServeConfig {
             .set("shard_threshold", Value::Number(self.shard_threshold as f64))
             .set("grid_rows", Value::Number(self.grid_rows as f64))
             .set("pool_sched", Value::String(self.pool_sched.as_str().to_string()))
-            .set("shard_backend", Value::String(self.shard_backend.as_str().to_string()));
+            .set("shard_backend", Value::String(self.shard_backend.as_str().to_string()))
+            .set(
+                "request_timeout_ms",
+                Value::Number(self.request_timeout.as_millis() as f64),
+            );
         v
     }
 }
@@ -344,8 +376,10 @@ mod tests {
         cfg.grid_rows = 8;
         cfg.pool_sched = SchedPolicy::Fifo;
         cfg.shard_backend = ShardBackendKind::Vectorized;
+        cfg.request_timeout = Duration::from_millis(2500);
         let back = ServeConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.shards, 4);
+        assert_eq!(back.request_timeout, Duration::from_millis(2500));
         assert_eq!(back.mode, ServingMode::Safe);
         assert_eq!(back.addr, cfg.addr);
         assert_eq!(back.backend, BackendKind::Host);
@@ -361,13 +395,20 @@ mod tests {
     #[test]
     fn cli_overrides_file_values() {
         let mut cfg = ServeConfig::default();
-        let raw: Vec<String> =
-            ["--mode", "safe", "--shards", "8", "--max-wait-us", "500"].iter().map(|s| s.to_string()).collect();
-        let args = Args::parse(&raw, &["mode", "shards", "max-wait-us"]).unwrap();
+        let raw: Vec<String> = [
+            "--mode", "safe", "--shards", "8", "--max-wait-us", "500",
+            "--request-timeout", "1500",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let args =
+            Args::parse(&raw, &["mode", "shards", "max-wait-us", "request-timeout"]).unwrap();
         cfg.apply_args(&args).unwrap();
         assert_eq!(cfg.mode, ServingMode::Safe);
         assert_eq!(cfg.shards, 8);
         assert_eq!(cfg.max_wait, Duration::from_micros(500));
+        assert_eq!(cfg.request_timeout, Duration::from_millis(1500));
     }
 
     #[test]
@@ -433,6 +474,18 @@ mod tests {
         assert!(ServeConfig::from_json(&v).is_err());
         let v = json::parse(r#"{"pool_sched": "steal"}"#).unwrap();
         assert_eq!(ServeConfig::from_json(&v).unwrap().pool_sched, SchedPolicy::Steal);
+    }
+
+    #[test]
+    fn validation_rejects_zero_request_timeout() {
+        let mut cfg = ServeConfig::default();
+        cfg.request_timeout = Duration::ZERO;
+        assert!(cfg.validate().is_err());
+        let v = json::parse(r#"{"request_timeout_ms": 250}"#).unwrap();
+        assert_eq!(
+            ServeConfig::from_json(&v).unwrap().request_timeout,
+            Duration::from_millis(250)
+        );
     }
 
     #[test]

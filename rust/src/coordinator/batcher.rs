@@ -5,8 +5,15 @@
 //!
 //! * a batch closes as soon as `max_batch` same-class requests are
 //!   waiting, or
-//! * when the oldest waiting request has aged past `max_wait`
-//!   (latency bound), whichever comes first;
+//! * when the most urgent waiting request has aged past its flush
+//!   bound — `max_wait`, tightened by the request's own deadline when
+//!   that is sooner (see [`Request::flush_at`]) — whichever comes
+//!   first;
+//! * among queues that are due, the one holding the most urgent
+//!   [`Priority`] waiter flushes first (ties broken by earliest flush
+//!   bound), and when a queue holds more waiters than `max_batch`,
+//!   interactive requests board the batch ahead of batch-priority
+//!   ones (FIFO within each priority);
 //! * requests of different [`BatchClass`]es never mix (they execute
 //!   different artifacts);
 //! * batches are padded up to the artifact bucket sizes by the executor
@@ -23,7 +30,7 @@ use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use super::request::{BatchClass, Request};
+use super::request::{BatchClass, Priority, Request};
 
 /// Batch-formation policy knobs.
 #[derive(Clone, Copy, Debug)]
@@ -120,31 +127,62 @@ impl Batcher {
     pub fn next_batch(&self) -> Option<(BatchClass, Vec<Request>, FlushReason)> {
         let mut st = self.state.lock().unwrap();
         loop {
-            // A full batch in any class flushes immediately.
-            if let Some((&class, _)) = st
-                .queues
-                .iter()
-                .find(|(_, q)| q.len() >= self.policy.max_batch)
-            {
+            // A full batch in any class flushes immediately; among
+            // several full queues the most urgent one goes first.
+            let mut full: Option<((u8, Instant), BatchClass)> = None;
+            for (&c, q) in st.queues.iter() {
+                if q.len() < self.policy.max_batch {
+                    continue;
+                }
+                let key = queue_urgency(q, self.policy.max_wait);
+                if more_urgent(&full, key) {
+                    full = Some((key, c));
+                }
+            }
+            if let Some((_, class)) = full {
                 return Some((class, self.take(&mut st, class), FlushReason::Full));
             }
-            // Otherwise, find the class with the oldest waiter.
-            let oldest: Option<(BatchClass, Instant)> = st
-                .queues
-                .iter()
-                .filter_map(|(&c, q)| q.front().map(|r| (c, r.enqueued)))
-                .min_by_key(|&(_, t)| t);
-            match oldest {
-                Some((class, t0)) => {
-                    let age = t0.elapsed();
-                    if age >= self.policy.max_wait {
-                        return Some((class, self.take(&mut st, class), FlushReason::Deadline));
-                    }
+
+            // Otherwise flush whichever queue is past its flush bound,
+            // most urgent (priority, then earliest bound) first.
+            // Priority only orders selection among DUE queues; the
+            // sleep target must be the earliest bound across ALL
+            // queues, or a deadline-tightened waiter in a
+            // lower-priority class would expire unserved while the
+            // worker slept toward a higher-priority queue's later
+            // bound.
+            let now = Instant::now();
+            let mut best_due: Option<((u8, Instant), BatchClass)> = None;
+            let mut best_any: Option<((u8, Instant), BatchClass)> = None;
+            let mut next_wake: Option<Instant> = None;
+            for (&c, q) in st.queues.iter() {
+                if q.is_empty() {
+                    continue;
+                }
+                let key = queue_urgency(q, self.policy.max_wait);
+                if more_urgent(&best_any, key) {
+                    best_any = Some((key, c));
+                }
+                if key.1 <= now && more_urgent(&best_due, key) {
+                    best_due = Some((key, c));
+                }
+                next_wake = Some(match next_wake {
+                    Some(w) if w <= key.1 => w,
+                    _ => key.1,
+                });
+            }
+            if let Some((_, class)) = best_due {
+                return Some((class, self.take(&mut st, class), FlushReason::Deadline));
+            }
+            match best_any {
+                Some((_, class)) => {
                     if st.shutdown {
                         return Some((class, self.take(&mut st, class), FlushReason::Shutdown));
                     }
-                    let (guard, _) =
-                        self.arrived.wait_timeout(st, self.policy.max_wait - age).unwrap();
+                    // `wake > now` here: nothing was due, so every
+                    // queue's bound lies in the future.
+                    let wake = next_wake.expect("a nonempty queue exists");
+                    let (guard, _) = self.arrived.wait_timeout(st, wake - now).unwrap();
                     st = guard;
                 }
                 None => {
@@ -157,10 +195,21 @@ impl Batcher {
         }
     }
 
+    /// Drain up to `max_batch` requests from `class`'s queue.
+    /// Interactive requests board ahead of batch-priority ones; order
+    /// within each priority stays FIFO.  Requests left behind keep
+    /// that (priority, FIFO) order for the next flush.
     fn take(&self, st: &mut State, class: BatchClass) -> Vec<Request> {
         let q = st.queues.get_mut(&class).expect("class must exist");
-        let n = q.len().min(self.policy.max_batch);
-        let batch: Vec<Request> = q.drain(..n).collect();
+        let drained: Vec<Request> = q.drain(..).collect();
+        let (mut batch, low): (Vec<Request>, Vec<Request>) = drained
+            .into_iter()
+            .partition(|r| r.options.priority == Priority::Interactive);
+        batch.extend(low);
+        let rest = batch.split_off(batch.len().min(self.policy.max_batch));
+        for r in rest.into_iter().rev() {
+            q.push_front(r);
+        }
         st.total -= batch.len();
         self.freed.notify_all();
         batch
@@ -171,6 +220,16 @@ impl Batcher {
         self.state.lock().unwrap().total
     }
 
+    /// Per-class queued request counts (the `stats` RPC's
+    /// `queue_depths` field), in [`BatchClass::ALL`] order.
+    pub fn class_depths(&self) -> Vec<(BatchClass, usize)> {
+        let st = self.state.lock().unwrap();
+        BatchClass::ALL
+            .iter()
+            .map(|&c| (c, st.queues.get(&c).map_or(0, |q| q.len())))
+            .collect()
+    }
+
     /// Begin shutdown: queued requests still drain via [`next_batch`].
     pub fn shutdown(&self) {
         self.state.lock().unwrap().shutdown = true;
@@ -179,21 +238,57 @@ impl Batcher {
     }
 }
 
+/// Does `key` outrank the current best candidate?
+fn more_urgent(best: &Option<((u8, Instant), BatchClass)>, key: (u8, Instant)) -> bool {
+    match best {
+        None => true,
+        Some((k, _)) => key < *k,
+    }
+}
+
+/// A queue's urgency key: (rank of its most urgent waiter's priority,
+/// earliest deadline-tightened flush instant).  Lower sorts first.
+///
+/// Deliberately a full scan: O(queued requests) per `next_batch`
+/// wake, bounded by `queue_capacity`.  Maintaining the key
+/// incrementally would have to survive `take`'s priority-partitioned
+/// removal (the minimum can leave with any flush), which costs more
+/// complexity than the scan at the depths this batcher is configured
+/// for — revisit if `queue_capacity` grows beyond a few thousand.
+fn queue_urgency(q: &VecDeque<Request>, max_wait: Duration) -> (u8, Instant) {
+    debug_assert!(!q.is_empty(), "urgency of an empty queue");
+    let mut prio = u8::MAX;
+    let mut earliest: Option<Instant> = None;
+    for r in q {
+        prio = prio.min(r.options.priority.rank());
+        let at = r.flush_at(max_wait);
+        earliest = Some(match earliest {
+            Some(e) if e <= at => e,
+            _ => at,
+        });
+    }
+    (prio, earliest.expect("nonempty queue"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::Payload;
+    use crate::coordinator::request::{Payload, RequestOptions};
     use crate::exec::channel::oneshot;
     use std::sync::Arc;
 
     fn req(id: u64, class: BatchClass) -> Request {
+        req_opts(id, class, RequestOptions::default())
+    }
+
+    fn req_opts(id: u64, class: BatchClass, opts: RequestOptions) -> Request {
         let (tx, _rx) = oneshot();
         let payload = match class {
             BatchClass::Softmax => Payload::Softmax { logits: vec![id as f32] },
-            BatchClass::Decode => Payload::DecodeTopK { hidden: vec![id as f32], k: None },
-            BatchClass::LmStep => Payload::LmStep { session: id, token: 0, k: None },
+            BatchClass::Decode => Payload::DecodeTopK { hidden: vec![id as f32] },
+            BatchClass::LmStep => Payload::LmStep { session: id, token: 0 },
         };
-        Request::new(id, payload, tx)
+        Request::with_options(id, payload, opts, tx)
     }
 
     fn batcher(max_batch: usize, max_wait_ms: u64, cap: usize) -> Batcher {
@@ -289,5 +384,110 @@ mod tests {
         b.submit(req(2, BatchClass::Decode)).map_err(|_| ()).unwrap();
         let (class, _, _) = b.next_batch().unwrap();
         assert_eq!(class, BatchClass::Softmax, "older waiter wins");
+    }
+
+    #[test]
+    fn interactive_boards_before_batch_priority() {
+        // 6 waiters, max_batch 4: the two interactive requests that
+        // arrived *last* still board the first flush; FIFO is kept
+        // within each priority class, and the leftovers flush next.
+        let b = batcher(4, 5, 64);
+        let batch_opts =
+            RequestOptions { priority: Priority::Batch, ..RequestOptions::default() };
+        for id in 0..4u64 {
+            b.submit(req_opts(id, BatchClass::Softmax, batch_opts.clone()))
+                .map_err(|_| ())
+                .unwrap();
+        }
+        for id in 4..6u64 {
+            b.submit(req(id, BatchClass::Softmax)).map_err(|_| ()).unwrap();
+        }
+        let (_, first, _) = b.next_batch().unwrap();
+        let ids: Vec<u64> = first.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![4, 5, 0, 1], "interactive first, FIFO within priority");
+        let (_, second, _) = b.next_batch().unwrap();
+        let ids: Vec<u64> = second.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![2, 3], "leftovers keep their order");
+    }
+
+    #[test]
+    fn interactive_class_preempts_older_batch_class_when_both_due() {
+        // Both queues are past their flush bound; the class holding an
+        // interactive waiter flushes first even though the
+        // batch-priority class has the older request.
+        let b = batcher(16, 5, 64);
+        let batch_opts =
+            RequestOptions { priority: Priority::Batch, ..RequestOptions::default() };
+        b.submit(req_opts(1, BatchClass::Softmax, batch_opts)).map_err(|_| ()).unwrap();
+        b.submit(req(2, BatchClass::Decode)).map_err(|_| ()).unwrap();
+        std::thread::sleep(Duration::from_millis(10)); // both now due
+        let (class, _, _) = b.next_batch().unwrap();
+        assert_eq!(class, BatchClass::Decode, "interactive class wins among due queues");
+        let (class, _, _) = b.next_batch().unwrap();
+        assert_eq!(class, BatchClass::Softmax);
+    }
+
+    #[test]
+    fn tight_deadline_flushes_before_max_wait() {
+        // max_wait is 10 s, but the request carries a 10 ms deadline:
+        // the flush bound tightens to the deadline instead of parking
+        // the worker for the full max_wait.
+        let b = batcher(16, 10_000, 64);
+        let opts = RequestOptions {
+            deadline: Some(Duration::from_millis(10)),
+            ..RequestOptions::default()
+        };
+        b.submit(req_opts(1, BatchClass::Decode, opts)).map_err(|_| ()).unwrap();
+        let t0 = Instant::now();
+        let (class, batch, reason) = b.next_batch().unwrap();
+        assert_eq!(class, BatchClass::Decode);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(reason, FlushReason::Deadline);
+        assert!(
+            t0.elapsed() < Duration::from_millis(5_000),
+            "deadline-tightened flush, not max_wait: {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn tight_deadline_in_lower_priority_class_wakes_the_worker() {
+        // Sleep-target regression: the worker's wake-up must follow
+        // the earliest flush bound across ALL queues.  Here the
+        // higher-priority (interactive) class has a 10 s bound while a
+        // batch-priority class carries a 20 ms deadline — the worker
+        // must not sleep toward the interactive bound and let the
+        // deadline expire unserved.
+        let b = batcher(16, 10_000, 64);
+        b.submit(req(1, BatchClass::Decode)).map_err(|_| ()).unwrap();
+        let opts = RequestOptions {
+            priority: Priority::Batch,
+            deadline: Some(Duration::from_millis(20)),
+            ..RequestOptions::default()
+        };
+        b.submit(req_opts(2, BatchClass::Softmax, opts)).map_err(|_| ()).unwrap();
+        let t0 = Instant::now();
+        let (class, _, reason) = b.next_batch().unwrap();
+        assert_eq!(class, BatchClass::Softmax, "tight-deadline class flushes first");
+        assert_eq!(reason, FlushReason::Deadline);
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "woke at the ~20 ms bound, not max_wait: {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn class_depths_reports_per_class() {
+        let b = batcher(16, 10_000, 64);
+        b.submit(req(1, BatchClass::Softmax)).map_err(|_| ()).unwrap();
+        b.submit(req(2, BatchClass::Softmax)).map_err(|_| ()).unwrap();
+        b.submit(req(3, BatchClass::LmStep)).map_err(|_| ()).unwrap();
+        let depths = b.class_depths();
+        assert_eq!(depths.len(), BatchClass::ALL.len());
+        let get = |c: BatchClass| depths.iter().find(|(d, _)| *d == c).unwrap().1;
+        assert_eq!(get(BatchClass::Softmax), 2);
+        assert_eq!(get(BatchClass::Decode), 0);
+        assert_eq!(get(BatchClass::LmStep), 1);
     }
 }

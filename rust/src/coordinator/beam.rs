@@ -11,7 +11,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
-use super::request::{Payload, Reply};
+use super::request::{Payload, Reply, RequestOptions, ServeError};
 use super::Coordinator;
 
 /// One beam hypothesis.
@@ -56,13 +56,15 @@ pub fn beam_search(
         let receivers: Vec<_> = beam
             .iter()
             .map(|h| {
-                coord.submit(Payload::LmStep {
-                    session: h.session,
-                    token: *h.tokens.last().expect("nonempty"),
-                    k: Some(cfg.k),
-                })
+                coord.submit_opts(
+                    Payload::LmStep {
+                        session: h.session,
+                        token: *h.tokens.last().expect("nonempty"),
+                    },
+                    RequestOptions::with_k(cfg.k),
+                )
             })
-            .collect::<Result<Vec<_>, String>>()
+            .collect::<Result<Vec<_>, ServeError>>()
             .map_err(|e| anyhow!(e))?;
 
         // Collect expansions.

@@ -29,11 +29,12 @@
 
 use std::collections::HashMap;
 use std::sync::Mutex;
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
 use super::model::SyntheticLm;
-use super::request::{BatchClass, Payload, Reply, ReplyResult, Request};
+use super::request::{BatchClass, Payload, Reply, ReplyResult, Request, ServeError};
 use crate::config::{BackendKind, ServeConfig, ServingMode};
 use crate::runtime::{EnginePool, Input, Tensor};
 use crate::shard::{self, ShardEngine, ShardEngineConfig};
@@ -277,9 +278,39 @@ impl Executor {
         self.sessions.lock().unwrap().len()
     }
 
+    /// Whether `id` names a live LM session.
+    pub fn has_session(&self, id: u64) -> bool {
+        self.sessions.lock().unwrap().contains_key(&id)
+    }
+
     /// Execute one formed batch; every request's reply channel receives
     /// its result (success or per-request error).
     pub fn execute_batch(&self, class: BatchClass, batch: Vec<Request>, worker: usize) {
+        // Class-independent admission checks first: a request whose
+        // deadline expired while queued is answered without executing,
+        // and unsupported option values fail typed instead of reaching
+        // the kernels.
+        let now = Instant::now();
+        let mut live = Vec::with_capacity(batch.len());
+        for req in batch {
+            if req.expired(now) {
+                crate::metrics::global().counter("coordinator.deadline_expired").inc();
+                let _ = req.reply.send(Err(ServeError::deadline(
+                    "deadline expired before execution",
+                )));
+            } else if req.options.temperature != 1.0 {
+                let _ = req.reply.send(Err(ServeError::invalid(format!(
+                    "temperature {} is unsupported (only 1.0 is served)",
+                    req.options.temperature
+                ))));
+            } else {
+                live.push(req);
+            }
+        }
+        if live.is_empty() {
+            return;
+        }
+        let batch = live;
         let outcome = match class {
             BatchClass::Softmax => self.run_softmax(&batch, worker),
             BatchClass::Decode => self.run_decode(&batch, worker),
@@ -293,10 +324,10 @@ impl Executor {
                 }
             }
             Err(e) => {
-                let msg = format!("batch execution failed: {e:#}");
-                crate::error!("coordinator.executor", "{msg}");
+                let err = ServeError::internal(format!("batch execution failed: {e:#}"));
+                crate::error!("coordinator.executor", "{err}");
                 for req in batch {
-                    let _ = req.reply.send(Err(msg.clone()));
+                    let _ = req.reply.send(Err(err.clone()));
                 }
             }
         }
@@ -309,18 +340,18 @@ impl Executor {
     fn run_softmax(&self, batch: &[Request], worker: usize) -> Result<Vec<ReplyResult>> {
         // Per-request validation: reject wrong-length rows up front.
         let mut rows: Vec<Option<&[f32]>> = Vec::with_capacity(batch.len());
-        let mut errors: Vec<Option<String>> = vec![None; batch.len()];
+        let mut errors: Vec<Option<ServeError>> = vec![None; batch.len()];
         for (i, req) in batch.iter().enumerate() {
             match &req.payload {
                 Payload::Softmax { logits } if logits.len() == self.vocab => {
                     rows.push(Some(logits))
                 }
                 Payload::Softmax { logits } => {
-                    errors[i] = Some(format!(
+                    errors[i] = Some(ServeError::invalid(format!(
                         "logits length {} != served vocab {}",
                         logits.len(),
                         self.vocab
-                    ));
+                    )));
                     rows.push(None);
                 }
                 _ => unreachable!("router guarantees class purity"),
@@ -517,21 +548,23 @@ impl Executor {
 
     fn run_decode(&self, batch: &[Request], worker: usize) -> Result<Vec<ReplyResult>> {
         let mut rows: Vec<Option<(&[f32], usize)>> = Vec::with_capacity(batch.len());
-        let mut errors: Vec<Option<String>> = vec![None; batch.len()];
+        let mut errors: Vec<Option<ServeError>> = vec![None; batch.len()];
         for (i, req) in batch.iter().enumerate() {
             match &req.payload {
-                Payload::DecodeTopK { hidden, k } => {
-                    let k = k.unwrap_or(self.default_k);
+                Payload::DecodeTopK { hidden } => {
+                    let k = req.options.k.unwrap_or(self.default_k);
                     if hidden.len() != self.hidden {
-                        errors[i] = Some(format!(
+                        errors[i] = Some(ServeError::invalid(format!(
                             "hidden length {} != served hidden {}",
                             hidden.len(),
                             self.hidden
-                        ));
+                        )));
                         rows.push(None);
                     } else if k == 0 || k > self.artifact_k {
-                        errors[i] =
-                            Some(format!("k={k} outside supported range 1..={}", self.artifact_k));
+                        errors[i] = Some(ServeError::invalid(format!(
+                            "k={k} outside supported range 1..={}",
+                            self.artifact_k
+                        )));
                         rows.push(None);
                     } else {
                         rows.push(Some((hidden.as_slice(), k)));
@@ -762,28 +795,40 @@ impl Executor {
 
     fn run_lm_step(&self, batch: &[Request], worker: usize) -> Result<Vec<ReplyResult>> {
         let mut jobs: Vec<Option<(u64, i32, usize)>> = Vec::with_capacity(batch.len());
-        let mut errors: Vec<Option<String>> = vec![None; batch.len()];
+        let mut errors: Vec<Option<ServeError>> = vec![None; batch.len()];
         {
             let sessions = self.sessions.lock().unwrap();
             for (i, req) in batch.iter().enumerate() {
                 match &req.payload {
-                    Payload::LmStep { session, token, k } => {
-                        let k = k.unwrap_or(self.default_k);
+                    Payload::LmStep { session, token } => {
+                        let k = req.options.k.unwrap_or(self.default_k);
                         if !sessions.contains_key(session) {
-                            errors[i] = Some(format!("unknown session {session}"));
+                            errors[i] =
+                                Some(ServeError::not_found(format!("unknown session {session}")));
                             jobs.push(None);
                         } else if *token < 0 || *token as usize >= self.vocab {
-                            errors[i] = Some(format!("token {token} outside vocab"));
+                            errors[i] =
+                                Some(ServeError::invalid(format!("token {token} outside vocab")));
                             jobs.push(None);
                         } else if k == 0 || k > self.artifact_k {
-                            errors[i] = Some(format!(
+                            errors[i] = Some(ServeError::invalid(format!(
                                 "k={k} outside supported range 1..={}",
                                 self.artifact_k
-                            ));
+                            )));
                             jobs.push(None);
                         } else {
                             jobs.push(Some((*session, *token, k)));
                         }
+                    }
+                    // `Generate` shares this batch class but is a
+                    // streaming operation the coordinator decomposes;
+                    // reaching the executor whole is a caller bug we
+                    // answer typed rather than panicking a worker.
+                    Payload::Generate { .. } => {
+                        errors[i] = Some(ServeError::invalid(
+                            "generate is a streaming operation; use Coordinator::generate",
+                        ));
+                        jobs.push(None);
                     }
                     _ => unreachable!("router guarantees class purity"),
                 }

@@ -1,0 +1,303 @@
+//! Server-side streaming generation: the decode loop that used to live
+//! on the far side of the wire.
+//!
+//! Under the v1 surface, generating N tokens cost N client↔server
+//! round-trips (`lm_step` one token at a time) — the fused single-sweep
+//! kernel idled between wire hops, and cross-stream batching never
+//! filled because each client's next step waited on its own socket.
+//! [`Coordinator::generate`] runs that loop server-side instead: each
+//! emitted token immediately re-enqueues the stream's next `LmStep`
+//! into the **shared** batcher, so N concurrent streams batch every
+//! decode step together through the sharded fused softmax+top-k engine
+//! — one connection round-trip per *stream*, not per *token*.
+//!
+//! Determinism contract (pinned by the `stream_e2e` test): a `Generate`
+//! request for N tokens produces **bitwise-identical** selections and
+//! probabilities to N sequential v1 `lm_step` calls on a fresh session
+//! — batch composition is a scheduling concern, never a numerics one
+//! (the batch×shard grid's bitwise-identity property at the tier
+//! above).
+//!
+//! The loop is driven by the caller's thread (a server connection
+//! thread, a test, an example): `emit` is invoked once per decoded
+//! token and may return `false` to cancel the stream (client gone).
+//! The stream counts toward [`Coordinator::active_streams`] while
+//! live.
+
+use std::time::Instant;
+
+use super::request::{Payload, Reply, RequestOptions, ServeError};
+use super::Coordinator;
+use crate::metrics;
+
+/// Upper bound on `max_tokens` AND prompt length per stream.  Guards
+/// the server against a hostile `max_tokens` scalar (JSON integers
+/// range up to 2^53 — unbounded, a single request could drive an
+/// allocation-failure abort) and bounds the silent prompt-feed phase:
+/// prompt steps emit no wire frames, so an effectively unbounded
+/// prompt (the 8 MiB frame limit alone admits ~10^6 tokens) would
+/// starve the client's read timeout before the first token frame.
+pub const MAX_STREAM_TOKENS: usize = 4096;
+
+/// One streamed token: the greedy selection plus the full top-k
+/// distribution the selection came from (what a v1 `lm_step` reply
+/// carried).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TokenFrame {
+    /// 0-based index of this token within the stream.
+    pub index: usize,
+    /// The greedily selected token (`idx[0]`), which also feeds the
+    /// next step.
+    pub token: i32,
+    /// Top-k probabilities, descending.
+    pub vals: Vec<f32>,
+    /// Top-k token ids, aligned with `vals`.
+    pub idx: Vec<i64>,
+}
+
+impl Coordinator {
+    /// Run one generation stream to completion on the calling thread.
+    ///
+    /// Feeds `prompt_tokens` into `session` (advancing its state, one
+    /// batched `LmStep` per token), then greedily decodes up to
+    /// `max_tokens` tokens, calling `emit` with each [`TokenFrame`] as
+    /// it is produced.  Returns the selected tokens.
+    ///
+    /// `emit` returning `false` cancels the stream after the current
+    /// token (the session keeps the state it has reached — identical
+    /// to a v1 client disconnecting between `lm_step`s).
+    ///
+    /// `options.deadline` bounds the **whole stream**; each internal
+    /// step is additionally capped by the configured request timeout.
+    /// `options.k`/`priority`/`client_tag` ride on every internal step
+    /// so the batcher schedules stream work like any other request.
+    pub fn generate<F>(
+        &self,
+        session: u64,
+        prompt_tokens: &[i32],
+        max_tokens: usize,
+        options: &RequestOptions,
+        emit: F,
+    ) -> Result<Vec<i32>, ServeError>
+    where
+        F: FnMut(&TokenFrame) -> bool,
+    {
+        self.active_streams.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        metrics::global().gauge("coordinator.active_streams").inc();
+        metrics::global().counter("coordinator.streams").inc();
+        let out = self.generate_inner(session, prompt_tokens, max_tokens, options, emit);
+        metrics::global().gauge("coordinator.active_streams").dec();
+        self.active_streams.fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
+        out
+    }
+
+    fn generate_inner<F>(
+        &self,
+        session: u64,
+        prompt_tokens: &[i32],
+        max_tokens: usize,
+        options: &RequestOptions,
+        mut emit: F,
+    ) -> Result<Vec<i32>, ServeError>
+    where
+        F: FnMut(&TokenFrame) -> bool,
+    {
+        if prompt_tokens.is_empty() {
+            return Err(ServeError::invalid("prompt_tokens must not be empty"));
+        }
+        if prompt_tokens.len() > MAX_STREAM_TOKENS {
+            return Err(ServeError::invalid(format!(
+                "prompt of {} tokens exceeds the per-stream limit {MAX_STREAM_TOKENS}",
+                prompt_tokens.len()
+            )));
+        }
+        if max_tokens == 0 {
+            return Err(ServeError::invalid("max_tokens must be >= 1"));
+        }
+        if max_tokens > MAX_STREAM_TOKENS {
+            return Err(ServeError::invalid(format!(
+                "max_tokens {max_tokens} exceeds the per-stream limit {MAX_STREAM_TOKENS}"
+            )));
+        }
+        if !self.executor.has_session(session) {
+            return Err(ServeError::not_found(format!("unknown session {session}")));
+        }
+        let start = Instant::now();
+        let overall = options.deadline.map(|d| start + d);
+        // The stream deadline is enforced here as a whole-stream
+        // budget; internal steps must not re-derive it from their own
+        // admission times, so they carry no deadline of their own.
+        let step_options = RequestOptions { deadline: None, ..options.clone() };
+
+        let step = |token: i32| -> Result<Reply, ServeError> {
+            let timeout = match overall {
+                Some(d) => {
+                    let now = Instant::now();
+                    if d <= now {
+                        return Err(ServeError::deadline("stream deadline exhausted"));
+                    }
+                    (d - now).min(self.request_timeout)
+                }
+                None => self.request_timeout,
+            };
+            self.call_opts(
+                Payload::LmStep { session, token },
+                step_options.clone(),
+                timeout,
+            )
+        };
+
+        // Prompt feed: advance the session state through every prompt
+        // token but the last, discarding the intermediate
+        // distributions — exactly what a v1 client stepping its prompt
+        // does.  The last prompt token seeds the decode loop.
+        for &t in &prompt_tokens[..prompt_tokens.len() - 1] {
+            step(t)?;
+        }
+        let mut cur = *prompt_tokens.last().expect("nonempty prompt");
+
+        let tokens_emitted = metrics::global().counter("coordinator.stream.tokens");
+        let mut selected = Vec::with_capacity(max_tokens);
+        for index in 0..max_tokens {
+            let reply = step(cur)?;
+            let Reply::TopK { vals, idx } = reply else {
+                return Err(ServeError::internal("lm_step produced a non-topk reply"));
+            };
+            let Some(&top) = idx.first() else {
+                return Err(ServeError::internal("lm_step produced an empty top-k"));
+            };
+            let token = top as i32;
+            selected.push(token);
+            tokens_emitted.inc();
+            let frame = TokenFrame { index, token, vals, idx };
+            if !emit(&frame) {
+                break; // consumer gone: stop decoding, keep state
+            }
+            cur = token;
+        }
+        Ok(selected)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::time::Duration;
+
+    use super::*;
+    use crate::config::{BackendKind, ServeConfig, ServingMode};
+
+    fn coordinator() -> Coordinator {
+        let mut cfg = ServeConfig::default();
+        cfg.backend = BackendKind::Host;
+        cfg.mode = ServingMode::Online;
+        cfg.vocab = 512;
+        cfg.hidden = 16;
+        cfg.host_shards = 2;
+        cfg.shard_threshold = 128;
+        cfg.workers = 2;
+        cfg.max_wait = Duration::from_micros(200);
+        Coordinator::start(&cfg).unwrap()
+    }
+
+    #[test]
+    fn generate_matches_sequential_lm_steps() {
+        let coord = coordinator();
+        let opts = RequestOptions::with_k(4);
+
+        // Streamed generation on one session.
+        let s1 = coord.open_session();
+        let mut frames = Vec::new();
+        let tokens = coord
+            .generate(s1, &[3, 9], 5, &opts, |f| {
+                frames.push(f.clone());
+                true
+            })
+            .unwrap();
+        assert_eq!(tokens.len(), 5);
+        assert_eq!(frames.len(), 5);
+
+        // The same trajectory, client-driven, on a fresh session.
+        let s2 = coord.open_session();
+        let mut cur = 0i32;
+        for (i, want) in frames.iter().enumerate() {
+            let token = if i == 0 {
+                // prompt feed
+                coord
+                    .call_opts(
+                        Payload::LmStep { session: s2, token: 3 },
+                        opts.clone(),
+                        Duration::from_secs(30),
+                    )
+                    .unwrap();
+                9
+            } else {
+                cur
+            };
+            let reply = coord
+                .call_opts(
+                    Payload::LmStep { session: s2, token },
+                    opts.clone(),
+                    Duration::from_secs(30),
+                )
+                .unwrap();
+            let Reply::TopK { vals, idx } = reply else { panic!("non-topk") };
+            assert_eq!(vals, want.vals, "step {i}: bitwise-identical probabilities");
+            assert_eq!(idx, want.idx, "step {i}: identical selections");
+            cur = idx[0] as i32;
+            assert_eq!(cur, want.token);
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn generate_rejects_bad_streams() {
+        let coord = coordinator();
+        let opts = RequestOptions::default();
+        let err = coord.generate(999, &[1], 3, &opts, |_| true).unwrap_err();
+        assert_eq!(err.code, crate::coordinator::ErrorCode::NotFound, "{err}");
+        let s = coord.open_session();
+        let err = coord.generate(s, &[], 3, &opts, |_| true).unwrap_err();
+        assert_eq!(err.code, crate::coordinator::ErrorCode::InvalidArgument, "{err}");
+        let err = coord.generate(s, &[1], 0, &opts, |_| true).unwrap_err();
+        assert_eq!(err.code, crate::coordinator::ErrorCode::InvalidArgument, "{err}");
+        let err = coord
+            .generate(s, &[1], MAX_STREAM_TOKENS + 1, &opts, |_| true)
+            .unwrap_err();
+        assert_eq!(err.code, crate::coordinator::ErrorCode::InvalidArgument, "{err}");
+        assert!(err.message.contains("per-stream limit"), "{err}");
+        let long_prompt = vec![1i32; MAX_STREAM_TOKENS + 1];
+        let err = coord.generate(s, &long_prompt, 1, &opts, |_| true).unwrap_err();
+        assert_eq!(err.code, crate::coordinator::ErrorCode::InvalidArgument, "{err}");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn emit_false_cancels_stream() {
+        let coord = coordinator();
+        let s = coord.open_session();
+        let mut seen = 0;
+        let tokens = coord
+            .generate(s, &[5], 10, &RequestOptions::with_k(3), |_| {
+                seen += 1;
+                seen < 3
+            })
+            .unwrap();
+        assert_eq!(seen, 3, "emit called until it declined");
+        assert_eq!(tokens.len(), 3, "selections up to the cancel point");
+        assert_eq!(coord.active_streams(), 0, "stream accounting restored");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn exhausted_stream_deadline_is_typed() {
+        let coord = coordinator();
+        let s = coord.open_session();
+        let opts = RequestOptions {
+            deadline: Some(Duration::ZERO),
+            ..RequestOptions::default()
+        };
+        let err = coord.generate(s, &[1], 4, &opts, |_| true).unwrap_err();
+        assert_eq!(err.code, crate::coordinator::ErrorCode::DeadlineExceeded, "{err}");
+        coord.shutdown();
+    }
+}

@@ -18,21 +18,29 @@
 //!          ⊕-merged in rust (§3.1 of the paper) and finalized
 //! ```
 //!
-//! Submodules: [`request`] (types), [`batcher`] (continuous dynamic
-//! batching with deadline flush + backpressure), [`executor`] (artifact
-//! execution + shard merge), [`model`] (deterministic synthetic
-//! weights), [`beam`] (beam-search driver used by the examples).
+//! Submodules: [`request`] (typed v2 request surface: payloads,
+//! options, structured errors), [`batcher`] (continuous dynamic
+//! batching with priority/deadline-aware flush + backpressure),
+//! [`executor`] (artifact execution + shard merge), [`generate`]
+//! (server-side streaming generation loop), [`model`] (deterministic
+//! synthetic weights), [`beam`] (beam-search driver used by the
+//! examples).
 
 pub mod batcher;
 pub mod beam;
 pub mod executor;
+pub mod generate;
 pub mod model;
 pub mod request;
 
 pub use batcher::{BatchPolicy, Batcher, FlushReason};
 pub use executor::Executor;
+pub use generate::TokenFrame;
 pub use model::SyntheticLm;
-pub use request::{BatchClass, Payload, Reply, ReplyResult, Request, RequestId};
+pub use request::{
+    BatchClass, ErrorCode, Payload, Priority, Reply, ReplyResult, Request, RequestId,
+    RequestOptions, ServeError,
+};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -41,7 +49,7 @@ use std::time::Duration;
 use anyhow::Result;
 
 use crate::config::ServeConfig;
-use crate::exec::channel::OnceReceiver;
+use crate::exec::channel::{OnceReceiver, RecvError};
 use crate::exec::oneshot;
 use crate::metrics;
 
@@ -52,6 +60,15 @@ pub struct Coordinator {
     next_id: AtomicU64,
     next_session: AtomicU64,
     workers: Vec<std::thread::JoinHandle<()>>,
+    /// Live server-side generation streams (see [`generate`]).
+    /// Deliberately separate from the `coordinator.active_streams`
+    /// metrics gauge: the gauge is process-global (shared by every
+    /// coordinator in a test binary), while this field scopes the
+    /// `stats` RPC's count to *this* instance.
+    active_streams: AtomicU64,
+    /// Default per-request handling budget (config `request_timeout`);
+    /// per-request deadlines tighten it, never extend it.
+    request_timeout: Duration,
 }
 
 impl Coordinator {
@@ -71,6 +88,23 @@ impl Coordinator {
             let batch_hist = reg.histogram("coordinator.batch_exec_us");
             let batch_size = reg.counter("coordinator.batched_requests");
             let batches = reg.counter("coordinator.batches");
+            // Per-class batch accounting: depth counters feed the
+            // `stats` RPC, and the peak gauge is the cross-stream
+            // batching witness (a server-side generation e2e asserts
+            // `coordinator.batch.lm_step.peak > 1` under concurrent
+            // streams).
+            let class_batches: Vec<_> = BatchClass::ALL
+                .iter()
+                .map(|c| reg.counter(&format!("coordinator.batch.{}.batches", c.name())))
+                .collect();
+            let class_requests: Vec<_> = BatchClass::ALL
+                .iter()
+                .map(|c| reg.counter(&format!("coordinator.batch.{}.requests", c.name())))
+                .collect();
+            let class_peak: Vec<_> = BatchClass::ALL
+                .iter()
+                .map(|c| reg.gauge(&format!("coordinator.batch.{}.peak", c.name())))
+                .collect();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("coord-worker-{w}"))
@@ -78,6 +112,13 @@ impl Coordinator {
                         while let Some((class, batch, _reason)) = batcher.next_batch() {
                             batches.inc();
                             batch_size.add(batch.len() as u64);
+                            let ci = BatchClass::ALL
+                                .iter()
+                                .position(|c| *c == class)
+                                .expect("class in ALL");
+                            class_batches[ci].inc();
+                            class_requests[ci].add(batch.len() as u64);
+                            class_peak[ci].set_max(batch.len() as i64);
                             let t0 = std::time::Instant::now();
                             executor.execute_batch(class, batch, w);
                             batch_hist.record(t0.elapsed());
@@ -92,40 +133,80 @@ impl Coordinator {
             next_id: AtomicU64::new(1),
             next_session: AtomicU64::new(1),
             workers,
+            active_streams: AtomicU64::new(0),
+            request_timeout: cfg.request_timeout,
         })
     }
 
-    /// Submit a request; returns the response channel immediately.
-    pub fn submit(&self, payload: Payload) -> Result<OnceReceiver<ReplyResult>, String> {
+    /// Submit a request with default options; returns the response
+    /// channel immediately.
+    pub fn submit(&self, payload: Payload) -> Result<OnceReceiver<ReplyResult>, ServeError> {
+        self.submit_opts(payload, RequestOptions::default())
+    }
+
+    /// Submit a request carrying explicit per-request options.
+    pub fn submit_opts(
+        &self,
+        payload: Payload,
+        options: RequestOptions,
+    ) -> Result<OnceReceiver<ReplyResult>, ServeError> {
+        if matches!(payload, Payload::Generate { .. }) {
+            return Err(ServeError::invalid(
+                "generate is a streaming operation; use Coordinator::generate",
+            ));
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = oneshot();
-        let req = Request::new(id, payload, tx);
+        let req = Request::with_options(id, payload, options, tx);
         metrics::global().counter("coordinator.submitted").inc();
         metrics::global()
             .gauge("coordinator.queue_depth")
             .set(self.batcher.depth() as i64);
         self.batcher
             .submit(req)
-            .map_err(|_| "coordinator shutting down".to_string())?;
+            .map_err(|_| ServeError::shutting_down("coordinator shutting down"))?;
         Ok(rx)
     }
 
     /// Submit without blocking on a full queue (server overload path).
-    pub fn try_submit(&self, payload: Payload) -> Result<OnceReceiver<ReplyResult>, String> {
+    pub fn try_submit(&self, payload: Payload) -> Result<OnceReceiver<ReplyResult>, ServeError> {
+        if matches!(payload, Payload::Generate { .. }) {
+            return Err(ServeError::invalid(
+                "generate is a streaming operation; use Coordinator::generate",
+            ));
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = oneshot();
         let req = Request::new(id, payload, tx);
-        self.batcher.try_submit(req).map_err(|_| "queue full (backpressure)".to_string())?;
+        self.batcher
+            .try_submit(req)
+            .map_err(|_| ServeError::overloaded("queue full (backpressure)"))?;
         Ok(rx)
     }
 
-    /// Submit and wait with a timeout — the blocking convenience path.
+    /// Submit and wait with a timeout — the blocking convenience path
+    /// (default options).
     pub fn call(&self, payload: Payload, timeout: Duration) -> ReplyResult {
+        self.call_opts(payload, RequestOptions::default(), timeout)
+    }
+
+    /// Submit with explicit options and wait with a timeout.
+    pub fn call_opts(
+        &self,
+        payload: Payload,
+        options: RequestOptions,
+        timeout: Duration,
+    ) -> ReplyResult {
         let t0 = std::time::Instant::now();
-        let rx = self.submit(payload)?;
-        let result = rx
-            .recv_timeout(timeout)
-            .map_err(|e| format!("request timed out/failed: {e:?}"))?;
+        let rx = self.submit_opts(payload, options)?;
+        let result = rx.recv_timeout(timeout).map_err(|e| match e {
+            RecvError::Timeout => {
+                ServeError::deadline(format!("request timed out after {timeout:?}"))
+            }
+            RecvError::Disconnected => {
+                ServeError::internal("coordinator dropped the request reply")
+            }
+        })?;
         metrics::global()
             .histogram("coordinator.request_us")
             .record(t0.elapsed());
@@ -158,6 +239,21 @@ impl Coordinator {
     /// Queue depth snapshot (metrics / tests).
     pub fn queue_depth(&self) -> usize {
         self.batcher.depth()
+    }
+
+    /// Per-class queue depths (the `stats` RPC's `queue_depths`).
+    pub fn class_depths(&self) -> Vec<(BatchClass, usize)> {
+        self.batcher.class_depths()
+    }
+
+    /// Live server-side generation streams.
+    pub fn active_streams(&self) -> u64 {
+        self.active_streams.load(Ordering::Relaxed)
+    }
+
+    /// The configured default request-handling budget.
+    pub fn request_timeout(&self) -> Duration {
+        self.request_timeout
     }
 
     /// Drain and stop: in-flight batches finish, workers join.

@@ -1,24 +1,235 @@
-//! Request/response types flowing through the coordinator.
+//! Request/response types flowing through the coordinator — the typed
+//! v2 serving surface.
+//!
+//! Three things changed from the v1 surface and together they define
+//! the v2 API (see `docs/PROTOCOL.md` for the wire rendition):
+//!
+//! * **[`RequestOptions`]** ride on every request: top-k, temperature
+//!   (pinned to 1.0 for now), a [`Priority`] class, an optional
+//!   deadline, and an opaque client tag.  The batcher uses priority and
+//!   deadline for flush ordering; the executor rejects requests whose
+//!   deadline expired while queued.
+//! * **[`Payload::Generate`]** expresses multi-token generation as one
+//!   request: the coordinator runs the decode loop server-side,
+//!   re-enqueueing each step into the shared batcher so concurrent
+//!   streams batch together (see [`super::generate`]).
+//! * **[`ServeError`]** replaces stringly errors: a machine-readable
+//!   [`ErrorCode`] plus a human message, end to end — executor to wire.
 
-use std::time::Instant;
+use std::fmt;
+use std::time::{Duration, Instant};
 
 use crate::exec::channel::OnceSender;
 
 /// Monotonic request identifier.
 pub type RequestId = u64;
 
-/// What a client asks of the serving system.
+/// Machine-readable error classification, carried on the wire as the
+/// v2 `error.code` field.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The frame itself was malformed or used the protocol incorrectly
+    /// (bad JSON, unknown op, unsupported version, missing fields).
+    BadRequest,
+    /// A well-formed request carried invalid values (wrong vector
+    /// length, out-of-range `k`, unsupported temperature).
+    InvalidArgument,
+    /// The named session does not exist.
+    NotFound,
+    /// The per-request deadline or the server request timeout elapsed
+    /// before a reply was produced.
+    DeadlineExceeded,
+    /// The admission queue is full (backpressure rejection).
+    Overloaded,
+    /// The coordinator is draining and admits no new requests.
+    ShuttingDown,
+    /// Unexpected execution failure (batch execution error, dropped
+    /// reply channel).
+    Internal,
+}
+
+impl ErrorCode {
+    /// Every code, in wire-name order (documented in docs/PROTOCOL.md).
+    pub const ALL: [ErrorCode; 7] = [
+        ErrorCode::BadRequest,
+        ErrorCode::InvalidArgument,
+        ErrorCode::NotFound,
+        ErrorCode::DeadlineExceeded,
+        ErrorCode::Overloaded,
+        ErrorCode::ShuttingDown,
+        ErrorCode::Internal,
+    ];
+
+    /// The wire name of this code.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::InvalidArgument => "invalid_argument",
+            ErrorCode::NotFound => "not_found",
+            ErrorCode::DeadlineExceeded => "deadline_exceeded",
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::ShuttingDown => "shutting_down",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    /// Inverse of [`Self::as_str`] (client-side decoding).
+    pub fn parse(s: &str) -> Option<ErrorCode> {
+        ErrorCode::ALL.iter().copied().find(|c| c.as_str() == s)
+    }
+}
+
+/// A typed serving error: code + message.  This is what crosses the
+/// wire (structured in v2, message-string in v1 with the code riding
+/// along) and what every coordinator/executor path returns.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeError {
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl ServeError {
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> ServeError {
+        ServeError { code, message: message.into() }
+    }
+
+    pub fn bad_request(message: impl Into<String>) -> ServeError {
+        ServeError::new(ErrorCode::BadRequest, message)
+    }
+
+    pub fn invalid(message: impl Into<String>) -> ServeError {
+        ServeError::new(ErrorCode::InvalidArgument, message)
+    }
+
+    pub fn not_found(message: impl Into<String>) -> ServeError {
+        ServeError::new(ErrorCode::NotFound, message)
+    }
+
+    pub fn deadline(message: impl Into<String>) -> ServeError {
+        ServeError::new(ErrorCode::DeadlineExceeded, message)
+    }
+
+    pub fn overloaded(message: impl Into<String>) -> ServeError {
+        ServeError::new(ErrorCode::Overloaded, message)
+    }
+
+    pub fn shutting_down(message: impl Into<String>) -> ServeError {
+        ServeError::new(ErrorCode::ShuttingDown, message)
+    }
+
+    pub fn internal(message: impl Into<String>) -> ServeError {
+        ServeError::new(ErrorCode::Internal, message)
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.code.as_str(), self.message)
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Batcher scheduling class.  `Interactive` requests flush ahead of
+/// `Batch` requests of the same [`BatchClass`]; classes themselves
+/// still never mix in one executed batch.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Priority {
+    /// Latency-sensitive (the default).
+    #[default]
+    Interactive,
+    /// Throughput traffic that tolerates queueing behind interactive
+    /// requests.
+    Batch,
+}
+
+impl Priority {
+    /// Ordering rank: lower is more urgent.
+    pub(crate) fn rank(self) -> u8 {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Batch => 1,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "interactive" => Some(Priority::Interactive),
+            "batch" => Some(Priority::Batch),
+            _ => None,
+        }
+    }
+}
+
+/// Per-request options, carried by every payload (v2 surface).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RequestOptions {
+    /// Top-k override; `None` uses the server's `default_k`.
+    pub k: Option<usize>,
+    /// Sampling temperature.  Only `1.0` is supported today (the
+    /// serving path is exact greedy/top-k); the field exists so the
+    /// wire schema does not need another revision when sampling lands.
+    pub temperature: f32,
+    /// Batcher scheduling class.
+    pub priority: Priority,
+    /// Total handling budget measured from admission.  The batcher
+    /// flushes early to honor it when it is tighter than `max_wait`,
+    /// the server caps its wait with it, and the executor rejects the
+    /// request with [`ErrorCode::DeadlineExceeded`] if it expires
+    /// while queued.
+    pub deadline: Option<Duration>,
+    /// Opaque client-supplied tag (log/metric attribution only).
+    pub client_tag: Option<String>,
+}
+
+impl Default for RequestOptions {
+    fn default() -> Self {
+        RequestOptions {
+            k: None,
+            temperature: 1.0,
+            priority: Priority::Interactive,
+            deadline: None,
+            client_tag: None,
+        }
+    }
+}
+
+impl RequestOptions {
+    /// Default options with a top-k override — the most common
+    /// non-default call shape.
+    pub fn with_k(k: usize) -> RequestOptions {
+        RequestOptions { k: Some(k), ..RequestOptions::default() }
+    }
+}
+
+/// What a client asks of the serving system.  Per-request knobs that
+/// used to ride on individual variants (`k`) live in
+/// [`RequestOptions`] now.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Payload {
     /// Full probability vector over raw logits (Figures 1–2 workload).
     Softmax { logits: Vec<f32> },
     /// Top-k next-token probabilities for a hidden state — the beam
-    /// search decode step (Figures 3–4 workload).  `k = None` uses the
-    /// server default.
-    DecodeTopK { hidden: Vec<f32>, k: Option<usize> },
+    /// search decode step (Figures 3–4 workload).
+    DecodeTopK { hidden: Vec<f32> },
     /// One recurrent LM step: advance `session`'s state with `token`,
     /// then decode top-k (the end-to-end example's path).
-    LmStep { session: u64, token: i32, k: Option<usize> },
+    LmStep { session: u64, token: i32 },
+    /// Server-side streaming generation: feed `prompt_tokens` into
+    /// `session`, then greedily decode up to `max_tokens` tokens,
+    /// streaming each one back.  This is a *streaming* operation: it
+    /// never enters the batcher whole — the coordinator decomposes it
+    /// into per-token `LmStep` work that shares decode batches with
+    /// every other live stream (see [`super::generate`] and
+    /// [`super::Coordinator::generate`]).
+    Generate { session: u64, prompt_tokens: Vec<i32>, max_tokens: usize },
 }
 
 /// Result returned to the submitting client.
@@ -28,20 +239,36 @@ pub enum Reply {
     TopK { vals: Vec<f32>, idx: Vec<i64> },
 }
 
-/// Errors surfaced to clients (stringly: crosses the wire as JSON).
-pub type ReplyResult = Result<Reply, String>;
+/// Typed result surfaced to clients.
+pub type ReplyResult = Result<Reply, ServeError>;
 
 /// A queued request with its response channel and admission timestamp.
 pub struct Request {
     pub id: RequestId,
     pub payload: Payload,
+    pub options: RequestOptions,
     pub reply: OnceSender<ReplyResult>,
     pub enqueued: Instant,
+    /// Absolute deadline derived from `options.deadline` at admission.
+    pub deadline: Option<Instant>,
 }
 
 impl Request {
+    /// A request with default options.
     pub fn new(id: RequestId, payload: Payload, reply: OnceSender<ReplyResult>) -> Request {
-        Request { id, payload, reply, enqueued: Instant::now() }
+        Request::with_options(id, payload, RequestOptions::default(), reply)
+    }
+
+    /// A request carrying explicit per-request options.
+    pub fn with_options(
+        id: RequestId,
+        payload: Payload,
+        options: RequestOptions,
+        reply: OnceSender<ReplyResult>,
+    ) -> Request {
+        let enqueued = Instant::now();
+        let deadline = options.deadline.map(|d| enqueued + d);
+        Request { id, payload, options, reply, enqueued, deadline }
     }
 
     /// Routing class — requests of different classes never share a batch.
@@ -49,8 +276,27 @@ impl Request {
         match &self.payload {
             Payload::Softmax { .. } => BatchClass::Softmax,
             Payload::DecodeTopK { .. } => BatchClass::Decode,
-            Payload::LmStep { .. } => BatchClass::LmStep,
+            // Generate decomposes into LmStep work; it never enters the
+            // batcher whole (the coordinator rejects it at submit), but
+            // the class keeps routing total.
+            Payload::LmStep { .. } | Payload::Generate { .. } => BatchClass::LmStep,
         }
+    }
+
+    /// Latest instant by which this request's batch should flush: the
+    /// batcher's `max_wait` bound, tightened by the per-request
+    /// deadline when that is sooner.
+    pub fn flush_at(&self, max_wait: Duration) -> Instant {
+        let base = self.enqueued + max_wait;
+        match self.deadline {
+            Some(d) if d < base => d,
+            _ => base,
+        }
+    }
+
+    /// Whether the per-request deadline has already passed.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| d <= now)
     }
 }
 
@@ -85,11 +331,67 @@ mod tests {
         let r = Request::new(1, Payload::Softmax { logits: vec![1.0] }, tx);
         assert_eq!(r.class(), BatchClass::Softmax);
         let (tx, _rx) = oneshot();
-        let r = Request::new(2, Payload::DecodeTopK { hidden: vec![], k: Some(3) }, tx);
+        let r = Request::new(2, Payload::DecodeTopK { hidden: vec![] }, tx);
         assert_eq!(r.class(), BatchClass::Decode);
         let (tx, _rx) = oneshot();
-        let r = Request::new(3, Payload::LmStep { session: 9, token: 5, k: None }, tx);
+        let r = Request::new(3, Payload::LmStep { session: 9, token: 5 }, tx);
         assert_eq!(r.class(), BatchClass::LmStep);
+        let (tx, _rx) = oneshot();
+        let r = Request::new(
+            4,
+            Payload::Generate { session: 9, prompt_tokens: vec![1], max_tokens: 3 },
+            tx,
+        );
+        assert_eq!(r.class(), BatchClass::LmStep, "generate routes as lm_step work");
         assert_eq!(BatchClass::Decode.name(), "decode");
+    }
+
+    #[test]
+    fn default_options_are_neutral() {
+        let o = RequestOptions::default();
+        assert_eq!(o.k, None);
+        assert_eq!(o.temperature, 1.0);
+        assert_eq!(o.priority, Priority::Interactive);
+        assert!(o.deadline.is_none() && o.client_tag.is_none());
+        assert_eq!(RequestOptions::with_k(7).k, Some(7));
+    }
+
+    #[test]
+    fn flush_at_tightened_by_deadline() {
+        let (tx, _rx) = oneshot();
+        let r = Request::new(1, Payload::Softmax { logits: vec![] }, tx);
+        let wait = Duration::from_millis(50);
+        assert_eq!(r.flush_at(wait), r.enqueued + wait, "no deadline: max_wait bound");
+        assert!(!r.expired(Instant::now()));
+
+        let (tx, _rx) = oneshot();
+        let opts = RequestOptions {
+            deadline: Some(Duration::from_millis(5)),
+            ..RequestOptions::default()
+        };
+        let r = Request::with_options(2, Payload::Softmax { logits: vec![] }, opts, tx);
+        assert_eq!(r.flush_at(wait), r.deadline.unwrap(), "tighter deadline wins");
+        assert!(r.expired(r.enqueued + Duration::from_millis(6)));
+        assert!(!r.expired(r.enqueued + Duration::from_millis(4)));
+    }
+
+    #[test]
+    fn error_codes_roundtrip_and_display() {
+        for code in ErrorCode::ALL {
+            assert_eq!(ErrorCode::parse(code.as_str()), Some(code));
+        }
+        assert_eq!(ErrorCode::parse("bogus"), None);
+        let e = ServeError::invalid("k=0 outside supported range");
+        assert_eq!(e.code, ErrorCode::InvalidArgument);
+        assert_eq!(e.to_string(), "invalid_argument: k=0 outside supported range");
+    }
+
+    #[test]
+    fn priority_parse_and_rank() {
+        assert_eq!(Priority::parse("interactive"), Some(Priority::Interactive));
+        assert_eq!(Priority::parse("batch"), Some(Priority::Batch));
+        assert_eq!(Priority::parse("urgent"), None);
+        assert!(Priority::Interactive.rank() < Priority::Batch.rank());
+        assert_eq!(Priority::default(), Priority::Interactive);
     }
 }

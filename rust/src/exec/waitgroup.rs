@@ -98,7 +98,10 @@ impl Drop for WaitGuard {
         // broadcast otherwise spares the scoped-dispatch hot path
         // O(tiles) futile waiter wakeups per grid (the waiter would
         // just re-scan and sleep again).
-        let may_unblock = st.outstanding.iter().next().map_or(true, |&m| m > self.id);
+        let may_unblock = match st.outstanding.iter().next() {
+            None => true,
+            Some(&m) => m > self.id,
+        };
         drop(st);
         if may_unblock {
             self.inner.cv.notify_all();

@@ -20,10 +20,13 @@
 //!   graphs (HLO text in `artifacts/`) into a PJRT CPU client; python is
 //!   never on the request path.  (Offline builds link an API-compatible
 //!   `xla` stub; artifact execution requires the real bindings.)
-//! * **Coordinator** ([`coordinator`], [`server`]) — request routing,
-//!   continuous dynamic batching, beam-search decode scheduling, and
-//!   vocabulary-sharded execution whose partial normalizers are merged
-//!   with the paper's ⊕ operator (§3.1) in rust.
+//! * **Coordinator** ([`coordinator`], [`server`]) — the typed v2
+//!   serving surface (per-request options, structured errors), request
+//!   routing, continuous dynamic batching (priority/deadline-aware),
+//!   server-side streaming generation that batches across concurrent
+//!   streams, beam-search decode scheduling, and vocabulary-sharded
+//!   execution whose partial normalizers are merged with the paper's ⊕
+//!   operator (§3.1) in rust.  Wire schema: `docs/PROTOCOL.md`.
 //! * **Substrates** ([`exec`], [`json`], [`cli`], [`config`], [`rng`],
 //!   [`prop`], [`benchkit`], [`metrics`], [`logging`]) — the offline
 //!   crate registry ships only `xla` + `anyhow`, so the thread-pool

@@ -5,7 +5,8 @@
 //! onlinesoftmax bench   [--fig 1|2|3|4|k|all] [--sizes ..] [--threads N]
 //! onlinesoftmax model   [--device v100|cpu]         # analytic predictions
 //! onlinesoftmax accesses                            # the paper's access table
-//! onlinesoftmax loadgen [--addr ..] [--requests N] [--concurrency C] [--op decode|softmax]
+//! onlinesoftmax loadgen [--addr ..] [--requests N] [--concurrency C]
+//!                       [--op decode|softmax|generate] [--tokens N]
 //! onlinesoftmax help
 //! ```
 
@@ -27,6 +28,7 @@ const VALUE_OPTS: &[&str] = &[
     "queue-capacity", "workers", "k", "seed", "fig", "sizes", "batch", "threads",
     "device", "requests", "concurrency", "op", "out", "backend", "vocab", "hidden",
     "host-shards", "shard-threshold", "grid-rows", "pool-sched", "shard-backend",
+    "request-timeout", "tokens",
 ];
 
 fn main() {
@@ -205,6 +207,9 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     let requests: usize = args.opt_parse("requests", 200)?;
     let concurrency: usize = args.opt_parse("concurrency", 4)?;
     let op = args.opt_str("op").unwrap_or("decode").to_string();
+    // Tokens per stream for `--op generate` (each "request" is one
+    // whole server-side stream).
+    let tokens: usize = args.opt_parse("tokens", 8)?;
     args.finish()?;
 
     // Probe connection (fail fast if the server is down).
@@ -220,15 +225,33 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                 let op = op.clone();
                 scope.spawn(move || -> Result<Vec<Duration>> {
                     let mut client = Client::connect(&addr)?;
+                    client.set_tag(Some(&format!("loadgen-{w}")));
                     let mut rng =
                         onlinesoftmax::rng::Xoshiro256pp::seed_from_u64(w as u64 + 1);
                     let mut lats = Vec::with_capacity(per_worker);
-                    for _ in 0..per_worker {
+                    for r in 0..per_worker {
                         let t = Instant::now();
                         match op.as_str() {
                             "softmax" => {
                                 let logits = rng.logits(8192, 5.0);
                                 client.softmax(&logits)?;
+                            }
+                            "generate" => {
+                                // One streamed generation per request:
+                                // a single wire round-trip, decoded
+                                // server-side, batched across workers.
+                                let sid = client.open_session()?;
+                                let start = (w * 31 + r) as i32 % 512;
+                                let frames =
+                                    client.generate_all(sid, &[start], tokens, Some(5))?;
+                                client.close_session(sid)?;
+                                if frames.len() != tokens {
+                                    return Err(anyhow!(
+                                        "stream returned {} of {} tokens",
+                                        frames.len(),
+                                        tokens
+                                    ));
+                                }
                             }
                             _ => {
                                 let hidden = rng.logits(128, 1.0);

@@ -45,6 +45,12 @@ impl Gauge {
         self.0.fetch_sub(1, Ordering::Relaxed);
     }
 
+    /// Raise the gauge to `v` if it is below it (monotone high-water
+    /// mark, e.g. peak batch occupancy).
+    pub fn set_max(&self, v: i64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
     pub fn get(&self) -> i64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -228,6 +234,10 @@ mod tests {
         g.inc();
         g.dec();
         assert_eq!(g.get(), 3);
+        g.set_max(7);
+        assert_eq!(g.get(), 7, "set_max raises");
+        g.set_max(2);
+        assert_eq!(g.get(), 7, "set_max never lowers");
     }
 
     #[test]

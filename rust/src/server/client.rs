@@ -1,5 +1,13 @@
 //! Blocking TCP client for the line-JSON protocol — used by the
 //! examples, the load generator, and the end-to-end tests.
+//!
+//! The client speaks **protocol v2**: every request carries `"v":2`
+//! plus any configured per-request options ([`Client::set_priority`],
+//! [`Client::set_deadline_ms`], [`Client::set_tag`]), errors decode
+//! into their structured `{code, message}` form, and
+//! [`Client::generate`] exposes server-side streaming generation as an
+//! iterator of [`TokenFrame`]s.  (Servers still accept v1 frames from
+//! older clients; see `docs/PROTOCOL.md`.)
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -7,13 +15,17 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
-use super::wire;
+use super::wire::{self, StreamEvent};
+use crate::coordinator::TokenFrame;
 use crate::json::Value;
 
 /// A connected client (one request in flight at a time).
 pub struct Client {
     writer: TcpStream,
     reader: BufReader<TcpStream>,
+    priority: Option<String>,
+    deadline_ms: Option<u64>,
+    tag: Option<String>,
 }
 
 impl Client {
@@ -22,41 +34,91 @@ impl Client {
         stream.set_nodelay(true)?;
         stream.set_read_timeout(Some(Duration::from_secs(120)))?;
         let writer = stream.try_clone()?;
-        Ok(Client { writer, reader: BufReader::new(stream) })
+        Ok(Client {
+            writer,
+            reader: BufReader::new(stream),
+            priority: None,
+            deadline_ms: None,
+            tag: None,
+        })
     }
 
-    fn roundtrip(&mut self, line: &str) -> Result<Value> {
+    /// Priority class sent with every subsequent request
+    /// (`"interactive"` or `"batch"`; `None` = server default).
+    pub fn set_priority(&mut self, priority: Option<&str>) {
+        self.priority = priority.map(|s| s.to_string());
+    }
+
+    /// Per-request deadline in milliseconds sent with every subsequent
+    /// request (`None` = no deadline).
+    pub fn set_deadline_ms(&mut self, deadline_ms: Option<u64>) {
+        self.deadline_ms = deadline_ms;
+    }
+
+    /// Opaque client tag sent with every subsequent request.
+    pub fn set_tag(&mut self, tag: Option<&str>) {
+        self.tag = tag.map(|s| s.to_string());
+    }
+
+    /// A v2 request skeleton for `op`, carrying the configured options.
+    fn request(&self, op: &str) -> Value {
+        let mut v = Value::object();
+        v.set("v", Value::Number(wire::PROTOCOL_VERSION as f64))
+            .set("op", Value::String(op.to_string()));
+        if let Some(ms) = self.deadline_ms {
+            v.set("deadline_ms", Value::Number(ms as f64));
+        }
+        if let Some(p) = &self.priority {
+            v.set("priority", Value::String(p.clone()));
+        }
+        if let Some(t) = &self.tag {
+            v.set("tag", Value::String(t.clone()));
+        }
+        v
+    }
+
+    fn send_line(&mut self, line: &str) -> Result<()> {
         self.writer.write_all(line.as_bytes())?;
         self.writer.write_all(b"\n")?;
         self.writer.flush()?;
+        Ok(())
+    }
+
+    fn read_line(&mut self) -> Result<String> {
         let mut response = String::new();
         let n = self.reader.read_line(&mut response)?;
         if n == 0 {
             return Err(anyhow!("server closed connection"));
         }
+        Ok(response)
+    }
+
+    fn roundtrip(&mut self, line: &str) -> Result<Value> {
+        self.send_line(line)?;
+        let response = self.read_line()?;
         wire::decode_response(&response)
     }
 
     pub fn ping(&mut self) -> Result<()> {
-        self.roundtrip(r#"{"op":"ping"}"#).map(|_| ())
+        let line = self.request("ping").to_json();
+        self.roundtrip(&line).map(|_| ())
     }
 
     pub fn stats(&mut self) -> Result<Value> {
-        self.roundtrip(r#"{"op":"stats"}"#)
+        let line = self.request("stats").to_json();
+        self.roundtrip(&line)
     }
 
     pub fn softmax(&mut self, logits: &[f32]) -> Result<Vec<f32>> {
-        let mut v = Value::object();
-        v.set("op", Value::String("softmax".into()))
-            .set("logits", Value::from_f32_slice(logits));
+        let mut v = self.request("softmax");
+        v.set("logits", Value::from_f32_slice(logits));
         let resp = self.roundtrip(&v.to_json())?;
         resp.require("probs")?.to_f32_vec()
     }
 
     pub fn decode(&mut self, hidden: &[f32], k: Option<usize>) -> Result<(Vec<f32>, Vec<i64>)> {
-        let mut v = Value::object();
-        v.set("op", Value::String("decode".into()))
-            .set("hidden", Value::from_f32_slice(hidden));
+        let mut v = self.request("decode");
+        v.set("hidden", Value::from_f32_slice(hidden));
         if let Some(k) = k {
             v.set("k", Value::Number(k as f64));
         }
@@ -68,7 +130,8 @@ impl Client {
     }
 
     pub fn open_session(&mut self) -> Result<u64> {
-        let resp = self.roundtrip(r#"{"op":"open_session"}"#)?;
+        let line = self.request("open_session").to_json();
+        let resp = self.roundtrip(&line)?;
         resp.require("session")?
             .as_i64()
             .map(|i| i as u64)
@@ -76,9 +139,8 @@ impl Client {
     }
 
     pub fn fork_session(&mut self, src: u64) -> Result<u64> {
-        let mut v = Value::object();
-        v.set("op", Value::String("fork_session".into()))
-            .set("session", Value::Number(src as f64));
+        let mut v = self.request("fork_session");
+        v.set("session", Value::Number(src as f64));
         let resp = self.roundtrip(&v.to_json())?;
         resp.require("session")?
             .as_i64()
@@ -87,9 +149,8 @@ impl Client {
     }
 
     pub fn close_session(&mut self, id: u64) -> Result<()> {
-        let mut v = Value::object();
-        v.set("op", Value::String("close_session".into()))
-            .set("session", Value::Number(id as f64));
+        let mut v = self.request("close_session");
+        v.set("session", Value::Number(id as f64));
         self.roundtrip(&v.to_json()).map(|_| ())
     }
 
@@ -99,9 +160,8 @@ impl Client {
         token: i32,
         k: Option<usize>,
     ) -> Result<(Vec<f32>, Vec<i64>)> {
-        let mut v = Value::object();
-        v.set("op", Value::String("lm_step".into()))
-            .set("session", Value::Number(session as f64))
+        let mut v = self.request("lm_step");
+        v.set("session", Value::Number(session as f64))
             .set("token", Value::Number(token as f64));
         if let Some(k) = k {
             v.set("k", Value::Number(k as f64));
@@ -111,5 +171,118 @@ impl Client {
         let idx =
             resp.require("idx")?.to_i32_vec()?.into_iter().map(|i| i as i64).collect();
         Ok((vals, idx))
+    }
+
+    /// Start a server-side streaming generation: feed `prompt` into
+    /// `session`, then decode up to `max_tokens` tokens.  Returns an
+    /// iterator yielding one [`TokenFrame`] per decoded token; the
+    /// iterator ends cleanly after the terminal frame, after which
+    /// [`Generation::tokens`] holds the full selected sequence.
+    ///
+    /// The whole stream costs one request frame on the wire — the
+    /// decode loop runs server-side, batching across concurrent
+    /// streams.
+    pub fn generate(
+        &mut self,
+        session: u64,
+        prompt: &[i32],
+        max_tokens: usize,
+        k: Option<usize>,
+    ) -> Result<Generation<'_>> {
+        let mut v = self.request("generate");
+        v.set("session", Value::Number(session as f64))
+            .set("prompt", Value::from_i32_slice(prompt))
+            .set("max_tokens", Value::Number(max_tokens as f64));
+        if let Some(k) = k {
+            v.set("k", Value::Number(k as f64));
+        }
+        self.send_line(&v.to_json())?;
+        Ok(Generation { client: self, finished: false, tokens: Vec::new() })
+    }
+
+    /// Convenience wrapper over [`Client::generate`]: collect every
+    /// token frame of the stream.
+    pub fn generate_all(
+        &mut self,
+        session: u64,
+        prompt: &[i32],
+        max_tokens: usize,
+        k: Option<usize>,
+    ) -> Result<Vec<TokenFrame>> {
+        let mut frames = Vec::new();
+        let stream = self.generate(session, prompt, max_tokens, k)?;
+        for frame in stream {
+            frames.push(frame?);
+        }
+        Ok(frames)
+    }
+}
+
+/// A live generation stream (see [`Client::generate`]).  Dropping it
+/// mid-stream drains the remaining frames (bounded by the server-side
+/// `MAX_STREAM_TOKENS` cap) so the connection stays usable for the
+/// next request.
+pub struct Generation<'c> {
+    client: &'c mut Client,
+    finished: bool,
+    tokens: Vec<i32>,
+}
+
+impl Generation<'_> {
+    /// Selected tokens seen so far; after clean iterator exhaustion
+    /// this is the server's authoritative full-sequence list from the
+    /// terminal frame.
+    pub fn tokens(&self) -> &[i32] {
+        &self.tokens
+    }
+
+    fn read_event(&mut self) -> Result<StreamEvent> {
+        let line = self.client.read_line()?;
+        wire::decode_stream_event(&line)
+    }
+}
+
+impl Iterator for Generation<'_> {
+    type Item = Result<TokenFrame>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.finished {
+            return None;
+        }
+        match self.read_event() {
+            Ok(StreamEvent::Token(frame)) => {
+                self.tokens.push(frame.token);
+                Some(Ok(frame))
+            }
+            Ok(StreamEvent::Done { tokens }) => {
+                self.finished = true;
+                self.tokens = tokens;
+                None
+            }
+            Err(e) => {
+                self.finished = true;
+                Some(Err(e))
+            }
+        }
+    }
+}
+
+impl Drop for Generation<'_> {
+    fn drop(&mut self) {
+        // Abandoned mid-stream: the server keeps writing until its
+        // terminal frame, so drain to it — otherwise the leftover
+        // frames would desync every later request on this connection.
+        // Bounded by the server-side MAX_STREAM_TOKENS cap; any read
+        // error ends the drain (the connection is broken anyway).
+        while !self.finished {
+            match self.read_event() {
+                Ok(StreamEvent::Token(_)) => {}
+                Ok(StreamEvent::Done { tokens }) => {
+                    self.tokens = tokens;
+                    self.finished = true;
+                }
+                Err(_) => self.finished = true,
+            }
+        }
     }
 }

@@ -1,10 +1,20 @@
 //! TCP serving frontend: newline-delimited JSON over a thread-per-
 //! connection listener, dispatching into the [`Coordinator`].
 //!
-//! * [`wire`] — the protocol codec (see its docs for the schema).
-//! * [`Server`] — listener lifecycle (bind, accept loop, graceful stop).
-//! * [`client::Client`] — blocking client used by the examples, the
-//!   load-generator, and the integration tests.
+//! * [`wire`] — the versioned protocol codec (v1 + v2 schemas; see its
+//!   docs and `docs/PROTOCOL.md`).
+//! * [`Server`] — listener lifecycle (bind, accept loop with bounded
+//!   idle backoff, graceful stop).
+//! * [`client::Client`] — blocking v2 client with a streaming
+//!   generation iterator, used by the examples, the load-generator,
+//!   and the integration tests.
+//!
+//! Connection handling is frame-bounded: a request line larger than
+//! [`MAX_FRAME_BYTES`] is answered with a structured `bad_request`
+//! error and discarded without buffering it, and the connection stays
+//! usable.  `generate` requests stream multi-frame responses from the
+//! connection thread, which drives the coordinator's server-side
+//! generation loop (see [`crate::coordinator::generate`]).
 
 pub mod client;
 pub mod wire;
@@ -15,36 +25,44 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
-use crate::coordinator::Coordinator;
-use crate::exec::ThreadPool;
+use crate::coordinator::{Coordinator, Payload, RequestOptions, ServeError};
+use crate::json::Value;
 use crate::metrics;
-use crate::server::wire::Op;
+use crate::server::wire::{Frame, Op};
 
-/// Request-handling deadline (protects connection threads from a stuck
-/// coordinator).
-const REQUEST_TIMEOUT: Duration = Duration::from_secs(60);
+/// Hard bound on a single request frame.  Large enough for the biggest
+/// legitimate payload (a full-vocabulary logits row serializes to a
+/// few MB), small enough that a hostile or buggy client cannot balloon
+/// a connection thread's memory.
+pub const MAX_FRAME_BYTES: usize = 8 * 1024 * 1024;
 
 /// The TCP server.
 pub struct Server {
     listener: TcpListener,
     coordinator: Arc<Coordinator>,
     stop: Arc<AtomicBool>,
-    pool: ThreadPool,
+    pool: crate::exec::ThreadPool,
+    /// Default request-handling budget (config `request_timeout`);
+    /// per-request deadlines tighten it.
+    request_timeout: Duration,
 }
 
 impl Server {
     /// Bind to `addr` (e.g. `127.0.0.1:7070`).  `conn_threads` bounds
-    /// concurrently-served connections.
+    /// concurrently-served connections.  The request timeout comes
+    /// from the coordinator's config.
     pub fn bind(addr: &str, coordinator: Arc<Coordinator>, conn_threads: usize) -> Result<Server> {
         let listener =
             TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let request_timeout = coordinator.request_timeout();
         Ok(Server {
             listener,
             coordinator,
             stop: Arc::new(AtomicBool::new(false)),
-            pool: ThreadPool::new(conn_threads.max(1), "conn"),
+            pool: crate::exec::ThreadPool::new(conn_threads.max(1), "conn"),
+            request_timeout,
         })
     }
 
@@ -63,24 +81,37 @@ impl Server {
         crate::info!("server", "listening on {}", self.listener.local_addr()?);
         self.listener.set_nonblocking(true)?;
         let conns = metrics::global().counter("server.connections");
+        let idle_polls = metrics::global().counter("server.accept.idle_polls");
+        // Bounded exponential backoff for the idle accept poll: 1 ms
+        // after the first empty poll, doubling to a 50 ms ceiling,
+        // reset by any accepted connection.  The counter makes the
+        // listener's idle cost observable instead of a silent 5 ms
+        // busy loop.
+        const IDLE_MIN: Duration = Duration::from_millis(1);
+        const IDLE_MAX: Duration = Duration::from_millis(50);
+        let mut idle_wait = IDLE_MIN;
         loop {
             if self.stop.load(Ordering::Relaxed) {
                 return Ok(());
             }
             match self.listener.accept() {
                 Ok((stream, peer)) => {
+                    idle_wait = IDLE_MIN;
                     conns.inc();
                     crate::debug!("server", "connection from {peer}");
                     let coord = self.coordinator.clone();
                     let stop = self.stop.clone();
+                    let timeout = self.request_timeout;
                     self.pool.execute(move || {
-                        if let Err(e) = handle_connection(stream, &coord, &stop) {
+                        if let Err(e) = handle_connection(stream, &coord, &stop, timeout) {
                             crate::debug!("server", "connection ended: {e:#}");
                         }
                     });
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(Duration::from_millis(5));
+                    idle_polls.inc();
+                    std::thread::sleep(idle_wait);
+                    idle_wait = (idle_wait * 2).min(IDLE_MAX);
                 }
                 Err(e) => return Err(e.into()),
             }
@@ -88,24 +119,58 @@ impl Server {
     }
 }
 
+fn write_line(writer: &mut TcpStream, line: &str) -> std::io::Result<()> {
+    writer.write_all(line.as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()
+}
+
 fn handle_connection(
     stream: TcpStream,
     coord: &Coordinator,
     stop: &AtomicBool,
+    request_timeout: Duration,
 ) -> Result<()> {
     stream.set_read_timeout(Some(Duration::from_millis(200)))?;
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
-    let mut line = String::new();
     let requests = metrics::global().counter("server.requests");
+    let oversized = metrics::global().counter("server.frames.oversized");
+    // Partial-frame accumulator: frames may arrive in pieces across
+    // read timeouts, and one buffered chunk may hold several frames.
+    let mut acc: Vec<u8> = Vec::new();
+    // When a frame overflows MAX_FRAME_BYTES we stop buffering and
+    // skip bytes until its terminating newline.
+    let mut discarding = false;
+    // Per-connection stream ids for multi-frame responses.
+    let mut streams: u64 = 0;
     loop {
         if stop.load(Ordering::Relaxed) {
             return Ok(());
         }
-        line.clear();
-        match reader.read_line(&mut line) {
-            Ok(0) => return Ok(()), // EOF
-            Ok(_) => {}
+        let mut eof = false;
+        let (consumed, complete) = match reader.fill_buf() {
+            Ok(c) if c.is_empty() => {
+                // EOF.  A final newline-less frame still gets served
+                // (the legacy read_line loop did), then the
+                // connection closes.
+                eof = true;
+                (0, true)
+            }
+            Ok(c) => match c.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    if !discarding {
+                        acc.extend_from_slice(&c[..pos]);
+                    }
+                    (pos + 1, true)
+                }
+                None => {
+                    if !discarding {
+                        acc.extend_from_slice(c);
+                    }
+                    (c.len(), false)
+                }
+            },
             Err(e)
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut =>
@@ -113,52 +178,174 @@ fn handle_connection(
                 continue
             }
             Err(e) => return Err(e.into()),
+        };
+        reader.consume(consumed);
+        if complete {
+            let was_discarding = std::mem::replace(&mut discarding, false);
+            if was_discarding {
+                acc.clear(); // tail of an oversized frame: already answered
+            } else if acc.len() > MAX_FRAME_BYTES {
+                oversized.inc();
+                acc.clear();
+                write_line(&mut writer, &oversized_error())?;
+            } else {
+                // Borrowed view — Cow stays Borrowed for valid UTF-8,
+                // so no second copy of a potentially-8MiB frame.
+                let line = String::from_utf8_lossy(&acc);
+                if !line.trim().is_empty() {
+                    requests.inc();
+                    streams += 1;
+                    dispatch(&line, coord, &mut writer, request_timeout, streams)?;
+                }
+                acc.clear();
+            }
+            if eof {
+                return Ok(());
+            }
+        } else if !discarding && acc.len() > MAX_FRAME_BYTES {
+            // Mid-frame overflow: answer now, then skip to the newline.
+            oversized.inc();
+            discarding = true;
+            acc.clear();
+            write_line(&mut writer, &oversized_error())?;
         }
-        if line.trim().is_empty() {
-            continue;
-        }
-        requests.inc();
-        let response = dispatch(&line, coord);
-        writer.write_all(response.as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
     }
 }
 
-fn dispatch(line: &str, coord: &Coordinator) -> String {
-    match wire::decode_request(line) {
-        Err(e) => wire::encode_error(&format!("{e:#}")),
-        Ok(Op::Ping) => wire::encode_object(crate::json::Value::object()),
-        Ok(Op::Stats) => {
-            let mut v = crate::json::Value::object();
-            v.set("metrics", metrics::global().snapshot_json());
-            v.set(
+fn oversized_error() -> String {
+    // Like every pre-parse failure, this renders in the v1 error shape
+    // (message string + `code` rider): the frame never parsed, so the
+    // requester's protocol version is unknown and v1 is the
+    // compatibility default (PROTOCOL.md).
+    wire::encode_error_v1(&ServeError::bad_request(format!(
+        "frame exceeds {MAX_FRAME_BYTES} bytes"
+    )))
+}
+
+/// Per-request handling budget: the configured timeout, tightened by
+/// the request's own deadline when that is sooner.
+fn effective_timeout(request_timeout: Duration, options: &RequestOptions) -> Duration {
+    options.deadline.map_or(request_timeout, |d| d.min(request_timeout))
+}
+
+/// Handle one decoded frame, writing the response frame(s).  Returns
+/// `Err` only for connection-level I/O failures.
+fn dispatch(
+    line: &str,
+    coord: &Coordinator,
+    writer: &mut TcpStream,
+    request_timeout: Duration,
+    stream_id: u64,
+) -> Result<()> {
+    let Frame { v, op, options } = match wire::decode_request(line) {
+        Err(e) => {
+            write_line(writer, &wire::encode_error_for(e.v, &e.error))?;
+            return Ok(());
+        }
+        Ok(f) => f,
+    };
+    let ok_object = |fields: Value| -> String {
+        if v >= 2 {
+            wire::encode_object_v2(fields)
+        } else {
+            wire::encode_object(fields)
+        }
+    };
+    let response = match op {
+        Op::Ping => ok_object(Value::object()),
+        Op::Stats => {
+            let mut fields = Value::object();
+            fields.set("metrics", metrics::global().snapshot_json());
+            fields.set(
                 "sessions",
-                crate::json::Value::Number(coord.executor().session_count() as f64),
+                Value::Number(coord.executor().session_count() as f64),
             );
-            wire::encode_object(v)
-        }
-        Ok(Op::OpenSession) => {
-            let id = coord.open_session();
-            let mut v = crate::json::Value::object();
-            v.set("session", crate::json::Value::Number(id as f64));
-            wire::encode_object(v)
-        }
-        Ok(Op::ForkSession(src)) => match coord.fork_session(src) {
-            Ok(id) => {
-                let mut v = crate::json::Value::object();
-                v.set("session", crate::json::Value::Number(id as f64));
-                wire::encode_object(v)
+            fields.set("queue_depth", Value::Number(coord.queue_depth() as f64));
+            let mut depths = Value::object();
+            for (class, depth) in coord.class_depths() {
+                depths.set(class.name(), Value::Number(depth as f64));
             }
-            Err(e) => wire::encode_error(&format!("{e:#}")),
-        },
-        Ok(Op::CloseSession(id)) => {
-            coord.close_session(id);
-            wire::encode_object(crate::json::Value::object())
+            fields.set("queue_depths", depths);
+            fields.set("active_streams", Value::Number(coord.active_streams() as f64));
+            ok_object(fields)
         }
-        Ok(Op::Request(payload)) => match coord.call(payload, REQUEST_TIMEOUT) {
-            Ok(reply) => wire::encode_reply(&reply),
-            Err(e) => wire::encode_error(&e),
+        Op::OpenSession => {
+            let id = coord.open_session();
+            let mut fields = Value::object();
+            fields.set("session", Value::Number(id as f64));
+            ok_object(fields)
+        }
+        Op::ForkSession(src) => match coord.fork_session(src) {
+            Ok(id) => {
+                let mut fields = Value::object();
+                fields.set("session", Value::Number(id as f64));
+                ok_object(fields)
+            }
+            Err(e) => {
+                wire::encode_error_for(v, &ServeError::not_found(format!("{e:#}")))
+            }
         },
+        Op::CloseSession(id) => {
+            coord.close_session(id);
+            ok_object(Value::object())
+        }
+        Op::Request(Payload::Generate { session, prompt_tokens, max_tokens }) => {
+            return run_generate(
+                coord,
+                writer,
+                stream_id,
+                session,
+                &prompt_tokens,
+                max_tokens,
+                options,
+            );
+        }
+        Op::Request(payload) => {
+            let timeout = effective_timeout(request_timeout, &options);
+            match coord.call_opts(payload, options, timeout) {
+                Ok(reply) => {
+                    if v >= 2 {
+                        wire::encode_reply_v2(&reply)
+                    } else {
+                        wire::encode_reply(&reply)
+                    }
+                }
+                Err(e) => wire::encode_error_for(v, &e),
+            }
+        }
+    };
+    write_line(writer, &response)?;
+    Ok(())
+}
+
+/// Drive one server-side generation stream, writing a token frame per
+/// decoded token and a terminal frame at the end.
+fn run_generate(
+    coord: &Coordinator,
+    writer: &mut TcpStream,
+    stream_id: u64,
+    session: u64,
+    prompt_tokens: &[i32],
+    max_tokens: usize,
+    options: RequestOptions,
+) -> Result<()> {
+    let mut io_failed = false;
+    let result = coord.generate(session, prompt_tokens, max_tokens, &options, |frame| {
+        match write_line(writer, &wire::encode_stream_token(stream_id, frame)) {
+            Ok(()) => true,
+            Err(_) => {
+                io_failed = true;
+                false // client gone: cancel the stream
+            }
+        }
+    });
+    if io_failed {
+        return Err(anyhow!("client disconnected mid-stream"));
     }
+    let terminal = match result {
+        Ok(tokens) => wire::encode_stream_done(stream_id, &tokens),
+        Err(e) => wire::encode_stream_failed(stream_id, &e),
+    };
+    write_line(writer, &terminal)?;
+    Ok(())
 }

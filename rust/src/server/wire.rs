@@ -1,24 +1,53 @@
-//! Wire protocol: newline-delimited JSON over TCP.
+//! Wire protocol: newline-delimited JSON over TCP, versioned.
 //!
-//! Request (one per line):
+//! Two request generations share the socket (full schema, framing
+//! rules, and compat table: `docs/PROTOCOL.md`):
+//!
+//! **v1** (no `"v"` field, or `"v":1`) — the legacy surface, still
+//! decoded and served unchanged:
 //! ```json
 //! {"op": "softmax",  "logits": [..]}
 //! {"op": "decode",   "hidden": [..], "k": 5}
-//! {"op": "open_session"}
-//! {"op": "fork_session", "session": 1}
 //! {"op": "lm_step",  "session": 1, "token": 42, "k": 5}
-//! {"op": "close_session", "session": 1}
-//! {"op": "stats"}
-//! {"op": "ping"}
+//! {"op": "open_session"} {"op": "fork_session", "session": 1}
+//! {"op": "close_session", "session": 1} {"op": "stats"} {"op": "ping"}
 //! ```
+//! v1 responses: `{"ok": true, ...}` or
+//! `{"ok": false, "error": "<message>", "code": "<code>"}` (the `code`
+//! rides along for v2-aware tooling; v1 clients read `error`).
 //!
-//! Response (one per line): `{"ok": true, ...}` or
-//! `{"ok": false, "error": "..."}`.
+//! **v2** (`"v": 2`) — the typed surface: every request may carry
+//! [`RequestOptions`] fields (`k`, `temperature`, `priority`,
+//! `deadline_ms`, `tag`), responses echo `"v":2`, errors are
+//! structured objects, and the streaming op exists:
+//! ```json
+//! {"v":2, "op":"generate", "session":1, "prompt":[3,9], "max_tokens":8, "k":5}
+//! ```
+//! A `generate` answer is **multi-frame**: one token frame per decoded
+//! token, then a terminal frame —
+//! ```json
+//! {"v":2, "stream":1, "index":0, "token":1744, "vals":[..], "idx":[..]}
+//! {"v":2, "stream":1, "done":true, "tokens":[1744, ..]}
+//! ```
+//! (on failure the terminal frame carries `"error": {"code", "message"}`
+//! instead of `"tokens"`).  Single-frame v2 errors look like
+//! `{"v":2, "ok":false, "error":{"code":"...", "message":"..."}}`.
+//!
+//! The decoder never panics: every malformed, truncated, wrong-version
+//! or type-confused frame decodes to a [`DecodeError`] carrying a
+//! typed [`ServeError`] (fuzzed by `rust/tests/wire_fuzz.rs`).
+//! Oversized frames are bounded by the server's read loop
+//! ([`super::MAX_FRAME_BYTES`]).
 
-use anyhow::{anyhow, Result};
+use std::time::Duration;
 
-use crate::coordinator::{Payload, Reply};
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::{Payload, Priority, Reply, RequestOptions, ServeError, TokenFrame};
 use crate::json::{self, Value};
+
+/// The current protocol version.
+pub const PROTOCOL_VERSION: u64 = 2;
 
 /// Parsed client operation.
 #[derive(Debug, Clone, PartialEq)]
@@ -31,53 +60,197 @@ pub enum Op {
     Ping,
 }
 
-/// Decode one request line.
-pub fn decode_request(line: &str) -> Result<Op> {
-    let v = json::parse(line.trim()).map_err(|e| anyhow!("bad json: {e}"))?;
-    let op = v
-        .require("op")?
-        .as_str()
-        .ok_or_else(|| anyhow!("`op` must be a string"))?;
-    match op {
-        "softmax" => Ok(Op::Request(Payload::Softmax {
-            logits: v.require("logits")?.to_f32_vec()?,
-        })),
-        "decode" => Ok(Op::Request(Payload::DecodeTopK {
-            hidden: v.require("hidden")?.to_f32_vec()?,
-            k: v.get("k").and_then(Value::as_usize),
-        })),
-        "lm_step" => Ok(Op::Request(Payload::LmStep {
-            session: v
-                .require("session")?
-                .as_i64()
-                .ok_or_else(|| anyhow!("`session` must be an integer"))? as u64,
-            token: v
-                .require("token")?
-                .as_i64()
-                .ok_or_else(|| anyhow!("`token` must be an integer"))? as i32,
-            k: v.get("k").and_then(Value::as_usize),
-        })),
-        "open_session" => Ok(Op::OpenSession),
-        "fork_session" => Ok(Op::ForkSession(
-            v.require("session")?
-                .as_i64()
-                .ok_or_else(|| anyhow!("`session` must be an integer"))? as u64,
-        )),
-        "close_session" => Ok(Op::CloseSession(
-            v.require("session")?
-                .as_i64()
-                .ok_or_else(|| anyhow!("`session` must be an integer"))? as u64,
-        )),
-        "stats" => Ok(Op::Stats),
-        "ping" => Ok(Op::Ping),
-        other => Err(anyhow!("unknown op `{other}`")),
-    }
+/// One decoded request frame: protocol version, operation, and the
+/// per-request options that ride on it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub v: u64,
+    pub op: Op,
+    pub options: RequestOptions,
 }
 
-/// Encode a successful reply.
-pub fn encode_reply(reply: &Reply) -> String {
-    let mut v = Value::object();
-    v.set("ok", Value::Bool(true));
+/// A decode failure, remembering which protocol version the error
+/// response should be rendered in.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecodeError {
+    pub v: u64,
+    pub error: ServeError,
+}
+
+// ---------------------------------------------------------------------------
+// request decoding
+// ---------------------------------------------------------------------------
+
+/// Decode one request line (either protocol version).
+pub fn decode_request(line: &str) -> Result<Frame, DecodeError> {
+    let doc = match json::parse(line.trim()) {
+        Ok(d) => d,
+        Err(e) => {
+            return Err(DecodeError {
+                v: 1,
+                error: ServeError::bad_request(format!("bad json: {e}")),
+            })
+        }
+    };
+    let version = match doc.get("v") {
+        None => 1,
+        Some(val) => match val.as_i64() {
+            Some(1) => 1,
+            Some(2) => 2,
+            Some(other) => {
+                return Err(DecodeError {
+                    v: PROTOCOL_VERSION,
+                    error: ServeError::bad_request(format!(
+                        "unsupported protocol version {other} (supported: 1, 2)"
+                    )),
+                })
+            }
+            None => {
+                return Err(DecodeError {
+                    v: 1,
+                    error: ServeError::bad_request("`v` must be an integer"),
+                })
+            }
+        },
+    };
+    decode_frame(&doc, version).map_err(|error| DecodeError { v: version, error })
+}
+
+fn decode_frame(doc: &Value, version: u64) -> Result<Frame, ServeError> {
+    let op_name = doc
+        .get("op")
+        .and_then(Value::as_str)
+        .ok_or_else(|| ServeError::bad_request("missing `op` (must be a string)"))?;
+    let options =
+        if version >= 2 { decode_options(doc)? } else { decode_options_v1(doc) };
+    let op = match op_name {
+        "softmax" => Op::Request(Payload::Softmax { logits: f32_field(doc, "logits")? }),
+        "decode" => Op::Request(Payload::DecodeTopK { hidden: f32_field(doc, "hidden")? }),
+        "lm_step" => Op::Request(Payload::LmStep {
+            session: u64_field(doc, "session")?,
+            token: i32_field(doc, "token")?,
+        }),
+        "generate" => {
+            if version < 2 {
+                return Err(ServeError::bad_request(
+                    "`generate` requires protocol v2 (send \"v\":2)",
+                ));
+            }
+            Op::Request(Payload::Generate {
+                session: u64_field(doc, "session")?,
+                prompt_tokens: i32_vec_field(doc, "prompt")?,
+                max_tokens: usize_field(doc, "max_tokens")?,
+            })
+        }
+        "open_session" => Op::OpenSession,
+        "fork_session" => Op::ForkSession(u64_field(doc, "session")?),
+        "close_session" => Op::CloseSession(u64_field(doc, "session")?),
+        "stats" => Op::Stats,
+        "ping" => Op::Ping,
+        other => return Err(ServeError::bad_request(format!("unknown op `{other}`"))),
+    };
+    Ok(Frame { v: version, op, options })
+}
+
+/// Per-request options of a v2 frame.  Unlike v1, every option is
+/// validated strictly — an ill-typed value is a `bad_request`.
+fn decode_options(doc: &Value) -> Result<RequestOptions, ServeError> {
+    let mut o = RequestOptions::default();
+    if let Some(k) = doc.get("k") {
+        o.k = Some(k.as_usize().ok_or_else(|| {
+            ServeError::bad_request("`k` must be a non-negative integer")
+        })?);
+    }
+    if let Some(t) = doc.get("temperature") {
+        let t = t
+            .as_f64()
+            .ok_or_else(|| ServeError::bad_request("`temperature` must be a number"))?;
+        if t != 1.0 {
+            return Err(ServeError::invalid(format!(
+                "temperature {t} is unsupported (only 1.0 is served)"
+            )));
+        }
+        o.temperature = t as f32;
+    }
+    if let Some(p) = doc.get("priority") {
+        let s = p
+            .as_str()
+            .ok_or_else(|| ServeError::bad_request("`priority` must be a string"))?;
+        o.priority = Priority::parse(s).ok_or_else(|| {
+            ServeError::bad_request(format!("unknown priority `{s}` (interactive|batch)"))
+        })?;
+    }
+    if let Some(d) = doc.get("deadline_ms") {
+        let ms = d.as_usize().ok_or_else(|| {
+            ServeError::bad_request("`deadline_ms` must be a non-negative integer")
+        })?;
+        o.deadline = Some(Duration::from_millis(ms as u64));
+    }
+    if let Some(t) = doc.get("tag") {
+        let s = t
+            .as_str()
+            .ok_or_else(|| ServeError::bad_request("`tag` must be a string"))?;
+        o.client_tag = Some(s.to_string());
+    }
+    Ok(o)
+}
+
+/// v1 frames only carry `k`, and parse it **leniently**: an ill-typed
+/// `k` falls back to the server default exactly like the legacy
+/// decoder (`get("k").and_then(as_usize)`) — the v1 surface is frozen,
+/// including its tolerances.
+fn decode_options_v1(doc: &Value) -> RequestOptions {
+    RequestOptions { k: doc.get("k").and_then(Value::as_usize), ..RequestOptions::default() }
+}
+
+fn missing(key: &str) -> ServeError {
+    ServeError::bad_request(format!("missing required field `{key}`"))
+}
+
+fn f32_field(doc: &Value, key: &str) -> Result<Vec<f32>, ServeError> {
+    doc.get(key)
+        .ok_or_else(|| missing(key))?
+        .to_f32_vec()
+        .map_err(|e| ServeError::bad_request(format!("`{key}`: {e}")))
+}
+
+fn i32_vec_field(doc: &Value, key: &str) -> Result<Vec<i32>, ServeError> {
+    doc.get(key)
+        .ok_or_else(|| missing(key))?
+        .to_i32_vec()
+        .map_err(|e| ServeError::bad_request(format!("`{key}`: {e}")))
+}
+
+fn u64_field(doc: &Value, key: &str) -> Result<u64, ServeError> {
+    doc.get(key)
+        .ok_or_else(|| missing(key))?
+        .as_i64()
+        .filter(|n| *n >= 0)
+        .map(|n| n as u64)
+        .ok_or_else(|| {
+            ServeError::bad_request(format!("`{key}` must be a non-negative integer"))
+        })
+}
+
+fn i32_field(doc: &Value, key: &str) -> Result<i32, ServeError> {
+    doc.get(key)
+        .ok_or_else(|| missing(key))?
+        .as_i64()
+        .and_then(|n| i32::try_from(n).ok())
+        .ok_or_else(|| ServeError::bad_request(format!("`{key}` must be an i32 integer")))
+}
+
+fn usize_field(doc: &Value, key: &str) -> Result<usize, ServeError> {
+    doc.get(key).ok_or_else(|| missing(key))?.as_usize().ok_or_else(|| {
+        ServeError::bad_request(format!("`{key}` must be a non-negative integer"))
+    })
+}
+
+// ---------------------------------------------------------------------------
+// response encoding — v1 (legacy shape, for v1 requests)
+// ---------------------------------------------------------------------------
+
+fn reply_fields(v: &mut Value, reply: &Reply) {
     match reply {
         Reply::Softmax { probs } => {
             v.set("probs", Value::from_f32_slice(probs));
@@ -90,33 +263,188 @@ pub fn encode_reply(reply: &Reply) -> String {
             );
         }
     }
-    v.to_json()
 }
 
-/// Encode an error reply.
-pub fn encode_error(msg: &str) -> String {
+/// Encode a successful reply (v1 shape).
+pub fn encode_reply(reply: &Reply) -> String {
     let mut v = Value::object();
-    v.set("ok", Value::Bool(false)).set("error", Value::String(msg.to_string()));
+    v.set("ok", Value::Bool(true));
+    reply_fields(&mut v, reply);
     v.to_json()
 }
 
-/// Encode a bare-object success (open_session, stats, ping).
+/// Encode an error reply (v1 shape: `error` is the message string; the
+/// machine-readable `code` rides along for v2-aware tooling).
+pub fn encode_error_v1(err: &ServeError) -> String {
+    let mut v = Value::object();
+    v.set("ok", Value::Bool(false))
+        .set("error", Value::String(err.message.clone()))
+        .set("code", Value::String(err.code.as_str().to_string()));
+    v.to_json()
+}
+
+/// Encode a bare-object success (open_session, stats, ping; v1 shape).
 pub fn encode_object(mut fields: Value) -> String {
     fields.set("ok", Value::Bool(true));
     fields.to_json()
 }
 
-/// Decode a response line on the client side.
+// ---------------------------------------------------------------------------
+// response encoding — v2
+// ---------------------------------------------------------------------------
+
+/// The structured v2 error object `{code, message}`.
+pub fn error_value(err: &ServeError) -> Value {
+    let mut v = Value::object();
+    v.set("code", Value::String(err.code.as_str().to_string()))
+        .set("message", Value::String(err.message.clone()));
+    v
+}
+
+/// Encode a successful reply (v2 shape).
+pub fn encode_reply_v2(reply: &Reply) -> String {
+    let mut v = Value::object();
+    v.set("v", Value::Number(PROTOCOL_VERSION as f64)).set("ok", Value::Bool(true));
+    reply_fields(&mut v, reply);
+    v.to_json()
+}
+
+/// Encode a structured error reply (v2 shape).
+pub fn encode_error_v2(err: &ServeError) -> String {
+    let mut v = Value::object();
+    v.set("v", Value::Number(PROTOCOL_VERSION as f64))
+        .set("ok", Value::Bool(false))
+        .set("error", error_value(err));
+    v.to_json()
+}
+
+/// Encode a bare-object success (v2 shape).
+pub fn encode_object_v2(mut fields: Value) -> String {
+    fields
+        .set("v", Value::Number(PROTOCOL_VERSION as f64))
+        .set("ok", Value::Bool(true));
+    fields.to_json()
+}
+
+/// Version-appropriate error encoding: v2 structured object for v2
+/// requests, legacy message-string shape for v1.
+pub fn encode_error_for(version: u64, err: &ServeError) -> String {
+    if version >= 2 {
+        encode_error_v2(err)
+    } else {
+        encode_error_v1(err)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// streaming frames (v2 only)
+// ---------------------------------------------------------------------------
+
+/// Encode one streamed token frame.
+pub fn encode_stream_token(stream: u64, frame: &TokenFrame) -> String {
+    let mut v = Value::object();
+    v.set("v", Value::Number(PROTOCOL_VERSION as f64))
+        .set("stream", Value::Number(stream as f64))
+        .set("index", Value::Number(frame.index as f64))
+        .set("token", Value::Number(frame.token as f64))
+        .set("vals", Value::from_f32_slice(&frame.vals))
+        .set(
+            "idx",
+            Value::Array(frame.idx.iter().map(|&i| Value::Number(i as f64)).collect()),
+        );
+    v.to_json()
+}
+
+/// Encode the successful terminal frame of a stream.
+pub fn encode_stream_done(stream: u64, tokens: &[i32]) -> String {
+    let mut v = Value::object();
+    v.set("v", Value::Number(PROTOCOL_VERSION as f64))
+        .set("stream", Value::Number(stream as f64))
+        .set("done", Value::Bool(true))
+        .set("tokens", Value::from_i32_slice(tokens));
+    v.to_json()
+}
+
+/// Encode the failed terminal frame of a stream.
+pub fn encode_stream_failed(stream: u64, err: &ServeError) -> String {
+    let mut v = Value::object();
+    v.set("v", Value::Number(PROTOCOL_VERSION as f64))
+        .set("stream", Value::Number(stream as f64))
+        .set("done", Value::Bool(true))
+        .set("error", error_value(err));
+    v.to_json()
+}
+
+// ---------------------------------------------------------------------------
+// client-side decoding
+// ---------------------------------------------------------------------------
+
+fn error_from(v: &Value) -> anyhow::Error {
+    match v.get("error") {
+        // v2: structured object
+        Some(Value::Object(_)) => {
+            let err = v.get("error").unwrap();
+            let code = err.get("code").and_then(Value::as_str).unwrap_or("internal");
+            let message =
+                err.get("message").and_then(Value::as_str).unwrap_or("unknown");
+            anyhow!("server error [{code}]: {message}")
+        }
+        // v1: message string (code may ride along)
+        Some(Value::String(s)) => match v.get("code").and_then(Value::as_str) {
+            Some(code) => anyhow!("server error [{code}]: {s}"),
+            None => anyhow!("server error: {s}"),
+        },
+        _ => anyhow!("server error: unknown"),
+    }
+}
+
+/// Decode a single-frame response line on the client side (either
+/// version).
 pub fn decode_response(line: &str) -> Result<Value> {
     let v = json::parse(line.trim()).map_err(|e| anyhow!("bad response json: {e}"))?;
     match v.get("ok").and_then(Value::as_bool) {
         Some(true) => Ok(v),
-        Some(false) => Err(anyhow!(
-            "server error: {}",
-            v.get("error").and_then(Value::as_str).unwrap_or("unknown")
-        )),
+        Some(false) => Err(error_from(&v)),
         None => Err(anyhow!("response missing `ok` field")),
     }
+}
+
+/// One event of a streamed v2 response.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StreamEvent {
+    /// A decoded token frame.
+    Token(TokenFrame),
+    /// Clean end of stream with the full selected-token list.
+    Done { tokens: Vec<i32> },
+}
+
+/// Decode one line of a streaming response.  Plain (non-stream) error
+/// responses and failed terminal frames both surface as `Err`.
+pub fn decode_stream_event(line: &str) -> Result<StreamEvent> {
+    let v = json::parse(line.trim()).map_err(|e| anyhow!("bad stream json: {e}"))?;
+    match v.get("ok").and_then(Value::as_bool) {
+        Some(false) => return Err(error_from(&v)),
+        Some(true) => bail!("unexpected non-stream response during generation"),
+        None => {}
+    }
+    if v.get("done").and_then(Value::as_bool) == Some(true) {
+        if v.get("error").is_some() {
+            return Err(error_from(&v));
+        }
+        return Ok(StreamEvent::Done { tokens: v.require("tokens")?.to_i32_vec()? });
+    }
+    let index = v
+        .require("index")?
+        .as_usize()
+        .ok_or_else(|| anyhow!("`index` must be a non-negative integer"))?;
+    let token = v
+        .require("token")?
+        .as_i64()
+        .ok_or_else(|| anyhow!("`token` must be an integer"))? as i32;
+    let vals = v.require("vals")?.to_f32_vec()?;
+    let idx: Vec<i64> =
+        v.require("idx")?.to_i32_vec()?.into_iter().map(|i| i as i64).collect();
+    Ok(StreamEvent::Token(TokenFrame { index, token, vals, idx }))
 }
 
 #[cfg(test)]
@@ -124,56 +452,136 @@ mod tests {
     use super::*;
 
     #[test]
-    fn decode_all_ops() {
+    fn decode_all_v1_ops() {
+        let f = decode_request(r#"{"op":"softmax","logits":[1,2]}"#).unwrap();
+        assert_eq!(f.v, 1);
+        assert_eq!(f.op, Op::Request(Payload::Softmax { logits: vec![1.0, 2.0] }));
+        assert_eq!(f.options, RequestOptions::default());
+
+        let f = decode_request(r#"{"op":"decode","hidden":[0.5],"k":3}"#).unwrap();
+        assert_eq!(f.op, Op::Request(Payload::DecodeTopK { hidden: vec![0.5] }));
+        assert_eq!(f.options.k, Some(3), "v1 `k` lands in options");
+
+        let f = decode_request(r#"{"op":"lm_step","session":7,"token":9}"#).unwrap();
+        assert_eq!(f.op, Op::Request(Payload::LmStep { session: 7, token: 9 }));
+        assert_eq!(f.options.k, None);
+
+        assert_eq!(decode_request(r#"{"op":"open_session"}"#).unwrap().op, Op::OpenSession);
         assert_eq!(
-            decode_request(r#"{"op":"softmax","logits":[1,2]}"#).unwrap(),
-            Op::Request(Payload::Softmax { logits: vec![1.0, 2.0] })
-        );
-        assert_eq!(
-            decode_request(r#"{"op":"decode","hidden":[0.5],"k":3}"#).unwrap(),
-            Op::Request(Payload::DecodeTopK { hidden: vec![0.5], k: Some(3) })
-        );
-        assert_eq!(
-            decode_request(r#"{"op":"lm_step","session":7,"token":9}"#).unwrap(),
-            Op::Request(Payload::LmStep { session: 7, token: 9, k: None })
-        );
-        assert_eq!(decode_request(r#"{"op":"open_session"}"#).unwrap(), Op::OpenSession);
-        assert_eq!(
-            decode_request(r#"{"op":"fork_session","session":2}"#).unwrap(),
+            decode_request(r#"{"op":"fork_session","session":2}"#).unwrap().op,
             Op::ForkSession(2)
         );
         assert_eq!(
-            decode_request(r#"{"op":"close_session","session":3}"#).unwrap(),
+            decode_request(r#"{"op":"close_session","session":3}"#).unwrap().op,
             Op::CloseSession(3)
         );
-        assert_eq!(decode_request(r#"{"op":"ping"}"#).unwrap(), Op::Ping);
-        assert_eq!(decode_request(r#"{"op":"stats"}"#).unwrap(), Op::Stats);
+        assert_eq!(decode_request(r#"{"op":"ping"}"#).unwrap().op, Op::Ping);
+        assert_eq!(decode_request(r#"{"op":"stats"}"#).unwrap().op, Op::Stats);
     }
 
     #[test]
-    fn rejects_malformed() {
-        assert!(decode_request("not json").is_err());
-        assert!(decode_request(r#"{"op":"bogus"}"#).is_err());
-        assert!(decode_request(r#"{"op":"decode"}"#).is_err(), "missing hidden");
-        assert!(decode_request(r#"{"op":"lm_step","session":"x","token":1}"#).is_err());
+    fn decode_v2_options_and_generate() {
+        let f = decode_request(
+            r#"{"v":2,"op":"decode","hidden":[0.5],"k":3,"priority":"batch",
+                "deadline_ms":250,"tag":"loadgen-3","temperature":1}"#,
+        )
+        .unwrap();
+        assert_eq!(f.v, 2);
+        assert_eq!(f.options.k, Some(3));
+        assert_eq!(f.options.priority, Priority::Batch);
+        assert_eq!(f.options.deadline, Some(Duration::from_millis(250)));
+        assert_eq!(f.options.client_tag.as_deref(), Some("loadgen-3"));
+        assert_eq!(f.options.temperature, 1.0);
+
+        let f = decode_request(
+            r#"{"v":2,"op":"generate","session":4,"prompt":[3,9],"max_tokens":8,"k":5}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            f.op,
+            Op::Request(Payload::Generate {
+                session: 4,
+                prompt_tokens: vec![3, 9],
+                max_tokens: 8
+            })
+        );
+        assert_eq!(f.options.k, Some(5));
     }
 
     #[test]
-    fn reply_roundtrip() {
-        let line = encode_reply(&Reply::TopK { vals: vec![0.5, 0.25], idx: vec![7, 3] });
+    fn rejects_malformed_with_typed_errors() {
+        use crate::coordinator::ErrorCode;
+        let e = decode_request("not json").unwrap_err();
+        assert_eq!(e.error.code, ErrorCode::BadRequest);
+        assert_eq!(e.v, 1);
+        let e = decode_request(r#"{"op":"bogus"}"#).unwrap_err();
+        assert_eq!(e.error.code, ErrorCode::BadRequest);
+        let e = decode_request(r#"{"op":"decode"}"#).unwrap_err();
+        assert!(e.error.message.contains("hidden"), "{}", e.error);
+        let e = decode_request(r#"{"op":"lm_step","session":"x","token":1}"#).unwrap_err();
+        assert_eq!(e.error.code, ErrorCode::BadRequest);
+        // wrong / non-integer versions
+        let e = decode_request(r#"{"v":3,"op":"ping"}"#).unwrap_err();
+        assert_eq!(e.v, 2, "unsupported-version errors render as v2");
+        assert!(e.error.message.contains("version"), "{}", e.error);
+        let e = decode_request(r#"{"v":"two","op":"ping"}"#).unwrap_err();
+        assert_eq!(e.error.code, ErrorCode::BadRequest);
+        // generate is v2-only
+        let e = decode_request(r#"{"op":"generate","session":1,"prompt":[1],"max_tokens":2}"#)
+            .unwrap_err();
+        assert!(e.error.message.contains("v2"), "{}", e.error);
+        // unsupported temperature is invalid_argument, not bad_request
+        let e = decode_request(r#"{"v":2,"op":"ping","temperature":0.7}"#).unwrap_err();
+        assert_eq!(e.error.code, ErrorCode::InvalidArgument);
+    }
+
+    #[test]
+    fn reply_roundtrip_both_versions() {
+        for encode in [encode_reply, encode_reply_v2] {
+            let line = encode(&Reply::TopK { vals: vec![0.5, 0.25], idx: vec![7, 3] });
+            let v = decode_response(&line).unwrap();
+            assert_eq!(v.get("vals").unwrap().to_f32_vec().unwrap(), vec![0.5, 0.25]);
+            assert_eq!(v.get("idx").unwrap().to_i32_vec().unwrap(), vec![7, 3]);
+
+            let line = encode(&Reply::Softmax { probs: vec![1.0] });
+            let v = decode_response(&line).unwrap();
+            assert_eq!(v.get("probs").unwrap().to_f32_vec().unwrap(), vec![1.0]);
+        }
+        let line = encode_reply_v2(&Reply::Softmax { probs: vec![1.0] });
         let v = decode_response(&line).unwrap();
-        assert_eq!(v.get("vals").unwrap().to_f32_vec().unwrap(), vec![0.5, 0.25]);
-        assert_eq!(v.get("idx").unwrap().to_i32_vec().unwrap(), vec![7, 3]);
-
-        let line = encode_reply(&Reply::Softmax { probs: vec![1.0] });
-        let v = decode_response(&line).unwrap();
-        assert_eq!(v.get("probs").unwrap().to_f32_vec().unwrap(), vec![1.0]);
+        assert_eq!(v.get("v").unwrap().as_i64(), Some(2));
     }
 
     #[test]
-    fn error_roundtrip() {
-        let line = encode_error("boom");
-        let err = decode_response(&line).unwrap_err();
-        assert!(format!("{err}").contains("boom"));
+    fn error_roundtrip_both_versions() {
+        let err = ServeError::not_found("unknown session 9");
+        let e = decode_response(&encode_error_v1(&err)).unwrap_err();
+        assert!(format!("{e}").contains("unknown session 9"), "{e}");
+        assert!(format!("{e}").contains("not_found"), "v1 carries the code: {e}");
+        let e = decode_response(&encode_error_v2(&err)).unwrap_err();
+        assert!(format!("{e}").contains("unknown session 9"), "{e}");
+        assert!(format!("{e}").contains("not_found"), "{e}");
+        assert_eq!(encode_error_for(1, &err), encode_error_v1(&err));
+        assert_eq!(encode_error_for(2, &err), encode_error_v2(&err));
+    }
+
+    #[test]
+    fn stream_frames_roundtrip() {
+        let frame =
+            TokenFrame { index: 2, token: 17, vals: vec![0.5, 0.125], idx: vec![17, 3] };
+        let ev = decode_stream_event(&encode_stream_token(9, &frame)).unwrap();
+        assert_eq!(ev, StreamEvent::Token(frame));
+
+        let ev = decode_stream_event(&encode_stream_done(9, &[17, 3, 3])).unwrap();
+        assert_eq!(ev, StreamEvent::Done { tokens: vec![17, 3, 3] });
+
+        let line = encode_stream_failed(9, &ServeError::deadline("stream deadline exhausted"));
+        let e = decode_stream_event(&line).unwrap_err();
+        assert!(format!("{e}").contains("deadline_exceeded"), "{e}");
+
+        // a plain v2 error frame also surfaces as Err
+        let line = encode_error_v2(&ServeError::not_found("unknown session 8"));
+        let e = decode_stream_event(&line).unwrap_err();
+        assert!(format!("{e}").contains("not_found"), "{e}");
     }
 }

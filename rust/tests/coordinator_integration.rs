@@ -4,7 +4,7 @@
 use std::time::Duration;
 
 use onlinesoftmax::config::{ServeConfig, ServingMode};
-use onlinesoftmax::coordinator::{beam, Coordinator, Payload, Reply};
+use onlinesoftmax::coordinator::{beam, Coordinator, Payload, Reply, RequestOptions};
 use onlinesoftmax::rng::Xoshiro256pp;
 use onlinesoftmax::softmax::{fused, scalar};
 
@@ -100,7 +100,11 @@ fn decode_safe_online_and_sharded_all_agree() {
         let coord = Coordinator::start(cfg).unwrap();
         assert_eq!(coord.executor().hidden(), hidden_len);
         match coord
-            .call(Payload::DecodeTopK { hidden: hidden.clone(), k: Some(5) }, TIMEOUT)
+            .call_opts(
+                Payload::DecodeTopK { hidden: hidden.clone() },
+                RequestOptions::with_k(5),
+                TIMEOUT,
+            )
             .unwrap()
         {
             Reply::TopK { vals, idx } => results.push((vals, idx)),
@@ -166,7 +170,7 @@ fn per_request_errors_do_not_poison_batch() {
     let bad = coord.submit(Payload::Softmax { logits: vec![1.0; 3] }).unwrap();
     assert!(good.recv_timeout(TIMEOUT).unwrap().is_ok());
     let err = bad.recv_timeout(TIMEOUT).unwrap().unwrap_err();
-    assert!(err.contains("length"), "{err}");
+    assert!(err.to_string().contains("length"), "{err}");
     coord.shutdown();
 }
 
@@ -176,20 +180,26 @@ fn lm_sessions_step_deterministically() {
     let coord = Coordinator::start(&config(ServingMode::Online, 1)).unwrap();
     let s1 = coord.open_session();
     let s2 = coord.open_session();
-    let r1 = coord.call(Payload::LmStep { session: s1, token: 17, k: Some(5) }, TIMEOUT).unwrap();
-    let r2 = coord.call(Payload::LmStep { session: s2, token: 17, k: Some(5) }, TIMEOUT).unwrap();
+    let r1 = coord
+        .call_opts(Payload::LmStep { session: s1, token: 17 }, RequestOptions::with_k(5), TIMEOUT)
+        .unwrap();
+    let r2 = coord
+        .call_opts(Payload::LmStep { session: s2, token: 17 }, RequestOptions::with_k(5), TIMEOUT)
+        .unwrap();
     assert_eq!(r1, r2, "same token from same initial state → same distribution");
     // diverge the sessions
-    let r1b =
-        coord.call(Payload::LmStep { session: s1, token: 3, k: Some(5) }, TIMEOUT).unwrap();
-    let r2b =
-        coord.call(Payload::LmStep { session: s2, token: 9, k: Some(5) }, TIMEOUT).unwrap();
+    let r1b = coord
+        .call_opts(Payload::LmStep { session: s1, token: 3 }, RequestOptions::with_k(5), TIMEOUT)
+        .unwrap();
+    let r2b = coord
+        .call_opts(Payload::LmStep { session: s2, token: 9 }, RequestOptions::with_k(5), TIMEOUT)
+        .unwrap();
     assert_ne!(r1b, r2b, "different tokens diverge the state");
     // unknown session errors
     let err = coord
-        .call(Payload::LmStep { session: 999_999, token: 0, k: None }, TIMEOUT)
+        .call(Payload::LmStep { session: 999_999, token: 0 }, TIMEOUT)
         .unwrap_err();
-    assert!(err.contains("unknown session"), "{err}");
+    assert!(err.to_string().contains("unknown session"), "{err}");
     coord.shutdown();
 }
 
@@ -220,8 +230,8 @@ fn invalid_k_rejected() {
     let coord = Coordinator::start(&config(ServingMode::Online, 1)).unwrap();
     let hidden = vec![0.0; coord.executor().hidden()];
     let err = coord
-        .call(Payload::DecodeTopK { hidden, k: Some(100) }, TIMEOUT)
+        .call_opts(Payload::DecodeTopK { hidden }, RequestOptions::with_k(100), TIMEOUT)
         .unwrap_err();
-    assert!(err.contains("k="), "{err}");
+    assert!(err.to_string().contains("k="), "{err}");
     coord.shutdown();
 }

@@ -8,7 +8,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use onlinesoftmax::config::{BackendKind, ServeConfig, ServingMode};
-use onlinesoftmax::coordinator::{beam, Coordinator, Payload, Reply};
+use onlinesoftmax::coordinator::{beam, Coordinator, Payload, Reply, RequestOptions};
 use onlinesoftmax::metrics;
 use onlinesoftmax::rng::Xoshiro256pp;
 use onlinesoftmax::server::{client::Client, Server};
@@ -90,10 +90,14 @@ fn host_sharded_equals_serial_fallback() {
 
     let hidden = rng.logits(32, 1.0);
     let d_sharded = sharded
-        .call(Payload::DecodeTopK { hidden: hidden.clone(), k: Some(5) }, TIMEOUT)
+        .call_opts(
+            Payload::DecodeTopK { hidden: hidden.clone() },
+            RequestOptions::with_k(5),
+            TIMEOUT,
+        )
         .unwrap();
     let d_serial = serial
-        .call(Payload::DecodeTopK { hidden, k: Some(5) }, TIMEOUT)
+        .call_opts(Payload::DecodeTopK { hidden }, RequestOptions::with_k(5), TIMEOUT)
         .unwrap();
     match (d_sharded, d_serial) {
         (Reply::TopK { vals: v1, idx: i1 }, Reply::TopK { vals: v2, idx: i2 }) => {
@@ -116,14 +120,22 @@ fn host_decode_matches_reference_and_modes_agree() {
     let hidden = rng.logits(32, 1.0);
 
     let (vals_o, idx_o) = match online
-        .call(Payload::DecodeTopK { hidden: hidden.clone(), k: Some(5) }, TIMEOUT)
+        .call_opts(
+            Payload::DecodeTopK { hidden: hidden.clone() },
+            RequestOptions::with_k(5),
+            TIMEOUT,
+        )
         .unwrap()
     {
         Reply::TopK { vals, idx } => (vals, idx),
         other => panic!("{other:?}"),
     };
     let (vals_s, idx_s) = match safe
-        .call(Payload::DecodeTopK { hidden: hidden.clone(), k: Some(5) }, TIMEOUT)
+        .call_opts(
+            Payload::DecodeTopK { hidden: hidden.clone() },
+            RequestOptions::with_k(5),
+            TIMEOUT,
+        )
         .unwrap()
     {
         Reply::TopK { vals, idx } => (vals, idx),
@@ -210,12 +222,17 @@ fn host_grid_batches_are_bitwise_identical_to_per_row_dispatch() {
 
     let rx_a: Vec<_> = hiddens
         .iter()
-        .map(|h| grid.submit(Payload::DecodeTopK { hidden: h.clone(), k: Some(7) }).unwrap())
+        .map(|h| {
+            grid.submit_opts(Payload::DecodeTopK { hidden: h.clone() }, RequestOptions::with_k(7))
+                .unwrap()
+        })
         .collect();
     let rx_b: Vec<_> = hiddens
         .iter()
         .map(|h| {
-            per_row.submit(Payload::DecodeTopK { hidden: h.clone(), k: Some(7) }).unwrap()
+            per_row
+                .submit_opts(Payload::DecodeTopK { hidden: h.clone() }, RequestOptions::with_k(7))
+                .unwrap()
         })
         .collect();
     for (ra, rb) in rx_a.into_iter().zip(rx_b) {
@@ -262,7 +279,11 @@ fn host_artifacts_stub_backend_serves_via_per_tile_fallback() {
     // scan, so even the selected indices are the reference's).
     let hidden = rng.logits(32, 1.0);
     match coord
-        .call(Payload::DecodeTopK { hidden: hidden.clone(), k: Some(5) }, TIMEOUT)
+        .call_opts(
+            Payload::DecodeTopK { hidden: hidden.clone() },
+            RequestOptions::with_k(5),
+            TIMEOUT,
+        )
         .unwrap()
     {
         Reply::TopK { vals, idx } => {
@@ -302,7 +323,11 @@ fn host_shard_backends_agree_on_served_decodes() {
         cfg.shard_backend = backend;
         let coord = Coordinator::start(&cfg).unwrap();
         let (vals, idx) = match coord
-            .call(Payload::DecodeTopK { hidden: hidden.clone(), k: Some(7) }, TIMEOUT)
+            .call_opts(
+                Payload::DecodeTopK { hidden: hidden.clone() },
+                RequestOptions::with_k(7),
+                TIMEOUT,
+            )
             .unwrap()
         {
             Reply::TopK { vals, idx } => (vals, idx),
@@ -330,12 +355,16 @@ fn host_per_request_errors_do_not_poison_batch() {
     let bad = coord.submit(Payload::Softmax { logits: vec![1.0; 3] }).unwrap();
     assert!(good.recv_timeout(TIMEOUT).unwrap().is_ok());
     let err = bad.recv_timeout(TIMEOUT).unwrap().unwrap_err();
-    assert!(err.contains("length"), "{err}");
+    assert!(err.to_string().contains("length"), "{err}");
 
     let err = coord
-        .call(Payload::DecodeTopK { hidden: vec![0.0; 32], k: Some(10_000) }, TIMEOUT)
+        .call_opts(
+            Payload::DecodeTopK { hidden: vec![0.0; 32] },
+            RequestOptions::with_k(10_000),
+            TIMEOUT,
+        )
         .unwrap_err();
-    assert!(err.contains("k="), "{err}");
+    assert!(err.to_string().contains("k="), "{err}");
     coord.shutdown();
 }
 
@@ -357,18 +386,19 @@ fn host_all_invalid_batch_is_errors_not_a_panic() {
         .collect();
     for rx in rxs {
         let err = rx.recv_timeout(TIMEOUT).unwrap().unwrap_err();
-        assert!(err.contains("length"), "{err}");
+        assert!(err.to_string().contains("length"), "{err}");
     }
 
     // Decode: every hidden state has the wrong width.
     let rxs: Vec<_> = (0..5)
         .map(|_| {
-            coord.submit(Payload::DecodeTopK { hidden: vec![0.0; 7], k: Some(3) }).unwrap()
+            let opts = RequestOptions::with_k(3);
+            coord.submit_opts(Payload::DecodeTopK { hidden: vec![0.0; 7] }, opts).unwrap()
         })
         .collect();
     for rx in rxs {
         let err = rx.recv_timeout(TIMEOUT).unwrap().unwrap_err();
-        assert!(err.contains("length"), "{err}");
+        assert!(err.to_string().contains("length"), "{err}");
     }
 
     // LmStep: every session id is unknown → the decode stage sees an
@@ -376,13 +406,16 @@ fn host_all_invalid_batch_is_errors_not_a_panic() {
     let rxs: Vec<_> = (0..5u64)
         .map(|i| {
             coord
-                .submit(Payload::LmStep { session: 777_000 + i, token: 1, k: Some(3) })
+                .submit_opts(
+                    Payload::LmStep { session: 777_000 + i, token: 1 },
+                    RequestOptions::with_k(3),
+                )
                 .unwrap()
         })
         .collect();
     for rx in rxs {
         let err = rx.recv_timeout(TIMEOUT).unwrap().unwrap_err();
-        assert!(err.contains("unknown session"), "{err}");
+        assert!(err.to_string().contains("unknown session"), "{err}");
     }
 
     // The coordinator survived all three empty-live batches.
@@ -397,18 +430,26 @@ fn host_lm_sessions_step_deterministically() {
     let coord = Coordinator::start(&host_config(ServingMode::Online, 512)).unwrap();
     let s1 = coord.open_session();
     let s2 = coord.open_session();
-    let r1 = coord.call(Payload::LmStep { session: s1, token: 17, k: Some(5) }, TIMEOUT).unwrap();
-    let r2 = coord.call(Payload::LmStep { session: s2, token: 17, k: Some(5) }, TIMEOUT).unwrap();
+    let r1 = coord
+        .call_opts(Payload::LmStep { session: s1, token: 17 }, RequestOptions::with_k(5), TIMEOUT)
+        .unwrap();
+    let r2 = coord
+        .call_opts(Payload::LmStep { session: s2, token: 17 }, RequestOptions::with_k(5), TIMEOUT)
+        .unwrap();
     assert_eq!(r1, r2, "same token from same initial state → same distribution");
     // diverge the sessions
-    let r1b = coord.call(Payload::LmStep { session: s1, token: 3, k: Some(5) }, TIMEOUT).unwrap();
-    let r2b = coord.call(Payload::LmStep { session: s2, token: 9, k: Some(5) }, TIMEOUT).unwrap();
+    let r1b = coord
+        .call_opts(Payload::LmStep { session: s1, token: 3 }, RequestOptions::with_k(5), TIMEOUT)
+        .unwrap();
+    let r2b = coord
+        .call_opts(Payload::LmStep { session: s2, token: 9 }, RequestOptions::with_k(5), TIMEOUT)
+        .unwrap();
     assert_ne!(r1b, r2b, "different tokens diverge the state");
     // unknown session errors
     let err = coord
-        .call(Payload::LmStep { session: 999_999, token: 0, k: None }, TIMEOUT)
+        .call(Payload::LmStep { session: 999_999, token: 0 }, TIMEOUT)
         .unwrap_err();
-    assert!(err.contains("unknown session"), "{err}");
+    assert!(err.to_string().contains("unknown session"), "{err}");
     coord.shutdown();
 }
 

@@ -1,0 +1,402 @@
+//! v2 protocol end-to-end over TCP: server-side streaming generation,
+//! per-request options, structured errors, and v1 wire compatibility.
+//!
+//! This suite is the acceptance gate for the typed v2 serving API:
+//!
+//! * a `generate` request for N tokens completes over a single
+//!   connection with N streamed token frames, **bitwise-identical**
+//!   to N sequential v1 `lm_step` calls;
+//! * v1 wire requests (no `"v"` field) still decode and serve
+//!   unchanged;
+//! * concurrent streams demonstrably share decode batches
+//!   (`coordinator.batch.lm_step.peak` > 1);
+//! * malformed / oversized / wrong-version frames produce structured
+//!   errors without killing the connection.
+//!
+//! Host backend only — no artifacts, so CI always runs it.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use onlinesoftmax::config::{BackendKind, ServeConfig, ServingMode};
+use onlinesoftmax::coordinator::Coordinator;
+use onlinesoftmax::json::{self, Value};
+use onlinesoftmax::metrics;
+use onlinesoftmax::server::{client::Client, Server, MAX_FRAME_BYTES};
+
+struct Running {
+    addr: String,
+    stop: Arc<std::sync::atomic::AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Drop for Running {
+    fn drop(&mut self) {
+        self.stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn host_config() -> ServeConfig {
+    let mut cfg = ServeConfig::default();
+    cfg.backend = BackendKind::Host;
+    cfg.mode = ServingMode::Online;
+    cfg.vocab = 2048;
+    cfg.hidden = 32;
+    cfg.host_shards = 4;
+    cfg.shard_threshold = 512;
+    cfg.grid_rows = 4;
+    cfg.workers = 2;
+    cfg.max_wait = Duration::from_micros(500);
+    cfg.addr = "127.0.0.1:0".into();
+    cfg
+}
+
+fn start_server(cfg: &ServeConfig) -> Running {
+    let coordinator = Arc::new(Coordinator::start(cfg).unwrap());
+    let server = Server::bind(&cfg.addr, coordinator, 16).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let stop = server.stop_handle();
+    let thread = std::thread::spawn(move || {
+        let _ = server.serve();
+    });
+    Running { addr, stop, thread: Some(thread) }
+}
+
+/// Raw line-JSON connection for speaking exact wire bytes (v1 frames,
+/// malformed frames) without the typed client in the way.
+struct RawConn {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl RawConn {
+    fn connect(addr: &str) -> RawConn {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(120)))
+            .unwrap();
+        let writer = stream.try_clone().unwrap();
+        RawConn { writer, reader: BufReader::new(stream) }
+    }
+
+    fn roundtrip(&mut self, line: &str) -> Value {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        self.writer.flush().unwrap();
+        self.read_frame()
+    }
+
+    fn read_frame(&mut self) -> Value {
+        let mut response = String::new();
+        let n = self.reader.read_line(&mut response).unwrap();
+        assert!(n > 0, "server closed connection");
+        json::parse(response.trim()).unwrap()
+    }
+}
+
+fn topk_of(v: &Value) -> (Vec<f32>, Vec<i64>) {
+    let vals = v.get("vals").unwrap().to_f32_vec().unwrap();
+    let idx: Vec<i64> = v
+        .get("idx")
+        .unwrap()
+        .to_i32_vec()
+        .unwrap()
+        .into_iter()
+        .map(|i| i as i64)
+        .collect();
+    (vals, idx)
+}
+
+/// The acceptance pin: one v2 `generate` stream reproduces N
+/// sequential **v1-wire** `lm_step` calls bitwise, over one connection.
+#[test]
+fn generate_stream_matches_sequential_v1_lm_steps() {
+    let server = start_server(&host_config());
+    const N: usize = 6;
+    const K: usize = 5;
+    let prompt = [7i32, 42];
+
+    // v2 streaming path.
+    let mut client = Client::connect(&server.addr).unwrap();
+    let s_gen = client.open_session().unwrap();
+    let frames = client.generate_all(s_gen, &prompt, N, Some(K)).unwrap();
+    assert_eq!(frames.len(), N, "one streamed frame per requested token");
+
+    // Reference path: raw v1 frames (no "v" field), one round-trip per
+    // token, fresh session on the same server.
+    let mut raw = RawConn::connect(&server.addr);
+    let opened = raw.roundtrip(r#"{"op":"open_session"}"#);
+    assert_eq!(opened.get("ok").and_then(Value::as_bool), Some(true));
+    assert!(opened.get("v").is_none(), "v1 responses carry no version field");
+    let s_ref = opened.get("session").unwrap().as_i64().unwrap();
+
+    // Feed the prompt prefix exactly like the server-side loop does.
+    for &t in &prompt[..prompt.len() - 1] {
+        let r = raw.roundtrip(&format!(
+            r#"{{"op":"lm_step","session":{s_ref},"token":{t},"k":{K}}}"#
+        ));
+        assert_eq!(r.get("ok").and_then(Value::as_bool), Some(true));
+    }
+    let mut cur = *prompt.last().unwrap();
+    for (i, frame) in frames.iter().enumerate() {
+        let r = raw.roundtrip(&format!(
+            r#"{{"op":"lm_step","session":{s_ref},"token":{cur},"k":{K}}}"#
+        ));
+        assert_eq!(r.get("ok").and_then(Value::as_bool), Some(true), "v1 step {i}");
+        let (vals, idx) = topk_of(&r);
+        assert_eq!(frame.vals, vals, "step {i}: bitwise-identical probabilities");
+        assert_eq!(frame.idx, idx, "step {i}: identical selections");
+        assert_eq!(frame.index, i);
+        cur = idx[0] as i32;
+        assert_eq!(frame.token, cur, "step {i}: same greedy choice");
+    }
+}
+
+/// Concurrent generation streams must share decode batches: the
+/// whole point of moving the loop server-side.  Witnessed by the
+/// `coordinator.batch.lm_step.peak` gauge (a monotone high-water mark
+/// that only multi-request batches can push past 1), and each stream
+/// must still get its own exact trajectory.
+#[test]
+fn concurrent_streams_share_decode_batches() {
+    let mut cfg = host_config();
+    // A generous batching window so the aligned first steps of every
+    // stream provably coalesce; afterwards the streams stay in
+    // lockstep because their steps complete together.
+    cfg.max_wait = Duration::from_millis(20);
+    cfg.max_batch = 16;
+    let server = start_server(&cfg);
+
+    const STREAMS: usize = 4;
+    const TOKENS: usize = 8;
+    let barrier = Arc::new(Barrier::new(STREAMS));
+    let outcomes: Vec<(i32, Vec<i32>)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..STREAMS)
+            .map(|w| {
+                let addr = server.addr.clone();
+                let barrier = barrier.clone();
+                scope.spawn(move || {
+                    let mut client = Client::connect(&addr).unwrap();
+                    let sid = client.open_session().unwrap();
+                    let start = 11 * (w as i32 + 1);
+                    barrier.wait();
+                    let frames =
+                        client.generate_all(sid, &[start], TOKENS, Some(5)).unwrap();
+                    assert_eq!(frames.len(), TOKENS);
+                    (start, frames.iter().map(|f| f.token).collect::<Vec<i32>>())
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let peak = metrics::global().gauge("coordinator.batch.lm_step.peak").get();
+    assert!(
+        peak > 1,
+        "concurrent streams must share decode batches (lm_step peak occupancy {peak})"
+    );
+
+    // Row integrity under cross-stream batching: replay each stream
+    // alone and require the identical trajectory.
+    let mut client = Client::connect(&server.addr).unwrap();
+    for (start, tokens) in &outcomes {
+        let sid = client.open_session().unwrap();
+        let frames = client.generate_all(sid, &[*start], TOKENS, Some(5)).unwrap();
+        let replay: Vec<i32> = frames.iter().map(|f| f.token).collect();
+        assert_eq!(
+            &replay, tokens,
+            "stream from token {start}: batched and solo trajectories match"
+        );
+    }
+}
+
+/// v1 frames keep working verbatim, and v1 errors keep their
+/// message-string shape (now with a machine-readable `code` alongside).
+#[test]
+fn v1_wire_requests_still_serve_unchanged() {
+    let server = start_server(&host_config());
+    let mut raw = RawConn::connect(&server.addr);
+
+    let r = raw.roundtrip(r#"{"op":"ping"}"#);
+    assert_eq!(r.get("ok").and_then(Value::as_bool), Some(true));
+    assert!(r.get("v").is_none());
+
+    // softmax
+    let logits: Vec<String> = (0..2048).map(|i| format!("{}", (i % 7) as f32 * 0.5)).collect();
+    let r = raw.roundtrip(&format!(r#"{{"op":"softmax","logits":[{}]}}"#, logits.join(",")));
+    let probs = r.get("probs").unwrap().to_f32_vec().unwrap();
+    assert_eq!(probs.len(), 2048);
+    let sum: f32 = probs.iter().sum();
+    assert!((sum - 1.0).abs() < 1e-3, "sum={sum}");
+
+    // decode with k
+    let hidden: Vec<String> = (0..32).map(|i| format!("0.{}", i % 10)).collect();
+    let r = raw.roundtrip(&format!(
+        r#"{{"op":"decode","hidden":[{}],"k":3}}"#,
+        hidden.join(",")
+    ));
+    let (vals, idx) = topk_of(&r);
+    assert_eq!(vals.len(), 3);
+    assert!(idx.iter().all(|&i| i >= 0 && (i as usize) < 2048));
+
+    // sessions over v1
+    let r = raw.roundtrip(r#"{"op":"open_session"}"#);
+    let sid = r.get("session").unwrap().as_i64().unwrap();
+    let r = raw.roundtrip(&format!(r#"{{"op":"lm_step","session":{sid},"token":4,"k":3}}"#));
+    assert_eq!(topk_of(&r).0.len(), 3);
+    let r = raw.roundtrip(&format!(r#"{{"op":"close_session","session":{sid}}}"#));
+    assert_eq!(r.get("ok").and_then(Value::as_bool), Some(true));
+
+    // v1 error shape: `error` is a string, `code` rides along.
+    let r = raw.roundtrip(&format!(r#"{{"op":"lm_step","session":{sid},"token":4}}"#));
+    assert_eq!(r.get("ok").and_then(Value::as_bool), Some(false));
+    let msg = r.get("error").and_then(Value::as_str).unwrap();
+    assert!(msg.contains("unknown session"), "{msg}");
+    assert_eq!(r.get("code").and_then(Value::as_str), Some("not_found"));
+
+    // `generate` is refused on v1 with a pointer to v2.
+    let r = raw.roundtrip(r#"{"op":"generate","session":1,"prompt":[1],"max_tokens":2}"#);
+    assert_eq!(r.get("ok").and_then(Value::as_bool), Some(false));
+    assert!(r.get("error").and_then(Value::as_str).unwrap().contains("v2"));
+}
+
+/// Malformed, wrong-version, and oversized frames all produce
+/// structured errors and leave the connection serving.
+#[test]
+fn bad_frames_get_structured_errors_and_connection_survives() {
+    let server = start_server(&host_config());
+    let mut raw = RawConn::connect(&server.addr);
+
+    // malformed json → v1-shaped error with a code
+    let r = raw.roundtrip("this is not json");
+    assert_eq!(r.get("ok").and_then(Value::as_bool), Some(false));
+    assert_eq!(r.get("code").and_then(Value::as_str), Some("bad_request"));
+
+    // unsupported version → v2 structured error
+    let r = raw.roundtrip(r#"{"v":3,"op":"ping"}"#);
+    assert_eq!(r.get("ok").and_then(Value::as_bool), Some(false));
+    let err = r.get("error").unwrap();
+    assert_eq!(err.get("code").and_then(Value::as_str), Some("bad_request"));
+    assert!(err.get("message").and_then(Value::as_str).unwrap().contains("version"));
+
+    // v2 structured validation error
+    let r = raw.roundtrip(r#"{"v":2,"op":"decode","hidden":[0.5],"temperature":0.7}"#);
+    let err = r.get("error").unwrap();
+    assert_eq!(err.get("code").and_then(Value::as_str), Some("invalid_argument"));
+
+    // oversized frame → answered and discarded without buffering it;
+    // the frame never parsed, so the error uses the v1 compatibility
+    // shape (string `error` + `code` rider) like other pre-parse
+    // failures
+    let chunk = vec![b'a'; 64 * 1024];
+    let mut sent = 0usize;
+    while sent <= MAX_FRAME_BYTES + chunk.len() {
+        raw.writer.write_all(&chunk).unwrap();
+        sent += chunk.len();
+    }
+    raw.writer.write_all(b"\n").unwrap();
+    raw.writer.flush().unwrap();
+    let r = raw.read_frame();
+    assert_eq!(r.get("ok").and_then(Value::as_bool), Some(false));
+    assert_eq!(r.get("code").and_then(Value::as_str), Some("bad_request"));
+    assert!(r.get("error").and_then(Value::as_str).unwrap().contains("exceeds"));
+
+    // the connection still serves
+    let r = raw.roundtrip(r#"{"op":"ping"}"#);
+    assert_eq!(r.get("ok").and_then(Value::as_bool), Some(true));
+}
+
+/// Per-request deadlines are honored end to end, and stream errors are
+/// typed.
+#[test]
+fn deadlines_and_stream_errors_are_typed() {
+    let server = start_server(&host_config());
+    let mut client = Client::connect(&server.addr).unwrap();
+
+    // An already-expired deadline is rejected with deadline_exceeded
+    // instead of being executed.
+    let zeros = [0.0f32; 32];
+    client.set_deadline_ms(Some(0));
+    let err = client.decode(&zeros, Some(3)).unwrap_err();
+    assert!(format!("{err}").contains("deadline_exceeded"), "{err}");
+    client.set_deadline_ms(None);
+    client.decode(&zeros, Some(3)).unwrap();
+
+    // Unknown-session generation fails the stream with not_found.
+    let mut stream = client.generate(999_999, &[1], 3, None).unwrap();
+    let first = stream.next().unwrap();
+    let err = first.unwrap_err();
+    assert!(format!("{err}").contains("not_found"), "{err}");
+    assert!(stream.next().is_none(), "stream is finished after the error");
+    drop(stream);
+
+    // Zero-budget stream deadline is typed too.
+    let sid = client.open_session().unwrap();
+    client.set_deadline_ms(Some(0));
+    let mut stream = client.generate(sid, &[1], 3, None).unwrap();
+    let err = stream.next().unwrap().unwrap_err();
+    assert!(format!("{err}").contains("deadline_exceeded"), "{err}");
+    client.set_deadline_ms(None);
+
+    // The connection survives failed streams.
+    client.ping().unwrap();
+}
+
+/// A final frame without a trailing newline is still served at EOF
+/// (legacy `read_line` behavior, kept by the framed read loop).
+#[test]
+fn final_frame_without_newline_is_served_at_eof() {
+    let server = start_server(&host_config());
+    let mut raw = RawConn::connect(&server.addr);
+    raw.writer.write_all(br#"{"op":"ping"}"#).unwrap();
+    raw.writer.flush().unwrap();
+    raw.writer.shutdown(std::net::Shutdown::Write).unwrap();
+    let r = raw.read_frame();
+    assert_eq!(r.get("ok").and_then(Value::as_bool), Some(true));
+}
+
+/// Abandoning a stream early drains it to the terminal frame
+/// (`Generation`'s Drop), so the connection keeps serving in order.
+#[test]
+fn abandoned_stream_does_not_desync_the_connection() {
+    let server = start_server(&host_config());
+    let mut client = Client::connect(&server.addr).unwrap();
+    let sid = client.open_session().unwrap();
+    {
+        let mut stream = client.generate(sid, &[3], 8, Some(5)).unwrap();
+        let first = stream.next().unwrap().unwrap();
+        assert_eq!(first.index, 0);
+        // dropped here after one of eight frames: Drop must consume
+        // the rest plus the terminal frame
+    }
+    client.ping().unwrap();
+    let (vals, _) = client.decode(&[0.0; 32], Some(3)).unwrap();
+    assert_eq!(vals.len(), 3);
+}
+
+/// The v2 `stats` reply exposes coordinator queue depth, per-class
+/// depths, and the active stream count.
+#[test]
+fn stats_reports_queues_and_streams() {
+    let server = start_server(&host_config());
+    let mut client = Client::connect(&server.addr).unwrap();
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.get("v").and_then(Value::as_i64), Some(2));
+    assert!(stats.get("metrics").is_some());
+    assert!(stats.get("queue_depth").and_then(Value::as_i64).is_some());
+    let depths = stats.get("queue_depths").unwrap();
+    for class in ["softmax", "decode", "lm_step"] {
+        assert!(
+            depths.get(class).and_then(Value::as_i64).is_some(),
+            "queue_depths.{class} present"
+        );
+    }
+    assert!(stats.get("active_streams").and_then(Value::as_i64).is_some());
+    assert!(stats.get("sessions").and_then(Value::as_i64).is_some());
+}

@@ -1,0 +1,150 @@
+//! Wire-codec robustness: the decoder must return a structured error
+//! for every malformed, truncated, type-confused, or wrong-version
+//! frame — never panic, never accept garbage.
+//!
+//! Pure codec-level fuzzing (no sockets; the over-TCP rendition —
+//! oversized frames, connection survival — lives in
+//! `rust/tests/stream_e2e.rs`).  Deterministic: seeded Xoshiro, so a
+//! failure reproduces.
+
+use onlinesoftmax::coordinator::ErrorCode;
+use onlinesoftmax::rng::Xoshiro256pp;
+use onlinesoftmax::server::wire;
+
+/// A valid frame of every op, used as the mutation corpus.
+fn corpus() -> Vec<String> {
+    vec![
+        r#"{"op":"softmax","logits":[1,2,3]}"#.to_string(),
+        r#"{"op":"decode","hidden":[0.5,-0.25],"k":3}"#.to_string(),
+        r#"{"op":"lm_step","session":7,"token":9,"k":5}"#.to_string(),
+        r#"{"op":"open_session"}"#.to_string(),
+        r#"{"op":"fork_session","session":1}"#.to_string(),
+        r#"{"op":"close_session","session":1}"#.to_string(),
+        r#"{"op":"stats"}"#.to_string(),
+        r#"{"op":"ping"}"#.to_string(),
+        r#"{"v":2,"op":"generate","session":4,"prompt":[3,9],"max_tokens":8,"k":5}"#.to_string(),
+        r#"{"v":2,"op":"decode","hidden":[0.5],"priority":"batch","deadline_ms":250,"tag":"t"}"#
+            .to_string(),
+    ]
+}
+
+#[test]
+fn corpus_decodes_cleanly() {
+    for frame in corpus() {
+        wire::decode_request(&frame).unwrap_or_else(|e| panic!("{frame}: {}", e.error));
+    }
+}
+
+#[test]
+fn every_truncation_errors_without_panicking() {
+    for frame in corpus() {
+        for cut in 0..frame.len() {
+            let truncated = &frame[..cut];
+            if let Err(e) = wire::decode_request(truncated) {
+                assert!(
+                    !e.error.message.is_empty(),
+                    "truncation of `{frame}` at {cut}: empty error message"
+                );
+            }
+            // A prefix that happens to parse is fine; the contract is
+            // "no panic, no hang" — and any Err is structured.
+        }
+    }
+}
+
+#[test]
+fn random_bytes_never_panic_the_decoder() {
+    let mut rng = Xoshiro256pp::seed_from_u64(0xF00D);
+    for _ in 0..2_000 {
+        let len = (rng.below(256) + 1) as usize;
+        let bytes: Vec<u8> = (0..len).map(|_| (rng.below(256)) as u8).collect();
+        let line = String::from_utf8_lossy(&bytes).into_owned();
+        let _ = wire::decode_request(&line);
+        let _ = wire::decode_response(&line);
+        let _ = wire::decode_stream_event(&line);
+    }
+}
+
+#[test]
+fn random_json_shaped_mutations_error_structurally() {
+    // Mutate valid frames: splice random printable bytes into random
+    // positions.  Whatever happens, an Err must carry a ServeError.
+    let mut rng = Xoshiro256pp::seed_from_u64(0xBEEF);
+    let corpus = corpus();
+    for _ in 0..2_000 {
+        let base = &corpus[rng.below(corpus.len() as u64) as usize];
+        let mut s = base.clone().into_bytes();
+        let splices = 1 + rng.below(4);
+        for _ in 0..splices {
+            let pos = rng.below(s.len() as u64 + 1) as usize;
+            let b = b' ' + (rng.below(95)) as u8; // printable ascii
+            s.insert(pos, b);
+        }
+        let line = String::from_utf8_lossy(&s).into_owned();
+        if let Err(e) = wire::decode_request(&line) {
+            assert!(ErrorCode::parse(e.error.code.as_str()).is_some());
+            assert!(e.v == 1 || e.v == 2, "error version is renderable: {}", e.v);
+        }
+    }
+}
+
+#[test]
+fn v1_k_stays_lenient_v2_k_is_strict() {
+    // The frozen v1 surface tolerates ill-typed `k` (falls back to the
+    // server default, as the legacy decoder did); v2 rejects it.
+    let f = wire::decode_request(r#"{"op":"decode","hidden":[0.5],"k":"five"}"#).unwrap();
+    assert_eq!(f.options.k, None, "v1 ill-typed k falls back to default");
+    let f = wire::decode_request(r#"{"op":"decode","hidden":[0.5],"k":-1}"#).unwrap();
+    assert_eq!(f.options.k, None);
+    let e = wire::decode_request(r#"{"v":2,"op":"decode","hidden":[0.5],"k":"five"}"#)
+        .unwrap_err();
+    assert_eq!(e.error.code, ErrorCode::BadRequest);
+}
+
+#[test]
+fn wrong_versions_are_rejected_typed() {
+    for v in ["0", "3", "-1", "99", "1.5", "\"2\"", "null", "[2]", "{}"] {
+        let line = format!(r#"{{"v":{v},"op":"ping"}}"#);
+        let e = wire::decode_request(&line).unwrap_err();
+        assert_eq!(e.error.code, ErrorCode::BadRequest, "v={v}: {}", e.error);
+    }
+    // explicit v1/v2 still fine
+    assert_eq!(wire::decode_request(r#"{"v":1,"op":"ping"}"#).unwrap().v, 1);
+    assert_eq!(wire::decode_request(r#"{"v":2,"op":"ping"}"#).unwrap().v, 2);
+}
+
+#[test]
+fn type_confused_fields_are_rejected_typed() {
+    let cases = [
+        r#"{"op":"softmax","logits":"not an array"}"#,
+        r#"{"op":"softmax","logits":[1,"x"]}"#,
+        r#"{"v":2,"op":"decode","hidden":[0.5],"k":"five"}"#,
+        r#"{"v":2,"op":"decode","hidden":[0.5],"k":-1}"#,
+        r#"{"op":"lm_step","session":-4,"token":1}"#,
+        r#"{"op":"lm_step","session":1,"token":99999999999999}"#,
+        r#"{"v":2,"op":"decode","hidden":[0.5],"priority":"urgent"}"#,
+        r#"{"v":2,"op":"decode","hidden":[0.5],"deadline_ms":"soon"}"#,
+        r#"{"v":2,"op":"decode","hidden":[0.5],"tag":7}"#,
+        r#"{"v":2,"op":"generate","session":1,"prompt":"abc","max_tokens":2}"#,
+        r#"{"v":2,"op":"generate","session":1,"prompt":[1],"max_tokens":-2}"#,
+        r#"{"op":7}"#,
+        r#"[1,2,3]"#,
+        r#""just a string""#,
+    ];
+    for line in cases {
+        let e = wire::decode_request(line).unwrap_err();
+        assert_eq!(e.error.code, ErrorCode::BadRequest, "{line}: {}", e.error);
+        assert!(!e.error.message.is_empty());
+    }
+}
+
+#[test]
+fn deep_nesting_is_rejected_not_overflowed() {
+    // The recursive-descent parser should error out on malformed deep
+    // nesting rather than crash; depth is bounded by the input size we
+    // hand it.
+    let deep = format!("{}1{}", "[".repeat(1_000), "]".repeat(1_000));
+    let _ = wire::decode_request(&deep);
+    let open_only = "[".repeat(2_000);
+    assert!(wire::decode_request(&open_only).is_err());
+}
