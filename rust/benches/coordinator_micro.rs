@@ -70,6 +70,7 @@ fn main() {
             max_batch: 16,
             max_wait: Duration::from_secs(1),
             queue_capacity: 1024,
+            ..BatchPolicy::default()
         });
         let s = bench(&cfg, || {
             for i in 0..16u64 {

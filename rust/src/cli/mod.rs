@@ -189,7 +189,16 @@ pub fn help_text(version: &str) -> String {
                                 (env default: OSMAX_POOL_SCHED) [steal]\n\
            --max-batch N        dynamic batch bound [16]\n\
            --max-wait-us N      batch deadline      [2000]\n\
-           --queue-capacity N   admission queue bound         [1024]\n\
+           --queue-capacity N   global admission queue bound  [1024]\n\
+           --admission-interactive-cap N  interactive-lane admission\n\
+                                quota; excess rejected typed `overloaded`\n\
+                                (0 = no lane quota)           [0]\n\
+           --admission-batch-cap N  batch-lane admission quota\n\
+                                (0 = no lane quota)           [0]\n\
+           --cache-capacity N   result-cache entries in the coalescing\n\
+                                front (0 = no caching)        [256]\n\
+           --cache-coalesce B   dedupe identical in-flight requests\n\
+                                into one execution: true|false [true]\n\
            --workers N          executor workers    [2]\n\
            --k N                default decode top-k          [5]\n\
            --request-timeout MS per-request handling budget; per-request\n\
@@ -203,7 +212,19 @@ pub fn help_text(version: &str) -> String {
            --threads N          worker threads for parallel/sharded variants\n\
                                 (0 = one per core)                           [1]\n\
            --smoke              minimal sizes/iterations (CI rot check)\n\
-           --out FILE           also append results as JSON lines\n"
+           --out FILE           also append results as JSON lines\n\n\
+         LOADGEN OPTIONS:\n\
+           --addr HOST:PORT     target server       [127.0.0.1:7070]\n\
+           --requests N         total requests      [200]\n\
+           --concurrency N      worker connections  [4]\n\
+           --op O               decode|softmax|generate [decode]\n\
+           --tokens N           tokens per generate stream [8]\n\
+           --priority P         interactive|batch|mixed (workers\n\
+                                alternate per request)  [interactive]\n\
+           --deadline-ms MS     per-request deadline (omit for none);\n\
+                                typed rejections are tallied, not fatal\n\
+           --distinct N         payload variety: cycle N distinct\n\
+                                payloads (0 = all unique)     [0]\n"
     )
 }
 

@@ -91,6 +91,21 @@ pub struct ServeConfig {
     pub max_wait: Duration,
     /// Admission queue capacity (backpressure beyond this).
     pub queue_capacity: usize,
+    /// Per-priority admission quota for `interactive` requests: at
+    /// most this many may be queued at once; excess is rejected with
+    /// a typed `overloaded` error instead of blocking.  `0` disables
+    /// the lane quota (only the global `queue_capacity` applies).
+    pub admission_interactive_cap: usize,
+    /// Per-priority admission quota for `batch` requests (`0` = off).
+    /// A finite batch cap keeps throughput backlog from consuming the
+    /// whole queue and blocking interactive admission.
+    pub admission_batch_cap: usize,
+    /// Result-cache entries in the coalescing front (`0` disables
+    /// caching).  Only stateless softmax/decode results are cached.
+    pub cache_capacity: usize,
+    /// Dedupe identical in-flight requests into one execution with
+    /// fan-out replies (the coalescing half of the front).
+    pub cache_coalesce: bool,
     /// Worker threads executing batches.
     pub workers: usize,
     /// Default top-k for decode requests that do not specify one.
@@ -159,6 +174,10 @@ impl Default for ServeConfig {
             max_batch: 16,
             max_wait: Duration::from_millis(2),
             queue_capacity: 1024,
+            admission_interactive_cap: 0,
+            admission_batch_cap: 0,
+            cache_capacity: 256,
+            cache_coalesce: true,
             workers: 2,
             default_k: 5,
             seed: 0xC0FFEE,
@@ -212,6 +231,18 @@ impl ServeConfig {
         }
         if let Some(n) = v.get("queue_capacity").and_then(Value::as_usize) {
             cfg.queue_capacity = n;
+        }
+        if let Some(n) = v.get("admission_interactive_cap").and_then(Value::as_usize) {
+            cfg.admission_interactive_cap = n;
+        }
+        if let Some(n) = v.get("admission_batch_cap").and_then(Value::as_usize) {
+            cfg.admission_batch_cap = n;
+        }
+        if let Some(n) = v.get("cache_capacity").and_then(Value::as_usize) {
+            cfg.cache_capacity = n;
+        }
+        if let Some(b) = v.get("cache_coalesce").and_then(Value::as_bool) {
+            cfg.cache_coalesce = b;
         }
         if let Some(n) = v.get("workers").and_then(Value::as_usize) {
             cfg.workers = n;
@@ -269,6 +300,12 @@ impl ServeConfig {
         self.max_wait =
             Duration::from_micros(args.opt_parse("max-wait-us", self.max_wait.as_micros() as u64)?);
         self.queue_capacity = args.opt_parse("queue-capacity", self.queue_capacity)?;
+        self.admission_interactive_cap =
+            args.opt_parse("admission-interactive-cap", self.admission_interactive_cap)?;
+        self.admission_batch_cap =
+            args.opt_parse("admission-batch-cap", self.admission_batch_cap)?;
+        self.cache_capacity = args.opt_parse("cache-capacity", self.cache_capacity)?;
+        self.cache_coalesce = args.opt_parse("cache-coalesce", self.cache_coalesce)?;
         self.workers = args.opt_parse("workers", self.workers)?;
         self.default_k = args.opt_parse("k", self.default_k)?;
         self.seed = args.opt_parse("seed", self.seed)?;
@@ -309,6 +346,18 @@ impl ServeConfig {
                 self.max_batch
             );
         }
+        for (name, cap) in [
+            ("admission_interactive_cap", self.admission_interactive_cap),
+            ("admission_batch_cap", self.admission_batch_cap),
+        ] {
+            if cap > self.queue_capacity {
+                bail!(
+                    "{name} ({cap}) must be <= queue_capacity ({}); \
+                     use 0 to disable the lane quota",
+                    self.queue_capacity
+                );
+            }
+        }
         if self.default_k == 0 {
             bail!("default_k must be >= 1");
         }
@@ -336,6 +385,13 @@ impl ServeConfig {
             .set("max_batch", Value::Number(self.max_batch as f64))
             .set("max_wait_us", Value::Number(self.max_wait.as_micros() as f64))
             .set("queue_capacity", Value::Number(self.queue_capacity as f64))
+            .set(
+                "admission_interactive_cap",
+                Value::Number(self.admission_interactive_cap as f64),
+            )
+            .set("admission_batch_cap", Value::Number(self.admission_batch_cap as f64))
+            .set("cache_capacity", Value::Number(self.cache_capacity as f64))
+            .set("cache_coalesce", Value::Bool(self.cache_coalesce))
             .set("workers", Value::Number(self.workers as f64))
             .set("default_k", Value::Number(self.default_k as f64))
             .set("seed", Value::Number(self.seed as f64))
@@ -377,6 +433,10 @@ mod tests {
         cfg.pool_sched = SchedPolicy::Fifo;
         cfg.shard_backend = ShardBackendKind::Vectorized;
         cfg.request_timeout = Duration::from_millis(2500);
+        cfg.admission_interactive_cap = 64;
+        cfg.admission_batch_cap = 32;
+        cfg.cache_capacity = 9;
+        cfg.cache_coalesce = false;
         let back = ServeConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.shards, 4);
         assert_eq!(back.request_timeout, Duration::from_millis(2500));
@@ -390,6 +450,50 @@ mod tests {
         assert_eq!(back.grid_rows, 8);
         assert_eq!(back.pool_sched, SchedPolicy::Fifo);
         assert_eq!(back.shard_backend, ShardBackendKind::Vectorized);
+        assert_eq!(back.admission_interactive_cap, 64);
+        assert_eq!(back.admission_batch_cap, 32);
+        assert_eq!(back.cache_capacity, 9);
+        assert!(!back.cache_coalesce);
+    }
+
+    #[test]
+    fn admission_and_cache_knobs_from_cli() {
+        let mut cfg = ServeConfig::default();
+        assert_eq!(cfg.admission_interactive_cap, 0, "lane quotas default off");
+        assert_eq!(cfg.admission_batch_cap, 0);
+        assert!(cfg.cache_coalesce, "coalescing defaults on");
+        let raw: Vec<String> = [
+            "--admission-interactive-cap", "128", "--admission-batch-cap", "16",
+            "--cache-capacity", "0", "--cache-coalesce", "false",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let args = Args::parse(
+            &raw,
+            &["admission-interactive-cap", "admission-batch-cap", "cache-capacity",
+              "cache-coalesce"],
+        )
+        .unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.admission_interactive_cap, 128);
+        assert_eq!(cfg.admission_batch_cap, 16);
+        assert_eq!(cfg.cache_capacity, 0);
+        assert!(!cfg.cache_coalesce);
+    }
+
+    #[test]
+    fn validation_rejects_lane_cap_above_queue_capacity() {
+        let mut cfg = ServeConfig::default();
+        cfg.queue_capacity = 64;
+        cfg.admission_batch_cap = 65;
+        assert!(cfg.validate().is_err());
+        cfg.admission_batch_cap = 64;
+        cfg.validate().unwrap();
+        cfg.admission_interactive_cap = 1000;
+        assert!(cfg.validate().is_err());
+        cfg.admission_interactive_cap = 0;
+        cfg.validate().unwrap();
     }
 
     #[test]

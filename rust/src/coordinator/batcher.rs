@@ -1,4 +1,4 @@
-//! Continuous dynamic batcher.
+//! Continuous dynamic batcher with per-class admission control.
 //!
 //! Requests are admitted into a bounded queue (backpressure beyond
 //! capacity) and coalesced into batches by a vLLM-style policy:
@@ -13,11 +13,29 @@
 //!   [`Priority`] waiter flushes first (ties broken by earliest flush
 //!   bound), and when a queue holds more waiters than `max_batch`,
 //!   interactive requests board the batch ahead of batch-priority
-//!   ones (FIFO within each priority);
+//!   ones (FIFO within each priority), with a starvation guard: a
+//!   batch-priority request passed over [`PROMOTE_AFTER_SKIPS`] times
+//!   boards like interactive work;
 //! * requests of different [`BatchClass`]es never mix (they execute
 //!   different artifacts);
 //! * batches are padded up to the artifact bucket sizes by the executor
 //!   (see [`super::executor`]), so the batcher only bounds, never pads.
+//!
+//! **Admission control** (PR 6): beyond the global `queue_capacity`,
+//! each [`Priority`] lane can carry its own quota
+//! ([`BatchPolicy::interactive_cap`] / [`BatchPolicy::batch_cap`]).  A
+//! request whose lane is at quota is rejected immediately with a typed
+//! [`AdmitError::Overloaded`] — it never blocks — so a batch backlog
+//! can no longer consume the whole queue and stall interactive
+//! admission behind the `freed` condvar.  The global capacity keeps
+//! the legacy blocking-backpressure behavior on [`Batcher::submit`],
+//! now deadline-aware: a producer blocked on a full queue wakes when
+//! its request's deadline passes and gets [`AdmitError::Expired`]
+//! instead of enqueueing doomed work.  Queued requests whose deadline
+//! expires before a worker picks them up are **shed**: answered with a
+//! typed `deadline_exceeded` and dropped before they reach the
+//! executor (`coordinator.admission.shed`), freeing their admission
+//! slots for live work.
 //!
 //! On the host backend a formed batch becomes the **rows dimension** of
 //! the executor's batch×shard grid dispatch: `max_batch` therefore
@@ -30,19 +48,73 @@ use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use super::request::{BatchClass, Priority, Request};
+use super::request::{BatchClass, Priority, Request, ServeError};
+use crate::metrics;
 
-/// Batch-formation policy knobs.
+/// Flushes that may pass over a batch-priority request before the
+/// starvation guard promotes it to board ahead of newer interactive
+/// arrivals (see [`Batcher::take`]).
+pub const PROMOTE_AFTER_SKIPS: u32 = 4;
+
+/// Batch-formation and admission policy knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
     pub max_batch: usize,
     pub max_wait: Duration,
     pub queue_capacity: usize,
+    /// Queued-request quota for the interactive lane; `0` = no
+    /// dedicated cap (bounded by `queue_capacity` alone).  A request
+    /// over its lane quota is rejected typed, never blocked.
+    pub interactive_cap: usize,
+    /// Queued-request quota for the batch lane; `0` = no dedicated cap.
+    pub batch_cap: usize,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        Self { max_batch: 16, max_wait: Duration::from_millis(2), queue_capacity: 1024 }
+        Self {
+            max_batch: 16,
+            max_wait: Duration::from_millis(2),
+            queue_capacity: 1024,
+            interactive_cap: 0,
+            batch_cap: 0,
+        }
+    }
+}
+
+impl BatchPolicy {
+    /// The admission quota for `lane` (`0` = uncapped).
+    fn lane_cap(&self, lane: Priority) -> usize {
+        match lane {
+            Priority::Interactive => self.interactive_cap,
+            Priority::Batch => self.batch_cap,
+        }
+    }
+}
+
+/// Why a request was refused admission.  Each variant hands the
+/// request back so the caller can answer its reply channel with the
+/// matching typed [`ServeError`] (fanning it out to any coalesced
+/// followers) instead of silently dropping it.
+pub enum AdmitError {
+    /// The request's priority lane (or, on the non-blocking path, the
+    /// whole queue) is at capacity.
+    Overloaded { request: Request, lane: Priority },
+    /// The batcher is draining; no new admissions.
+    ShuttingDown(Request),
+    /// The request's deadline expired before admission — on entry, or
+    /// while blocked on global-capacity backpressure.
+    Expired(Request),
+}
+
+impl AdmitError {
+    /// Recover the rejected request (for replying on its channel).
+    pub fn into_request(self) -> Request {
+        match self {
+            AdmitError::Overloaded { request, .. } => request,
+            AdmitError::ShuttingDown(request) => request,
+            AdmitError::Expired(request) => request,
+        }
     }
 }
 
@@ -57,7 +129,28 @@ pub enum FlushReason {
 struct State {
     queues: HashMap<BatchClass, VecDeque<Request>>,
     total: usize,
+    /// Queued requests per [`Priority`] lane, indexed by
+    /// [`Priority::rank`] — the lane-quota accounting.
+    per_lane: [usize; 2],
     shutdown: bool,
+}
+
+impl State {
+    fn lane_count(&self, lane: Priority) -> usize {
+        self.per_lane[lane.rank() as usize]
+    }
+
+    fn enqueue(&mut self, request: Request) {
+        self.per_lane[request.options.priority.rank() as usize] += 1;
+        self.total += 1;
+        self.queues.entry(request.class()).or_default().push_back(request);
+    }
+
+    /// Account one request leaving the queue (batched or shed).
+    fn departed(&mut self, lane: Priority) {
+        self.per_lane[lane.rank() as usize] -= 1;
+        self.total -= 1;
+    }
 }
 
 /// The shared batching queue.
@@ -78,6 +171,7 @@ impl Batcher {
             state: Mutex::new(State {
                 queues: HashMap::new(),
                 total: 0,
+                per_lane: [0; 2],
                 shutdown: false,
             }),
             arrived: Condvar::new(),
@@ -89,34 +183,65 @@ impl Batcher {
         self.policy
     }
 
-    /// Admit a request, blocking while the queue is at capacity
-    /// (backpressure).  Returns `Err(request)` after shutdown.
-    pub fn submit(&self, request: Request) -> Result<(), Request> {
+    /// Admit a request, blocking while the queue is at its **global**
+    /// capacity (backpressure).  Lane quotas never block: a request
+    /// over its lane's cap is rejected immediately with
+    /// [`AdmitError::Overloaded`], so one lane's backlog cannot stall
+    /// the other's admission.  The capacity wait is deadline-aware —
+    /// a blocked producer whose request expires gets
+    /// [`AdmitError::Expired`] instead of enqueueing doomed work.
+    pub fn submit(&self, request: Request) -> Result<(), AdmitError> {
         let mut st = self.state.lock().unwrap();
         loop {
             if st.shutdown {
-                return Err(request);
+                return Err(AdmitError::ShuttingDown(request));
+            }
+            if request.expired(Instant::now()) {
+                return Err(AdmitError::Expired(request));
+            }
+            let lane = request.options.priority;
+            let cap = self.policy.lane_cap(lane);
+            if cap != 0 && st.lane_count(lane) >= cap {
+                return Err(AdmitError::Overloaded { request, lane });
             }
             if st.total < self.policy.queue_capacity {
-                st.queues.entry(request.class()).or_default().push_back(request);
-                st.total += 1;
+                st.enqueue(request);
                 drop(st);
                 self.arrived.notify_one();
                 return Ok(());
             }
-            st = self.freed.wait(st).unwrap();
+            st = match request.deadline {
+                // Bound the wait by the request's own deadline: on a
+                // timed-out wake the loop's expiry check rejects it.
+                Some(d) => {
+                    let now = Instant::now();
+                    if d <= now {
+                        return Err(AdmitError::Expired(request));
+                    }
+                    self.freed.wait_timeout(st, d - now).unwrap().0
+                }
+                None => self.freed.wait(st).unwrap(),
+            };
         }
     }
 
     /// Non-blocking admission (the server's overload path → 503-style
-    /// rejection instead of unbounded latency).
-    pub fn try_submit(&self, request: Request) -> Result<(), Request> {
+    /// rejection instead of unbounded latency).  Global capacity
+    /// rejects typed here instead of blocking.
+    pub fn try_submit(&self, request: Request) -> Result<(), AdmitError> {
         let mut st = self.state.lock().unwrap();
-        if st.shutdown || st.total >= self.policy.queue_capacity {
-            return Err(request);
+        if st.shutdown {
+            return Err(AdmitError::ShuttingDown(request));
         }
-        st.queues.entry(request.class()).or_default().push_back(request);
-        st.total += 1;
+        if request.expired(Instant::now()) {
+            return Err(AdmitError::Expired(request));
+        }
+        let lane = request.options.priority;
+        let cap = self.policy.lane_cap(lane);
+        if (cap != 0 && st.lane_count(lane) >= cap) || st.total >= self.policy.queue_capacity {
+            return Err(AdmitError::Overloaded { request, lane });
+        }
+        st.enqueue(request);
         drop(st);
         self.arrived.notify_one();
         Ok(())
@@ -127,6 +252,12 @@ impl Batcher {
     pub fn next_batch(&self) -> Option<(BatchClass, Vec<Request>, FlushReason)> {
         let mut st = self.state.lock().unwrap();
         loop {
+            // Deadline-aware shedding: answer queued requests whose
+            // deadline already passed with a typed error and drop them
+            // here, before they burn a batch slot and a memory sweep
+            // in the executor.
+            self.shed_expired(&mut st, Instant::now());
+
             // A full batch in any class flushes immediately; among
             // several full queues the most urgent one goes first.
             let mut full: Option<((u8, Instant), BatchClass)> = None;
@@ -195,22 +326,99 @@ impl Batcher {
         }
     }
 
-    /// Drain up to `max_batch` requests from `class`'s queue.
-    /// Interactive requests board ahead of batch-priority ones; order
-    /// within each priority stays FIFO.  Requests left behind keep
-    /// that (priority, FIFO) order for the next flush.
-    fn take(&self, st: &mut State, class: BatchClass) -> Vec<Request> {
-        let q = st.queues.get_mut(&class).expect("class must exist");
-        let drained: Vec<Request> = q.drain(..).collect();
-        let (mut batch, low): (Vec<Request>, Vec<Request>) = drained
-            .into_iter()
-            .partition(|r| r.options.priority == Priority::Interactive);
-        batch.extend(low);
-        let rest = batch.split_off(batch.len().min(self.policy.max_batch));
-        for r in rest.into_iter().rev() {
-            q.push_front(r);
+    /// Shed queued requests whose deadline has already passed: each is
+    /// answered `deadline_exceeded` on its reply channel, counted on
+    /// `coordinator.admission.shed`, and its admission slots (lane +
+    /// global) are freed for live work.  The scan itself is O(queued)
+    /// like every `next_batch` wake; queues are only rebuilt when they
+    /// actually hold expired work.
+    fn shed_expired(&self, st: &mut State, now: Instant) {
+        let mut shed: Vec<Request> = Vec::new();
+        for q in st.queues.values_mut() {
+            if !q.iter().any(|r| r.expired(now)) {
+                continue; // common case: nothing to rebuild
+            }
+            let mut keep = VecDeque::with_capacity(q.len());
+            for r in q.drain(..) {
+                if r.expired(now) {
+                    shed.push(r);
+                } else {
+                    keep.push_back(r);
+                }
+            }
+            *q = keep;
         }
-        st.total -= batch.len();
+        if shed.is_empty() {
+            return;
+        }
+        metrics::global().counter("coordinator.admission.shed").add(shed.len() as u64);
+        for r in shed {
+            st.departed(r.options.priority);
+            let _ = r.reply.send(Err(ServeError::deadline(
+                "deadline expired while queued (shed before execution)",
+            )));
+        }
+        self.freed.notify_all();
+    }
+
+    /// Drain up to `max_batch` requests from `class`'s queue.
+    /// Interactive requests board ahead of batch-priority ones (FIFO
+    /// within each priority), and a batch-priority request passed over
+    /// [`PROMOTE_AFTER_SKIPS`] times boards like interactive work —
+    /// the starvation guard against a continuous interactive trickle.
+    ///
+    /// Only the queue prefix up to the last boarding request is
+    /// touched: requests beyond it keep their positions, so the common
+    /// homogeneous-priority flush pops exactly `max_batch` items
+    /// instead of draining and re-pushing the whole queue.
+    fn take(&self, st: &mut State, class: BatchClass) -> Vec<Request> {
+        let max = self.policy.max_batch;
+        let q = st.queues.get_mut(&class).expect("class must exist");
+        let batch: Vec<Request> = if q.len() <= max {
+            // Everything boards — order the batch (priority, FIFO).
+            let (mut high, low): (Vec<Request>, Vec<Request>) =
+                q.drain(..).partition(boards);
+            high.extend(low);
+            high
+        } else {
+            // Oversubscribed: seat boarding-priority waiters first
+            // (stop counting once a full batch of them exists), fill
+            // the rest with the earliest others.
+            let mut high_want = 0usize;
+            for r in q.iter() {
+                if boards(r) {
+                    high_want += 1;
+                    if high_want == max {
+                        break;
+                    }
+                }
+            }
+            let low_want = max - high_want;
+            let mut high_b: Vec<Request> = Vec::with_capacity(high_want);
+            let mut low_b: Vec<Request> = Vec::with_capacity(low_want);
+            let mut passed_over: Vec<Request> = Vec::new();
+            while high_b.len() < high_want || low_b.len() < low_want {
+                let mut r = q.pop_front().expect("boarding counts bound the walk");
+                if boards(&r) && high_b.len() < high_want {
+                    high_b.push(r);
+                } else if !boards(&r) && low_b.len() < low_want {
+                    low_b.push(r);
+                } else {
+                    // Left behind while later arrivals board: one step
+                    // closer to starvation-guard promotion.
+                    r.boarding_skips += 1;
+                    passed_over.push(r);
+                }
+            }
+            for r in passed_over.into_iter().rev() {
+                q.push_front(r);
+            }
+            high_b.extend(low_b);
+            high_b
+        };
+        for r in &batch {
+            st.departed(r.options.priority);
+        }
         self.freed.notify_all();
         batch
     }
@@ -236,6 +444,13 @@ impl Batcher {
         self.arrived.notify_all();
         self.freed.notify_all();
     }
+}
+
+/// Does this request board ahead of batch-priority work?  Interactive
+/// requests always do; batch-priority requests do once the starvation
+/// guard promotes them (passed over [`PROMOTE_AFTER_SKIPS`] flushes).
+fn boards(r: &Request) -> bool {
+    r.options.priority == Priority::Interactive || r.boarding_skips >= PROMOTE_AFTER_SKIPS
 }
 
 /// Does `key` outrank the current best candidate?
@@ -282,13 +497,22 @@ mod tests {
     }
 
     fn req_opts(id: u64, class: BatchClass, opts: RequestOptions) -> Request {
-        let (tx, _rx) = oneshot();
+        let (req, _rx) = req_opts_rx(id, class, opts);
+        req
+    }
+
+    fn req_opts_rx(
+        id: u64,
+        class: BatchClass,
+        opts: RequestOptions,
+    ) -> (Request, crate::exec::channel::OnceReceiver<crate::coordinator::ReplyResult>) {
+        let (tx, rx) = oneshot();
         let payload = match class {
             BatchClass::Softmax => Payload::Softmax { logits: vec![id as f32] },
             BatchClass::Decode => Payload::DecodeTopK { hidden: vec![id as f32] },
             BatchClass::LmStep => Payload::LmStep { session: id, token: 0 },
         };
-        Request::with_options(id, payload, opts, tx)
+        (Request::with_options(id, payload, opts, tx), rx)
     }
 
     fn batcher(max_batch: usize, max_wait_ms: u64, cap: usize) -> Batcher {
@@ -296,6 +520,7 @@ mod tests {
             max_batch,
             max_wait: Duration::from_millis(max_wait_ms),
             queue_capacity: cap,
+            ..BatchPolicy::default()
         })
     }
 
@@ -428,26 +653,34 @@ mod tests {
     }
 
     #[test]
-    fn tight_deadline_flushes_before_max_wait() {
+    fn tight_deadline_request_sheds_at_deadline_not_max_wait() {
         // max_wait is 10 s, but the request carries a 10 ms deadline:
-        // the flush bound tightens to the deadline instead of parking
-        // the worker for the full max_wait.
-        let b = batcher(16, 10_000, 64);
+        // the flush bound tightens to the deadline, and when the worker
+        // wakes there the expired request is shed with a typed
+        // `deadline_exceeded` instead of parking for the full max_wait
+        // (or burning an executor slot on doomed work, which is what a
+        // deadline-bound solo flush used to do).
+        let b = Arc::new(batcher(16, 10_000, 64));
         let opts = RequestOptions {
             deadline: Some(Duration::from_millis(10)),
             ..RequestOptions::default()
         };
-        b.submit(req_opts(1, BatchClass::Decode, opts)).map_err(|_| ()).unwrap();
+        let (r, rx) = req_opts_rx(1, BatchClass::Decode, opts);
+        b.submit(r).map_err(|_| ()).unwrap();
+        let b2 = b.clone();
+        let worker = std::thread::spawn(move || b2.next_batch());
         let t0 = Instant::now();
-        let (class, batch, reason) = b.next_batch().unwrap();
-        assert_eq!(class, BatchClass::Decode);
-        assert_eq!(batch.len(), 1);
-        assert_eq!(reason, FlushReason::Deadline);
+        let reply = rx.recv_timeout(Duration::from_secs(5)).expect("shed reply arrives");
         assert!(
             t0.elapsed() < Duration::from_millis(5_000),
-            "deadline-tightened flush, not max_wait: {:?}",
+            "deadline-tightened wake, not max_wait: {:?}",
             t0.elapsed()
         );
+        let err = reply.expect_err("shed requests get a typed error");
+        assert_eq!(err.code, crate::coordinator::ErrorCode::DeadlineExceeded);
+        assert_eq!(b.depth(), 0, "shed request freed its admission slot");
+        b.shutdown();
+        assert!(worker.join().unwrap().is_none(), "nothing left to flush");
     }
 
     #[test]
@@ -456,25 +689,149 @@ mod tests {
         // the earliest flush bound across ALL queues.  Here the
         // higher-priority (interactive) class has a 10 s bound while a
         // batch-priority class carries a 20 ms deadline — the worker
-        // must not sleep toward the interactive bound and let the
-        // deadline expire unserved.
-        let b = batcher(16, 10_000, 64);
+        // must not sleep toward the interactive bound and leave the
+        // deadline waiter parked (it now sheds it, typed, at ~20 ms).
+        let b = Arc::new(batcher(16, 10_000, 64));
         b.submit(req(1, BatchClass::Decode)).map_err(|_| ()).unwrap();
         let opts = RequestOptions {
             priority: Priority::Batch,
             deadline: Some(Duration::from_millis(20)),
             ..RequestOptions::default()
         };
-        b.submit(req_opts(2, BatchClass::Softmax, opts)).map_err(|_| ()).unwrap();
+        let (r, rx) = req_opts_rx(2, BatchClass::Softmax, opts);
+        b.submit(r).map_err(|_| ()).unwrap();
+        let b2 = b.clone();
+        let worker = std::thread::spawn(move || b2.next_batch());
         let t0 = Instant::now();
-        let (class, _, reason) = b.next_batch().unwrap();
-        assert_eq!(class, BatchClass::Softmax, "tight-deadline class flushes first");
-        assert_eq!(reason, FlushReason::Deadline);
+        let reply = rx.recv_timeout(Duration::from_secs(5)).expect("worker woke for it");
         assert!(
             t0.elapsed() < Duration::from_secs(5),
             "woke at the ~20 ms bound, not max_wait: {:?}",
             t0.elapsed()
         );
+        let err = reply.expect_err("expired waiter shed with a typed error");
+        assert_eq!(err.code, crate::coordinator::ErrorCode::DeadlineExceeded);
+        // The interactive decode request is untouched by the shed.
+        b.shutdown();
+        let (class, batch, _) = worker.join().unwrap().expect("decode drains at shutdown");
+        assert_eq!(class, BatchClass::Decode);
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn submit_blocked_on_capacity_expires_typed() {
+        // Satellite regression: a producer blocked on the `freed`
+        // condvar used to enqueue its request even after the deadline
+        // expired while it waited.  Now the wait is bounded by the
+        // deadline and the wake returns a typed `Expired`.
+        let b = Arc::new(batcher(2, 10_000, 2));
+        b.submit(req(0, BatchClass::Softmax)).map_err(|_| ()).unwrap();
+        b.submit(req(1, BatchClass::Softmax)).map_err(|_| ()).unwrap();
+        let b2 = b.clone();
+        let t = std::thread::spawn(move || {
+            let opts = RequestOptions {
+                deadline: Some(Duration::from_millis(30)),
+                ..RequestOptions::default()
+            };
+            let t0 = Instant::now();
+            let out = b2.submit(req_opts(9, BatchClass::Softmax, opts));
+            (out, t0.elapsed())
+        });
+        // Nobody drains the queue: the blocked submit must give up at
+        // its deadline instead of waiting forever / enqueueing.
+        let (out, waited) = t.join().unwrap();
+        assert!(matches!(out, Err(AdmitError::Expired(_))), "typed deadline rejection");
+        assert!(waited >= Duration::from_millis(25), "waited to the deadline: {waited:?}");
+        assert!(waited < Duration::from_secs(5), "did not block past it: {waited:?}");
+        assert_eq!(b.depth(), 2, "expired request was never enqueued");
+    }
+
+    #[test]
+    fn lane_cap_rejects_typed_without_blocking() {
+        // Per-lane quotas: the batch lane fills its 2 slots and the
+        // third batch submit is rejected *immediately* (no blocking),
+        // while interactive admission is untouched — a batch backlog
+        // can no longer stall interactive work behind `freed`.
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_secs(10),
+            queue_capacity: 64,
+            interactive_cap: 0,
+            batch_cap: 2,
+        });
+        let batch_opts =
+            RequestOptions { priority: Priority::Batch, ..RequestOptions::default() };
+        b.submit(req_opts(0, BatchClass::Softmax, batch_opts.clone())).map_err(|_| ()).unwrap();
+        b.submit(req_opts(1, BatchClass::Softmax, batch_opts.clone())).map_err(|_| ()).unwrap();
+        let t0 = Instant::now();
+        match b.submit(req_opts(2, BatchClass::Softmax, batch_opts.clone())) {
+            Err(AdmitError::Overloaded { lane, .. }) => assert_eq!(lane, Priority::Batch),
+            _ => panic!("expected a typed Overloaded rejection"),
+        }
+        assert!(t0.elapsed() < Duration::from_secs(1), "lane quota never blocks");
+        // Interactive admission still open, on both submit paths.
+        b.submit(req(3, BatchClass::Softmax)).map_err(|_| ()).unwrap();
+        b.try_submit(req(4, BatchClass::Softmax)).map_err(|_| ()).unwrap();
+        assert_eq!(b.depth(), 4);
+        // try_submit applies the same lane quota.
+        assert!(matches!(
+            b.try_submit(req_opts(5, BatchClass::Softmax, batch_opts)),
+            Err(AdmitError::Overloaded { lane: Priority::Batch, .. })
+        ));
+    }
+
+    #[test]
+    fn starvation_guard_promotes_skipped_batch_request() {
+        // A continuous interactive trickle used to hold a
+        // batch-priority request back forever: every flush re-pushed
+        // it behind the newest interactive arrival.  The skip counter
+        // promotes it after PROMOTE_AFTER_SKIPS passes.
+        let b = batcher(1, 10_000, 64);
+        let batch_opts =
+            RequestOptions { priority: Priority::Batch, ..RequestOptions::default() };
+        b.submit(req_opts(100, BatchClass::Softmax, batch_opts)).map_err(|_| ()).unwrap();
+        let mut flushed = Vec::new();
+        for i in 0..(PROMOTE_AFTER_SKIPS as u64 + 2) {
+            b.submit(req(i, BatchClass::Softmax)).map_err(|_| ()).unwrap();
+            let (_, batch, reason) = b.next_batch().unwrap();
+            assert_eq!(reason, FlushReason::Full, "two waiters > max_batch 1");
+            flushed.extend(batch.iter().map(|r| r.id));
+            if flushed.contains(&100) {
+                break;
+            }
+        }
+        assert!(
+            flushed.contains(&100),
+            "batch-priority request starved through {} flushes: {flushed:?}",
+            PROMOTE_AFTER_SKIPS + 2
+        );
+        let skips_to_board = flushed.iter().position(|&id| id == 100).unwrap();
+        assert_eq!(
+            skips_to_board as u32, PROMOTE_AFTER_SKIPS,
+            "promoted exactly at the bound: {flushed:?}"
+        );
+    }
+
+    #[test]
+    fn oversubscribed_take_prefers_earliest_within_priority() {
+        // Satellite 3 pin: the restructured take (pop the boarding
+        // prefix instead of draining the whole queue) keeps the
+        // documented (priority, FIFO) batch composition when the
+        // boarding set interleaves with leftovers.
+        let b = batcher(2, 10_000, 64);
+        let batch_opts =
+            RequestOptions { priority: Priority::Batch, ..RequestOptions::default() };
+        b.submit(req_opts(0, BatchClass::Softmax, batch_opts.clone())).map_err(|_| ()).unwrap();
+        b.submit(req(1, BatchClass::Softmax)).map_err(|_| ()).unwrap();
+        b.submit(req_opts(2, BatchClass::Softmax, batch_opts)).map_err(|_| ()).unwrap();
+        b.submit(req(3, BatchClass::Softmax)).map_err(|_| ()).unwrap();
+        let (_, first, _) = b.next_batch().unwrap();
+        let ids: Vec<u64> = first.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 3], "interactive waiters board first, FIFO");
+        let (_, second, _) = b.next_batch().unwrap();
+        let ids: Vec<u64> = second.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 2], "leftovers keep FIFO order");
+        assert_eq!(b.depth(), 0);
     }
 
     #[test]

@@ -1,0 +1,526 @@
+//! Request-coalescing + result-cache front — the "fetcher" half of the
+//! fetcher/executor split, sitting between [`super::Coordinator`]'s
+//! submit paths and the [`super::batcher`].
+//!
+//! The paper's optimization buys softmax sweeps with fewer memory
+//! passes; this layer makes sure those sweeps are not spent on
+//! *redundant* work:
+//!
+//! * **Coalescing** — identical in-flight `(payload, options)`
+//!   requests collapse into one execution.  The first arrival becomes
+//!   the *leader* and enters the batcher; later identical arrivals
+//!   become *followers* whose reply channels are parked in an
+//!   in-flight table.  When the leader completes (any path: executor
+//!   reply, batcher shed, admission rejection), a [`CompletionHook`]
+//!   on its [`ReplySink`] fans the result out to every follower —
+//!   bitwise-identical clones of one computation.
+//! * **Caching** — successful decode/softmax results land in a keyed
+//!   LRU; a later identical request is answered from the cache without
+//!   touching the batcher at all.
+//!
+//! **Keying.**  The key is the payload's exact f32 bit pattern plus
+//! the *effective* options: resolved top-k (`options.k` or the
+//! server's `default_k` — `None` and `Some(default_k)` are the same
+//! request), priority, and temperature bits.  Requests differing only
+//! in `tag` or `deadline` coalesce (the result is identical either
+//! way); requests differing in `k` or priority never share a key.
+//! Only stateless payloads ([`Payload::Softmax`],
+//! [`Payload::DecodeTopK`]) participate: `LmStep`/`Generate` advance
+//! per-session state, so identical-looking calls are *not* the same
+//! computation and always bypass the front.
+//!
+//! **Follower fate.**  Followers share the leader's outcome,
+//! including typed errors: a leader shed at its deadline answers its
+//! followers `deadline_exceeded` too, even followers that carried no
+//! deadline of their own.  That is the documented cost of coalescing
+//! on a key that ignores deadlines; callers who cannot accept a
+//! shared fate disable coalescing (`cache_coalesce false`).  A leader
+//! dropped unanswered (shutdown teardown) drops its followers'
+//! senders, which surface as disconnected-channel errors.
+//!
+//! Metrics: `coordinator.cache.{hits,misses,coalesced}` counters and
+//! the `coordinator.cache.entries` gauge (process-global), plus
+//! per-instance counts via [`Front::stats`] for the `stats` RPC.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::request::{
+    CompletionHook, Payload, Reply, ReplyResult, ReplySink, RequestOptions,
+};
+use crate::exec::channel::{OnceReceiver, OnceSender};
+use crate::exec::oneshot;
+use crate::metrics;
+
+/// Front configuration (see `docs/CONFIG.md`: `--cache-*`).
+#[derive(Clone, Copy, Debug)]
+pub struct FrontPolicy {
+    /// LRU result-cache entries; `0` disables caching.
+    pub cache_capacity: usize,
+    /// Dedupe identical in-flight requests into one execution.
+    pub coalesce: bool,
+    /// The server's default top-k — folded into the key so `k: None`
+    /// and an explicit `k = default_k` coalesce.
+    pub default_k: usize,
+}
+
+/// Per-instance counters (the `stats` RPC's `cache` object).  The
+/// process-global metrics counters aggregate across every coordinator
+/// in a test binary; these scope to one [`Front`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FrontStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub coalesced: u64,
+    pub entries: usize,
+}
+
+/// What [`Front::admit`] decided for a request.
+pub enum Admission {
+    /// The reply is already on its way (cache hit) or will arrive with
+    /// the in-flight leader's result (coalesced follower): nothing to
+    /// submit to the batcher.
+    Resolved(OnceReceiver<ReplyResult>),
+    /// Execute: submit a request carrying this sink.  For cacheable
+    /// payloads the sink's completion hook fans out to followers and
+    /// fills the cache; bypassing payloads get a plain sink.
+    Execute(ReplySink, OnceReceiver<ReplyResult>),
+}
+
+/// Stateless payloads keyed by exact f32 bit patterns.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+enum KeyPayload {
+    Softmax(Vec<u32>),
+    Decode(Vec<u32>),
+}
+
+/// Coalescing/cache identity of a request: payload bits + effective
+/// options.  `tag` and `deadline` are deliberately absent.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+struct FrontKey {
+    payload: KeyPayload,
+    k: usize,
+    priority: u8,
+    temperature: u32,
+}
+
+struct FrontState {
+    cache: Lru,
+    /// Followers waiting on an in-flight leader, by key.
+    inflight: HashMap<FrontKey, Vec<OnceSender<ReplyResult>>>,
+}
+
+/// The coalescing + caching front.  Shared (`Arc`) between the
+/// coordinator's submit paths and the completion hooks it plants on
+/// leader requests.
+pub struct Front {
+    policy: FrontPolicy,
+    state: Mutex<FrontState>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    coalesced: AtomicU64,
+}
+
+impl Front {
+    pub fn new(policy: FrontPolicy) -> Front {
+        Front {
+            policy,
+            state: Mutex::new(FrontState {
+                cache: Lru::new(policy.cache_capacity),
+                inflight: HashMap::new(),
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+        }
+    }
+
+    pub fn policy(&self) -> FrontPolicy {
+        self.policy
+    }
+
+    /// Route one request: answer it from the cache, park it behind an
+    /// identical in-flight leader, or hand back the sink the caller
+    /// must submit.  Never blocks on anything but the front's own lock.
+    pub fn admit(self: &Arc<Front>, payload: &Payload, options: &RequestOptions) -> Admission {
+        let (tx, rx) = oneshot();
+        if self.policy.cache_capacity == 0 && !self.policy.coalesce {
+            return Admission::Execute(ReplySink::from(tx), rx);
+        }
+        let Some(key) = self.key_for(payload, options) else {
+            // Stateful payload: always executes.
+            return Admission::Execute(ReplySink::from(tx), rx);
+        };
+        let mut st = self.state.lock().unwrap();
+        if let Some(reply) = st.cache.get(&key) {
+            drop(st);
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            metrics::global().counter("coordinator.cache.hits").inc();
+            let _ = tx.send(Ok(reply));
+            return Admission::Resolved(rx);
+        }
+        if self.policy.coalesce {
+            if let Some(waiters) = st.inflight.get_mut(&key) {
+                waiters.push(tx);
+                drop(st);
+                self.coalesced.fetch_add(1, Ordering::Relaxed);
+                metrics::global().counter("coordinator.cache.coalesced").inc();
+                return Admission::Resolved(rx);
+            }
+            st.inflight.insert(key.clone(), Vec::new());
+        }
+        drop(st);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        metrics::global().counter("coordinator.cache.misses").inc();
+        let front = self.clone();
+        let hook: CompletionHook = Box::new(move |result| front.complete(&key, result));
+        Admission::Execute(ReplySink::with_hook(tx, hook), rx)
+    }
+
+    /// Leader completion (from its sink's hook): fill the cache on
+    /// success, fan the result out to followers.  `None` means the
+    /// leader was dropped unanswered — clean the in-flight entry and
+    /// let the followers' channels disconnect.
+    fn complete(&self, key: &FrontKey, result: Option<&ReplyResult>) {
+        let mut st = self.state.lock().unwrap();
+        let waiters = st.inflight.remove(key).unwrap_or_default();
+        if let Some(Ok(reply)) = result {
+            st.cache.insert(key.clone(), reply.clone());
+            metrics::global()
+                .gauge("coordinator.cache.entries")
+                .set(st.cache.len() as i64);
+        }
+        drop(st);
+        if let Some(result) = result {
+            for w in waiters {
+                let _ = w.send(result.clone());
+            }
+        }
+    }
+
+    /// Per-instance counters (the `stats` RPC's `cache` object).
+    pub fn stats(&self) -> FrontStats {
+        FrontStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            coalesced: self.coalesced.load(Ordering::Relaxed),
+            entries: self.state.lock().unwrap().cache.len(),
+        }
+    }
+
+    /// The coalescing/cache key, or `None` for payloads that must
+    /// bypass the front (session-stateful work).
+    fn key_for(&self, payload: &Payload, options: &RequestOptions) -> Option<FrontKey> {
+        let payload = match payload {
+            Payload::Softmax { logits } => KeyPayload::Softmax(f32_bits(logits)),
+            Payload::DecodeTopK { hidden } => KeyPayload::Decode(f32_bits(hidden)),
+            Payload::LmStep { .. } | Payload::Generate { .. } => return None,
+        };
+        Some(FrontKey {
+            payload,
+            k: options.k.unwrap_or(self.policy.default_k),
+            priority: options.priority.rank(),
+            temperature: options.temperature.to_bits(),
+        })
+    }
+}
+
+/// Exact bit patterns — the cache must never unify values that merely
+/// compare equal (f32 `==` conflates 0.0/-0.0 and excludes NaN).
+fn f32_bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+// ---------------------------------------------------------------------------
+
+/// Keyed LRU over [`Reply`] values.  Recency is tracked with a lazy
+/// order queue: every touch stamps the entry and appends `(key,
+/// stamp)`; eviction pops stale pairs until it finds a live one, and
+/// the queue is compacted when it outgrows the map by a constant
+/// factor — amortized O(1) per operation, no intrusive list.
+struct Lru {
+    cap: usize,
+    map: HashMap<FrontKey, CacheEntry>,
+    order: VecDeque<(FrontKey, u64)>,
+    clock: u64,
+}
+
+struct CacheEntry {
+    reply: Reply,
+    stamp: u64,
+}
+
+impl Lru {
+    fn new(cap: usize) -> Lru {
+        Lru { cap, map: HashMap::new(), order: VecDeque::new(), clock: 0 }
+    }
+
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    fn get(&mut self, key: &FrontKey) -> Option<Reply> {
+        if self.cap == 0 {
+            return None;
+        }
+        self.clock += 1;
+        let clock = self.clock;
+        let entry = self.map.get_mut(key)?;
+        entry.stamp = clock;
+        let reply = entry.reply.clone();
+        self.order.push_back((key.clone(), clock));
+        self.compact_if_bloated();
+        Some(reply)
+    }
+
+    fn insert(&mut self, key: FrontKey, reply: Reply) {
+        if self.cap == 0 {
+            return;
+        }
+        self.clock += 1;
+        let clock = self.clock;
+        self.map.insert(key.clone(), CacheEntry { reply, stamp: clock });
+        self.order.push_back((key, clock));
+        while self.map.len() > self.cap {
+            let (k, s) = self.order.pop_front().expect("order covers every live entry");
+            if self.map.get(&k).is_some_and(|e| e.stamp == s) {
+                self.map.remove(&k);
+            }
+        }
+        self.compact_if_bloated();
+    }
+
+    fn compact_if_bloated(&mut self) {
+        if self.order.len() > self.cap.saturating_mul(8).max(64) {
+            let map = &self.map;
+            self.order.retain(|(k, s)| map.get(k).is_some_and(|e| e.stamp == *s));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{Priority, ServeError};
+    use std::time::Duration;
+
+    fn front(cache_capacity: usize, coalesce: bool) -> Arc<Front> {
+        Arc::new(Front::new(FrontPolicy { cache_capacity, coalesce, default_k: 5 }))
+    }
+
+    fn softmax(logits: &[f32]) -> Payload {
+        Payload::Softmax { logits: logits.to_vec() }
+    }
+
+    fn reply(probs: &[f32]) -> Reply {
+        Reply::Softmax { probs: probs.to_vec() }
+    }
+
+    #[test]
+    fn coalesces_identical_requests_and_caches_the_result() {
+        let f = front(16, true);
+        let payload = softmax(&[1.0, 2.0, 3.0]);
+        let leader = f.admit(&payload, &RequestOptions::default());
+        let Admission::Execute(sink, leader_rx) = leader else {
+            panic!("first arrival leads")
+        };
+        // Identical request differing only in tag + deadline: follower.
+        let opts = RequestOptions {
+            deadline: Some(Duration::from_secs(5)),
+            client_tag: Some("other".into()),
+            ..RequestOptions::default()
+        };
+        let Admission::Resolved(follower_rx) = f.admit(&payload, &opts) else {
+            panic!("identical in-flight request coalesces")
+        };
+        sink.send(Ok(reply(&[0.1, 0.2, 0.7]))).unwrap();
+        let a = leader_rx.recv().unwrap().unwrap();
+        let b = follower_rx.recv().unwrap().unwrap();
+        assert_eq!(a, b, "fanned-out reply identical to the leader's");
+        // Third arrival after completion: served from the cache.
+        let Admission::Resolved(rx) = f.admit(&payload, &RequestOptions::default()) else {
+            panic!("completed result is cached")
+        };
+        assert_eq!(rx.recv().unwrap().unwrap(), a, "cached reply identical");
+        assert_eq!(
+            f.stats(),
+            FrontStats { hits: 1, misses: 1, coalesced: 1, entries: 1 }
+        );
+    }
+
+    #[test]
+    fn differing_k_or_priority_never_share_a_key() {
+        let f = front(16, true);
+        let payload = Payload::DecodeTopK { hidden: vec![1.0, 2.0] };
+        let keep: Vec<Admission> = [
+            RequestOptions { k: Some(3), ..RequestOptions::default() },
+            RequestOptions { k: Some(4), ..RequestOptions::default() },
+            RequestOptions { priority: Priority::Batch, k: Some(3), ..RequestOptions::default() },
+        ]
+        .iter()
+        .map(|opts| {
+            let a = f.admit(&payload, opts);
+            assert!(matches!(a, Admission::Execute(..)), "distinct key executes");
+            a
+        })
+        .collect();
+        assert_eq!(f.stats().coalesced, 0);
+        assert_eq!(f.stats().misses, 3);
+        drop(keep);
+    }
+
+    #[test]
+    fn explicit_default_k_coalesces_with_unset_k() {
+        // `k: None` resolves to default_k (5): same effective request.
+        let f = front(16, true);
+        let payload = Payload::DecodeTopK { hidden: vec![4.0] };
+        let lead = f.admit(&payload, &RequestOptions::default());
+        assert!(matches!(lead, Admission::Execute(..)));
+        let follow = f.admit(&payload, &RequestOptions::with_k(5));
+        assert!(matches!(follow, Admission::Resolved(_)), "k=5 == resolved default");
+        assert_eq!(f.stats().coalesced, 1);
+        drop(lead);
+    }
+
+    #[test]
+    fn stateful_payloads_always_bypass() {
+        let f = front(16, true);
+        let step = Payload::LmStep { session: 1, token: 7 };
+        for _ in 0..2 {
+            assert!(
+                matches!(f.admit(&step, &RequestOptions::default()), Admission::Execute(..)),
+                "identical LmSteps are different computations"
+            );
+        }
+        assert_eq!(f.stats(), FrontStats::default(), "bypass leaves no trace");
+    }
+
+    #[test]
+    fn errors_fan_out_but_are_not_cached() {
+        let f = front(16, true);
+        let payload = softmax(&[9.0]);
+        let Admission::Execute(sink, leader_rx) = f.admit(&payload, &RequestOptions::default())
+        else {
+            panic!("leads")
+        };
+        let Admission::Resolved(follower_rx) = f.admit(&payload, &RequestOptions::default())
+        else {
+            panic!("coalesces")
+        };
+        let _ = sink.send(Err(ServeError::invalid("bad width")));
+        assert_eq!(leader_rx.recv().unwrap().unwrap_err().message, "bad width");
+        assert_eq!(
+            follower_rx.recv().unwrap().unwrap_err().message,
+            "bad width",
+            "followers share the leader's typed error"
+        );
+        // The failure is not cached: the next arrival executes again.
+        assert!(matches!(
+            f.admit(&payload, &RequestOptions::default()),
+            Admission::Execute(..)
+        ));
+        assert_eq!(f.stats().entries, 0);
+        assert_eq!(f.stats().misses, 2);
+    }
+
+    #[test]
+    fn dropped_leader_releases_followers_and_the_key() {
+        let f = front(16, true);
+        let payload = softmax(&[3.0]);
+        let Admission::Execute(sink, leader_rx) = f.admit(&payload, &RequestOptions::default())
+        else {
+            panic!("leads")
+        };
+        let Admission::Resolved(follower_rx) = f.admit(&payload, &RequestOptions::default())
+        else {
+            panic!("coalesces")
+        };
+        drop(sink); // leader torn down unanswered (e.g. shutdown)
+        assert!(leader_rx.recv().is_err(), "leader channel disconnects");
+        assert!(follower_rx.recv().is_err(), "follower channel disconnects");
+        // The key is free again: new arrivals elect a fresh leader
+        // instead of parking behind a dead one.
+        assert!(matches!(
+            f.admit(&payload, &RequestOptions::default()),
+            Admission::Execute(..)
+        ));
+    }
+
+    #[test]
+    fn coalesce_off_still_caches_and_vice_versa() {
+        // coalesce=false: concurrent identicals both execute, but a
+        // completed result still serves later hits.
+        let f = front(16, false);
+        let payload = softmax(&[5.0]);
+        let Admission::Execute(sink, _rx) = f.admit(&payload, &RequestOptions::default())
+        else {
+            panic!("executes")
+        };
+        assert!(matches!(
+            f.admit(&payload, &RequestOptions::default()),
+            Admission::Execute(..)
+        ));
+        sink.send(Ok(reply(&[1.0]))).unwrap();
+        assert!(matches!(
+            f.admit(&payload, &RequestOptions::default()),
+            Admission::Resolved(_)
+        ));
+        assert_eq!(f.stats().hits, 1);
+
+        // cache=0 with coalescing on: in-flight dedupe works, nothing
+        // is retained after completion.
+        let f = front(0, true);
+        let Admission::Execute(sink, _rx) = f.admit(&payload, &RequestOptions::default())
+        else {
+            panic!("executes")
+        };
+        assert!(matches!(
+            f.admit(&payload, &RequestOptions::default()),
+            Admission::Resolved(_)
+        ));
+        sink.send(Ok(reply(&[1.0]))).unwrap();
+        assert!(matches!(
+            f.admit(&payload, &RequestOptions::default()),
+            Admission::Execute(..)
+        ));
+        assert_eq!(f.stats().entries, 0);
+    }
+
+    #[test]
+    fn negative_zero_and_nan_bits_are_distinct_keys() {
+        let f = front(16, true);
+        let a = f.admit(&softmax(&[0.0]), &RequestOptions::default());
+        let b = f.admit(&softmax(&[-0.0]), &RequestOptions::default());
+        assert!(matches!(a, Admission::Execute(..)));
+        assert!(matches!(b, Admission::Execute(..)), "-0.0 is a different request");
+        drop((a, b));
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let mut lru = Lru::new(2);
+        let key = |v: f32| FrontKey {
+            payload: KeyPayload::Softmax(vec![v.to_bits()]),
+            k: 5,
+            priority: 0,
+            temperature: 1.0f32.to_bits(),
+        };
+        lru.insert(key(1.0), reply(&[1.0]));
+        lru.insert(key(2.0), reply(&[2.0]));
+        assert!(lru.get(&key(1.0)).is_some(), "touch 1 → 2 is now LRU");
+        lru.insert(key(3.0), reply(&[3.0]));
+        assert_eq!(lru.len(), 2);
+        assert!(lru.get(&key(2.0)).is_none(), "LRU entry evicted");
+        assert!(lru.get(&key(1.0)).is_some());
+        assert!(lru.get(&key(3.0)).is_some());
+        // Churn far past the compaction bound: the order queue stays
+        // bounded relative to the map.
+        for i in 0..10_000 {
+            lru.insert(key(i as f32), reply(&[i as f32]));
+            let _ = lru.get(&key(i as f32));
+        }
+        assert_eq!(lru.len(), 2);
+        assert!(lru.order.len() <= 64 + 2, "lazy queue compacted: {}", lru.order.len());
+    }
+}

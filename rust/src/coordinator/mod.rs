@@ -1,7 +1,11 @@
 //! L3 coordinator — the serving system around the paper's kernels.
 //!
 //! ```text
-//!  clients ──► Coordinator::submit ──► Batcher (bounded, classed)
+//!  clients ──► Coordinator::submit ──► Front (cache / coalesce)
+//!                                         │ admit()
+//!                                      Batcher (bounded, classed,
+//!                                       per-lane admission quotas,
+//!                                       deadline shedding)
 //!                                         │ next_batch()
 //!                              worker threads (config.workers)
 //!                                         │
@@ -19,8 +23,10 @@
 //! ```
 //!
 //! Submodules: [`request`] (typed v2 request surface: payloads,
-//! options, structured errors), [`batcher`] (continuous dynamic
-//! batching with priority/deadline-aware flush + backpressure),
+//! options, structured errors), [`front`] (request coalescing + LRU
+//! result cache ahead of admission), [`batcher`] (continuous dynamic
+//! batching with priority/deadline-aware flush, per-lane admission
+//! quotas, and backpressure),
 //! [`executor`] (artifact execution + shard merge), [`generate`]
 //! (server-side streaming generation loop), [`model`] (deterministic
 //! synthetic weights), [`beam`] (beam-search driver used by the
@@ -29,11 +35,13 @@
 pub mod batcher;
 pub mod beam;
 pub mod executor;
+pub mod front;
 pub mod generate;
 pub mod model;
 pub mod request;
 
-pub use batcher::{BatchPolicy, Batcher, FlushReason};
+pub use batcher::{AdmitError, BatchPolicy, Batcher, FlushReason};
+pub use front::{Admission, Front, FrontPolicy, FrontStats};
 pub use executor::Executor;
 pub use generate::TokenFrame;
 pub use model::SyntheticLm;
@@ -56,6 +64,7 @@ use crate::metrics;
 /// The assembled serving system.
 pub struct Coordinator {
     batcher: Arc<Batcher>,
+    front: Arc<Front>,
     executor: Arc<Executor>,
     next_id: AtomicU64,
     next_session: AtomicU64,
@@ -79,6 +88,13 @@ impl Coordinator {
             max_batch: cfg.max_batch,
             max_wait: cfg.max_wait,
             queue_capacity: cfg.queue_capacity,
+            interactive_cap: cfg.admission_interactive_cap,
+            batch_cap: cfg.admission_batch_cap,
+        }));
+        let front = Arc::new(Front::new(FrontPolicy {
+            cache_capacity: cfg.cache_capacity,
+            coalesce: cfg.cache_coalesce,
+            default_k: cfg.default_k,
         }));
         let reg = metrics::global();
         let mut workers = Vec::with_capacity(cfg.workers);
@@ -129,6 +145,7 @@ impl Coordinator {
         }
         Ok(Coordinator {
             batcher,
+            front,
             executor,
             next_id: AtomicU64::new(1),
             next_session: AtomicU64::new(1),
@@ -144,7 +161,11 @@ impl Coordinator {
         self.submit_opts(payload, RequestOptions::default())
     }
 
-    /// Submit a request carrying explicit per-request options.
+    /// Submit a request carrying explicit per-request options.  The
+    /// request first passes the [`Front`]: a cache hit or a coalesced
+    /// join resolves without touching the batcher; otherwise the
+    /// batcher's admission control decides (lane quota → immediate
+    /// typed `overloaded`, global capacity → blocking backpressure).
     pub fn submit_opts(
         &self,
         payload: Payload,
@@ -155,17 +176,19 @@ impl Coordinator {
                 "generate is a streaming operation; use Coordinator::generate",
             ));
         }
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let (tx, rx) = oneshot();
-        let req = Request::with_options(id, payload, options, tx);
         metrics::global().counter("coordinator.submitted").inc();
-        metrics::global()
-            .gauge("coordinator.queue_depth")
-            .set(self.batcher.depth() as i64);
-        self.batcher
-            .submit(req)
-            .map_err(|_| ServeError::shutting_down("coordinator shutting down"))?;
-        Ok(rx)
+        match self.front.admit(&payload, &options) {
+            Admission::Resolved(rx) => Ok(rx),
+            Admission::Execute(sink, rx) => {
+                let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+                let req = Request::with_options(id, payload, options, sink);
+                metrics::global()
+                    .gauge("coordinator.queue_depth")
+                    .set(self.batcher.depth() as i64);
+                self.batcher.submit(req).map_err(reject)?;
+                Ok(rx)
+            }
+        }
     }
 
     /// Submit without blocking on a full queue (server overload path).
@@ -175,13 +198,15 @@ impl Coordinator {
                 "generate is a streaming operation; use Coordinator::generate",
             ));
         }
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let (tx, rx) = oneshot();
-        let req = Request::new(id, payload, tx);
-        self.batcher
-            .try_submit(req)
-            .map_err(|_| ServeError::overloaded("queue full (backpressure)"))?;
-        Ok(rx)
+        match self.front.admit(&payload, &RequestOptions::default()) {
+            Admission::Resolved(rx) => Ok(rx),
+            Admission::Execute(sink, rx) => {
+                let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+                let req = Request::new(id, payload, sink);
+                self.batcher.try_submit(req).map_err(reject)?;
+                Ok(rx)
+            }
+        }
     }
 
     /// Submit and wait with a timeout — the blocking convenience path
@@ -246,6 +271,13 @@ impl Coordinator {
         self.batcher.class_depths()
     }
 
+    /// This instance's coalescing/cache counters (the `stats` RPC's
+    /// `cache` object — per-instance, unlike the process-global
+    /// `coordinator.cache.*` metrics).
+    pub fn cache_stats(&self) -> FrontStats {
+        self.front.stats()
+    }
+
     /// Live server-side generation streams.
     pub fn active_streams(&self) -> u64 {
         self.active_streams.load(Ordering::Relaxed)
@@ -264,4 +296,29 @@ impl Coordinator {
         }
         self.executor.shutdown();
     }
+}
+
+/// Map a batcher admission rejection to its typed [`ServeError`] and
+/// deliver it through the rejected request's own reply sink — so a
+/// coalescing leader's rejection fans out to its followers too — then
+/// hand the error back for the submitting caller.
+fn reject(err: AdmitError) -> ServeError {
+    let e = match &err {
+        AdmitError::Overloaded { lane, .. } => {
+            metrics::global()
+                .counter(&format!("coordinator.admission.rejected.{}", lane.as_str()))
+                .inc();
+            ServeError::overloaded(format!(
+                "{} admission quota exhausted; retry with backoff",
+                lane.as_str()
+            ))
+        }
+        AdmitError::ShuttingDown(_) => ServeError::shutting_down("coordinator shutting down"),
+        AdmitError::Expired(_) => {
+            ServeError::deadline("deadline expired before the request was admitted")
+        }
+    };
+    let req = err.into_request();
+    let _ = req.reply.send(Err(e.clone()));
+    e
 }

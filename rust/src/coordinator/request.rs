@@ -242,20 +242,81 @@ pub enum Reply {
 /// Typed result surfaced to clients.
 pub type ReplyResult = Result<Reply, ServeError>;
 
+/// Completion observer attached to a request's reply channel by the
+/// coalescing front ([`super::front`]): called exactly once, with
+/// `Some(result)` when the request completes (any path — executor,
+/// batcher shed, admission rejection) or `None` if the request is
+/// dropped unanswered (shutdown drop).  The front uses it to fan the
+/// leader's result out to coalesced followers and to populate the
+/// result cache.
+pub type CompletionHook = Box<dyn FnOnce(Option<&ReplyResult>) + Send>;
+
+/// A request's reply channel plus an optional completion hook.
+///
+/// Plain requests wrap their [`OnceSender`] (`From` impl); requests
+/// elected coalescing *leader* by the front also carry a hook that
+/// observes the result before it reaches the primary receiver.  The
+/// hook fires on every exit path: `send` passes it the result, and
+/// dropping the sink unanswered fires it with `None` so the front can
+/// clean up its in-flight table instead of leaking waiters.
+pub struct ReplySink {
+    tx: Option<OnceSender<ReplyResult>>,
+    hook: Option<CompletionHook>,
+}
+
+impl ReplySink {
+    /// A sink that also notifies `hook` of the outcome.
+    pub fn with_hook(tx: OnceSender<ReplyResult>, hook: CompletionHook) -> ReplySink {
+        ReplySink { tx: Some(tx), hook: Some(hook) }
+    }
+
+    /// Deliver the result: hook first (fan-out / cache fill), then the
+    /// primary receiver.  Same contract as [`OnceSender::send`]:
+    /// `Err(value)` when the receiver is gone.
+    pub fn send(mut self, result: ReplyResult) -> Result<(), ReplyResult> {
+        if let Some(hook) = self.hook.take() {
+            hook(Some(&result));
+        }
+        self.tx.take().expect("sink sends once").send(result)
+    }
+}
+
+impl From<OnceSender<ReplyResult>> for ReplySink {
+    fn from(tx: OnceSender<ReplyResult>) -> ReplySink {
+        ReplySink { tx: Some(tx), hook: None }
+    }
+}
+
+impl Drop for ReplySink {
+    fn drop(&mut self) {
+        if let Some(hook) = self.hook.take() {
+            hook(None);
+        }
+    }
+}
+
 /// A queued request with its response channel and admission timestamp.
 pub struct Request {
     pub id: RequestId,
     pub payload: Payload,
     pub options: RequestOptions,
-    pub reply: OnceSender<ReplyResult>,
+    pub reply: ReplySink,
     pub enqueued: Instant,
     /// Absolute deadline derived from `options.deadline` at admission.
     pub deadline: Option<Instant>,
+    /// Flushes of this request's queue that boarded other work while
+    /// this request stayed behind — the batcher's starvation guard
+    /// promotes it once this passes a bound (see `Batcher::take`).
+    pub(crate) boarding_skips: u32,
 }
 
 impl Request {
     /// A request with default options.
-    pub fn new(id: RequestId, payload: Payload, reply: OnceSender<ReplyResult>) -> Request {
+    pub fn new(
+        id: RequestId,
+        payload: Payload,
+        reply: impl Into<ReplySink>,
+    ) -> Request {
         Request::with_options(id, payload, RequestOptions::default(), reply)
     }
 
@@ -264,11 +325,19 @@ impl Request {
         id: RequestId,
         payload: Payload,
         options: RequestOptions,
-        reply: OnceSender<ReplyResult>,
+        reply: impl Into<ReplySink>,
     ) -> Request {
         let enqueued = Instant::now();
         let deadline = options.deadline.map(|d| enqueued + d);
-        Request { id, payload, options, reply, enqueued, deadline }
+        Request {
+            id,
+            payload,
+            options,
+            reply: reply.into(),
+            enqueued,
+            deadline,
+            boarding_skips: 0,
+        }
     }
 
     /// Routing class — requests of different classes never share a batch.
@@ -384,6 +453,32 @@ mod tests {
         let e = ServeError::invalid("k=0 outside supported range");
         assert_eq!(e.code, ErrorCode::InvalidArgument);
         assert_eq!(e.to_string(), "invalid_argument: k=0 outside supported range");
+    }
+
+    #[test]
+    fn reply_sink_hook_observes_send_and_drop() {
+        use std::sync::atomic::{AtomicU8, Ordering};
+        use std::sync::Arc;
+        // 0 = not fired, 1 = fired with a result, 2 = fired on drop.
+        let observe = |seen: &Arc<AtomicU8>| {
+            let seen = seen.clone();
+            Box::new(move |r: Option<&ReplyResult>| {
+                seen.store(if r.is_some() { 1 } else { 2 }, Ordering::SeqCst);
+            })
+        };
+
+        let seen = Arc::new(AtomicU8::new(0));
+        let (tx, rx) = oneshot();
+        let sink = ReplySink::with_hook(tx, observe(&seen));
+        sink.send(Ok(Reply::Softmax { probs: vec![1.0] })).unwrap();
+        assert_eq!(seen.load(Ordering::SeqCst), 1, "hook saw the result");
+        assert!(rx.recv().unwrap().is_ok(), "primary receiver still served");
+
+        let seen = Arc::new(AtomicU8::new(0));
+        let (tx, rx) = oneshot();
+        drop(ReplySink::with_hook(tx, observe(&seen)));
+        assert_eq!(seen.load(Ordering::SeqCst), 2, "hook saw the unanswered drop");
+        assert!(rx.recv().is_err(), "receiver observes the dropped sender");
     }
 
     #[test]

@@ -7,6 +7,8 @@
 //! onlinesoftmax accesses                            # the paper's access table
 //! onlinesoftmax loadgen [--addr ..] [--requests N] [--concurrency C]
 //!                       [--op decode|softmax|generate] [--tokens N]
+//!                       [--priority interactive|batch|mixed]
+//!                       [--deadline-ms MS] [--distinct N]
 //! onlinesoftmax help
 //! ```
 
@@ -28,7 +30,8 @@ const VALUE_OPTS: &[&str] = &[
     "queue-capacity", "workers", "k", "seed", "fig", "sizes", "batch", "threads",
     "device", "requests", "concurrency", "op", "out", "backend", "vocab", "hidden",
     "host-shards", "shard-threshold", "grid-rows", "pool-sched", "shard-backend",
-    "request-timeout", "tokens",
+    "request-timeout", "tokens", "admission-interactive-cap", "admission-batch-cap",
+    "cache-capacity", "cache-coalesce", "priority", "deadline-ms", "distinct",
 ];
 
 fn main() {
@@ -202,7 +205,42 @@ fn cmd_accesses(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Per-priority-class outcome tally for one loadgen run.  Structured
+/// rejections (`overloaded`, `deadline_exceeded`) are counted, not
+/// fatal — the overload CI smoke asserts on this summary.
+#[derive(Default)]
+struct ClassTally {
+    ok: Vec<Duration>,
+    overloaded: usize,
+    deadline: usize,
+    other: usize,
+}
+
+impl ClassTally {
+    fn merge(&mut self, mut other: ClassTally) {
+        self.ok.append(&mut other.ok);
+        self.overloaded += other.overloaded;
+        self.deadline += other.deadline;
+        self.other += other.other;
+    }
+
+    fn attempts(&self) -> usize {
+        self.ok.len() + self.overloaded + self.deadline + self.other
+    }
+}
+
+/// Deterministic payload for a `--distinct` slot: identical bits for
+/// the same slot across workers and repeats, so the server's result
+/// cache and coalescer can hit.
+fn slot_logits(slot: usize, n: usize, scale: f32) -> Vec<f32> {
+    let mut rng = onlinesoftmax::rng::Xoshiro256pp::seed_from_u64(0xD15C + slot as u64);
+    rng.logits(n, scale)
+}
+
 fn cmd_loadgen(args: &Args) -> Result<()> {
+    use onlinesoftmax::coordinator::ErrorCode;
+    use onlinesoftmax::server::wire;
+
     let addr = args.opt_str("addr").unwrap_or("127.0.0.1:7070").to_string();
     let requests: usize = args.opt_parse("requests", 200)?;
     let concurrency: usize = args.opt_parse("concurrency", 4)?;
@@ -210,7 +248,24 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     // Tokens per stream for `--op generate` (each "request" is one
     // whole server-side stream).
     let tokens: usize = args.opt_parse("tokens", 8)?;
+    let priority = args.opt_str("priority").unwrap_or("interactive").to_string();
+    let deadline_ms: Option<u64> = match args.opt_str("deadline-ms") {
+        Some(s) => Some(
+            s.parse()
+                .map_err(|_| anyhow!("--deadline-ms expects milliseconds, got `{s}`"))?,
+        ),
+        None => None,
+    };
+    // Payload variety: workers cycle through `distinct` payload slots
+    // (identical bits across workers, so the server's result cache can
+    // hit); 0 = every request unique.
+    let distinct: usize = args.opt_parse("distinct", 0)?;
     args.finish()?;
+    if !matches!(priority.as_str(), "interactive" | "batch" | "mixed") {
+        return Err(anyhow!(
+            "unknown priority `{priority}` (interactive|batch|mixed)"
+        ));
+    }
 
     // Probe connection (fail fast if the server is down).
     let mut probe = Client::connect(&addr)?;
@@ -218,79 +273,139 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
 
     let per_worker = requests.div_ceil(concurrency);
     let t0 = Instant::now();
-    let latencies: Vec<Duration> = std::thread::scope(|scope| {
+    // [interactive, batch] tallies merged across workers.
+    let tallies: [ClassTally; 2] = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..concurrency)
             .map(|w| {
                 let addr = addr.clone();
                 let op = op.clone();
-                scope.spawn(move || -> Result<Vec<Duration>> {
+                let priority = priority.clone();
+                scope.spawn(move || -> Result<[ClassTally; 2]> {
                     let mut client = Client::connect(&addr)?;
                     client.set_tag(Some(&format!("loadgen-{w}")));
+                    client.set_deadline_ms(deadline_ms);
                     let mut rng =
                         onlinesoftmax::rng::Xoshiro256pp::seed_from_u64(w as u64 + 1);
-                    let mut lats = Vec::with_capacity(per_worker);
+                    let mut tally = [ClassTally::default(), ClassTally::default()];
                     for r in 0..per_worker {
+                        let class = match priority.as_str() {
+                            "batch" => 1,
+                            "mixed" => (w + r) % 2,
+                            _ => 0,
+                        };
+                        client.set_priority(Some(if class == 0 {
+                            "interactive"
+                        } else {
+                            "batch"
+                        }));
+                        // Slot-seeded payloads are bit-identical across
+                        // workers and repeats; slot 0 = unique payloads
+                        // from the per-worker stream.
+                        let slot = if distinct > 0 { Some(r % distinct) } else { None };
                         let t = Instant::now();
-                        match op.as_str() {
-                            "softmax" => {
-                                let logits = rng.logits(8192, 5.0);
-                                client.softmax(&logits)?;
-                            }
-                            "generate" => {
-                                // One streamed generation per request:
-                                // a single wire round-trip, decoded
-                                // server-side, batched across workers.
-                                let sid = client.open_session()?;
-                                let start = (w * 31 + r) as i32 % 512;
-                                let frames =
-                                    client.generate_all(sid, &[start], tokens, Some(5))?;
-                                client.close_session(sid)?;
-                                if frames.len() != tokens {
-                                    return Err(anyhow!(
-                                        "stream returned {} of {} tokens",
-                                        frames.len(),
-                                        tokens
-                                    ));
+                        let res: Result<()> = (|| {
+                            match op.as_str() {
+                                "softmax" => {
+                                    let logits = match slot {
+                                        Some(s) => slot_logits(s, 8192, 5.0),
+                                        None => rng.logits(8192, 5.0),
+                                    };
+                                    client.softmax(&logits)?;
+                                }
+                                "generate" => {
+                                    // One streamed generation per
+                                    // request: a single wire
+                                    // round-trip, decoded server-side,
+                                    // batched across workers.
+                                    let sid = client.open_session()?;
+                                    let start = (w * 31 + r) as i32 % 512;
+                                    let frames =
+                                        client.generate_all(sid, &[start], tokens, Some(5))?;
+                                    client.close_session(sid)?;
+                                    if frames.len() != tokens {
+                                        return Err(anyhow!(
+                                            "stream returned {} of {} tokens",
+                                            frames.len(),
+                                            tokens
+                                        ));
+                                    }
+                                }
+                                _ => {
+                                    let hidden = match slot {
+                                        Some(s) => slot_logits(s, 128, 1.0),
+                                        None => rng.logits(128, 1.0),
+                                    };
+                                    client.decode(&hidden, Some(5))?;
                                 }
                             }
-                            _ => {
-                                let hidden = rng.logits(128, 1.0);
-                                client.decode(&hidden, Some(5))?;
-                            }
+                            Ok(())
+                        })();
+                        match res {
+                            Ok(()) => tally[class].ok.push(t.elapsed()),
+                            Err(e) => match wire::error_code(&e) {
+                                Some(ErrorCode::Overloaded) => tally[class].overloaded += 1,
+                                Some(ErrorCode::DeadlineExceeded) => tally[class].deadline += 1,
+                                _ => tally[class].other += 1,
+                            },
                         }
-                        lats.push(t.elapsed());
                     }
-                    Ok(lats)
+                    Ok(tally)
                 })
             })
             .collect();
-        handles
-            .into_iter()
-            .flat_map(|h| h.join().expect("loadgen worker").unwrap_or_default())
-            .collect()
+        let mut merged = [ClassTally::default(), ClassTally::default()];
+        for h in handles {
+            if let Ok([i, b]) = h.join().expect("loadgen worker") {
+                merged[0].merge(i);
+                merged[1].merge(b);
+            }
+        }
+        merged
     });
     let wall = t0.elapsed();
-    let mut sorted = latencies.clone();
-    sorted.sort();
-    let total = sorted.len();
-    if total == 0 {
-        return Err(anyhow!("no successful requests"));
-    }
-    let pick = |q: f64| sorted[((q * (total - 1) as f64) as usize).min(total - 1)];
+    let attempts = tallies[0].attempts() + tallies[1].attempts();
+    let ok_total = tallies[0].ok.len() + tallies[1].ok.len();
     println!(
-        "loadgen: {} `{}` requests, concurrency {}, wall {:.2}s → {:.0} req/s",
-        total,
+        "loadgen: {} `{}` requests ({} ok), concurrency {}, wall {:.2}s → {:.0} req/s",
+        attempts,
         op,
+        ok_total,
         concurrency,
         wall.as_secs_f64(),
-        total as f64 / wall.as_secs_f64()
+        ok_total as f64 / wall.as_secs_f64()
     );
-    println!(
-        "latency p50 {:.2}ms  p95 {:.2}ms  p99 {:.2}ms  max {:.2}ms",
-        pick(0.50).as_secs_f64() * 1e3,
-        pick(0.95).as_secs_f64() * 1e3,
-        pick(0.99).as_secs_f64() * 1e3,
-        sorted[total - 1].as_secs_f64() * 1e3
-    );
+    for (name, tally) in ["interactive", "batch"].iter().zip(tallies.iter()) {
+        if tally.attempts() == 0 {
+            continue;
+        }
+        println!(
+            "class {name}: ok={} overloaded={} deadline={} other={}",
+            tally.ok.len(),
+            tally.overloaded,
+            tally.deadline,
+            tally.other
+        );
+        if tally.ok.is_empty() {
+            continue;
+        }
+        let mut sorted = tally.ok.clone();
+        sorted.sort();
+        let total = sorted.len();
+        let pick = |q: f64| sorted[((q * (total - 1) as f64) as usize).min(total - 1)];
+        println!(
+            "  latency p50 {:.2}ms  p95 {:.2}ms  p99 {:.2}ms  max {:.2}ms",
+            pick(0.50).as_secs_f64() * 1e3,
+            pick(0.95).as_secs_f64() * 1e3,
+            pick(0.99).as_secs_f64() * 1e3,
+            sorted[total - 1].as_secs_f64() * 1e3
+        );
+    }
+    let structured = tallies[0].overloaded
+        + tallies[1].overloaded
+        + tallies[0].deadline
+        + tallies[1].deadline;
+    if ok_total == 0 && structured == 0 {
+        return Err(anyhow!("no successful requests"));
+    }
     Ok(())
 }

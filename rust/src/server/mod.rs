@@ -267,6 +267,16 @@ fn dispatch(
             }
             fields.set("queue_depths", depths);
             fields.set("active_streams", Value::Number(coord.active_streams() as f64));
+            // Per-instance coalescing/cache counters (the process-wide
+            // `coordinator.cache.*` metrics aggregate across every
+            // coordinator in a test binary; these scope to this one).
+            let cache = coord.cache_stats();
+            let mut c = Value::object();
+            c.set("hits", Value::Number(cache.hits as f64))
+                .set("misses", Value::Number(cache.misses as f64))
+                .set("coalesced", Value::Number(cache.coalesced as f64))
+                .set("entries", Value::Number(cache.entries as f64));
+            fields.set("cache", c);
             ok_object(fields)
         }
         Op::OpenSession => {

@@ -43,7 +43,9 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::coordinator::{Payload, Priority, Reply, RequestOptions, ServeError, TokenFrame};
+use crate::coordinator::{
+    ErrorCode, Payload, Priority, Reply, RequestOptions, ServeError, TokenFrame,
+};
 use crate::json::{self, Value};
 
 /// The current protocol version.
@@ -379,23 +381,65 @@ pub fn encode_stream_failed(stream: u64, err: &ServeError) -> String {
 // client-side decoding
 // ---------------------------------------------------------------------------
 
+/// A server-reported error decoded on the client side, preserved as a
+/// typed value inside the returned `anyhow::Error` chain so tooling
+/// (the load generator's overload accounting, integration tests) can
+/// classify failures by [`ErrorCode`] instead of parsing display
+/// strings: `err.downcast_ref::<WireError>()`, or the [`error_code`]
+/// convenience.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireError {
+    /// The decoded `error.code`, when the server sent a recognized one.
+    pub code: Option<ErrorCode>,
+    /// The raw wire `code` string (kept even when unrecognized, for
+    /// display fidelity against newer servers).
+    pub code_str: Option<String>,
+    pub message: String,
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.code_str {
+            Some(code) => write!(f, "server error [{code}]: {}", self.message),
+            None => write!(f, "server error: {}", self.message),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// The typed [`ErrorCode`] of a client-call failure, if the failure
+/// was a structured server rejection (as opposed to an I/O error).
+pub fn error_code(err: &anyhow::Error) -> Option<ErrorCode> {
+    err.downcast_ref::<WireError>().and_then(|w| w.code)
+}
+
 fn error_from(v: &Value) -> anyhow::Error {
-    match v.get("error") {
+    let wire = match v.get("error") {
         // v2: structured object
         Some(Value::Object(_)) => {
             let err = v.get("error").unwrap();
             let code = err.get("code").and_then(Value::as_str).unwrap_or("internal");
             let message =
                 err.get("message").and_then(Value::as_str).unwrap_or("unknown");
-            anyhow!("server error [{code}]: {message}")
+            WireError {
+                code: ErrorCode::parse(code),
+                code_str: Some(code.to_string()),
+                message: message.to_string(),
+            }
         }
         // v1: message string (code may ride along)
-        Some(Value::String(s)) => match v.get("code").and_then(Value::as_str) {
-            Some(code) => anyhow!("server error [{code}]: {s}"),
-            None => anyhow!("server error: {s}"),
-        },
-        _ => anyhow!("server error: unknown"),
-    }
+        Some(Value::String(s)) => {
+            let code_str = v.get("code").and_then(Value::as_str);
+            WireError {
+                code: code_str.and_then(ErrorCode::parse),
+                code_str: code_str.map(str::to_string),
+                message: s.clone(),
+            }
+        }
+        _ => WireError { code: None, code_str: None, message: "unknown".to_string() },
+    };
+    anyhow::Error::new(wire)
 }
 
 /// Decode a single-frame response line on the client side (either
@@ -563,6 +607,34 @@ mod tests {
         assert!(format!("{e}").contains("not_found"), "{e}");
         assert_eq!(encode_error_for(1, &err), encode_error_v1(&err));
         assert_eq!(encode_error_for(2, &err), encode_error_v2(&err));
+    }
+
+    #[test]
+    fn decoded_errors_carry_typed_codes() {
+        // v2 structured error → downcastable WireError with a parsed code.
+        let line = encode_error_v2(&ServeError::overloaded("batch lane at quota"));
+        let e = decode_response(&line).unwrap_err();
+        assert_eq!(error_code(&e), Some(ErrorCode::Overloaded));
+        let w = e.downcast_ref::<WireError>().unwrap();
+        assert_eq!(w.code_str.as_deref(), Some("overloaded"));
+        assert_eq!(w.message, "batch lane at quota");
+
+        // v1 carries the code as a rider; still typed.
+        let line = encode_error_v1(&ServeError::deadline("too slow"));
+        let e = decode_response(&line).unwrap_err();
+        assert_eq!(error_code(&e), Some(ErrorCode::DeadlineExceeded));
+
+        // An unrecognized code from a newer server degrades gracefully:
+        // no typed code, but the raw label survives in the display.
+        let e = decode_response(
+            r#"{"v":2,"ok":false,"error":{"code":"rate_limited","message":"slow down"}}"#,
+        )
+        .unwrap_err();
+        assert_eq!(error_code(&e), None);
+        assert!(format!("{e}").contains("[rate_limited]"), "{e}");
+
+        // I/O-level failures have no wire code.
+        assert_eq!(error_code(&anyhow!("connection reset")), None);
     }
 
     #[test]

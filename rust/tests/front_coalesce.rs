@@ -1,0 +1,170 @@
+//! Coordinator-level properties of the coalescing/caching front:
+//! coalesced and cached replies are **bitwise identical** to a plain
+//! execution, requests differing only in `tag`/`deadline_ms` share one
+//! execution, and requests differing in `k` or priority never do.
+//!
+//! Determinism trick: with a long `max_wait` and nothing else queued, a
+//! submitted leader sits in the batcher for the whole flush window, so
+//! identical follow-up submits are *guaranteed* to find it in flight
+//! and coalesce — no racy sleeps needed.
+
+use std::time::Duration;
+
+use onlinesoftmax::config::{BackendKind, ServeConfig};
+use onlinesoftmax::coordinator::{
+    Coordinator, Payload, Priority, Reply, RequestOptions,
+};
+use onlinesoftmax::rng::Xoshiro256pp;
+
+const TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Small host backend, single-thread kernels (vocab below the shard
+/// threshold), and a wide flush window so queued leaders linger.
+fn front_config(cache_capacity: usize, coalesce: bool) -> ServeConfig {
+    let mut cfg = ServeConfig::default();
+    cfg.backend = BackendKind::Host;
+    cfg.vocab = 512;
+    cfg.hidden = 32;
+    cfg.workers = 2;
+    cfg.max_wait = Duration::from_millis(40);
+    cfg.cache_capacity = cache_capacity;
+    cfg.cache_coalesce = coalesce;
+    cfg
+}
+
+/// Exact-bits fingerprint of a reply — `f32::to_bits` so "equal"
+/// means bitwise equal, not approximately equal.
+fn bits(reply: &Reply) -> (Vec<u32>, Vec<i64>) {
+    match reply {
+        Reply::Softmax { probs } => (probs.iter().map(|p| p.to_bits()).collect(), Vec::new()),
+        Reply::TopK { vals, idx } => {
+            (vals.iter().map(|v| v.to_bits()).collect(), idx.clone())
+        }
+    }
+}
+
+fn recv(rx: onlinesoftmax::exec::channel::OnceReceiver<
+    Result<Reply, onlinesoftmax::coordinator::ServeError>,
+>) -> Reply {
+    rx.recv_timeout(TIMEOUT).expect("reply channel").expect("ok reply")
+}
+
+#[test]
+fn coalesced_and_cached_replies_are_bitwise_identical_to_plain_execution() {
+    let fronted = Coordinator::start(&front_config(256, true)).unwrap();
+    let plain = Coordinator::start(&front_config(0, false)).unwrap();
+    let mut rng = Xoshiro256pp::seed_from_u64(11);
+
+    for round in 0..4 {
+        let payload = if round % 2 == 0 {
+            Payload::Softmax { logits: rng.logits(512, 6.0) }
+        } else {
+            Payload::DecodeTopK { hidden: rng.logits(32, 1.0) }
+        };
+        // Leader + 3 followers submitted back-to-back: the leader is
+        // still waiting out `max_wait`, so the followers coalesce.
+        let rxs: Vec<_> = (0..4)
+            .map(|_| fronted.submit(payload.clone()).unwrap())
+            .collect();
+        let replies: Vec<_> = rxs.into_iter().map(recv).collect();
+        // A later identical submit is answered from the cache.
+        let cached = recv(fronted.submit(payload.clone()).unwrap());
+        // The reference execution has no front at all.
+        let reference = recv(plain.submit(payload).unwrap());
+
+        let want = bits(&reference);
+        for (i, r) in replies.iter().chain(std::iter::once(&cached)).enumerate() {
+            assert_eq!(bits(r), want, "round {round} reply {i} drifted from plain bits");
+        }
+    }
+
+    let stats = fronted.cache_stats();
+    assert_eq!(stats.misses, 4, "one execution per distinct payload");
+    assert_eq!(stats.coalesced, 12, "three followers per round");
+    assert_eq!(stats.hits, 4, "one cache hit per round");
+    assert_eq!(stats.entries, 4);
+    assert_eq!(plain.cache_stats(), Default::default(), "plain front counts nothing");
+
+    fronted.shutdown();
+    plain.shutdown();
+}
+
+#[test]
+fn tag_and_deadline_differences_coalesce_but_k_and_priority_never_do() {
+    let coord = Coordinator::start(&front_config(256, true)).unwrap();
+    let mut rng = Xoshiro256pp::seed_from_u64(12);
+    let hidden = rng.logits(32, 1.0);
+    let payload = Payload::DecodeTopK { hidden };
+
+    let leader_opts = RequestOptions {
+        client_tag: Some("leader".into()),
+        ..RequestOptions::default()
+    };
+    // Same key: differs only in tag + deadline.
+    let follower_opts = RequestOptions {
+        client_tag: Some("follower".into()),
+        deadline: Some(Duration::from_secs(30)),
+        ..RequestOptions::default()
+    };
+    // `k = Some(default_k)` resolves to the same key as `k = None`.
+    let explicit_default_k = RequestOptions::with_k(5);
+    // Different keys: an explicit non-default k, and a batch-priority twin.
+    let other_k = RequestOptions::with_k(7);
+    let batch_priority = RequestOptions {
+        priority: Priority::Batch,
+        ..RequestOptions::default()
+    };
+
+    let rx_leader = coord.submit_opts(payload.clone(), leader_opts).unwrap();
+    let rx_follow = coord.submit_opts(payload.clone(), follower_opts).unwrap();
+    let rx_same_k = coord.submit_opts(payload.clone(), explicit_default_k).unwrap();
+    let rx_other_k = coord.submit_opts(payload.clone(), other_k).unwrap();
+    let rx_batch = coord.submit_opts(payload.clone(), batch_priority).unwrap();
+
+    let stats = coord.cache_stats();
+    assert_eq!(stats.coalesced, 2, "tag/deadline-only and default-k twins coalesce");
+    assert_eq!(stats.misses, 3, "leader, k=7, and batch-priority each execute");
+
+    let leader = recv(rx_leader);
+    assert_eq!(bits(&recv(rx_follow)), bits(&leader), "follower shares leader bits");
+    assert_eq!(bits(&recv(rx_same_k)), bits(&leader), "explicit default k too");
+    let other = recv(rx_other_k);
+    match (&leader, &other) {
+        (Reply::TopK { vals: a, .. }, Reply::TopK { vals: b, .. }) => {
+            assert_eq!(a.len(), 5);
+            assert_eq!(b.len(), 7, "k=7 ran its own execution");
+        }
+        other => panic!("unexpected replies {other:?}"),
+    }
+    // Same payload + k, different priority: separate execution, but
+    // deterministic kernels mean identical bits — which is exactly why
+    // the key must split on priority (scheduling class), not results.
+    assert_eq!(bits(&recv(rx_batch)), bits(&leader));
+
+    coord.shutdown();
+}
+
+#[test]
+fn coalesced_errors_share_fate_but_are_not_cached() {
+    let coord = Coordinator::start(&front_config(256, true)).unwrap();
+    // Wrong vector length → executor rejects with invalid_argument.
+    let payload = Payload::Softmax { logits: vec![1.0, 2.0, 3.0] };
+    let rx1 = coord.submit(payload.clone()).unwrap();
+    let rx2 = coord.submit(payload.clone()).unwrap();
+    assert_eq!(coord.cache_stats().coalesced, 1);
+
+    let e1 = rx1.recv_timeout(TIMEOUT).unwrap().unwrap_err();
+    let e2 = rx2.recv_timeout(TIMEOUT).unwrap().unwrap_err();
+    assert_eq!(e1, e2, "followers share the leader's typed error");
+
+    // Errors never enter the cache: a retry executes again (miss), it
+    // is not replayed from a poisoned entry.
+    let rx3 = coord.submit(payload).unwrap();
+    assert!(rx3.recv_timeout(TIMEOUT).unwrap().is_err());
+    let stats = coord.cache_stats();
+    assert_eq!(stats.hits, 0);
+    assert_eq!(stats.misses, 2);
+    assert_eq!(stats.entries, 0);
+
+    coord.shutdown();
+}

@@ -1,0 +1,212 @@
+//! Overload end-to-end over TCP (host backend — always runs): per-lane
+//! admission quotas reject with a *typed* `overloaded` error the client
+//! can downcast, deadline-expired queued work is shed before execution
+//! (`coordinator.admission.shed`), the connection survives rejections,
+//! and the coalescing front's cache serves bitwise-identical replies
+//! (`cache.hits` witnessed through the `stats` RPC).
+//!
+//! Determinism trick (same as `front_coalesce.rs`): a long `max_wait`
+//! with one worker parks the first admitted requests in the batcher for
+//! the whole flush window, so staggered follow-ups are *guaranteed* to
+//! find the lane occupied (quota test) or the leader in flight
+//! (coalesce test) — generous margins, no load-dependent racing.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use onlinesoftmax::config::{BackendKind, ServeConfig};
+use onlinesoftmax::coordinator::{Coordinator, ErrorCode};
+use onlinesoftmax::metrics;
+use onlinesoftmax::rng::Xoshiro256pp;
+use onlinesoftmax::server::{client::Client, wire, Server};
+
+struct Running {
+    addr: String,
+    stop: Arc<std::sync::atomic::AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Drop for Running {
+    fn drop(&mut self) {
+        self.stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn start_server(mut cfg: ServeConfig) -> Running {
+    cfg.backend = BackendKind::Host;
+    cfg.vocab = 512;
+    cfg.hidden = 32;
+    cfg.addr = "127.0.0.1:0".into();
+    let coordinator = Arc::new(Coordinator::start(&cfg).unwrap());
+    let server = Server::bind(&cfg.addr, coordinator, 8).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let stop = server.stop_handle();
+    let thread = std::thread::spawn(move || {
+        let _ = server.serve();
+    });
+    Running { addr, stop, thread: Some(thread) }
+}
+
+/// The batcher holds a partial batch for the whole flush window.
+const WINDOW: Duration = Duration::from_millis(250);
+/// Stagger between submissions — large vs connect/dispatch cost, small
+/// vs `WINDOW`.
+const STEP: Duration = Duration::from_millis(60);
+
+#[test]
+fn lane_quota_rejects_typed_overloaded_and_connection_survives() {
+    let mut cfg = ServeConfig::default();
+    cfg.workers = 1;
+    cfg.max_wait = WINDOW;
+    cfg.admission_batch_cap = 2;
+    cfg.cache_capacity = 0;
+    cfg.cache_coalesce = false;
+    let server = start_server(cfg);
+    let rejected = metrics::global().counter("coordinator.admission.rejected.batch");
+    let rejected_before = rejected.get();
+
+    // Two batch-priority requests occupy the whole batch lane (cap 2)
+    // until the window flushes them.
+    let addr = server.addr.clone();
+    std::thread::scope(|scope| {
+        let occupants: Vec<_> = (0..2)
+            .map(|i| {
+                let addr = addr.clone();
+                scope.spawn(move || {
+                    let mut client = Client::connect(&addr).unwrap();
+                    client.set_priority(Some("batch"));
+                    let mut rng = Xoshiro256pp::seed_from_u64(200 + i);
+                    let hidden = rng.logits(32, 1.0);
+                    client.decode(&hidden, Some(5)).unwrap()
+                })
+            })
+            .map(|h| {
+                std::thread::sleep(STEP);
+                h
+            })
+            .collect();
+
+        // Third batch-priority request: the lane is full, so it is
+        // rejected immediately with a structured `overloaded` error —
+        // no blocking, no waiting out the window.
+        let mut client = Client::connect(&addr).unwrap();
+        client.set_priority(Some("batch"));
+        let mut rng = Xoshiro256pp::seed_from_u64(300);
+        let hidden = rng.logits(32, 1.0);
+        let err = client.decode(&hidden, Some(5)).unwrap_err();
+        assert_eq!(
+            wire::error_code(&err),
+            Some(ErrorCode::Overloaded),
+            "typed code survives the wire: {err}"
+        );
+        assert!(format!("{err}").contains("overloaded"), "{err}");
+        assert!(rejected.get() > rejected_before, "rejection counter incremented");
+
+        // The same connection keeps working: interactive traffic is
+        // not subject to the batch lane's quota, and the transport
+        // survived the rejection.
+        client.ping().unwrap();
+        client.set_priority(Some("interactive"));
+        let (vals, idx) = client.decode(&hidden, Some(5)).unwrap();
+        assert_eq!(vals.len(), 5);
+        assert_eq!(idx.len(), 5);
+
+        for h in occupants {
+            let (vals, _) = h.join().unwrap();
+            assert_eq!(vals.len(), 5, "lane occupants complete when the window flushes");
+        }
+    });
+}
+
+#[test]
+fn queued_work_past_its_deadline_is_shed_with_a_typed_error() {
+    let mut cfg = ServeConfig::default();
+    cfg.workers = 1;
+    cfg.max_wait = WINDOW;
+    cfg.cache_capacity = 0;
+    cfg.cache_coalesce = false;
+    let server = start_server(cfg);
+    let shed = metrics::global().counter("coordinator.admission.shed");
+    let shed_before = shed.get();
+
+    // A lone queued request's flush bound IS its deadline, so the
+    // worker wakes exactly when the request is already doomed and
+    // sheds it instead of executing it.
+    let mut client = Client::connect(&server.addr).unwrap();
+    client.set_deadline_ms(Some(50));
+    let mut rng = Xoshiro256pp::seed_from_u64(400);
+    let hidden = rng.logits(32, 1.0);
+    let err = client.decode(&hidden, Some(5)).unwrap_err();
+    assert_eq!(
+        wire::error_code(&err),
+        Some(ErrorCode::DeadlineExceeded),
+        "typed code survives the wire: {err}"
+    );
+
+    // The shed happens on the worker thread at the deadline instant —
+    // independent of when the connection thread gave up — so poll
+    // briefly rather than racing it.
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while shed.get() == shed_before && std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(shed.get() > shed_before, "queued expired work was shed, not executed");
+
+    // Connection survives; without a deadline the same request works.
+    client.set_deadline_ms(None);
+    client.ping().unwrap();
+    let (vals, _) = client.decode(&hidden, Some(5)).unwrap();
+    assert_eq!(vals.len(), 5);
+}
+
+#[test]
+fn coalesced_and_cached_wire_replies_are_bitwise_identical() {
+    let mut cfg = ServeConfig::default();
+    cfg.workers = 2;
+    cfg.max_wait = Duration::from_millis(100);
+    let server = start_server(cfg);
+
+    let mut rng = Xoshiro256pp::seed_from_u64(500);
+    let logits = rng.logits(512, 6.0);
+
+    // Leader + staggered follower: identical payloads, the follower is
+    // guaranteed to arrive while the leader waits out the window.
+    let (first, second) = std::thread::scope(|scope| {
+        let leader = {
+            let addr = server.addr.clone();
+            let logits = logits.clone();
+            scope.spawn(move || Client::connect(&addr).unwrap().softmax(&logits).unwrap())
+        };
+        std::thread::sleep(Duration::from_millis(30));
+        let follower = {
+            let addr = server.addr.clone();
+            let logits = logits.clone();
+            scope.spawn(move || Client::connect(&addr).unwrap().softmax(&logits).unwrap())
+        };
+        (leader.join().unwrap(), follower.join().unwrap())
+    });
+
+    // A later identical request is served from the result cache.
+    let mut client = Client::connect(&server.addr).unwrap();
+    let cached = client.softmax(&logits).unwrap();
+
+    let bits = |probs: &[f32]| probs.iter().map(|p| p.to_bits()).collect::<Vec<u32>>();
+    assert_eq!(bits(&second), bits(&first), "coalesced reply bitwise identical");
+    assert_eq!(bits(&cached), bits(&first), "cached reply bitwise identical");
+
+    // The `stats` RPC exposes this instance's front counters.
+    let stats = client.stats().unwrap();
+    let cache = stats.get("cache").expect("stats carries a cache object");
+    let count = |k: &str| cache.get(k).and_then(|v| v.as_f64()).unwrap_or(-1.0);
+    assert_eq!(count("misses"), 1.0, "one execution for three identical requests");
+    assert_eq!(count("coalesced"), 1.0);
+    assert_eq!(count("hits"), 1.0);
+    assert_eq!(count("entries"), 1.0);
+    assert!(
+        metrics::global().counter("coordinator.cache.hits").get() > 0,
+        "process-global cache-hit counter witnessed"
+    );
+}
