@@ -1,6 +1,7 @@
 //! `cargo bench --bench backend_ablation` — scalar (fused blocked) vs
-//! vectorized (lane-split streaming) shard-scan backends across vocab
-//! sizes.  Thin wrapper over
+//! vectorized (lane-split streaming) vs twopass (stored-partials)
+//! shard-scan backends across vocab sizes — the crossover measurement
+//! behind `auto` routing.  Thin wrapper over
 //! [`onlinesoftmax::benches::backend_ablation`]; options via env:
 //! OSMAX_BENCH_FAST=1 for a quick pass, OSMAX_BENCH_THREADS=N to pin
 //! the shard-worker count (default 0 = one worker per core),

@@ -14,7 +14,10 @@
 //! * [`steal_ablation`] — FIFO injector vs work-stealing deques under
 //!   uniform and skewed tile costs
 //! * [`backend_ablation`] — scalar (fused blocked) vs vectorized
-//!   (lane-split streaming) shard scan backends across vocab sizes
+//!   (lane-split streaming) vs twopass (stored-partials two-pass)
+//!   shard scan backends across vocab sizes — the crossover sweep
+//!   behind `auto` routing, with a machine-readable report via
+//!   `bench --json` (the committed `BENCH_backend.json` trajectory)
 //!
 //! **Hardware scaling** (DESIGN.md §Hardware-Adaptation): the paper's
 //! batch-4000 × V-100k workloads size the *GPU's* DRAM; on this CPU we
@@ -52,6 +55,13 @@ pub struct BenchOpts {
     pub smoke: bool,
     /// Append JSON-lines results to this path.
     pub json_out: Option<String>,
+    /// Write a single machine-readable JSON report document to this
+    /// path (`bench --json FILE`).  Unlike [`Self::json_out`]'s
+    /// append-only record stream, the report is one self-describing
+    /// document (schema/fig/git/records) written atomically at the end
+    /// of the run — the format of the committed `BENCH_backend.json`
+    /// trajectory, pinned by the `bench_json` schema test.
+    pub json_report: Option<String>,
 }
 
 impl BenchOpts {
@@ -628,28 +638,51 @@ pub fn steal_ablation(opts: &BenchOpts) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------------
-// Backend ablation: scalar vs vectorized per-tile scan backends
+// Backend ablation: scalar vs vectorized vs twopass per-tile scans
 // ---------------------------------------------------------------------------
+
+/// `git describe --always --dirty` for bench-report provenance;
+/// `"unknown"` when git is unavailable (e.g. a source tarball).
+fn git_describe() -> String {
+    std::process::Command::new("git")
+        .args(["describe", "--always", "--dirty"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".into())
+}
 
 /// Ablation over the shard-scan backend ([`ShardBackendKind`]): the
 /// same batch×shard fused softmax+top-k grid executed by a `scalar`
 /// engine (the fused cache-blocked scan — one ⊕ fold per 512-element
-/// tile, threshold-filtered candidate insertion riding the same sweep)
-/// and a `vectorized` engine (the §7 lane-split streaming scan — one ⊕
-/// fold per element per lane, plus a separate candidate sweep).
+/// tile, threshold-filtered candidate insertion riding the same
+/// sweep), a `vectorized` engine (the §7 lane-split streaming scan —
+/// one ⊕ fold per element per lane, plus a separate candidate sweep),
+/// and a `twopass` engine (Dukhan & Ablavatski stored-partials scan —
+/// independent per-stripe partials with software-pipelined SIMD, exact
+/// rescale from the stored partials).
 ///
-/// Both backends run identical plans and select identical indices
+/// All backends run identical plans and select identical indices
 /// (asserted here on every size), so the delta is pure kernel choice —
 /// exactly the per-ISA tuning question the related softmax work
-/// (Dukhan & Ablavatski; Czaja et al.) answers per hardware target, and
-/// the reason backend selection is a runtime knob rather than a
-/// compile-time choice.
+/// (Dukhan & Ablavatski; Czaja et al.) answers per hardware target.
+/// The vocab sweep is the **crossover measurement** behind
+/// [`AutoBackend`](crate::shard::AutoBackend) routing: re-run with
+/// `bench --fig backend --json BENCH_backend.json` after kernel or
+/// hardware changes and update
+/// [`TWOPASS_CROSSOVER`](crate::shard::TWOPASS_CROSSOVER) (and its
+/// decision-table test) from the report.
 pub fn backend_ablation(opts: &BenchOpts) -> Result<()> {
     let sizes = opts.sizes.clone().unwrap_or_else(|| {
         if opts.smoke {
             vec![8_192]
         } else {
-            vec![25_000, 100_000, 400_000]
+            // ≥ 4 sizes so the committed BENCH_backend.json trajectory
+            // brackets the crossover from both sides.
+            vec![8_192, 25_000, 100_000, 400_000]
         }
     });
     let batch = opts.batch.unwrap_or(if opts.smoke { 3 } else { 8 });
@@ -662,62 +695,90 @@ pub fn backend_ablation(opts: &BenchOpts) -> Result<()> {
     let mk = |backend| {
         ShardEngine::new(ShardEngineConfig {
             workers,
-            // Tiles stay ≥ 4096 elements, so the vectorized backend's
-            // lane-geometry gate always passes and no arm silently
-            // measures the fallback path instead of its own kernel.
+            // Tiles stay ≥ 4096 elements, so every arm's lane-geometry
+            // gate passes and no arm silently measures the fallback
+            // path instead of its own kernel.
             min_shard: 4096,
             threshold: 1, // the bench pins plans explicitly
             backend,
             ..ShardEngineConfig::default()
         })
     };
-    let scalar = mk(ShardBackendKind::Scalar);
-    let vector = mk(ShardBackendKind::Vectorized);
+    // (kind, engine) arms, scalar first — it is the reference the
+    // identity pin compares against.
+    let arms = [
+        (ShardBackendKind::Scalar, mk(ShardBackendKind::Scalar)),
+        (ShardBackendKind::Vectorized, mk(ShardBackendKind::Vectorized)),
+        (ShardBackendKind::TwoPass, mk(ShardBackendKind::TwoPass)),
+    ];
     println!(
-        "\n=== backend: scalar (fused blocked) vs vectorized (lane streaming) shard \
-         scans (K={k}, batch {batch}, {workers} shard workers) ==="
+        "\n=== backend: scalar (fused blocked) vs vectorized (lane streaming) vs \
+         twopass (stored partials) shard scans (K={k}, batch {batch}, {workers} \
+         shard workers) ==="
     );
-    // "vec speedup" = scalar_p50 / vectorized_p50, the same ratio
-    // convention as the sibling tables (>1 ⇒ the vectorized arm is
-    // faster), spelled out because "vec/scalar" reads as a time ratio.
     let mut table = Table::new(&[
         "V",
         "scalar p50",
         "vectorized p50",
+        "twopass p50",
         "tiles",
-        "vec speedup",
-        "GB/s scalar",
+        "winner",
+        "winner ns/el",
     ]);
+    let mut report_records: Vec<crate::json::Value> = Vec::new();
     for &v in &sizes {
         let data = make_batch(batch, v, v as u64);
         let rows: Vec<&[f32]> = data.chunks_exact(v).collect();
         let plan = ShardPlan::auto(v, workers, 4096);
         let grid = GridPlan::new(batch, plan);
 
-        // The backend must never change a *selection*: pin identical
-        // indices before timing anything.
-        let a = scalar.fused_topk_batch_planned(&rows, k, &grid);
-        let b = vector.fused_topk_batch_planned(&rows, k, &grid);
-        for (row_a, row_b) in a.iter().zip(&b) {
-            assert_eq!(row_a.1, row_b.1, "backends diverged on selected indices (v={v})");
+        // A backend must never change a *selection*: pin identical
+        // indices across every arm before timing anything.
+        let reference = arms[0].1.fused_topk_batch_planned(&rows, k, &grid);
+        for (kind, engine) in arms.iter().skip(1) {
+            let got = engine.fused_topk_batch_planned(&rows, k, &grid);
+            for (row_ref, row_got) in reference.iter().zip(&got) {
+                assert_eq!(
+                    row_ref.1,
+                    row_got.1,
+                    "backend {} diverged from scalar on selected indices (v={v})",
+                    kind.as_str()
+                );
+            }
         }
 
-        let scalar_t = bench(&cfg, || {
-            black_box(scalar.fused_topk_batch_planned(&rows, k, &grid).len())
-        });
-        let vector_t = bench(&cfg, || {
-            black_box(vector.fused_topk_batch_planned(&rows, k, &grid).len())
-        });
-
-        let ratio = scalar_t.median / vector_t.median;
-        let gbs = scalar_t.throughput_gbs((batch * v) as f64 * 4.0);
+        let elems = (batch * v) as f64;
+        let mut medians = [0.0f64; 3];
+        for (i, (kind, engine)) in arms.iter().enumerate() {
+            let t = bench(&cfg, || {
+                black_box(engine.fused_topk_batch_planned(&rows, k, &grid).len())
+            });
+            medians[i] = t.median;
+            let mut rec = crate::json::Value::object();
+            rec.set("backend", crate::json::Value::String(kind.as_str().into()))
+                .set("vocab", crate::json::Value::Number(v as f64))
+                .set("batch", crate::json::Value::Number(batch as f64))
+                .set("k", crate::json::Value::Number(k as f64))
+                .set("p50_s", crate::json::Value::Number(t.median))
+                .set(
+                    "ns_per_element",
+                    crate::json::Value::Number(t.median * 1e9 / elems),
+                );
+            report_records.push(rec);
+        }
+        let (winner_i, &winner_t) = medians
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
         table.row(vec![
             v.to_string(),
-            fmt_time(scalar_t.median),
-            fmt_time(vector_t.median),
+            fmt_time(medians[0]),
+            fmt_time(medians[1]),
+            fmt_time(medians[2]),
             format!("{}x{}", grid.rows(), grid.shards_per_row()),
-            format!("{ratio:.2}x"),
-            format!("{gbs:.1}"),
+            arms[winner_i].0.as_str().to_string(),
+            format!("{:.2}", winner_t * 1e9 / elems),
         ]);
 
         let mut rec = crate::json::Value::object();
@@ -727,18 +788,42 @@ pub fn backend_ablation(opts: &BenchOpts) -> Result<()> {
             .set("k", crate::json::Value::Number(k as f64))
             .set("workers", crate::json::Value::Number(workers as f64))
             .set("shards_per_row", crate::json::Value::Number(plan.shards() as f64))
-            .set("scalar_p50_s", crate::json::Value::Number(scalar_t.median))
-            .set("vectorized_p50_s", crate::json::Value::Number(vector_t.median))
-            .set("speedup_vectorized_vs_scalar", crate::json::Value::Number(ratio));
+            .set("scalar_p50_s", crate::json::Value::Number(medians[0]))
+            .set("vectorized_p50_s", crate::json::Value::Number(medians[1]))
+            .set("twopass_p50_s", crate::json::Value::Number(medians[2]))
+            .set(
+                "speedup_vectorized_vs_scalar",
+                crate::json::Value::Number(medians[0] / medians[1]),
+            )
+            .set(
+                "speedup_twopass_vs_scalar",
+                crate::json::Value::Number(medians[0] / medians[2]),
+            );
         opts.emit(&rec)?;
     }
     println!("{}", table.render());
+    if let Some(path) = &opts.json_report {
+        let mut report = crate::json::Value::object();
+        report
+            .set("schema", crate::json::Value::String("osmax.bench.backend.v1".into()))
+            .set("fig", crate::json::Value::String("backend".into()))
+            .set("git", crate::json::Value::String(git_describe()))
+            .set("smoke", crate::json::Value::Bool(opts.smoke))
+            .set("workers", crate::json::Value::Number(workers as f64))
+            .set(
+                "crossover_elements",
+                crate::json::Value::Number(crate::shard::TWOPASS_CROSSOVER as f64),
+            )
+            .set("records", crate::json::Value::Array(report_records));
+        std::fs::write(path, report.to_json() + "\n")?;
+        println!("wrote backend report → {path}");
+    }
     println!(
-        "expected shape: the blocked scalar scan amortizes its ⊕ folds over\n\
-         512-element tiles and skips candidate-cold tiles for one compare, so it\n\
-         usually leads; the streaming arm pays one fold per element per lane but\n\
-         never revisits an element, the trade `--shard-backend` exposes (auto\n\
-         picks per tile geometry; see docs/BACKENDS.md)."
+        "expected shape: the streaming arm leads in the middle band (one visit,\n\
+         no partial bookkeeping); past a few stored-partial stripes the twopass\n\
+         arm's shorter fp dependency chains win; `auto` encodes the measured\n\
+         crossover per tile (TWOPASS_CROSSOVER; see docs/BACKENDS.md and the\n\
+         committed BENCH_backend.json)."
     );
     Ok(())
 }
@@ -755,6 +840,7 @@ mod tests {
             threads: 1,
             smoke: false,
             json_out: None,
+            json_report: None,
         }
     }
 
@@ -809,6 +895,32 @@ mod tests {
         o.threads = 2;
         o.smoke = true;
         backend_ablation(&o).unwrap();
+    }
+
+    #[test]
+    fn backend_json_report_is_a_single_schema_document() {
+        let mut o = fast_opts();
+        let path = std::env::temp_dir()
+            .join(format!("osmax-backend-report-{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        o.json_report = Some(path.display().to_string());
+        o.sizes = None; // smoke defaults: one size, three backend arms
+        o.batch = None;
+        o.threads = 2;
+        o.smoke = true;
+        backend_ablation(&o).unwrap();
+        let doc = crate::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("fig").unwrap().as_str().unwrap(), "backend");
+        assert_eq!(doc.get("schema").unwrap().as_str().unwrap(), "osmax.bench.backend.v1");
+        assert!(doc.get("git").unwrap().as_str().is_some());
+        let records = doc.get("records").unwrap().as_array().unwrap();
+        assert_eq!(records.len(), 3, "one record per backend per size");
+        for r in records {
+            assert!(r.get("backend").unwrap().as_str().is_some());
+            assert!(r.get("vocab").unwrap().as_f64().unwrap() > 0.0);
+            assert!(r.get("ns_per_element").unwrap().as_f64().unwrap() > 0.0);
+        }
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

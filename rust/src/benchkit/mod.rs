@@ -92,8 +92,26 @@ impl Default for BenchConfig {
 
 impl BenchConfig {
     /// Faster profile for CI / smoke runs (set `OSMAX_BENCH_FAST=1`).
+    ///
+    /// The *value* is parsed, not just the variable's presence:
+    /// `OSMAX_BENCH_FAST=0` (or `false`, `no`, `off`, empty) keeps the
+    /// full profile, so an exported-but-disabled variable can't
+    /// silently shrink a measurement run.
     pub fn from_env() -> Self {
-        if std::env::var("OSMAX_BENCH_FAST").is_ok() {
+        Self::from_value(std::env::var("OSMAX_BENCH_FAST").ok().as_deref())
+    }
+
+    /// Testable core of [`Self::from_env`] — kept free of environment
+    /// reads so tests never mutate process-global env vars.
+    fn from_value(value: Option<&str>) -> Self {
+        let fast = match value {
+            None => false,
+            Some(v) => !matches!(
+                v.trim().to_ascii_lowercase().as_str(),
+                "" | "0" | "false" | "no" | "off"
+            ),
+        };
+        if fast {
             Self {
                 measure_time: Duration::from_millis(60),
                 warmup_time: Duration::from_millis(10),
@@ -249,6 +267,25 @@ mod tests {
         assert!(lines[3].contains("100000"));
         // all rows same width
         assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    fn fast_profile_parses_the_value_not_just_presence() {
+        let full = BenchConfig::default();
+        let fast = BenchConfig::from_value(Some("1"));
+        assert!(fast.measure_time < full.measure_time);
+        assert!(fast.max_samples < full.max_samples);
+        // Regression: `OSMAX_BENCH_FAST=0` used to enable fast mode
+        // because only the variable's presence was checked.
+        for disabled in [None, Some("0"), Some("false"), Some("no"), Some("off"), Some(""), Some(" 0 ")] {
+            let cfg = BenchConfig::from_value(disabled);
+            assert_eq!(cfg.measure_time, full.measure_time, "{disabled:?}");
+            assert_eq!(cfg.max_samples, full.max_samples, "{disabled:?}");
+        }
+        for enabled in [Some("1"), Some("true"), Some("yes"), Some("fast"), Some("ON")] {
+            let cfg = BenchConfig::from_value(enabled);
+            assert_eq!(cfg.measure_time, fast.measure_time, "{enabled:?}");
+        }
     }
 
     #[test]

@@ -181,7 +181,7 @@ pub fn help_text(version: &str) -> String {
            --host-shards N      shard-engine workers (0=auto) [0]\n\
            --shard-threshold N  sharded-path vocab cutoff     [32768]\n\
            --shard-backend B    per-tile shard scan backend:\n\
-                                auto|scalar|vectorized|artifacts-stub\n\
+                                auto|scalar|vectorized|twopass|artifacts-stub\n\
                                 (env default: OSMAX_SHARD_BACKEND) [auto]\n\
            --grid-rows N        rows per batch×shard grid dispatch\n\
                                 (0=whole batch, 1=per-row)    [0]\n\
@@ -212,7 +212,9 @@ pub fn help_text(version: &str) -> String {
            --threads N          worker threads for parallel/sharded variants\n\
                                 (0 = one per core)                           [1]\n\
            --smoke              minimal sizes/iterations (CI rot check)\n\
-           --out FILE           also append results as JSON lines\n\n\
+           --out FILE           also append results as JSON lines\n\
+           --json FILE          write a single machine-readable report\n\
+                                document (backend figure)\n\n\
          LOADGEN OPTIONS:\n\
            --addr HOST:PORT     target server       [127.0.0.1:7070]\n\
            --requests N         total requests      [200]\n\

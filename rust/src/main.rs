@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! onlinesoftmax serve   [--config f.json] [--addr ..] [--mode safe|online] [--shards N] ...
-//! onlinesoftmax bench   [--fig 1|2|3|4|k|all] [--sizes ..] [--threads N]
+//! onlinesoftmax bench   [--fig 1|2|3|4|k|all] [--sizes ..] [--threads N] [--json FILE]
 //! onlinesoftmax model   [--device v100|cpu]         # analytic predictions
 //! onlinesoftmax accesses                            # the paper's access table
 //! onlinesoftmax loadgen [--addr ..] [--requests N] [--concurrency C]
@@ -28,7 +28,7 @@ use onlinesoftmax::{benches, logging};
 const VALUE_OPTS: &[&str] = &[
     "config", "addr", "artifacts", "mode", "shards", "max-batch", "max-wait-us",
     "queue-capacity", "workers", "k", "seed", "fig", "sizes", "batch", "threads",
-    "device", "requests", "concurrency", "op", "out", "backend", "vocab", "hidden",
+    "device", "requests", "concurrency", "op", "out", "json", "backend", "vocab", "hidden",
     "host-shards", "shard-threshold", "grid-rows", "pool-sched", "shard-backend",
     "request-timeout", "tokens", "admission-interactive-cap", "admission-batch-cap",
     "cache-capacity", "cache-coalesce", "priority", "deadline-ms", "distinct",
@@ -92,6 +92,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let threads = args.opt_parse("threads", 1usize)?;
     let smoke = args.flag("smoke");
     let out = args.opt_str("out").map(|s| s.to_string());
+    let json_report = args.opt_str("json").map(|s| s.to_string());
     args.finish()?;
     if smoke {
         // Smoke runs exist to prove the bench binaries still build and
@@ -104,6 +105,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         threads,
         smoke,
         json_out: out,
+        json_report,
     };
     match fig.as_str() {
         "1" => benches::fig1(&opts),

@@ -10,7 +10,7 @@
 //! reduction, scheduling, and finalization all stay in the engine, so a
 //! backend author only writes the scan.
 //!
-//! Three implementations ship in-tree:
+//! Four implementations ship in-tree:
 //!
 //! * [`HostScalar`] — the engine's original fused single-sweep scan
 //!   (cache-blocked normalizer + scalar candidate insertion,
@@ -21,6 +21,13 @@
 //!   ([`vectorized::online_normalizer_streaming`]) plus a separate
 //!   candidate scan.  Declines tiles shorter than one
 //!   [`LANES`](vectorized::LANES)-element stripe.
+//! * [`HostTwoPass`] — the Dukhan & Ablavatski two-pass
+//!   stored-partials scan ([`crate::softmax::twopass`]): per-stripe
+//!   `(m, d)` partials with software-pipelined SIMD exp/accumulate in
+//!   pass 1, an O(stripes) exact rescale in pass 2, and the top-k
+//!   candidate scan fused into pass 1 while each stripe is L1-hot.
+//!   Declines sub-[`LANES`](vectorized::LANES) tiles like the
+//!   vectorized scan.
 //! * [`ArtifactsStub`] — an adapter over the vendored `xla` stub that
 //!   validates the tensor-interop contract shape a real PJRT shard
 //!   executable would use, then reports [`Unsupported`] at runtime.  It
@@ -30,8 +37,10 @@
 //!
 //! Selection is [`ShardBackendKind`]: config/CLI (`--shard-backend`),
 //! the `OSMAX_SHARD_BACKEND` environment variable (CI's backend
-//! matrix), with `auto` picking the vectorized scan whenever the tile
-//! geometry allows and the scalar scan otherwise.
+//! matrix), with `auto` routing each tile by the measured geometry
+//! bands from `bench --fig backend` (see [`AutoBackend::route`] and
+//! the committed `BENCH_backend.json`): scalar below one lane stripe,
+//! vectorized up to [`TWOPASS_CROSSOVER`], two-pass above it.
 //!
 //! The full backend-author contract — the ⊕ merge law a partial must
 //! satisfy, per-backend bitwise-identity expectations, and the fallback
@@ -44,7 +53,7 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::softmax::monoid::MD;
-use crate::softmax::vectorized;
+use crate::softmax::{twopass, vectorized};
 use crate::topk::scan_topk;
 
 use super::reduce::ShardPartial;
@@ -253,6 +262,76 @@ impl ShardBackend for HostVectorized {
 }
 
 // ---------------------------------------------------------------------------
+// Host two-pass: stored-partials scan (Dukhan & Ablavatski)
+// ---------------------------------------------------------------------------
+
+/// The two-pass stored-partials scan as a backend
+/// ([`crate::softmax::twopass`], after Dukhan & Ablavatski
+/// arXiv 2001.04438): pass 1 sweeps the tile once in
+/// [`STRIPE`](twopass::STRIPE)-element stripes, each producing an
+/// independent `(m_s, d_s)` partial with two-bank software-pipelined
+/// SIMD max/exp loops — no serial ⊕ chain between stripes — while the
+/// top-k candidate scan runs over the same L1-hot stripe; pass 2
+/// rescales the stored partials (`d = Σ d_s·e^{m_s − m}`, exact `exp`,
+/// O(stripes)).  DRAM sees each element exactly once; there is no
+/// third sweep and no full-softmax rematerialization.
+///
+/// Declines tiles shorter than one [`LANES`](vectorized::LANES)-element
+/// stripe, like [`HostVectorized`], so sub-stripe tiles exercise the
+/// engine's host fallback.  Selected indices are identical to
+/// [`HostScalar`]'s; `m` is bitwise-equal and `d` ULP-bounded (stripe
+/// bracketing vs block bracketing) — see `docs/BACKENDS.md`.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct HostTwoPass;
+
+impl HostTwoPass {
+    fn decline(&self, tile_len: usize) -> Unsupported {
+        Unsupported::new(
+            self.name(),
+            format!(
+                "tile of {} elements is below one {}-lane stripe",
+                tile_len,
+                vectorized::LANES
+            ),
+        )
+    }
+}
+
+impl ShardBackend for HostTwoPass {
+    fn name(&self) -> &'static str {
+        "twopass"
+    }
+
+    fn supports(&self, tile_len: usize, _k: usize) -> bool {
+        tile_len >= vectorized::LANES
+    }
+
+    fn scan_tile(
+        &self,
+        logits: &[f32],
+        range: Range<usize>,
+        k: usize,
+    ) -> std::result::Result<ShardPartial, Unsupported> {
+        if !self.supports(logits.len(), k) {
+            return Err(self.decline(logits.len()));
+        }
+        let (md, topk) = twopass::fused_partial(logits, k, range.start as i64);
+        Ok(ShardPartial { md, topk })
+    }
+
+    fn normalizer_tile(
+        &self,
+        logits: &[f32],
+        _range: Range<usize>,
+    ) -> std::result::Result<MD, Unsupported> {
+        if !self.supports(logits.len(), 0) {
+            return Err(self.decline(logits.len()));
+        }
+        Ok(twopass::normalizer(logits))
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Artifacts stub: the pinned slot-in point for the real PJRT path
 // ---------------------------------------------------------------------------
 
@@ -333,15 +412,53 @@ impl ShardBackend for ArtifactsStub {
 // Auto: geometry-driven composite
 // ---------------------------------------------------------------------------
 
-/// Geometry-driven composite backend: routes each tile to
-/// [`HostVectorized`] when the vocab/lane geometry allows (the tile
-/// covers at least one full lane stripe) and to [`HostScalar`]
-/// otherwise.  Total by construction, so it never triggers the
-/// engine-level fallback.
+/// Tile length (elements) at and above which [`AutoBackend`] routes to
+/// [`HostTwoPass`] instead of [`HostVectorized`].
+///
+/// Measured, not guessed: `bench --fig backend` sweeps vocab sizes over
+/// all three host backends and the committed `BENCH_backend.json`
+/// records the run this constant was read from (see its `crossover`
+/// note and docs/BACKENDS.md §Crossover).  On the reference testbed the
+/// two-pass stored-partials scan pulls ahead of the streaming scan once
+/// a tile covers a few full [`STRIPE`](twopass::STRIPE)s — below that
+/// the stored-partials bookkeeping (partial vector allocation + rescale
+/// pass) costs more than the shorter fp dependency chains win back.
+/// Re-run the bench and update this constant together with
+/// `BENCH_backend.json`; the decision-table test pins the bands.
+pub const TWOPASS_CROSSOVER: usize = 2 * twopass::STRIPE;
+
+/// Geometry-driven composite backend: routes each tile by the measured
+/// (tile_len, k) bands of [`AutoBackend::route`] — [`HostScalar`] below
+/// one lane stripe, [`HostVectorized`] in the middle band, and
+/// [`HostTwoPass`] at and above [`TWOPASS_CROSSOVER`].  Total by
+/// construction, so it never triggers the engine-level fallback.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct AutoBackend {
+    twopass: HostTwoPass,
     vectorized: HostVectorized,
     scalar: HostScalar,
+}
+
+impl AutoBackend {
+    /// The routing decision table: which backend kind serves a tile of
+    /// `tile_len` elements at top-`k` (`k == 0` = normalizer-only).
+    ///
+    /// Pure function of the geometry so the serving default is unit-
+    /// testable: the decision-table test enumerates the bands and any
+    /// routing edit must update it in the same change.  `k` does not
+    /// currently shift a band — every host backend fuses or separates
+    /// its candidate scan at identical per-element cost — but it is part
+    /// of the signature so a future k-sensitive backend (e.g. heap-based
+    /// selection for large k) can claim a band without an API break.
+    pub fn route(tile_len: usize, _k: usize) -> ShardBackendKind {
+        if tile_len < vectorized::LANES {
+            ShardBackendKind::Scalar
+        } else if tile_len < TWOPASS_CROSSOVER {
+            ShardBackendKind::Vectorized
+        } else {
+            ShardBackendKind::TwoPass
+        }
+    }
 }
 
 impl ShardBackend for AutoBackend {
@@ -359,10 +476,10 @@ impl ShardBackend for AutoBackend {
         range: Range<usize>,
         k: usize,
     ) -> std::result::Result<ShardPartial, Unsupported> {
-        if self.vectorized.supports(logits.len(), k) {
-            self.vectorized.scan_tile(logits, range, k)
-        } else {
-            self.scalar.scan_tile(logits, range, k)
+        match Self::route(logits.len(), k) {
+            ShardBackendKind::TwoPass => self.twopass.scan_tile(logits, range, k),
+            ShardBackendKind::Vectorized => self.vectorized.scan_tile(logits, range, k),
+            _ => self.scalar.scan_tile(logits, range, k),
         }
     }
 
@@ -371,10 +488,10 @@ impl ShardBackend for AutoBackend {
         logits: &[f32],
         range: Range<usize>,
     ) -> std::result::Result<MD, Unsupported> {
-        if self.vectorized.supports(logits.len(), 0) {
-            self.vectorized.normalizer_tile(logits, range)
-        } else {
-            self.scalar.normalizer_tile(logits, range)
+        match Self::route(logits.len(), 0) {
+            ShardBackendKind::TwoPass => self.twopass.normalizer_tile(logits, range),
+            ShardBackendKind::Vectorized => self.vectorized.normalizer_tile(logits, range),
+            _ => self.scalar.normalizer_tile(logits, range),
         }
     }
 }
@@ -396,6 +513,8 @@ pub enum ShardBackendKind {
     Scalar,
     /// The lane-split streaming host scan ([`HostVectorized`]).
     Vectorized,
+    /// The two-pass stored-partials host scan ([`HostTwoPass`]).
+    TwoPass,
     /// The PJRT contract-shape stub ([`ArtifactsStub`]) — always falls
     /// back to host at runtime.
     ArtifactsStub,
@@ -406,10 +525,11 @@ impl ShardBackendKind {
     /// backend-iteration test harness runs the shard-layer edge-case
     /// suite over exactly this list, so a newly registered backend is
     /// covered the moment it is added here.
-    pub fn all() -> [ShardBackendKind; 4] {
+    pub fn all() -> [ShardBackendKind; 5] {
         [
             ShardBackendKind::Scalar,
             ShardBackendKind::Vectorized,
+            ShardBackendKind::TwoPass,
             ShardBackendKind::ArtifactsStub,
             ShardBackendKind::Auto,
         ]
@@ -421,10 +541,11 @@ impl ShardBackendKind {
             "auto" => Ok(ShardBackendKind::Auto),
             "scalar" => Ok(ShardBackendKind::Scalar),
             "vectorized" => Ok(ShardBackendKind::Vectorized),
+            "twopass" => Ok(ShardBackendKind::TwoPass),
             "artifacts-stub" => Ok(ShardBackendKind::ArtifactsStub),
             _ => bail!(
                 "invalid shard backend `{s}` (expected `auto`, `scalar`, \
-                 `vectorized`, or `artifacts-stub`)"
+                 `vectorized`, `twopass`, or `artifacts-stub`)"
             ),
         }
     }
@@ -435,6 +556,7 @@ impl ShardBackendKind {
             ShardBackendKind::Auto => "auto",
             ShardBackendKind::Scalar => "scalar",
             ShardBackendKind::Vectorized => "vectorized",
+            ShardBackendKind::TwoPass => "twopass",
             ShardBackendKind::ArtifactsStub => "artifacts-stub",
         }
     }
@@ -463,6 +585,7 @@ impl ShardBackendKind {
             ShardBackendKind::Auto => Arc::new(AutoBackend::default()),
             ShardBackendKind::Scalar => Arc::new(HostScalar),
             ShardBackendKind::Vectorized => Arc::new(HostVectorized),
+            ShardBackendKind::TwoPass => Arc::new(HostTwoPass),
             ShardBackendKind::ArtifactsStub => Arc::new(ArtifactsStub),
         }
     }
@@ -553,6 +676,56 @@ mod tests {
     }
 
     #[test]
+    fn twopass_backend_selects_identical_indices() {
+        // Lengths straddle the stripe/pipeline boundaries: one lane
+        // stripe, sub-STRIPE, exact STRIPE multiples, and ragged tails.
+        for n in [16usize, 100, 513, 1024, 4097] {
+            let x = logits(n, n as u64);
+            let part = HostTwoPass.scan_tile(&x, 0..n, 6).unwrap();
+            let reference = HostScalar.scan_tile(&x, 0..n, 6).unwrap();
+            assert_eq!(part.topk.indices(), reference.topk.indices(), "n={n}");
+            assert_eq!(part.md.m, reference.md.m, "n={n}");
+            let (a, b) = (part.md.d, reference.md.d);
+            assert!((a - b).abs() <= 1e-4 * b.max(1.0), "n={n}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn twopass_backend_declines_sub_stripe_tiles() {
+        let x = logits(vectorized::LANES - 1, 9);
+        assert!(!HostTwoPass.supports(x.len(), 3));
+        let err = HostTwoPass.scan_tile(&x, 0..x.len(), 3).unwrap_err();
+        assert_eq!(err.backend, "twopass");
+        assert!(HostTwoPass.normalizer_tile(&x, 0..x.len()).is_err());
+        assert!(HostTwoPass.supports(vectorized::LANES, 3));
+    }
+
+    #[test]
+    fn twopass_backend_globalizes_indices() {
+        // Range start far from zero AND a tile spanning multiple
+        // stripes, so per-stripe bases compose with the global offset.
+        let n = 2 * twopass::STRIPE + 64;
+        let x = logits(n, 4);
+        let part = HostTwoPass.scan_tile(&x, 50_000..50_000 + n, 3).unwrap();
+        let reference = HostScalar.scan_tile(&x, 50_000..50_000 + n, 3).unwrap();
+        assert_eq!(part.topk.indices(), reference.topk.indices());
+        assert!(part
+            .topk
+            .indices()
+            .iter()
+            .all(|&i| (50_000..50_000 + n).contains(&(i as usize))));
+    }
+
+    #[test]
+    fn twopass_backend_normalizer_matches_reference() {
+        let x = logits(3 * twopass::STRIPE + 11, 13);
+        let got = HostTwoPass.normalizer_tile(&x, 0..x.len()).unwrap();
+        let reference = HostScalar.normalizer_tile(&x, 0..x.len()).unwrap();
+        assert_eq!(got.m, reference.m);
+        assert!((got.d - reference.d).abs() <= 1e-4 * reference.d.max(1.0));
+    }
+
+    #[test]
     fn artifacts_stub_always_declines_at_runtime() {
         let x = logits(512, 2);
         assert!(ArtifactsStub.supports(x.len(), 5), "claims support up front");
@@ -566,18 +739,64 @@ mod tests {
     #[test]
     fn auto_backend_routes_by_geometry_and_is_total() {
         let auto = AutoBackend::default();
-        // Big tile → vectorized numerics (streaming d).
+        // Middle-band tile → vectorized numerics (streaming d).
         let x = logits(512, 3);
         let got = auto.scan_tile(&x, 0..512, 4).unwrap();
         let vec = HostVectorized.scan_tile(&x, 0..512, 4).unwrap();
         assert_eq!(got.md, vec.md);
         assert_eq!(got.topk.indices(), vec.topk.indices());
+        // At/above the crossover → two-pass numerics (stripe d).
+        let n = TWOPASS_CROSSOVER;
+        let big = logits(n, 11);
+        let got = auto.scan_tile(&big, 0..n, 4).unwrap();
+        let tp = HostTwoPass.scan_tile(&big, 0..n, 4).unwrap();
+        assert_eq!(got.md, tp.md);
+        assert_eq!(got.topk.indices(), tp.topk.indices());
         // Sub-stripe tile → scalar numerics, not an error.
         let tiny = logits(5, 6);
         let got = auto.scan_tile(&tiny, 0..5, 2).unwrap();
         let scalar = HostScalar.scan_tile(&tiny, 0..5, 2).unwrap();
         assert_eq!(got.md, scalar.md);
         assert_eq!(got.topk.indices(), scalar.topk.indices());
+        // Normalizer-only path routes through the same bands.
+        let got = auto.normalizer_tile(&big, 0..n).unwrap();
+        assert_eq!(got, HostTwoPass.normalizer_tile(&big, 0..n).unwrap());
+    }
+
+    /// The `auto` decision table, pinned band by band: any routing edit
+    /// (including moving [`TWOPASS_CROSSOVER`] after a new bench run)
+    /// must update this table in the same change, so the serving
+    /// default can't drift silently.
+    #[test]
+    fn auto_backend_decision_table() {
+        use ShardBackendKind::{Scalar, TwoPass, Vectorized};
+        let lanes = vectorized::LANES;
+        let table = [
+            // (tile_len, k) → expected backend
+            (0, 0, Scalar),
+            (1, 1, Scalar),
+            (lanes - 1, 5, Scalar),                // below one lane stripe
+            (lanes, 0, Vectorized),                // first vectorizable length
+            (lanes, 5, Vectorized),
+            (512, 4, Vectorized),                  // one STRIPE, still streaming
+            (TWOPASS_CROSSOVER - 1, 5, Vectorized),
+            (TWOPASS_CROSSOVER, 0, TwoPass),       // measured crossover
+            (TWOPASS_CROSSOVER, 5, TwoPass),
+            (25_000, 5, TwoPass),
+            (400_000, 64, TwoPass),
+        ];
+        for (tile_len, k, expected) in table {
+            assert_eq!(
+                AutoBackend::route(tile_len, k),
+                expected,
+                "route({tile_len}, {k})"
+            );
+        }
+        // k alone never shifts a band today (documented on `route`).
+        for k in [0usize, 1, 7, 1000] {
+            assert_eq!(AutoBackend::route(100, k), Vectorized);
+            assert_eq!(AutoBackend::route(TWOPASS_CROSSOVER, k), TwoPass);
+        }
     }
 
     #[test]

@@ -867,6 +867,36 @@ mod tests {
     }
 
     #[test]
+    fn twopass_engine_matches_indices_and_falls_back_below_lane_width() {
+        let eng = ShardEngine::new(ShardEngineConfig {
+            workers: 2,
+            min_shard: 1,
+            threshold: 1,
+            backend: ShardBackendKind::TwoPass,
+            ..ShardEngineConfig::default()
+        });
+        assert_eq!(eng.backend_name(), "twopass");
+        // Multi-stripe tiles: same selections as the whole-row scan.
+        let x = logits(2048, 5);
+        let (_, idx) = eng.fused_topk_planned(&x, 7, &ShardPlan::with_shards(2048, 4));
+        assert_eq!(idx, fused::online_topk(&x, 7).1);
+        // Sub-lane tiles (40 / 8 = 5 elements each): the twopass
+        // backend declines and the host fallback answers.
+        let before = eng.backend_fallbacks();
+        let y = logits(40, 6);
+        let (_, idx) = eng.fused_topk_planned(&y, 3, &ShardPlan::with_shards(40, 8));
+        assert_eq!(idx, fused::online_topk(&y, 3).1);
+        assert!(eng.backend_fallbacks() > before);
+        // Normalizer path declines the same geometry.
+        let before = eng.backend_fallbacks();
+        let md = eng.normalizer_planned(&y, &ShardPlan::with_shards(40, 8));
+        let want = vectorized::online_normalizer(&y);
+        assert_eq!(md.m, want.m);
+        assert!((md.d - want.d).abs() <= 1e-4 * want.d);
+        assert!(eng.backend_fallbacks() > before);
+    }
+
+    #[test]
     fn every_backend_kind_produces_reference_selections() {
         let x = logits(3000, 42);
         let plan = ShardPlan::with_shards(3000, 5);

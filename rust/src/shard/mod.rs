@@ -80,7 +80,7 @@ pub mod grid;
 pub mod plan;
 pub mod reduce;
 
-pub use backend::{ShardBackend, ShardBackendKind, Unsupported};
+pub use backend::{AutoBackend, ShardBackend, ShardBackendKind, Unsupported, TWOPASS_CROSSOVER};
 pub use engine::{ShardEngine, ShardEngineConfig};
 pub use grid::{GridPlan, GridTile};
 pub use plan::{ShardPlan, ShardRange};

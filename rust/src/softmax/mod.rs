@@ -8,6 +8,8 @@
 //! * [`fused`] — Algorithm 4 and the unfused/safe-fused baselines.
 //! * [`batched`] — pass-major whole-batch forms matching the paper's
 //!   GPU execution model (every pass streams the full batch).
+//! * [`twopass`] — the stored-partials two-pass normalizer (Dukhan &
+//!   Ablavatski, arXiv 2001.04438) behind the `twopass` shard backend.
 //! * [`monoid`] — the `(m, d)` ⊕ monoid itself.
 //!
 //! [`compute`]/[`compute_batch`] are the convenience entry points used
@@ -26,6 +28,7 @@ pub mod fused;
 pub mod monoid;
 pub mod parallel;
 pub mod scalar;
+pub mod twopass;
 pub mod vectorized;
 
 pub use monoid::MD;

@@ -1,0 +1,267 @@
+//! Two-pass softmax normalizer with **stored per-stripe partials** —
+//! the Dukhan & Ablavatski formulation (arXiv 2001.04438), adapted to
+//! this crate's `(m, d)` monoid.
+//!
+//! The paper shows that on wide vectors a two-pass scheme can beat both
+//! the classical three-pass softmax *and* the online one-pass scan:
+//!
+//! * **Pass 1** sweeps the input once in [`STRIPE`]-element stripes.
+//!   Each stripe computes its own `(m_s, d_s = Σ e^{x − m_s})` with
+//!   wide-lane SIMD and **no serial dependency on any other stripe** —
+//!   unlike [`vectorized::online_normalizer`], whose per-block ⊕ fold
+//!   chains every block through the running accumulator.  The partials
+//!   are *stored* (a few bytes per 2 KiB of input), which is what the
+//!   paper means by "two-pass with stored partials".
+//! * **Pass 2** reads only the stored partials: `m = max_s m_s`,
+//!   `d = Σ_s d_s · e^{m_s − m}`.  O(n / STRIPE) work, exact `exp` —
+//!   no third sweep over the input, no full-softmax rematerialization.
+//!
+//! The expensive inner loops are software-pipelined over **two
+//! independent accumulator banks** of [`LANES`] lanes each
+//! ([`vectorized::expsum`] uses one): consecutive 2·LANES chunks feed
+//! alternating banks, halving the length of every floating-point
+//! add/max dependency chain so the FMA pipes stay full.
+//!
+//! Numerics match the rest of the crate: `m` is the exact running max
+//! (bitwise-equal to the scalar reference), `d` agrees within fp
+//! reassociation, an all-(−∞) stripe stores the ⊕ identity (never
+//! `fast_exp(−∞ − −∞ = NaN)`), and NaN inputs are skipped by the max
+//! and excluded from top-k selection exactly like every other kernel.
+
+use super::fastexp::fast_exp;
+use super::monoid::MD;
+use super::vectorized::LANES;
+use crate::topk::TopKBuffer;
+
+/// Stripe width (f32 elements) for stored partials: 2 KiB per stripe,
+/// comfortably L1-resident, and the same tile size as the blocked
+/// online kernel so the two are comparable in the bench.
+pub const STRIPE: usize = 512;
+
+/// Pass-1 kernel over one stripe: `(m_s, d_s = Σ e^{x − m_s})`.
+///
+/// Two banked sub-passes (max, then exp/accumulate), each
+/// software-pipelined over two independent [`LANES`]-wide accumulator
+/// banks.  The stripe is read twice, but from L1 — DRAM sees it once.
+///
+/// An all-(−∞) stripe returns [`MD::IDENTITY`]: running the exp pass
+/// with `m_s = −∞` would evaluate `fast_exp(−∞ − −∞ = NaN)`, which
+/// saturates to e^88 and poisons `d` (the exact regression the
+/// streaming kernel once had).
+#[inline]
+pub fn stripe_partial(stripe: &[f32]) -> MD {
+    let mut max_a = [f32::NEG_INFINITY; LANES];
+    let mut max_b = [f32::NEG_INFINITY; LANES];
+    let mut chunks = stripe.chunks_exact(2 * LANES);
+    for c in &mut chunks {
+        for l in 0..LANES {
+            max_a[l] = max_a[l].max(c[l]);
+            max_b[l] = max_b[l].max(c[LANES + l]);
+        }
+    }
+    let mut m = f32::NEG_INFINITY;
+    for l in 0..LANES {
+        m = m.max(max_a[l]).max(max_b[l]);
+    }
+    for &v in chunks.remainder() {
+        m = m.max(v);
+    }
+    if m == f32::NEG_INFINITY {
+        return MD::IDENTITY; // all-padding stripe stores the ⊕ identity
+    }
+
+    let mut sum_a = [0.0f32; LANES];
+    let mut sum_b = [0.0f32; LANES];
+    let mut chunks = stripe.chunks_exact(2 * LANES);
+    for c in &mut chunks {
+        for l in 0..LANES {
+            sum_a[l] += fast_exp(c[l] - m);
+            sum_b[l] += fast_exp(c[LANES + l] - m);
+        }
+    }
+    let mut d = 0.0f32;
+    for l in 0..LANES {
+        d += sum_a[l] + sum_b[l];
+    }
+    for &v in chunks.remainder() {
+        d += fast_exp(v - m);
+    }
+    MD { m, d }
+}
+
+/// Pass 1 over a whole vector: append one stored partial per
+/// [`STRIPE`]-element stripe (final stripe may be shorter) to `parts`.
+#[inline]
+pub fn stripe_partials_into(x: &[f32], parts: &mut Vec<MD>) {
+    parts.reserve(x.len().div_ceil(STRIPE));
+    for stripe in x.chunks(STRIPE) {
+        parts.push(stripe_partial(stripe));
+    }
+}
+
+/// Pass 2: rescale stored partials into the global `(m, d)`.
+///
+/// `m = max_s m_s` is exact; `d = Σ_s d_s · e^{m_s − m}` uses the
+/// *exact* `exp` (one call per stripe, off the hot path) so the only
+/// approximation left in `d` is pass 1's `fast_exp` — the same budget
+/// as every other kernel in the crate.  Identity partials (all-padding
+/// stripes) contribute nothing; all-identity input returns the
+/// identity.
+#[inline]
+pub fn rescale(parts: &[MD]) -> MD {
+    let mut m = f32::NEG_INFINITY;
+    for p in parts {
+        m = m.max(p.m);
+    }
+    if m == f32::NEG_INFINITY {
+        return MD::IDENTITY;
+    }
+    let mut d = 0.0f32;
+    for p in parts {
+        if p.m != f32::NEG_INFINITY {
+            d += p.d * (p.m - m).exp();
+        }
+    }
+    MD { m, d }
+}
+
+/// The full two-pass normalizer: stored-partials pass 1 + rescale.
+pub fn normalizer(x: &[f32]) -> MD {
+    let mut parts = Vec::new();
+    stripe_partials_into(x, &mut parts);
+    rescale(&parts)
+}
+
+/// Fused two-pass shard scan: pass 1 additionally feeds each stripe's
+/// elements through the top-k candidate buffer **while the stripe is
+/// still L1-hot**, so the input is read from DRAM exactly once even for
+/// fused softmax+top-k queries — no third sweep.  Candidate indices are
+/// globalized by `base`; NaN never enters the buffer and ties keep the
+/// earliest global index ([`TopKBuffer::push`] semantics, identical to
+/// [`crate::topk::scan_topk`]).
+///
+/// `k` must be > 0 (asserted by [`TopKBuffer::new`]), matching the
+/// other fused scans.
+pub fn fused_partial(x: &[f32], k: usize, base: i64) -> (MD, TopKBuffer) {
+    let mut topk = TopKBuffer::new(k);
+    let mut parts = Vec::with_capacity(x.len().div_ceil(STRIPE));
+    for (s, stripe) in x.chunks(STRIPE).enumerate() {
+        parts.push(stripe_partial(stripe));
+        let stripe_base = base + (s * STRIPE) as i64;
+        for (j, &v) in stripe.iter().enumerate() {
+            topk.push(v, stripe_base + j as i64);
+        }
+    }
+    (rescale(&parts), topk)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::softmax::{scalar, vectorized};
+    use crate::topk::scan_topk;
+
+    fn logits(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+        crate::rng::Xoshiro256pp::seed_from_u64(seed).logits(n, scale)
+    }
+
+    #[test]
+    fn normalizer_matches_scalar_across_lengths() {
+        // Sub-stripe, exact-stripe, ragged, multi-stripe, and
+        // sub-pipeline (< 2·LANES) lengths all hit distinct code paths.
+        for n in [1usize, 7, 15, 16, 31, 32, 33, 100, 511, 512, 513, 1024, 4097] {
+            let x = logits(n, n as u64, 9.0);
+            let a = normalizer(&x);
+            let b = scalar::online_normalizer(&x);
+            assert_eq!(a.m, b.m, "n={n}");
+            assert!((a.d - b.d).abs() <= 2e-5 * b.d.max(1.0), "n={n}: {a:?} vs {b:?}");
+        }
+    }
+
+    #[test]
+    fn normalizer_matches_blocked_vectorized() {
+        for seed in 0..8 {
+            let x = logits(3000, seed, 14.0);
+            let a = normalizer(&x);
+            let b = vectorized::online_normalizer(&x);
+            assert_eq!(a.m, b.m);
+            assert!((a.d - b.d).abs() <= 2e-5 * b.d.max(1.0), "{a:?} vs {b:?}");
+        }
+    }
+
+    #[test]
+    fn empty_and_all_padding_reduce_to_identity() {
+        assert!(normalizer(&[]).is_identity());
+        for n in [1usize, 15, STRIPE, STRIPE + 9, 3 * STRIPE] {
+            let pad = vec![f32::NEG_INFINITY; n];
+            assert!(normalizer(&pad).is_identity(), "n={n}");
+            assert!(stripe_partial(&pad[..n.min(STRIPE)]).is_identity());
+        }
+    }
+
+    #[test]
+    fn mixed_padding_keeps_d_finite_and_m_exact() {
+        // Interleave −∞ padding and make an entire interior stripe
+        // padding: the stored partial for it must be the identity, and
+        // the rescale must skip it without perturbing d.
+        let mut x = logits(4 * STRIPE, 21, 8.0);
+        for i in (0..x.len()).step_by(11) {
+            x[i] = f32::NEG_INFINITY;
+        }
+        x[STRIPE..2 * STRIPE].fill(f32::NEG_INFINITY);
+        let a = normalizer(&x);
+        let b = vectorized::online_normalizer(&x);
+        assert_eq!(a.m, b.m);
+        assert!(a.d.is_finite());
+        assert!((a.d - b.d).abs() <= 2e-5 * b.d.max(1.0), "{a:?} vs {b:?}");
+    }
+
+    #[test]
+    fn nan_inputs_never_become_the_max() {
+        let mut x = logits(700, 3, 6.0);
+        x[5] = f32::NAN;
+        x[600] = f32::NAN;
+        let a = normalizer(&x);
+        assert!(!a.m.is_nan());
+        assert_eq!(a.m, scalar::online_normalizer(&x).m);
+    }
+
+    #[test]
+    fn stored_partials_agree_with_per_stripe_reference() {
+        let x = logits(5 * STRIPE + 77, 12, 10.0);
+        let mut parts = Vec::new();
+        stripe_partials_into(&x, &mut parts);
+        assert_eq!(parts.len(), x.len().div_ceil(STRIPE));
+        for (p, stripe) in parts.iter().zip(x.chunks(STRIPE)) {
+            let r = scalar::online_normalizer(stripe);
+            assert_eq!(p.m, r.m);
+            assert!((p.d - r.d).abs() <= 2e-5 * r.d.max(1.0));
+        }
+        // rescale ≡ ⊕-fold of the same partials (m exact, d within fp).
+        let folded = parts.iter().fold(MD::IDENTITY, |acc, &p| acc.combine(p));
+        let rescaled = rescale(&parts);
+        assert_eq!(folded.m, rescaled.m);
+        assert!((folded.d - rescaled.d).abs() <= 1e-5 * folded.d.max(1.0));
+    }
+
+    #[test]
+    fn fused_partial_selects_single_sweep_indices() {
+        for n in [16usize, 100, 512, 513, 2048, 4097] {
+            let x = logits(n, 1000 + n as u64, 7.0);
+            let (md, topk) = fused_partial(&x, 5, 0);
+            let reference = scan_topk(&x, 5, 0);
+            assert_eq!(topk.indices(), reference.indices(), "n={n}");
+            assert_eq!(md.m, normalizer(&x).m, "n={n}");
+        }
+    }
+
+    #[test]
+    fn fused_partial_globalizes_indices_per_stripe() {
+        let x = logits(2 * STRIPE + 10, 4, 7.0);
+        let base = 10_000i64;
+        let (_, topk) = fused_partial(&x, 4, base);
+        let reference = scan_topk(&x, 4, base);
+        assert_eq!(topk.indices(), reference.indices());
+        assert!(topk.indices().iter().all(|&i| i >= base));
+    }
+}

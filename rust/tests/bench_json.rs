@@ -1,0 +1,74 @@
+//! Schema test for the machine-readable bench report (`bench --json`).
+//!
+//! Runs the real binary end-to-end — `bench --fig backend --smoke
+//! --json FILE` — and asserts the emitted document matches the
+//! `osmax.bench.backend.v1` schema that the committed
+//! `BENCH_backend.json` trajectory (and any tooling that consumes it)
+//! depends on.  A unit test inside `benches::` covers the emitter
+//! function; this test covers the CLI plumbing on top of it, so a
+//! regression in either the `--json` flag or the report shape fails
+//! loudly.
+
+use std::process::Command;
+
+use onlinesoftmax::json;
+
+#[test]
+fn bench_backend_smoke_emits_schema_document() {
+    let path = std::env::temp_dir()
+        .join(format!("osmax-bench-json-e2e-{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+
+    let out = Command::new(env!("CARGO_BIN_EXE_onlinesoftmax"))
+        .args([
+            "bench",
+            "--fig",
+            "backend",
+            "--smoke",
+            "--threads",
+            "2",
+            "--json",
+            path.to_str().unwrap(),
+        ])
+        // Keep the run short regardless of the ambient environment.
+        .env("OSMAX_BENCH_FAST", "1")
+        .output()
+        .expect("spawn bench binary");
+    assert!(
+        out.status.success(),
+        "bench exited with {:?}\nstdout: {}\nstderr: {}",
+        out.status.code(),
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    let text = std::fs::read_to_string(&path).expect("report file written");
+    let doc = json::parse(&text).expect("report parses as JSON");
+
+    assert_eq!(doc.get("schema").unwrap().as_str().unwrap(), "osmax.bench.backend.v1");
+    assert_eq!(doc.get("fig").unwrap().as_str().unwrap(), "backend");
+    assert!(
+        !doc.get("git").unwrap().as_str().unwrap().is_empty(),
+        "git provenance field must be non-empty (`unknown` fallback included)"
+    );
+    assert_eq!(doc.get("smoke").unwrap().as_bool(), Some(true));
+    assert!(doc.get("workers").unwrap().as_f64().unwrap() >= 1.0);
+    assert!(doc.get("crossover_elements").unwrap().as_f64().unwrap() >= 1.0);
+
+    let records = doc.get("records").unwrap().as_array().unwrap();
+    // Smoke profile: one vocab size × three backend arms.
+    assert_eq!(records.len(), 3, "records: {text}");
+    let mut backends: Vec<&str> =
+        records.iter().map(|r| r.get("backend").unwrap().as_str().unwrap()).collect();
+    backends.sort_unstable();
+    assert_eq!(backends, ["scalar", "twopass", "vectorized"]);
+    for r in records {
+        assert!(r.get("vocab").unwrap().as_f64().unwrap() > 0.0);
+        assert!(r.get("batch").unwrap().as_f64().unwrap() > 0.0);
+        assert!(r.get("k").unwrap().as_f64().unwrap() > 0.0);
+        assert!(r.get("p50_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(r.get("ns_per_element").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    std::fs::remove_file(&path).ok();
+}

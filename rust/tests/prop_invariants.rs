@@ -316,8 +316,8 @@ fn prop_grid_batch_is_bitwise_identical_to_per_row_runs() {
     // scans → same ⊕ bracketing.  Covers batch = 1, shard counts that
     // leave ragged last tiles, and k beyond the row length.
     //
-    // Runs under BOTH pool scheduling policies × BOTH production scan
-    // backends (scalar / vectorized): tile execution order is
+    // Runs under BOTH pool scheduling policies × EVERY production scan
+    // backend (scalar / vectorized / twopass): tile execution order is
     // completely different between the FIFO injector and the
     // work-stealing deques, and the per-tile kernels differ between
     // backends, but within one engine the ⊕ bracketing and the leaf
@@ -339,6 +339,8 @@ fn prop_grid_batch_is_bitwise_identical_to_per_row_runs() {
         mk(SchedPolicy::Steal, ShardBackendKind::Scalar),
         mk(SchedPolicy::Fifo, ShardBackendKind::Vectorized),
         mk(SchedPolicy::Steal, ShardBackendKind::Vectorized),
+        mk(SchedPolicy::Fifo, ShardBackendKind::TwoPass),
+        mk(SchedPolicy::Steal, ShardBackendKind::TwoPass),
     ];
     let gen = Pair(
         Pair(UsizeRange(1, 6), LogitsVec { min_len: 1, max_len: 400 }),
@@ -387,7 +389,8 @@ fn prop_grid_batch_is_bitwise_identical_to_per_row_runs() {
         // Cross-policy per backend: the two schedulers agree bitwise on
         // the whole batch (implied by the per-row identities above,
         // asserted directly for a sharper failure message).  Engines
-        // [0]/[1] are the scalar pair, [2]/[3] the vectorized pair.
+        // [0]/[1] are the scalar pair, [2]/[3] the vectorized pair,
+        // [4]/[5] the twopass pair.
         for pair in engines.chunks(2) {
             let tf = pair[0].fused_topk_batch_planned(&rows, k, &grid);
             let ts = pair[1].fused_topk_batch_planned(&rows, k, &grid);
