@@ -310,8 +310,9 @@ impl Batcher {
                     if st.shutdown {
                         return Some((class, self.take(&mut st, class), FlushReason::Shutdown));
                     }
-                    // `wake > now` here: nothing was due, so every
-                    // queue's bound lies in the future.
+                    // panic-ok: best_any is Some, so a nonempty queue
+                    // exists and produced a wake bound (`wake > now`
+                    // here: nothing was due yet).
                     let wake = next_wake.expect("a nonempty queue exists");
                     let (guard, _) = self.arrived.wait_timeout(st, wake - now).unwrap();
                     st = guard;
@@ -373,6 +374,7 @@ impl Batcher {
     /// instead of draining and re-pushing the whole queue.
     fn take(&self, st: &mut State, class: BatchClass) -> Vec<Request> {
         let max = self.policy.max_batch;
+        // panic-ok: every BatchClass is seeded into `queues` at startup.
         let q = st.queues.get_mut(&class).expect("class must exist");
         let batch: Vec<Request> = if q.len() <= max {
             // Everything boards — order the batch (priority, FIFO).
@@ -398,6 +400,7 @@ impl Batcher {
             let mut low_b: Vec<Request> = Vec::with_capacity(low_want);
             let mut passed_over: Vec<Request> = Vec::new();
             while high_b.len() < high_want || low_b.len() < low_want {
+                // panic-ok: high_want + low_want ≤ q.len() by the count above.
                 let mut r = q.pop_front().expect("boarding counts bound the walk");
                 if boards(&r) && high_b.len() < high_want {
                     high_b.push(r);
@@ -482,7 +485,7 @@ fn queue_urgency(q: &VecDeque<Request>, max_wait: Duration) -> (u8, Instant) {
             _ => at,
         });
     }
-    (prio, earliest.expect("nonempty queue"))
+    (prio, earliest.expect("nonempty queue")) // panic-ok: caller checked
 }
 
 #[cfg(test)]

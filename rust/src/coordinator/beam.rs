@@ -59,6 +59,7 @@ pub fn beam_search(
                 coord.submit_opts(
                     Payload::LmStep {
                         session: h.session,
+                        // panic-ok: hypotheses always carry ≥1 token.
                         token: *h.tokens.last().expect("nonempty"),
                     },
                     RequestOptions::with_k(cfg.k),
@@ -88,7 +89,7 @@ pub fn beam_search(
         // Prune to the best `width` (stable tiebreak for determinism).
         candidates.sort_by(|a, b| {
             b.1.partial_cmp(&a.1)
-                .unwrap()
+                .unwrap() // panic-ok: logprobs are finite (ln of clamped probs)
                 .then(a.0.cmp(&b.0))
                 .then(a.2.cmp(&b.2))
         });
@@ -118,6 +119,7 @@ pub fn beam_search(
     }
 
     // Final ordering; keep sessions open so callers may continue.
+    // panic-ok: logprobs are finite (ln of clamped probabilities).
     beam.sort_by(|a, b| b.logprob.partial_cmp(&a.logprob).unwrap());
     Ok(beam)
 }

@@ -243,6 +243,8 @@ impl Executor {
 
     /// The shard engine backing host-mode requests (host backend only).
     fn host_shard_engine(&self) -> &ShardEngine {
+        // panic-ok: constructed unconditionally for Backend::Host; callers
+        // are host-path only.
         self.shard_engine.as_ref().expect("shard engine exists on the host backend")
     }
 
@@ -373,6 +375,7 @@ impl Executor {
         let mut it = probs.into_iter();
         for (row, err) in rows.iter().zip(errors) {
             out.push(match (row, err) {
+                // panic-ok: one result row exists per Some(row) input.
                 (Some(_), _) => Ok(Reply::Softmax { probs: it.next().expect("row count") }),
                 (None, Some(e)) => Err(e),
                 (None, None) => unreachable!(),
@@ -440,6 +443,7 @@ impl Executor {
         let out = pool
             .engine(worker)
             .execute(&entry.name, vec![Tensor::f32(vec![b, self.vocab], flat)?])?;
+        // panic-ok: the softmax artifact declares exactly one output.
         let y = out.into_iter().next().unwrap().into_f32()?;
         Ok(rows
             .iter()
@@ -488,12 +492,14 @@ impl Executor {
                         scope.spawn(move || -> Result<(Vec<f32>, Vec<f32>)> {
                             let out = engine.execute(&entry_name, vec![input?])?;
                             let mut it = out.into_iter();
-                            let m = it.next().unwrap().into_f32()?;
-                            let d = it.next().unwrap().into_f32()?;
+                            let m = it.next().unwrap().into_f32()?; // panic-ok: 2 outputs
+                            let d = it.next().unwrap().into_f32()?; // panic-ok: 2 outputs
                             Ok((m, d))
                         })
                     })
                     .collect();
+                // panic-ok: join() errs only on a panicked shard thread —
+                // propagate the panic.
                 handles.into_iter().map(|h| h.join().expect("shard thread")).collect()
             });
 
@@ -519,10 +525,11 @@ impl Executor {
                     let engine = pool.engine(s).clone();
                     scope.spawn(move || -> Result<Vec<f32>> {
                         let out = engine.execute(&entry_name, vec![input?, m?, d?])?;
-                        out.into_iter().next().unwrap().into_f32()
+                        out.into_iter().next().unwrap().into_f32() // panic-ok: 1 output
                     })
                 })
                 .collect();
+            // panic-ok: join() errs only on a panicked shard thread.
             handles.into_iter().map(|h| h.join().expect("shard thread")).collect()
         });
 
@@ -592,7 +599,7 @@ impl Executor {
         for (row, err) in rows.iter().zip(errors) {
             out.push(match (row, err) {
                 (Some(_), _) => {
-                    let (vals, idx) = it.next().expect("row count");
+                    let (vals, idx) = it.next().expect("row count"); // panic-ok: per-row
                     Ok(Reply::TopK { vals, idx })
                 }
                 (None, Some(e)) => Err(e),
@@ -759,14 +766,15 @@ impl Executor {
                         )?;
                         let mut it = out.into_iter();
                         Ok((
-                            it.next().unwrap().into_f32()?,
-                            it.next().unwrap().into_f32()?,
-                            it.next().unwrap().into_f32()?,
-                            it.next().unwrap().into_i32()?,
+                            it.next().unwrap().into_f32()?, // panic-ok: 4 outputs
+                            it.next().unwrap().into_f32()?, // panic-ok: 4 outputs
+                            it.next().unwrap().into_f32()?, // panic-ok: 4 outputs
+                            it.next().unwrap().into_i32()?, // panic-ok: 4 outputs
                         ))
                     })
                 })
                 .collect();
+            // panic-ok: join() errs only on a panicked shard thread.
             handles.into_iter().map(|h| h.join().expect("shard thread")).collect()
         });
 
@@ -872,7 +880,7 @@ impl Executor {
         for (job, err) in jobs.iter().zip(errors) {
             out.push(match (job, err) {
                 (Some(_), _) => {
-                    let (vals, idx) = it.next().expect("row count");
+                    let (vals, idx) = it.next().expect("row count"); // panic-ok: per-row
                     Ok(Reply::TopK { vals, idx })
                 }
                 (None, Some(e)) => Err(e),
@@ -928,7 +936,7 @@ impl Executor {
                         Input::Inline(Tensor::i32(vec![b], tokens)?),
                     ],
                 )?;
-                out.into_iter().next().unwrap().into_f32()
+                out.into_iter().next().unwrap().into_f32() // panic-ok: 1 output
             }
         }
     }

@@ -42,6 +42,11 @@
 //! the `coordinator.cache.entries` gauge (process-global), plus
 //! per-instance counts via [`Front::stats`] for the `stats` RPC.
 
+// xtask:atomics-allowlist: Relaxed
+// Relaxed: hit/miss/coalesced statistics counters only — monotonic
+// telemetry with no ordering role; the cache and in-flight tables are
+// guarded by the state mutex.
+
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -283,6 +288,7 @@ impl Lru {
         self.map.insert(key.clone(), CacheEntry { reply, stamp: clock });
         self.order.push_back((key, clock));
         while self.map.len() > self.cap {
+            // panic-ok: `order` holds one slot per live cache entry.
             let (k, s) = self.order.pop_front().expect("order covers every live entry");
             if self.map.get(&k).is_some_and(|e| e.stamp == s) {
                 self.map.remove(&k);

@@ -24,6 +24,10 @@
 //! The stream counts toward [`Coordinator::active_streams`] while
 //! live.
 
+// xtask:atomics-allowlist: Relaxed
+// Relaxed: `active_streams` is a telemetry counter; stream lifecycle
+// ordering is carried by the per-request reply channels.
+
 use std::time::Instant;
 
 use super::request::{Payload, Reply, RequestOptions, ServeError};
@@ -154,6 +158,7 @@ impl Coordinator {
         for &t in &prompt_tokens[..prompt_tokens.len() - 1] {
             step(t)?;
         }
+        // panic-ok: the wire layer rejects empty prompts before submit.
         let mut cur = *prompt_tokens.last().expect("nonempty prompt");
 
         let tokens_emitted = metrics::global().counter("coordinator.stream.tokens");

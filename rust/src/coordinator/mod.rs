@@ -32,6 +32,12 @@
 //! synthetic weights), [`beam`] (beam-search driver used by the
 //! examples).
 
+// xtask:atomics-allowlist: Relaxed
+// Relaxed: `next_id` / `next_session` only need uniqueness (fetch_add
+// is atomic at any ordering) and `active_streams` is telemetry; no
+// other memory is published through these atomics — request handoff
+// ordering comes from the batcher's mutex.
+
 pub mod batcher;
 pub mod beam;
 pub mod executor;
@@ -131,7 +137,7 @@ impl Coordinator {
                             let ci = BatchClass::ALL
                                 .iter()
                                 .position(|c| *c == class)
-                                .expect("class in ALL");
+                                .expect("class in ALL"); // panic-ok: ALL is exhaustive
                             class_batches[ci].inc();
                             class_requests[ci].add(batch.len() as u64);
                             class_peak[ci].set_max(batch.len() as i64);
@@ -140,7 +146,7 @@ impl Coordinator {
                             batch_hist.record(t0.elapsed());
                         }
                     })
-                    .expect("spawn coordinator worker"),
+                    .expect("spawn coordinator worker"), // panic-ok: fatal at startup
             );
         }
         Ok(Coordinator {

@@ -53,23 +53,28 @@ impl SyntheticLm {
     }
 
     pub fn w_tensor(&self) -> Tensor {
+        // panic-ok: dims match the buffer length by construction (new()).
         Tensor::f32(vec![self.vocab, self.hidden], self.w.clone()).expect("shape")
     }
 
     pub fn w_shard_tensor(&self, shard: usize, shards: usize) -> Tensor {
         let vs = self.vocab / shards;
+        // panic-ok: w_shard slices exactly vs*hidden elements.
         Tensor::f32(vec![vs, self.hidden], self.w_shard(shard, shards)).expect("shape")
     }
 
     pub fn emb_tensor(&self) -> Tensor {
+        // panic-ok: dims match the buffer length by construction (new()).
         Tensor::f32(vec![self.vocab, self.hidden], self.emb.clone()).expect("shape")
     }
 
     pub fn w1_tensor(&self) -> Tensor {
+        // panic-ok: dims match the buffer length by construction (new()).
         Tensor::f32(vec![self.hidden, self.hidden], self.w1.clone()).expect("shape")
     }
 
     pub fn w2_tensor(&self) -> Tensor {
+        // panic-ok: dims match the buffer length by construction (new()).
         Tensor::f32(vec![self.hidden, self.hidden], self.w2.clone()).expect("shape")
     }
 

@@ -16,6 +16,10 @@
 //! * **[`ServeError`]** replaces stringly errors: a machine-readable
 //!   [`ErrorCode`] plus a human message, end to end — executor to wire.
 
+// xtask:atomics-allowlist: SeqCst
+// SeqCst: test-only observation flags (hook/sink interleaving checks);
+// production code in this module uses no atomics.
+
 use std::fmt;
 use std::time::{Duration, Instant};
 
@@ -277,6 +281,7 @@ impl ReplySink {
         if let Some(hook) = self.hook.take() {
             hook(Some(&result));
         }
+        // panic-ok: `send` consumes self, so `tx` is present exactly once.
         self.tx.take().expect("sink sends once").send(result)
     }
 }

@@ -27,9 +27,14 @@
 //! workers and `join_idle` poll emptiness without taking S locks (see
 //! the field docs for why the ordering matters).
 
+// xtask:atomics-allowlist: SeqCst
+// SeqCst: the lock-free `len` mirror must sit in the same total order
+// as the pool's `active` counter — see the field docs and the per-site
+// comments below.  Test-only atomics reuse the same ordering.
+
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+
+use crate::exec::sync::{AtomicUsize, Mutex, Ordering};
 
 /// A bounded double-ended queue supporting owner LIFO pops and thief
 /// FIFO steals.
@@ -64,6 +69,10 @@ impl<T> StealDeque<T> {
     /// Queued-task count (lock-free snapshot; exact only to the holder
     /// of the lock).
     pub fn len(&self) -> usize {
+        // SeqCst: read side of the mirror.  `join_idle` and the parking
+        // predicate interleave this with `active` loads; both reads must
+        // come from the single total order or an empty-looking deque
+        // could be paired with a stale `active == 0`.
         self.len.load(Ordering::SeqCst)
     }
 
@@ -80,6 +89,9 @@ impl<T> StealDeque<T> {
             return Err(t);
         }
         q.push_back(t);
+        // SeqCst: publish the new length while still holding the lock
+        // so a parked worker's wake-up scan cannot order this store
+        // after the `active` traffic of the task it is about to claim.
         self.len.store(q.len(), Ordering::SeqCst);
         Ok(())
     }
@@ -88,6 +100,9 @@ impl<T> StealDeque<T> {
     pub fn pop(&self) -> Option<T> {
         let mut q = self.inner.lock().unwrap();
         let t = q.pop_back();
+        // SeqCst: this store must not become visible before the popping
+        // worker's preceding `active.fetch_add` — `join_idle` relies on
+        // "len says empty ⇒ the claimer is already counted in `active`".
         self.len.store(q.len(), Ordering::SeqCst);
         t
     }
@@ -97,6 +112,8 @@ impl<T> StealDeque<T> {
     pub fn steal(&self) -> Option<T> {
         let mut q = self.inner.lock().unwrap();
         let t = q.pop_front();
+        // SeqCst: same claim-protocol argument as `pop` — a thief has
+        // also pre-claimed via `active` before emptying the deque.
         self.len.store(q.len(), Ordering::SeqCst);
         t
     }
@@ -145,6 +162,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // 10k-token spin torture; deque unsafe-free paths are miri-covered above
     fn concurrent_steal_torture_conserves_tasks() {
         // 1 owner pushing + popping, 3 thieves stealing: every pushed
         // token is consumed exactly once, none duplicated or lost.

@@ -15,12 +15,27 @@
 //! * [`parallel_chunks`] — scoped data-parallel map over slice chunks
 //!   with an atomic work queue (rayon-style, borrow-friendly); powers
 //!   the parallel ⊕ reduction of §3.1.
+//! * [`sync`] — swappable Mutex/Condvar/atomic primitives: `std::sync`
+//!   pass-throughs in production, schedule points under the model
+//!   checker.
+//! * [`model`] — deterministic-schedule model checker (cfg-gated:
+//!   `cfg(test)` or the `osmax_model` feature) driving the deque,
+//!   WaitGroup, claim-protocol, and grid-countdown invariants through
+//!   bounded-exhaustive and seed-replayable random schedules.
 
 #![warn(missing_docs)]
 
+// xtask:atomics-allowlist: Relaxed
+// Relaxed: `parallel_chunks`' work counter only partitions indices —
+// each fetch_add claims a distinct chunk; result publication is
+// ordered by the scope join, not by this atomic.
+
 pub mod channel;
 pub mod deque;
+#[cfg(any(test, feature = "osmax_model"))]
+pub mod model;
 pub mod pool;
+pub mod sync;
 pub mod waitgroup;
 
 pub use channel::{bounded, oneshot, RecvError, SendError};
@@ -28,7 +43,7 @@ pub use deque::StealDeque;
 pub use pool::{SchedPolicy, ThreadPool};
 pub use waitgroup::WaitGroup;
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use crate::exec::sync::{AtomicUsize, Ordering};
 
 /// Run `f(chunk_index, chunk)` over disjoint `chunk`-sized pieces of
 /// `data` on up to `threads` scoped workers, returning results in chunk
@@ -91,7 +106,12 @@ where
 /// unbounded impl would let `parallel_chunks` smuggle `!Send` types
 /// (e.g. `Rc` results) across threads.
 struct SendPtr<T>(*mut T);
+// SAFETY: per the contract above — holders only write, each index from
+// exactly one thread, and the scope joins all workers before the
+// pointee is read; `T: Send` makes the cross-thread write of `T` sound.
 unsafe impl<T: Send> Sync for SendPtr<T> {}
+// SAFETY: as above — moving the wrapper only moves the raw pointer;
+// the `T: Send` bound covers the values written through it.
 unsafe impl<T: Send> Send for SendPtr<T> {}
 
 /// Default parallelism: physical parallelism reported by the OS.

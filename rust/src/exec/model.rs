@@ -1,0 +1,1149 @@
+//! Deterministic-schedule model checking for the exec substrate —
+//! loom-style stateless exploration with no external crates.
+//!
+//! A *model run* executes a scenario closure on real OS threads whose
+//! shared-memory operations all go through [`super::sync`].  The model
+//! serializes execution with a baton: exactly one scenario thread runs
+//! at a time, and at every schedule point (each atomic op, lock
+//! acquisition, condvar wait/notify, spawn join) the scheduler picks
+//! which thread runs next.  The pick sequence — the *schedule* — is
+//! what the explorer enumerates:
+//!
+//! * **Bounded-exhaustive (DFS)**: replay the scenario with a forced
+//!   choice prefix, extend greedily with choice 0, then backtrack the
+//!   deepest un-exhausted choice — classic stateless model checking.
+//!   For small operation counts this covers *every* interleaving
+//!   (`Outcome::exhaustive`).
+//! * **Randomized with seed replay**: beyond the DFS budget, schedules
+//!   are drawn from a seeded xorshift stream, one derived seed per
+//!   schedule.  A failure report names the seed; setting
+//!   `OSMAX_MODEL_SEED` (or calling [`replay`]) reruns exactly that
+//!   schedule.  `OSMAX_MODEL_SCHEDULES` overrides both budgets.
+//!
+//! Because execution is serialized, the model sees sequentially
+//! consistent memory — it checks *interleaving* bugs (lost wakeups,
+//! broken claim protocols, early returns, deadlocks — detected when no
+//! thread is schedulable), not weak-memory reorderings.  Miri and TSan
+//! cover the latter; the split is catalogued in `docs/VERIFICATION.md`.
+//!
+//! The scenario closure runs once per schedule and must construct all
+//! of its state inside the closure (so every schedule starts from the
+//! same initial state).  Threads inside a scenario are created with
+//! [`spawn`]; `std::thread::spawn` threads would be invisible to the
+//! scheduler and must not touch model-instrumented state.
+
+// xtask:atomics-allowlist: SeqCst
+// SeqCst: model self-test scenarios only — the scenarios assert on
+// shim atomics and deliberately use the strongest ordering, since the
+// serialized model gives SC semantics regardless.
+
+use std::cell::RefCell;
+use std::collections::BTreeSet;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Panic payload used to unwind secondary threads once a run has
+/// already failed (or been truncated); never reported as a failure.
+struct AbortRun;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum TState {
+    /// May be scheduled.
+    Runnable,
+    /// Waiting to acquire the model mutex with this id; schedulable
+    /// once no thread holds it.
+    BlockedMutex(u64),
+    /// Waiting on condvar `cv`, which will reacquire `mutex` when
+    /// notified; never schedulable until a notify moves it to
+    /// [`TState::BlockedMutex`].
+    BlockedCv { cv: u64, mutex: u64 },
+    /// Waiting for thread `.0` to finish.
+    BlockedJoin(usize),
+    /// Scenario closure returned (or unwound).
+    Finished,
+}
+
+enum Decider {
+    /// Forced choice prefix; choice 0 beyond it (trace records the
+    /// actual choices for backtracking).
+    Dfs { prefix: Vec<usize> },
+    /// Seeded xorshift stream.
+    Random { state: u64 },
+}
+
+struct Sched {
+    threads: Vec<TState>,
+    /// Index of the thread holding the baton.  Only the baton holder
+    /// executes scenario code, and only it mutates scheduler state (so
+    /// once `current == me`, it stays that way until `me` acts).
+    current: usize,
+    /// Ids of model mutexes currently held.
+    locked: BTreeSet<u64>,
+    decider: Decider,
+    /// `(choice, options)` at every schedule point with > 1 option.
+    trace: Vec<(usize, usize)>,
+    max_choices: usize,
+    /// Total schedule points (including forced single-option picks);
+    /// bounds livelocking scenarios that spin without branching.
+    steps: usize,
+    max_steps: usize,
+    /// Once set, the run is over: threads unwind via [`AbortRun`] at
+    /// their next schedule point, and blocking shims degrade to their
+    /// real `std` behaviour so unwinding never deadlocks.
+    abort: bool,
+    /// First real failure observed (panic message or deadlock report).
+    failure: Option<String>,
+}
+
+struct Ctx {
+    sched: Mutex<Sched>,
+    cv: Condvar,
+}
+
+thread_local! {
+    static TLS: RefCell<Option<(Arc<Ctx>, usize)>> = const { RefCell::new(None) };
+}
+
+fn tls_get() -> Option<(Arc<Ctx>, usize)> {
+    TLS.with(|t| t.borrow().clone())
+}
+
+/// Whether the calling thread belongs to an active model run.
+pub(crate) fn in_model() -> bool {
+    TLS.with(|t| t.borrow().is_some())
+}
+
+/// Unwind the calling thread out of the scenario — unless it is
+/// already unwinding, in which case shim operations fall through to
+/// their real `std` behaviour (free-run) so drops can complete.
+fn abort_exit() {
+    if !std::thread::panicking() {
+        std::panic::panic_any(AbortRun);
+    }
+}
+
+fn next_u64(state: &mut u64) -> u64 {
+    let mut x = *state;
+    x ^= x >> 12;
+    x ^= x << 25;
+    x ^= x >> 27;
+    *state = x;
+    x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+}
+
+fn splitmix64(seed: u64) -> u64 {
+    let mut z = seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+fn seed_to_state(seed: u64) -> u64 {
+    let s = splitmix64(seed);
+    if s == 0 {
+        0x9E37_79B9_7F4A_7C15
+    } else {
+        s
+    }
+}
+
+/// Pick `choice` among `n` options (recorded only when there is a real
+/// branch).  Sets `abort` when the per-run choice budget is exhausted
+/// (truncated run).
+fn choose(st: &mut Sched, n: usize) -> usize {
+    debug_assert!(n > 0);
+    if n == 1 {
+        return 0;
+    }
+    if st.trace.len() >= st.max_choices {
+        st.abort = true;
+        return 0;
+    }
+    let i = st.trace.len();
+    let c = match &mut st.decider {
+        Decider::Dfs { prefix } => {
+            if i < prefix.len() {
+                prefix[i].min(n - 1)
+            } else {
+                0
+            }
+        }
+        Decider::Random { state } => (next_u64(state) % n as u64) as usize,
+    };
+    st.trace.push((c, n));
+    c
+}
+
+fn schedulable(st: &Sched) -> Vec<usize> {
+    let mut out = Vec::new();
+    for (i, t) in st.threads.iter().enumerate() {
+        let ready = match t {
+            TState::Runnable => true,
+            TState::BlockedMutex(m) => !st.locked.contains(m),
+            TState::BlockedCv { .. } => false,
+            TState::BlockedJoin(target) => matches!(st.threads[*target], TState::Finished),
+            TState::Finished => false,
+        };
+        if ready {
+            out.push(i);
+        }
+    }
+    out
+}
+
+/// Hand the baton to the next schedulable thread (possibly the
+/// caller).  Declares deadlock — the model's lost-wakeup detector —
+/// when live threads exist but none is schedulable.
+fn pick_next(st: &mut Sched) {
+    st.steps += 1;
+    if st.steps > st.max_steps {
+        st.abort = true;
+        return;
+    }
+    let ready = schedulable(st);
+    if ready.is_empty() {
+        if st.threads.iter().all(|t| matches!(t, TState::Finished)) {
+            return; // run complete; nothing left to schedule
+        }
+        st.abort = true;
+        if st.failure.is_none() {
+            st.failure = Some(format!(
+                "deadlock: no schedulable thread (thread states {:?}, held mutexes {:?})",
+                st.threads, st.locked
+            ));
+        }
+        return;
+    }
+    let c = choose(st, ready.len());
+    if st.abort {
+        return;
+    }
+    st.current = ready[c];
+}
+
+/// Block until the baton returns to `me`.  Returns `false` when the
+/// run aborted instead.
+fn wait_for_turn(ctx: &Ctx, me: usize) -> bool {
+    let mut st = ctx.sched.lock().unwrap();
+    loop {
+        if st.abort {
+            return false;
+        }
+        if st.current == me {
+            return true;
+        }
+        st = ctx.cv.wait(st).unwrap();
+    }
+}
+
+/// One schedule point: offer the baton to any schedulable thread.
+fn step(ctx: &Ctx, me: usize) {
+    {
+        let mut st = ctx.sched.lock().unwrap();
+        if st.abort {
+            drop(st);
+            abort_exit();
+            return;
+        }
+        pick_next(&mut st);
+        if !st.abort && st.current == me {
+            return; // kept the baton; no one to wake
+        }
+    }
+    ctx.cv.notify_all();
+    if !wait_for_turn(ctx, me) {
+        abort_exit();
+    }
+}
+
+/// Schedule point before an atomic operation (the operation itself
+/// then runs atomically under the baton).
+pub(crate) fn hook_atomic() {
+    if let Some((ctx, me)) = tls_get() {
+        step(&ctx, me);
+    }
+}
+
+/// Cooperatively acquire model mutex `id` (schedule point first).  On
+/// return the caller owns the model mutex and may take the inner
+/// `std` lock, which is guaranteed uncontended.
+pub(crate) fn hook_mutex_lock(id: u64) {
+    let Some((ctx, me)) = tls_get() else { return };
+    step(&ctx, me);
+    loop {
+        {
+            let mut st = ctx.sched.lock().unwrap();
+            if st.abort {
+                drop(st);
+                abort_exit();
+                return; // free-run: fall through to the real lock
+            }
+            if !st.locked.contains(&id) {
+                st.locked.insert(id);
+                return;
+            }
+            st.threads[me] = TState::BlockedMutex(id);
+            pick_next(&mut st);
+        }
+        ctx.cv.notify_all();
+        if !wait_for_turn(&ctx, me) {
+            abort_exit();
+            return;
+        }
+        ctx.sched.lock().unwrap().threads[me] = TState::Runnable;
+    }
+}
+
+/// Release model mutex `id`.  Deliberately not a schedule point: the
+/// next shared-memory operation is, and keeping release silent makes
+/// `Condvar::wait`'s release-then-block atomic under the baton.
+pub(crate) fn hook_mutex_unlock(id: u64) {
+    let Some((ctx, _me)) = tls_get() else { return };
+    let mut st = ctx.sched.lock().unwrap();
+    st.locked.remove(&id);
+}
+
+/// Block on condvar `cv` (the caller has already released `mutex` via
+/// [`hook_mutex_unlock`]); returns once notified and scheduled, after
+/// which the caller reacquires the mutex through the normal lock path.
+pub(crate) fn hook_cv_wait(cv: u64, mutex: u64) {
+    let Some((ctx, me)) = tls_get() else { return };
+    {
+        let mut st = ctx.sched.lock().unwrap();
+        if st.abort {
+            drop(st);
+            abort_exit();
+            return; // free-run: behave as a spurious wakeup
+        }
+        st.threads[me] = TState::BlockedCv { cv, mutex };
+        pick_next(&mut st);
+    }
+    ctx.cv.notify_all();
+    if !wait_for_turn(&ctx, me) {
+        abort_exit();
+        return;
+    }
+    ctx.sched.lock().unwrap().threads[me] = TState::Runnable;
+}
+
+/// Move waiters on `cv` to the mutex-reacquisition state.  For
+/// `notify_one`, *which* waiter wakes is an explored schedule choice.
+pub(crate) fn hook_notify(cv: u64, all: bool) {
+    let Some((ctx, _me)) = tls_get() else { return };
+    let mut st = ctx.sched.lock().unwrap();
+    if st.abort {
+        return;
+    }
+    let waiters: Vec<(usize, u64)> = st
+        .threads
+        .iter()
+        .enumerate()
+        .filter_map(|(i, t)| match t {
+            TState::BlockedCv { cv: c, mutex } if *c == cv => Some((i, *mutex)),
+            _ => None,
+        })
+        .collect();
+    if waiters.is_empty() {
+        return;
+    }
+    if all {
+        for (i, m) in waiters {
+            st.threads[i] = TState::BlockedMutex(m);
+        }
+    } else {
+        let c = choose(&mut st, waiters.len());
+        if st.abort {
+            drop(st);
+            ctx.cv.notify_all();
+            abort_exit();
+            return;
+        }
+        let (i, m) = waiters[c];
+        st.threads[i] = TState::BlockedMutex(m);
+    }
+}
+
+fn panic_text(p: &(dyn std::any::Any + Send)) -> Option<String> {
+    if p.downcast_ref::<AbortRun>().is_some() {
+        return None;
+    }
+    if let Some(s) = p.downcast_ref::<&str>() {
+        Some((*s).to_string())
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        Some(s.clone())
+    } else {
+        Some("<non-string panic>".to_string())
+    }
+}
+
+fn finish_thread(ctx: &Ctx, index: usize, failure: Option<String>) {
+    let mut st = ctx.sched.lock().unwrap();
+    st.threads[index] = TState::Finished;
+    if let Some(msg) = failure {
+        if st.failure.is_none() {
+            st.failure = Some(msg);
+        }
+        st.abort = true;
+    }
+    if !st.abort {
+        pick_next(&mut st);
+    }
+    drop(st);
+    ctx.cv.notify_all();
+}
+
+fn run_thread<T, F: FnOnce() -> T>(ctx: Arc<Ctx>, index: usize, f: F) -> Option<T> {
+    TLS.with(|t| *t.borrow_mut() = Some((ctx.clone(), index)));
+    if !wait_for_turn(&ctx, index) {
+        finish_thread(&ctx, index, None);
+        return None;
+    }
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(v) => {
+            finish_thread(&ctx, index, None);
+            Some(v)
+        }
+        Err(p) => {
+            finish_thread(&ctx, index, panic_text(p.as_ref()));
+            None
+        }
+    }
+}
+
+/// Handle to a scenario thread created with [`spawn`].
+pub struct JoinHandle<T> {
+    ctx: Arc<Ctx>,
+    index: usize,
+    inner: std::thread::JoinHandle<Option<T>>,
+}
+
+impl<T> JoinHandle<T> {
+    /// Cooperatively wait for the thread to finish; returns its value,
+    /// or `None` if it panicked (the panic is recorded as the run's
+    /// failure by the explorer).
+    pub fn join(self) -> Option<T> {
+        if let Some((ctx, me)) = tls_get() {
+            loop {
+                {
+                    let mut st = ctx.sched.lock().unwrap();
+                    if st.abort {
+                        break;
+                    }
+                    if matches!(st.threads[self.index], TState::Finished) {
+                        break;
+                    }
+                    st.threads[me] = TState::BlockedJoin(self.index);
+                    pick_next(&mut st);
+                }
+                ctx.cv.notify_all();
+                if !wait_for_turn(&ctx, me) {
+                    break;
+                }
+                ctx.sched.lock().unwrap().threads[me] = TState::Runnable;
+            }
+            if ctx.sched.lock().unwrap().abort {
+                abort_exit();
+            }
+        }
+        self.inner.join().unwrap_or(None)
+    }
+}
+
+/// Spawn a scenario thread under the current model run.  Panics if the
+/// caller is not itself a model thread.
+pub fn spawn<T, F>(f: F) -> JoinHandle<T>
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    let (ctx, _me) = tls_get().expect("model::spawn called outside a model run");
+    let index = {
+        let mut st = ctx.sched.lock().unwrap();
+        st.threads.push(TState::Runnable);
+        st.threads.len() - 1
+    };
+    let c2 = ctx.clone();
+    let inner = std::thread::Builder::new()
+        .name(format!("osmax-model-{index}"))
+        .spawn(move || run_thread(c2, index, f))
+        .expect("failed to spawn model thread");
+    JoinHandle { ctx, index, inner }
+}
+
+struct RunResult {
+    trace: Vec<(usize, usize)>,
+    failure: Option<String>,
+    truncated: bool,
+}
+
+fn run_once(
+    decider: Decider,
+    max_choices: usize,
+    scenario: &Arc<dyn Fn() + Send + Sync>,
+) -> RunResult {
+    let ctx = Arc::new(Ctx {
+        sched: Mutex::new(Sched {
+            threads: vec![TState::Runnable],
+            current: 0,
+            locked: BTreeSet::new(),
+            decider,
+            trace: Vec::new(),
+            max_choices,
+            steps: 0,
+            max_steps: max_choices.saturating_mul(8).saturating_add(4096),
+            abort: false,
+            failure: None,
+        }),
+        cv: Condvar::new(),
+    });
+    let c2 = ctx.clone();
+    let sc = scenario.clone();
+    let root = std::thread::Builder::new()
+        .name("osmax-model-0".to_string())
+        .spawn(move || run_thread(c2, 0, move || sc()))
+        .expect("failed to spawn model root thread");
+    {
+        let mut st = ctx.sched.lock().unwrap();
+        while !st.threads.iter().all(|t| matches!(t, TState::Finished)) {
+            st = ctx.cv.wait(st).unwrap();
+        }
+    }
+    let _ = root.join();
+    let mut st = ctx.sched.lock().unwrap();
+    let truncated = st.abort && st.failure.is_none();
+    RunResult {
+        trace: std::mem::take(&mut st.trace),
+        failure: st.failure.take(),
+        truncated,
+    }
+}
+
+/// DFS backtracking: the forced prefix for the next unexplored
+/// schedule, or `None` when the bounded tree is exhausted.
+fn next_prefix(trace: &[(usize, usize)]) -> Option<Vec<usize>> {
+    for i in (0..trace.len()).rev() {
+        let (c, n) = trace[i];
+        if c + 1 < n {
+            let mut p: Vec<usize> = trace[..i].iter().map(|t| t.0).collect();
+            p.push(c + 1);
+            return Some(p);
+        }
+    }
+    None
+}
+
+/// Explorer budgets for one [`check`]/[`run_explorer`] call.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    /// Max schedules explored depth-first (bounded-exhaustive phase).
+    pub dfs_schedules: usize,
+    /// Schedules drawn from the seeded random stream after (or instead
+    /// of) DFS.
+    pub random_schedules: usize,
+    /// Base seed for the random phase; schedule `i` uses
+    /// `seed + i`, reported on failure for replay.
+    pub seed: u64,
+    /// Per-run cap on recorded (> 1 option) schedule choices; deeper
+    /// runs are truncated, not failed.
+    pub max_choices: usize,
+}
+
+impl Config {
+    /// The tier-1 default budget: small enough to keep unit-test suites
+    /// fast, large enough to exhaust the bounded scenarios in this
+    /// module (and catch the seeded mutants deterministically).
+    pub fn small() -> Self {
+        Self { dfs_schedules: 300, random_schedules: 150, seed: 0x05_AD5C_0FFE, max_choices: 4096 }
+    }
+}
+
+/// A failing schedule found by the explorer.
+#[derive(Debug)]
+pub struct Failure {
+    /// What failed (assertion message, panic text, or deadlock report).
+    pub message: String,
+    /// How to reproduce it (`OSMAX_MODEL_SEED=...` for random-phase
+    /// failures; the deterministic choice trace for DFS failures).
+    pub replay: String,
+}
+
+/// What one explorer invocation did.
+#[derive(Debug)]
+pub struct Outcome {
+    /// Schedules actually run.
+    pub schedules: usize,
+    /// Runs cut short by the choice budget.
+    pub truncated: usize,
+    /// `true` when DFS exhausted every interleaving within budget (and
+    /// nothing was truncated): full coverage, not sampling.
+    pub exhaustive: bool,
+    /// The first failing schedule, if any.
+    pub failure: Option<Failure>,
+}
+
+fn parse_seed(s: &str) -> Option<u64> {
+    let s = s.trim();
+    if let Some(h) = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        u64::from_str_radix(h, 16).ok()
+    } else {
+        s.parse().ok()
+    }
+}
+
+/// Re-run exactly one randomized schedule by seed (the programmatic
+/// twin of `OSMAX_MODEL_SEED`).
+pub fn replay(
+    name: &str,
+    seed: u64,
+    max_choices: usize,
+    scenario: impl Fn() + Send + Sync + 'static,
+) -> Outcome {
+    let scenario: Arc<dyn Fn() + Send + Sync> = Arc::new(scenario);
+    let r = run_once(Decider::Random { state: seed_to_state(seed) }, max_choices, &scenario);
+    Outcome {
+        schedules: 1,
+        truncated: usize::from(r.truncated),
+        exhaustive: false,
+        failure: r.failure.map(|msg| Failure {
+            message: format!("model `{name}`: {msg}"),
+            replay: format!("schedule seed 0x{seed:x} (replay with OSMAX_MODEL_SEED=0x{seed:x})"),
+        }),
+    }
+}
+
+/// Explore `scenario` under `cfg`, returning what happened.
+/// `OSMAX_MODEL_SEED` (hex `0x…` or decimal) short-circuits to a
+/// single-seed replay; `OSMAX_MODEL_SCHEDULES` overrides both budgets.
+pub fn run_explorer(
+    name: &str,
+    cfg: Config,
+    scenario: impl Fn() + Send + Sync + 'static,
+) -> Outcome {
+    let scenario: Arc<dyn Fn() + Send + Sync> = Arc::new(scenario);
+    if let Some(seed) = std::env::var("OSMAX_MODEL_SEED").ok().as_deref().and_then(parse_seed) {
+        let decider = Decider::Random { state: seed_to_state(seed) };
+        let r = run_once(decider, cfg.max_choices, &scenario);
+        return Outcome {
+            schedules: 1,
+            truncated: usize::from(r.truncated),
+            exhaustive: false,
+            failure: r.failure.map(|msg| Failure {
+                message: format!("model `{name}`: {msg}"),
+                replay: format!(
+                    "schedule seed 0x{seed:x} (replay with OSMAX_MODEL_SEED=0x{seed:x})"
+                ),
+            }),
+        };
+    }
+    let (dfs_budget, rand_budget) = match std::env::var("OSMAX_MODEL_SCHEDULES")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+    {
+        Some(n) => (n, n),
+        None => (cfg.dfs_schedules, cfg.random_schedules),
+    };
+
+    let mut schedules = 0usize;
+    let mut truncated = 0usize;
+
+    // Phase 1: bounded-exhaustive DFS over the schedule tree.
+    let mut prefix: Vec<usize> = Vec::new();
+    let mut exhausted = false;
+    while schedules < dfs_budget {
+        let r = run_once(
+            Decider::Dfs { prefix: std::mem::take(&mut prefix) },
+            cfg.max_choices,
+            &scenario,
+        );
+        schedules += 1;
+        if r.truncated {
+            truncated += 1;
+        }
+        if let Some(msg) = r.failure {
+            let choices: Vec<usize> = r.trace.iter().map(|t| t.0).collect();
+            return Outcome {
+                schedules,
+                truncated,
+                exhaustive: false,
+                failure: Some(Failure {
+                    message: format!("model `{name}`: {msg}"),
+                    replay: format!(
+                        "DFS schedule #{schedules}, choice trace {choices:?} \
+                         (deterministic: rerunning this test reproduces it)"
+                    ),
+                }),
+            };
+        }
+        match next_prefix(&r.trace) {
+            Some(p) => prefix = p,
+            None => {
+                exhausted = true;
+                break;
+            }
+        }
+    }
+    if exhausted && truncated == 0 {
+        return Outcome { schedules, truncated, exhaustive: true, failure: None };
+    }
+
+    // Phase 2: seeded random schedules, one derived seed per run.
+    for i in 0..rand_budget {
+        let seed = cfg.seed.wrapping_add(i as u64);
+        let decider = Decider::Random { state: seed_to_state(seed) };
+        let r = run_once(decider, cfg.max_choices, &scenario);
+        schedules += 1;
+        if r.truncated {
+            truncated += 1;
+        }
+        if let Some(msg) = r.failure {
+            return Outcome {
+                schedules,
+                truncated,
+                exhaustive: false,
+                failure: Some(Failure {
+                    message: format!("model `{name}`: {msg}"),
+                    replay: format!(
+                        "schedule seed 0x{seed:x} (replay with OSMAX_MODEL_SEED=0x{seed:x})"
+                    ),
+                }),
+            };
+        }
+    }
+    Outcome { schedules, truncated, exhaustive: exhausted && truncated == 0, failure: None }
+}
+
+/// Explore `scenario` under `cfg`; panics with the failure message and
+/// its replay handle if any schedule fails — the assertion form used
+/// by the regression suites.
+pub fn check(name: &str, cfg: Config, scenario: impl Fn() + Send + Sync + 'static) {
+    let o = run_explorer(name, cfg, scenario);
+    if let Some(f) = o.failure {
+        panic!("{}\n  replay: {}", f.message, f.replay);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::sync::{AtomicUsize, Condvar as ShimCondvar, Mutex as ShimMutex, Ordering};
+    use crate::exec::{StealDeque, WaitGroup};
+
+    #[test]
+    fn explorer_exhausts_trivial_single_thread_scenario() {
+        let o = run_explorer(
+            "trivial",
+            Config { dfs_schedules: 64, random_schedules: 0, seed: 1, max_choices: 512 },
+            || {
+                let a = AtomicUsize::new(0);
+                a.fetch_add(1, Ordering::SeqCst);
+                assert_eq!(a.load(Ordering::SeqCst), 1);
+            },
+        );
+        assert!(o.failure.is_none(), "{:?}", o.failure);
+        assert!(o.exhaustive, "single-threaded scenario must exhaust");
+        assert_eq!(o.schedules, 1, "no branch points → exactly one schedule");
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // schedule-exploration volume; nothing for miri here
+    fn explorer_reports_deadlock_with_thread_states() {
+        let o = run_explorer(
+            "deadlock",
+            Config { dfs_schedules: 16, random_schedules: 0, seed: 1, max_choices: 512 },
+            || {
+                let m = ShimMutex::new(());
+                let cv = ShimCondvar::new();
+                let g = m.lock().unwrap();
+                let _g = cv.wait(g); // never notified: must be detected, not hang
+            },
+        );
+        let f = o.failure.expect("un-notified wait must be reported as deadlock");
+        assert!(f.message.contains("deadlock"), "{}", f.message);
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)]
+    fn model_deque_last_element_goes_to_exactly_one_side() {
+        check("deque_last_element", Config::small(), || {
+            let d = Arc::new(StealDeque::new(4));
+            d.push(7usize).unwrap();
+            let owner = {
+                let d = d.clone();
+                spawn(move || d.pop())
+            };
+            let thief = {
+                let d = d.clone();
+                spawn(move || d.steal())
+            };
+            let a = owner.join().flatten();
+            let b = thief.join().flatten();
+            assert!(
+                a.is_some() != b.is_some(),
+                "last element must go to exactly one side: owner={a:?} thief={b:?}"
+            );
+            assert_eq!(a.or(b), Some(7));
+            assert!(d.is_empty());
+        });
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)]
+    fn model_deque_conserves_and_keeps_steal_fifo() {
+        check("deque_owner_vs_thief", Config::small(), || {
+            let d = Arc::new(StealDeque::new(8));
+            for i in 0..3usize {
+                d.push(i).unwrap();
+            }
+            let thief = {
+                let d = d.clone();
+                spawn(move || d.steal())
+            };
+            let owner = {
+                let d = d.clone();
+                spawn(move || (d.pop(), d.pop()))
+            };
+            let stolen = thief.join().flatten();
+            let (p1, p2) = owner.join().expect("owner thread result");
+            // 3 items, 3 takes: every schedule consumes each exactly
+            // once; the thief always sees the FIFO end (oldest = 0) and
+            // the owner the LIFO end, whatever the interleaving.
+            assert_eq!(stolen, Some(0), "thief must take the oldest");
+            assert_eq!((p1, p2), (Some(2), Some(1)), "owner must pop newest-first");
+            assert!(d.is_empty());
+        });
+    }
+
+    /// The pool's claim protocol (`next_task`/`join_idle`), distilled:
+    /// `active` must be bumped BEFORE popping, so the idle predicate
+    /// ("queues empty and active == 0") can never be transiently true
+    /// while a task is in flight between a queue and its worker.
+    fn claim_scenario(claim_before_pop: bool) -> impl Fn() + Send + Sync + 'static {
+        move || {
+            let deque = Arc::new(StealDeque::new(2));
+            deque.push(1usize).unwrap();
+            let active = Arc::new(AtomicUsize::new(0));
+            let done = Arc::new(AtomicUsize::new(0));
+            let worker = {
+                let deque = deque.clone();
+                let active = active.clone();
+                let done = done.clone();
+                spawn(move || {
+                    if claim_before_pop {
+                        active.fetch_add(1, Ordering::SeqCst);
+                        if deque.pop().is_some() {
+                            done.store(1, Ordering::SeqCst);
+                        }
+                        active.fetch_sub(1, Ordering::SeqCst);
+                    } else {
+                        // MUTATION: pop first, claim after — the
+                        // pre-claim window the real protocol forbids.
+                        let t = deque.pop();
+                        active.fetch_add(1, Ordering::SeqCst);
+                        if t.is_some() {
+                            done.store(1, Ordering::SeqCst);
+                        }
+                        active.fetch_sub(1, Ordering::SeqCst);
+                    }
+                })
+            };
+            let joiner = {
+                let deque = deque.clone();
+                let active = active.clone();
+                let done = done.clone();
+                spawn(move || {
+                    if deque.is_empty() && active.load(Ordering::SeqCst) == 0 {
+                        assert_eq!(
+                            done.load(Ordering::SeqCst),
+                            1,
+                            "idle predicate observed while the claimed task had not finished"
+                        );
+                    }
+                })
+            };
+            worker.join();
+            joiner.join();
+        }
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)]
+    fn model_pool_claim_protocol_holds_under_all_schedules() {
+        check("pool_claim_protocol", Config::small(), claim_scenario(true));
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)]
+    fn model_pool_claim_protocol_mutant_is_caught() {
+        let o = run_explorer("pool_claim_mutant", Config::small(), claim_scenario(false));
+        let f = o.failure.expect("pop-before-claim mutant must be caught");
+        assert!(f.message.contains("idle predicate"), "{}", f.message);
+    }
+
+    /// The grid's per-row countdown, distilled: each tile publishes its
+    /// partial BEFORE decrementing `remaining`, so the tile that
+    /// observes the count hit zero sees every partial.
+    fn grid_scenario(publish_before_decrement: bool) -> impl Fn() + Send + Sync + 'static {
+        move || {
+            let remaining = Arc::new(AtomicUsize::new(2));
+            let contrib = Arc::new(AtomicUsize::new(0));
+            let reductions = Arc::new(AtomicUsize::new(0));
+            let workers: Vec<_> = (0..2)
+                .map(|_| {
+                    let remaining = remaining.clone();
+                    let contrib = contrib.clone();
+                    let reductions = reductions.clone();
+                    spawn(move || {
+                        if publish_before_decrement {
+                            contrib.fetch_add(1, Ordering::SeqCst);
+                            if remaining.fetch_sub(1, Ordering::SeqCst) == 1 {
+                                assert_eq!(
+                                    contrib.load(Ordering::SeqCst),
+                                    2,
+                                    "row reduced before every tile partial was published"
+                                );
+                                reductions.fetch_add(1, Ordering::SeqCst);
+                            }
+                        } else {
+                            // MUTATION: decrement first — the last
+                            // decrementer can reduce a row whose other
+                            // partial is not yet published.
+                            let last = remaining.fetch_sub(1, Ordering::SeqCst) == 1;
+                            contrib.fetch_add(1, Ordering::SeqCst);
+                            if last {
+                                assert_eq!(
+                                    contrib.load(Ordering::SeqCst),
+                                    2,
+                                    "row reduced before every tile partial was published"
+                                );
+                                reductions.fetch_add(1, Ordering::SeqCst);
+                            }
+                        }
+                    })
+                })
+                .collect();
+            for w in workers {
+                w.join();
+            }
+            assert_eq!(
+                reductions.load(Ordering::SeqCst),
+                1,
+                "exactly one tile must observe the final countdown"
+            );
+        }
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)]
+    fn model_grid_countdown_reduces_once_with_all_partials() {
+        check("grid_countdown", Config::small(), grid_scenario(true));
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)]
+    fn model_grid_countdown_mutant_is_caught() {
+        let o = run_explorer("grid_countdown_mutant", Config::small(), grid_scenario(false));
+        let f = o.failure.expect("decrement-before-publish mutant must be caught");
+        assert!(f.message.contains("partial was published"), "{}", f.message);
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)]
+    fn model_waitgroup_wait_covers_every_preregistered_guard() {
+        check("waitgroup_add_racing_completions", Config::small(), || {
+            let wg = WaitGroup::new();
+            let d1 = Arc::new(AtomicUsize::new(0));
+            let d2 = Arc::new(AtomicUsize::new(0));
+            let g1 = wg.add();
+            let g2 = wg.add();
+            let t1 = {
+                let d1 = d1.clone();
+                spawn(move || {
+                    d1.store(1, Ordering::SeqCst);
+                    drop(g1);
+                })
+            };
+            let t2 = {
+                let wg = wg.clone();
+                let d2 = d2.clone();
+                spawn(move || {
+                    let g3 = wg.add(); // later epoch: must not be waited for
+                    drop(g3);
+                    d2.store(1, Ordering::SeqCst);
+                    drop(g2);
+                })
+            };
+            wg.wait();
+            assert_eq!(d1.load(Ordering::SeqCst), 1, "wait returned before g1 completed");
+            assert_eq!(d2.load(Ordering::SeqCst), 1, "wait returned before g2 completed");
+            t1.join();
+            t2.join();
+        });
+    }
+
+    // ------------------------------------------------------------------
+    // Mutation self-test: the pre-PR-3 `WaitGroup::wait` bug, rebuilt.
+    //
+    // `TallyWaitGroup` tracks monotone added/done counts instead of
+    // live guard ids; `wait()` latches `target = added` and returns
+    // when `done >= target`.  A later-epoch add+drop bumps `done` and
+    // satisfies an earlier epoch's target while one of that epoch's own
+    // guards is still live — the early-return race the epoch/id set in
+    // `exec::waitgroup` was built to fix.  The explorer must catch it
+    // and hand back a replayable seed.
+    // ------------------------------------------------------------------
+
+    struct Tally {
+        added: u64,
+        done: u64,
+    }
+
+    struct TallyInner {
+        st: ShimMutex<Tally>,
+        cv: ShimCondvar,
+    }
+
+    #[derive(Clone)]
+    struct TallyWaitGroup {
+        inner: Arc<TallyInner>,
+    }
+
+    struct TallyGuard {
+        inner: Arc<TallyInner>,
+    }
+
+    impl TallyWaitGroup {
+        fn new() -> Self {
+            Self {
+                inner: Arc::new(TallyInner {
+                    st: ShimMutex::new(Tally { added: 0, done: 0 }),
+                    cv: ShimCondvar::new(),
+                }),
+            }
+        }
+
+        fn add(&self) -> TallyGuard {
+            self.inner.st.lock().unwrap().added += 1;
+            TallyGuard { inner: self.inner.clone() }
+        }
+
+        fn wait(&self) {
+            let mut st = self.inner.st.lock().unwrap();
+            let target = st.added; // the buggy latch: a count, not an id set
+            while st.done < target {
+                st = self.inner.cv.wait(st).unwrap();
+            }
+        }
+    }
+
+    impl Drop for TallyGuard {
+        fn drop(&mut self) {
+            let mut st = self.inner.st.lock().unwrap();
+            st.done += 1;
+            drop(st);
+            self.inner.cv.notify_all();
+        }
+    }
+
+    /// g1+g2 registered, then a waiter races a churn thread that adds
+    /// and drops a later-epoch g3 before finishing g1 and (last) g2.
+    /// Correct epoch semantics: `wait()` returns only after g2's drop,
+    /// which is preceded by the flag store.  The tally mutant returns
+    /// at done == 2 (g3 + g1) with g2 still live → flag still 0.
+    fn tally_scenario() {
+        let wg = TallyWaitGroup::new();
+        let g2_dropped = Arc::new(AtomicUsize::new(0));
+        let g1 = wg.add();
+        let g2 = wg.add();
+        let waiter = {
+            let wg = wg.clone();
+            let flag = g2_dropped.clone();
+            spawn(move || {
+                wg.wait();
+                assert_eq!(
+                    flag.load(Ordering::SeqCst),
+                    1,
+                    "wait returned while pre-registered guard g2 was still live"
+                );
+            })
+        };
+        let churn = {
+            let wg = wg.clone();
+            let flag = g2_dropped.clone();
+            spawn(move || {
+                let g3 = wg.add();
+                drop(g3);
+                drop(g1);
+                flag.store(1, Ordering::SeqCst);
+                drop(g2);
+            })
+        };
+        waiter.join();
+        churn.join();
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)]
+    fn mutation_tally_waitgroup_caught_by_dfs_and_by_seeded_random_with_replay() {
+        // Bounded-exhaustive phase finds the early return…
+        let o = run_explorer(
+            "wg_tally_mutant_dfs",
+            Config { dfs_schedules: 400, random_schedules: 0, seed: 7, max_choices: 4096 },
+            tally_scenario,
+        );
+        let f = o.failure.expect("DFS must catch the tally early-return race");
+        assert!(f.message.contains("g2 was still live"), "{}", f.message);
+
+        // …the randomized explorer finds it too and names a seed…
+        let o = run_explorer(
+            "wg_tally_mutant_rand",
+            Config { dfs_schedules: 0, random_schedules: 400, seed: 0xBAD_5EED, max_choices: 4096 },
+            tally_scenario,
+        );
+        let f = o.failure.expect("randomized explorer must catch the race");
+        assert!(f.replay.contains("OSMAX_MODEL_SEED="), "no replay seed in: {}", f.replay);
+
+        // …and replaying exactly that seed reproduces the failure.
+        let seed_text = f.replay.split("OSMAX_MODEL_SEED=").nth(1).expect("seed in replay text");
+        let seed = parse_seed(seed_text).expect("parsable replay seed");
+        let r = replay("wg_tally_mutant_replay", seed, 4096, tally_scenario);
+        assert!(r.failure.is_some(), "replayed seed 0x{seed:x} must reproduce the failure");
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)]
+    fn real_waitgroup_survives_the_tally_killer_scenario() {
+        // The same churn scenario, driven through the real epoch-based
+        // WaitGroup: no schedule may produce an early return.
+        check("wg_epoch_vs_churn", Config::small(), || {
+            let wg = WaitGroup::new();
+            let g2_dropped = Arc::new(AtomicUsize::new(0));
+            let g1 = wg.add();
+            let g2 = wg.add();
+            let waiter = {
+                let wg = wg.clone();
+                let flag = g2_dropped.clone();
+                spawn(move || {
+                    wg.wait();
+                    assert_eq!(
+                        flag.load(Ordering::SeqCst),
+                        1,
+                        "wait returned while pre-registered guard g2 was still live"
+                    );
+                })
+            };
+            let churn = {
+                let wg = wg.clone();
+                let flag = g2_dropped.clone();
+                spawn(move || {
+                    let g3 = wg.add();
+                    drop(g3);
+                    drop(g1);
+                    flag.store(1, Ordering::SeqCst);
+                    drop(g2);
+                })
+            };
+            waiter.join();
+            churn.join();
+        });
+    }
+}

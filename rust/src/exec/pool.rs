@@ -37,14 +37,21 @@
 //! empty), `exec.pool.steal.overflows` (tasks bounced from a full
 //! deque to the injector).
 
+// xtask:atomics-allowlist: Relaxed, SeqCst
+// SeqCst: every `active` claim-protocol site — the pairing with the
+// deque `len` mirror needs the single total order; see the per-site
+// comments in `next_task`, `run_task`, and `join_idle`.
+// Relaxed: `cursor` (scatter origin) and test counters — pure tallies
+// with no ordering role.
+
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use anyhow::{bail, Result};
 
 use super::deque::StealDeque;
+use super::sync::{AtomicUsize, Condvar, Mutex, Ordering};
 use super::waitgroup::WaitGroup;
 use crate::metrics::{self, Counter};
 
@@ -232,6 +239,9 @@ impl ThreadPool {
                     assert!(!st.shutdown, "execute on shut-down pool");
                 }
                 let n = self.shared.deques.len();
+                // Relaxed: the cursor only rotates the scatter origin
+                // for load spreading; any value is correct, so no
+                // ordering with other memory is needed.
                 let start = self.shared.cursor.fetch_add(1, Ordering::Relaxed) % n;
                 let mut overflow: Vec<Task> = Vec::new();
                 for (i, t) in tasks.into_iter().enumerate() {
@@ -361,16 +371,27 @@ fn next_task(shared: &Shared, id: usize) -> Option<Task> {
     loop {
         // 1. Own deque, newest first (Steal policy only).
         if let Some(own) = shared.deques.get(id) {
+            // SeqCst: the claim must precede the pop's `len := 0` in
+            // the total order, so "deque looks empty" always implies
+            // "its claimer is already counted in `active`" — the fact
+            // `join_idle`'s deques-then-active scan relies on.
             shared.active.fetch_add(1, Ordering::SeqCst);
             if let Some(t) = own.pop() {
                 return Some(t);
             }
+            // SeqCst: roll the claim back in the same total order so a
+            // joiner never sees a phantom claim outlive this probe.
             shared.active.fetch_sub(1, Ordering::SeqCst);
         }
 
         // 2. Shared injector, oldest first.
         {
             let mut st = shared.queue.lock().unwrap();
+            // SeqCst (claim + rollback): injector claims happen under
+            // the queue mutex that `join_idle` also holds, so the mutex
+            // already orders them; SeqCst keeps the counter's *other*
+            // (lock-free) sites in one total order rather than mixing
+            // orderings on a single atomic.
             shared.active.fetch_add(1, Ordering::SeqCst);
             if let Some(t) = st.tasks.pop_front() {
                 return Some(t);
@@ -388,13 +409,17 @@ fn next_task(shared: &Shared, id: usize) -> Option<Task> {
                 if victim.is_empty() {
                     continue; // cheap skip without touching its lock
                 }
+                // SeqCst: same claim-before-pop argument as step 1 —
+                // a thief emptying a victim's deque must already be
+                // visible in `active` when the `len` mirror reads 0.
                 shared.active.fetch_add(1, Ordering::SeqCst);
                 if let Some(t) = victim.steal() {
                     shared.steals.inc();
                     stolen = Some(t);
                     break;
                 }
-                // lost the race for the victim's last task
+                // lost the race for the victim's last task: SeqCst
+                // rollback, as in step 1.
                 shared.active.fetch_sub(1, Ordering::SeqCst);
             }
             match stolen {
@@ -410,6 +435,8 @@ fn next_task(shared: &Shared, id: usize) -> Option<Task> {
         {
             let mut st = shared.queue.lock().unwrap();
             loop {
+                // SeqCst (claim + rollback): as in step 2 — mutex-held
+                // site kept on the counter's single total order.
                 shared.active.fetch_add(1, Ordering::SeqCst);
                 if let Some(t) = st.tasks.pop_front() {
                     return Some(t);
@@ -425,6 +452,8 @@ fn next_task(shared: &Shared, id: usize) -> Option<Task> {
                 // claim probes above (steps 1/3 roll their claim back
                 // without ever notifying), and `run_task` only notifies
                 // after real task completions.
+                // SeqCst load: must observe every claim that preceded a
+                // deque emptying in the total order (see step 1).
                 if shared.active.load(Ordering::SeqCst) == 0 {
                     shared.idle_cv.notify_all();
                 }
@@ -441,9 +470,13 @@ fn run_task(shared: &Shared, task: Task) {
     // Panics in tasks poison nothing: catch and continue, matching
     // production pool behaviour (a bad request must not kill workers).
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(task));
+    // SeqCst: the completion decrement must precede this worker's idle
+    // re-check below in the total order, or the worker could skip the
+    // notify that an already-scanning joiner is waiting for.
     shared.active.fetch_sub(1, Ordering::SeqCst);
     let st = shared.queue.lock().unwrap();
-    // Deques before `active` — same reasoning as `join_idle`.
+    // Deques before `active` — same reasoning as `join_idle`; SeqCst
+    // load for the same claim-visibility argument.
     let idle = st.tasks.is_empty()
         && !shared.any_deque_nonempty()
         && shared.active.load(Ordering::SeqCst) == 0;
@@ -472,6 +505,7 @@ mod tests {
     use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
+    #[cfg_attr(miri, ignore)] // 100-task volume; small pool paths are miri-covered below
     fn executes_all_tasks() {
         let pool = ThreadPool::new(4, "t");
         let counter = Arc::new(AtomicUsize::new(0));
@@ -486,6 +520,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // sleep-paced 50-task drain
     fn drop_joins_and_drains() {
         let counter = Arc::new(AtomicUsize::new(0));
         {
@@ -591,6 +626,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // 100-task volume; steal paths are miri-covered by run_scoped below
     fn steal_pool_executes_all_tasks() {
         let pool = ThreadPool::with_policy(4, "t", SchedPolicy::Steal);
         assert_eq!(pool.policy(), SchedPolicy::Steal);
@@ -618,6 +654,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // sleep-paced 900-task drain
     fn steal_pool_drop_drains_deques_and_injector() {
         let counter = Arc::new(AtomicUsize::new(0));
         {

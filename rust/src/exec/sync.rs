@@ -1,0 +1,286 @@
+//! Swappable concurrency primitives: `std::sync` in production,
+//! schedule-instrumented under the model checker.
+//!
+//! [`Mutex`], [`Condvar`], and [`AtomicUsize`] mirror the exact API
+//! surface of their `std::sync` counterparts that the exec substrate
+//! uses (`lock().unwrap()`, `Condvar::wait(guard)`, atomic
+//! `load`/`store`/`fetch_add`/`fetch_sub` taking an [`Ordering`]).  In
+//! a plain build they are zero-cost pass-throughs.  In builds where the
+//! model checker is compiled in (`cfg(test)` or the `osmax_model`
+//! feature), every operation first calls into [`super::model`]: when
+//! the calling thread belongs to an active model run, the operation
+//! becomes a *schedule point* — the model's explorer decides which
+//! thread runs next — and blocking primitives block *cooperatively*
+//! inside the model scheduler instead of in the OS.  Threads outside a
+//! model run take the pass-through path even in instrumented builds
+//! (the hooks are a thread-local lookup that comes back empty).
+//!
+//! This is how `StealDeque`, `WaitGroup`, the pool's `active`-counter
+//! claim protocol, and the grid's per-row countdown can be driven
+//! through every interleaving of a bounded schedule without external
+//! crates: the *production* code paths run unchanged, only the
+//! primitives underneath them are schedule-aware.  See
+//! `docs/VERIFICATION.md` for the contract catalogue.
+//!
+//! Model-run invariant that keeps the pass-through `std` types sound:
+//! the model serializes execution (one runnable thread at a time), and
+//! a model thread only takes the inner `std::sync::Mutex` *after* the
+//! model granted it the mutex — so the inner lock is always
+//! uncontended and never blocks the baton holder.
+
+// xtask:atomics-allowlist: Relaxed, SeqCst
+// Relaxed: `NEXT_SYNC_ID` is a pure id dispenser — uniqueness comes
+// from the atomicity of fetch_add; no other memory is published.
+// SeqCst: unit tests only (pass-through smoke of the wrapper ops).
+
+use std::ops::{Deref, DerefMut};
+use std::sync::{LockResult, PoisonError};
+
+pub use std::sync::atomic::Ordering;
+
+#[cfg(any(test, feature = "osmax_model"))]
+use super::model;
+
+/// Process-unique id for every shim `Mutex`/`Condvar` so the model
+/// scheduler can track who holds / waits on what.  Ids are assigned in
+/// construction order; model scenarios construct their state inside
+/// the per-schedule closure, so id *assignment* never becomes a hidden
+/// source of cross-schedule nondeterminism.
+fn next_sync_id() -> u64 {
+    static NEXT_SYNC_ID: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    NEXT_SYNC_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// A mutual-exclusion lock with the `std::sync::Mutex` contract,
+/// instrumented as a schedule point under the model checker.
+pub struct Mutex<T> {
+    inner: std::sync::Mutex<T>,
+    id: u64,
+}
+
+impl<T> Mutex<T> {
+    /// Wrap `value` in a new lock.
+    pub fn new(value: T) -> Self {
+        Self { inner: std::sync::Mutex::new(value), id: next_sync_id() }
+    }
+
+    /// Acquire the lock, blocking (cooperatively, under the model)
+    /// until it is available.
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        #[cfg(any(test, feature = "osmax_model"))]
+        model::hook_mutex_lock(self.id);
+        match self.inner.lock() {
+            Ok(g) => Ok(MutexGuard { lock: self, inner: Some(g) }),
+            Err(poisoned) => Err(PoisonError::new(MutexGuard {
+                lock: self,
+                inner: Some(poisoned.into_inner()),
+            })),
+        }
+    }
+
+    /// Consume the lock, returning the inner value.
+    pub fn into_inner(self) -> LockResult<T> {
+        match self.inner.into_inner() {
+            Ok(v) => Ok(v),
+            Err(poisoned) => Err(PoisonError::new(poisoned.into_inner())),
+        }
+    }
+}
+
+/// RAII guard for [`Mutex`]; releases the lock (and notifies the model
+/// scheduler) on drop.
+pub struct MutexGuard<'a, T> {
+    lock: &'a Mutex<T>,
+    /// `Some` while the guard actually holds the inner `std` lock;
+    /// taken out by [`Condvar::wait`], which manages the release and
+    /// reacquisition itself.
+    inner: Option<std::sync::MutexGuard<'a, T>>,
+}
+
+impl<T> Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard already released")
+    }
+}
+
+impl<T> DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard already released")
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        let g = self.inner.take();
+        if g.is_some() {
+            // Release the inner std lock BEFORE telling the model the
+            // mutex is free: the model may immediately schedule another
+            // thread into `Mutex::lock`, whose inner `lock()` must not
+            // find the std mutex still held.
+            drop(g);
+            #[cfg(any(test, feature = "osmax_model"))]
+            model::hook_mutex_unlock(self.lock.id);
+            #[cfg(not(any(test, feature = "osmax_model")))]
+            let _ = self.lock.id;
+        }
+    }
+}
+
+/// A condition variable with the `std::sync::Condvar` contract,
+/// instrumented as a schedule point under the model checker.
+pub struct Condvar {
+    inner: std::sync::Condvar,
+    id: u64,
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Condvar {
+    /// Create a new condition variable.
+    pub fn new() -> Self {
+        Self { inner: std::sync::Condvar::new(), id: next_sync_id() }
+    }
+
+    /// Atomically release `guard`'s lock and block until notified, then
+    /// reacquire.  Spurious wakeups are possible (in both modes), so
+    /// callers loop on their predicate — exactly the `std` contract.
+    pub fn wait<'a, T>(&self, mut guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        let lock = guard.lock;
+        let inner = guard.inner.take().expect("guard already released");
+        #[cfg(any(test, feature = "osmax_model"))]
+        {
+            if model::in_model() {
+                // Model path: under the serialized schedule, "release
+                // then block" is atomic — no other thread runs between
+                // the two steps, so no wakeup can be lost.
+                drop(inner);
+                model::hook_mutex_unlock(lock.id);
+                drop(guard); // inner already taken: Drop is a no-op
+                model::hook_cv_wait(self.id, lock.id);
+                return lock.lock();
+            }
+        }
+        drop(guard); // inner already taken: Drop is a no-op
+        match self.inner.wait(inner) {
+            Ok(g) => Ok(MutexGuard { lock, inner: Some(g) }),
+            Err(poisoned) => Err(PoisonError::new(MutexGuard {
+                lock,
+                inner: Some(poisoned.into_inner()),
+            })),
+        }
+    }
+
+    /// Wake one waiter.  Under the model, *which* waiter is a schedule
+    /// choice of the explorer.
+    pub fn notify_one(&self) {
+        #[cfg(any(test, feature = "osmax_model"))]
+        model::hook_notify(self.id, false);
+        self.inner.notify_one();
+    }
+
+    /// Wake all waiters.
+    pub fn notify_all(&self) {
+        #[cfg(any(test, feature = "osmax_model"))]
+        model::hook_notify(self.id, true);
+        self.inner.notify_all();
+    }
+}
+
+/// An atomic `usize` with the `std` API, instrumented as a schedule
+/// point under the model checker.  The model serializes execution, so
+/// instrumented runs see sequentially-consistent semantics regardless
+/// of the `Ordering` argument — the model checks *interleavings*, not
+/// weak-memory reorderings (Miri and TSan cover those; see
+/// `docs/VERIFICATION.md`).
+pub struct AtomicUsize {
+    inner: std::sync::atomic::AtomicUsize,
+}
+
+impl AtomicUsize {
+    /// A new atomic holding `value`.
+    pub const fn new(value: usize) -> Self {
+        Self { inner: std::sync::atomic::AtomicUsize::new(value) }
+    }
+
+    /// Atomic load.
+    #[inline]
+    pub fn load(&self, order: Ordering) -> usize {
+        #[cfg(any(test, feature = "osmax_model"))]
+        model::hook_atomic();
+        self.inner.load(order)
+    }
+
+    /// Atomic store.
+    #[inline]
+    pub fn store(&self, value: usize, order: Ordering) {
+        #[cfg(any(test, feature = "osmax_model"))]
+        model::hook_atomic();
+        self.inner.store(value, order)
+    }
+
+    /// Atomic fetch-then-add; returns the previous value.
+    #[inline]
+    pub fn fetch_add(&self, value: usize, order: Ordering) -> usize {
+        #[cfg(any(test, feature = "osmax_model"))]
+        model::hook_atomic();
+        self.inner.fetch_add(value, order)
+    }
+
+    /// Atomic fetch-then-subtract; returns the previous value.
+    #[inline]
+    pub fn fetch_sub(&self, value: usize, order: Ordering) -> usize {
+        #[cfg(any(test, feature = "osmax_model"))]
+        model::hook_atomic();
+        self.inner.fetch_sub(value, order)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn mutex_passthrough_outside_model() {
+        let m = Mutex::new(5usize);
+        {
+            let mut g = m.lock().unwrap();
+            *g += 1;
+        }
+        assert_eq!(*m.lock().unwrap(), 6);
+        assert_eq!(m.into_inner().unwrap(), 6);
+    }
+
+    #[test]
+    fn condvar_passthrough_wakes_real_waiter() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let p2 = pair.clone();
+        let waiter = std::thread::spawn(move || {
+            let (m, cv) = &*p2;
+            let mut ready = m.lock().unwrap();
+            while !*ready {
+                ready = cv.wait(ready).unwrap();
+            }
+        });
+        {
+            let (m, cv) = &*pair;
+            *m.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        waiter.join().unwrap();
+    }
+
+    #[test]
+    fn atomic_passthrough_ops() {
+        let a = AtomicUsize::new(10);
+        assert_eq!(a.fetch_add(5, Ordering::SeqCst), 10);
+        assert_eq!(a.fetch_sub(1, Ordering::SeqCst), 15);
+        a.store(3, Ordering::SeqCst);
+        assert_eq!(a.load(Ordering::SeqCst), 3);
+    }
+}

@@ -16,8 +16,14 @@
 //! ids makes the contract exact: `wait()` returns when, and only when,
 //! every guard registered before the call has dropped.
 
+// xtask:atomics-allowlist: SeqCst
+// SeqCst: unit-test flags only — the WaitGroup itself is lock-based
+// (shim Mutex/Condvar, so the model checker can drive its schedules).
+
 use std::collections::BTreeSet;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
+
+use crate::exec::sync::{Condvar, Mutex};
 
 struct State {
     /// Next guard id == total guards ever registered; ids below this
@@ -115,6 +121,7 @@ mod tests {
     use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
+    #[cfg_attr(miri, ignore)] // 8 sleeping threads; epoch protocol is model-checked instead
     fn waits_for_all_guards() {
         let wg = WaitGroup::new();
         let done = Arc::new(AtomicUsize::new(0));
@@ -150,6 +157,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // sleep-paced; covered exhaustively by exec::model suites
     fn transient_zero_between_registrations_is_not_an_early_return() {
         // add → drop → add: the outstanding count dips to zero between
         // the registrations.  A wait() issued after the second add must
@@ -176,6 +184,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // sleep-paced; covered exhaustively by exec::model suites
     fn later_epoch_churn_does_not_satisfy_an_earlier_epoch() {
         // Two pre-wait guards; after the waiter latches its horizon, a
         // later guard is added AND dropped, then one pre-wait guard
@@ -216,6 +225,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // sleep-paced; covered exhaustively by exec::model suites
     fn wait_ignores_guards_added_after_the_call() {
         // The race the epoch counter fixes: a waiter whose epoch is
         // {g1} must not block on g2, a guard registered after wait()

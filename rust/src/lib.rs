@@ -50,6 +50,11 @@
 //! # let _ = idx;
 //! ```
 
+// Every `unsafe` block and impl must carry an immediately-preceding
+// `// SAFETY:` comment (CI runs clippy with `-D warnings`, making this
+// blocking; `xtask lint` enforces the same rule registry-offline).
+#![warn(clippy::undocumented_unsafe_blocks)]
+
 pub mod analytic;
 pub mod benches;
 pub mod benchkit;

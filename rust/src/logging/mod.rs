@@ -6,6 +6,11 @@
 //! (`error|warn|info|debug|trace`, default `info`).  Thread-safe;
 //! writes are line-atomic via an internal mutex.
 
+// xtask:atomics-allowlist: Relaxed
+// Relaxed: the global level filter is an independent u8 cell — readers
+// tolerate a stale level for a few records; no other memory is
+// published through it (the writer mutex orders the output itself).
+
 use std::io::Write;
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::Mutex;

@@ -5,6 +5,12 @@
 //! and end-to-end request latencies here; `snapshot()` renders either a
 //! human table or JSON for the server's `stats` endpoint.
 
+// xtask:atomics-allowlist: Relaxed
+// Relaxed: counters/gauges are independent monotonic cells scraped for
+// telemetry; cross-metric consistency is explicitly not promised, so
+// no ordering stronger than atomicity is needed (incl. the set_max
+// CAS loop — each cell is self-contained).
+
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};

@@ -16,6 +16,11 @@
 //! connection thread, which drives the coordinator's server-side
 //! generation loop (see [`crate::coordinator::generate`]).
 
+// xtask:atomics-allowlist: Relaxed
+// Relaxed: `stop` is a level-triggered shutdown flag polled in accept /
+// stream loops; observing it one iteration late is fine, and no data is
+// published through the flag itself (teardown joins the threads).
+
 pub mod client;
 pub mod wire;
 

@@ -417,8 +417,7 @@ pub fn error_code(err: &anyhow::Error) -> Option<ErrorCode> {
 fn error_from(v: &Value) -> anyhow::Error {
     let wire = match v.get("error") {
         // v2: structured object
-        Some(Value::Object(_)) => {
-            let err = v.get("error").unwrap();
+        Some(err @ Value::Object(_)) => {
             let code = err.get("code").and_then(Value::as_str).unwrap_or("internal");
             let message =
                 err.get("message").and_then(Value::as_str).unwrap_or("unknown");

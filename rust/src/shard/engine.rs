@@ -29,10 +29,15 @@
 //! reduction, and scheduling never move — only the leaf scan does.
 //! See `docs/BACKENDS.md` for the backend-author contract.
 
+// xtask:atomics-allowlist: AcqRel
+// AcqRel: the grid's per-row countdown — each tile's decrement must
+// release its slot write and the final decrementer must acquire every
+// sibling's; see the comment at the `fetch_sub` site.
+
 use std::ops::Range;
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
+use crate::exec::sync::{AtomicUsize, Ordering};
 use crate::exec::{self, SchedPolicy, ThreadPool};
 use crate::metrics::{self, Counter};
 use crate::softmax::monoid::{self, MD};
@@ -610,7 +615,11 @@ impl ShardEngine {
 ///    error instead of undefined behaviour; an unbounded
 ///    `unsafe impl<T> Send/Sync` silently erased exactly that check.
 struct SendPtr<T>(*mut T);
+// SAFETY: per the three-clause contract above — disjoint writes, the
+// pointee outlives the fan-out, and `T: Send` covers the cross-thread
+// transfer of the written values.
 unsafe impl<T: Send> Sync for SendPtr<T> {}
+// SAFETY: as above — moving the wrapper only moves the raw pointer.
 unsafe impl<T: Send> Send for SendPtr<T> {}
 
 #[cfg(test)]
@@ -635,6 +644,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // multi-thousand-element rows; grid unsafe paths are miri-covered by the small tests
     fn sharded_softmax_matches_single_thread() {
         let eng = engine(4, 256);
         for n in [256usize, 1000, 4097, 20_000] {
@@ -653,6 +663,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // 5k-element row; grid unsafe paths are miri-covered by the small tests
     fn below_threshold_is_bitwise_identical() {
         let eng = engine(4, 100_000);
         let x = logits(5000, 5);
@@ -666,6 +677,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // multi-thousand-element rows; grid unsafe paths are miri-covered by the small tests
     fn sharded_fused_topk_matches_single_sweep() {
         let eng = engine(4, 256);
         for (n, k) in [(300usize, 1usize), (2048, 5), (10_000, 16), (511, 50)] {
@@ -680,6 +692,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // repeated 1k-element dispatches; grid unsafe paths are miri-covered by the small tests
     fn explicit_plans_cover_odd_shard_counts() {
         let eng = engine(3, 1);
         let x = logits(1003, 9);
@@ -692,6 +705,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // 9k-element row; grid unsafe paths are miri-covered by the small tests
     fn single_worker_engine_runs_inline() {
         let eng = engine(1, 1);
         assert_eq!(eng.workers(), 1);
@@ -724,6 +738,32 @@ mod tests {
     }
 
     #[test]
+    fn miri_sized_sharded_grid_smoke() {
+        // Small enough for `cargo miri test shard::engine::`: drives the
+        // sharded scan, the per-row countdown, and every SendPtr write
+        // path with two 96-element rows over 3 shards.
+        let eng = ShardEngine::new(ShardEngineConfig {
+            workers: 2,
+            max_shards: 3,
+            min_shard: 16,
+            threshold: 32,
+            ..ShardEngineConfig::default()
+        });
+        let data: Vec<Vec<f32>> = (0..2).map(|i| logits(96, i as u64)).collect();
+        let rows: Vec<&[f32]> = data.iter().map(|r| r.as_slice()).collect();
+        assert!(eng.plan(96).is_sharded());
+        let got = eng.fused_topk_batch(&rows, 3);
+        for (row, out) in rows.iter().zip(&got) {
+            assert_eq!(*out, eng.fused_topk(row, 3), "batch vs per-row must be bitwise");
+        }
+        for p in &eng.softmax_batch(&rows) {
+            let sum: f32 = p.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-3, "sum={sum}");
+        }
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // multi-row 4k grids; grid unsafe paths are miri-covered by the small tests
     fn grid_batch_matches_per_row_dispatch_bitwise() {
         let eng = engine(4, 256);
         for (rows_n, n, k) in [(1usize, 2048usize, 5usize), (3, 1003, 4), (8, 4097, 7)] {
@@ -743,6 +783,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // 5x3k grid; grid unsafe paths are miri-covered by the small tests
     fn grid_degenerate_shapes_run() {
         // Threshold above every row: the grid is R×1 — rows themselves
         // are the tiles, each running the unsharded fused kernel.
@@ -790,6 +831,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // six 4k rows under two pools; grid unsafe paths are miri-covered by the small tests
     fn fifo_and_steal_pools_are_bitwise_identical() {
         // Scheduling policy is a pure performance knob: the ⊕
         // bracketing is fixed by the plan, so fifo and steal engines
@@ -816,6 +858,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // 4k-element row; grid unsafe paths are miri-covered by the small tests
     fn artifacts_stub_engine_serves_via_per_tile_host_fallback() {
         // The stub backend declines every tile at runtime; the engine
         // must transparently rerun each tile on the host scalar scan,
@@ -844,6 +887,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // 2k-element row; grid unsafe paths are miri-covered by the small tests
     fn vectorized_engine_matches_indices_and_falls_back_below_stripe() {
         let eng = ShardEngine::new(ShardEngineConfig {
             workers: 2,
@@ -867,6 +911,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // 2k-element row; grid unsafe paths are miri-covered by the small tests
     fn twopass_engine_matches_indices_and_falls_back_below_lane_width() {
         let eng = ShardEngine::new(ShardEngineConfig {
             workers: 2,
@@ -897,6 +942,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // 3k-element row per backend; grid unsafe paths are miri-covered by the small tests
     fn every_backend_kind_produces_reference_selections() {
         let x = logits(3000, 42);
         let plan = ShardPlan::with_shards(3000, 5);
@@ -918,6 +964,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // four 1k rows; grid unsafe paths are miri-covered by the small tests
     fn grid_map_ragged_last_tiles_cover_row() {
         // 7 shards over 1003 elements: ragged tile lengths; sums of the
         // tile slices must reassemble each row's total exactly.

@@ -53,8 +53,19 @@ pub fn scale(x: &[f32], out: &mut [f32], md: MD, threads: usize) {
     });
 }
 
+/// Raw output pointer shared across scale-pass workers.
+///
+/// SAFETY contract: only [`OutPtr::slice`] dereferences it, each worker
+/// with a disjoint in-bounds `[start, start+len)` range (the chunk grid
+/// guarantees disjointness), and `parallel_chunks` joins every worker
+/// before `out` is read again.
 struct OutPtr(*mut f32);
+// SAFETY: per the contract above — disjoint in-bounds writes only, and
+// the scoped join orders them before any read; `f32` is plain data
+// (`Send`), so handing slices of it to workers transfers no ownership
+// semantics.
 unsafe impl Sync for OutPtr {}
+// SAFETY: as above — moving the wrapper only moves the raw pointer.
 unsafe impl Send for OutPtr {}
 
 impl OutPtr {
@@ -87,6 +98,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // 200k elements; the OutPtr paths are miri-covered below
     fn parallel_normalizer_matches_scalar() {
         let x = logits(200_000, 1, 9.0);
         let serial = scalar::online_normalizer(&x);
@@ -98,6 +110,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // 150k elements; the OutPtr paths are miri-covered below
     fn parallel_softmax_matches_vectorized() {
         let x = logits(150_000, 2, 5.0);
         let mut y_par = vec![0.0; x.len()];
@@ -113,6 +126,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // 120k elements; the OutPtr paths are miri-covered below
     fn parallel_topk_matches_single_thread() {
         let x = logits(120_000, 3, 12.0);
         let single = fused::online_topk(&x, 9);
@@ -130,5 +144,24 @@ mod tests {
         let serial = vectorized::online_normalizer(&x);
         assert_eq!(md.m, serial.m);
         assert_eq!(md.d, serial.d, "fallback must be bitwise-identical");
+    }
+
+    #[test]
+    fn threshold_sized_input_exercises_raw_output_writes() {
+        // Exactly 2 * MIN_CHUNK: the smallest input that takes the
+        // parallel path, so `cargo miri test softmax::parallel::` can
+        // validate every OutPtr disjoint-write at tolerable cost.
+        let x = logits(2 * MIN_CHUNK, 5, 6.0);
+        let mut y_par = vec![0.0; x.len()];
+        let mut y_vec = vec![0.0; x.len()];
+        online(&x, &mut y_par, 4);
+        vectorized::online(&x, &mut y_vec);
+        for (a, b) in y_par.iter().zip(&y_vec) {
+            assert!((a - b).abs() <= 1e-10 + 1e-5 * b.abs(), "{a} vs {b}");
+        }
+        let md = online_normalizer(&x, 4);
+        let serial = scalar::online_normalizer(&x);
+        assert_eq!(md.m, serial.m);
+        assert!((md.d - serial.d).abs() <= 2e-5 * serial.d);
     }
 }

@@ -8,7 +8,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use onlinesoftmax::exec::{SchedPolicy, ThreadPool};
+use onlinesoftmax::exec::{bounded, SchedPolicy, ThreadPool};
 
 const POLICIES: [SchedPolicy; 2] = [SchedPolicy::Fifo, SchedPolicy::Steal];
 
@@ -103,43 +103,49 @@ fn steal_torture_one_long_tile_many_short() {
     // end).  If stealing is broken this deadlocks — caught by the spin
     // timeout inside the straggler.
     //
-    // Shorts additionally gate on `go` (set only after the whole batch
-    // is submitted): an eagerly-woken worker can claim at most one
-    // short before the stragglers are in place, so no deque can be
-    // drained early and the ≥ 1 steal below is deterministic, not
-    // timing-dependent.
+    // Rendezvous is by blocking channels, not timing: shorts block on a
+    // gate the main thread fills only *after* `execute_all` returns, so
+    // an eagerly-woken worker can claim at most one short and then
+    // blocks until the stragglers are in place — no deque can be
+    // drained early, and the ≥ 1 steal below is deterministic under any
+    // OS schedule.  Every wait carries a timeout so a scheduler bug is
+    // a loud failure rather than a hung binary.
     const SHORTS: usize = 120;
+    const PATIENCE: Duration = Duration::from_secs(30);
     let pool = ThreadPool::with_policy(4, "torture", SchedPolicy::Steal);
     let (steals_before, _, _) = pool.steal_stats();
-    let go = Arc::new(AtomicUsize::new(0));
+    let (gate_tx, gate_rx) = bounded::<()>(SHORTS);
+    let (release_tx, release_rx) = bounded::<()>(2);
     let done_shorts = Arc::new(AtomicUsize::new(0));
 
     let mut tasks: Vec<Box<dyn FnOnce() + Send + 'static>> = Vec::new();
     for _ in 0..SHORTS {
-        let go = go.clone();
+        let gate_rx = gate_rx.clone();
+        let release_tx = release_tx.clone();
         let done_shorts = done_shorts.clone();
         tasks.push(Box::new(move || {
-            while go.load(Ordering::SeqCst) == 0 {
-                std::thread::yield_now();
+            gate_rx.recv_timeout(PATIENCE).expect("gate opens once the batch is submitted");
+            if done_shorts.fetch_add(1, Ordering::SeqCst) + 1 == SHORTS {
+                // Last short through: release both stragglers.
+                release_tx.send(()).unwrap();
+                release_tx.send(()).unwrap();
             }
-            done_shorts.fetch_add(1, Ordering::SeqCst);
         }));
     }
     for _ in 0..2 {
-        let done_shorts = done_shorts.clone();
+        let release_rx = release_rx.clone();
         tasks.push(Box::new(move || {
-            let deadline = Instant::now() + Duration::from_secs(30);
-            while done_shorts.load(Ordering::SeqCst) < SHORTS {
-                assert!(
-                    Instant::now() < deadline,
-                    "straggler starved: shorts not stolen from its deque"
-                );
-                std::thread::yield_now();
-            }
+            release_rx
+                .recv_timeout(PATIENCE)
+                .expect("straggler starved: shorts not stolen from its deque");
         }));
     }
     pool.execute_all(tasks);
-    go.store(1, Ordering::SeqCst);
+    // Open the gate only now: every task — stragglers at the LIFO end
+    // of their deques included — is placed before any short completes.
+    for _ in 0..SHORTS {
+        gate_tx.send(()).unwrap();
+    }
     pool.join_idle();
 
     assert_eq!(done_shorts.load(Ordering::SeqCst), SHORTS);
@@ -210,4 +216,31 @@ fn panicking_tasks_do_not_wedge_either_policy() {
         });
         spin_until(10, "post-panic task", || after.load(Ordering::SeqCst) == 1);
     }
+}
+
+/// With `--features osmax_model` the deterministic-schedule explorer is
+/// compiled into the library, so integration tests can verify under
+/// *every* bounded schedule what the torture test above exercises under
+/// one OS schedule: an owner and a thief racing a deque down to its
+/// last elements neither lose nor duplicate a task.
+#[cfg(feature = "osmax_model")]
+#[test]
+fn model_checked_steal_race_conserves_tasks() {
+    use onlinesoftmax::exec::{model, StealDeque};
+
+    model::check("pool_stress_steal_race", model::Config::small(), || {
+        let dq = Arc::new(StealDeque::new(4));
+        dq.push(1).unwrap();
+        dq.push(2).unwrap();
+        let thief = {
+            let dq = Arc::clone(&dq);
+            model::spawn(move || dq.steal())
+        };
+        let a = dq.pop();
+        let b = dq.pop();
+        let stolen = thief.join().flatten();
+        let mut got: Vec<i32> = [a, b, stolen].into_iter().flatten().collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 2], "every task surfaces exactly once");
+    });
 }

@@ -1,0 +1,542 @@
+//! Repository lint gate: `cargo run -p xtask -- lint`.
+//!
+//! Four std-only static checks over `rust/src` (the offline registry
+//! ships no lint crates, so the gate is a first-class workspace
+//! binary; CI treats a nonzero exit as a hard failure):
+//!
+//! 1. **unsafe-safety** — every `unsafe` keyword must carry a
+//!    `// SAFETY:` justification on the same line or in the comment
+//!    block immediately above its statement.  Mirrors clippy's
+//!    `undocumented_unsafe_blocks`, but also covers `unsafe impl` /
+//!    `unsafe fn` and runs without network access.
+//! 2. **atomics-allowlist** — every atomic `Ordering::X` use must be
+//!    named in its file's `// xtask:atomics-allowlist:` header, so a
+//!    new ordering (or a relaxation) can only land together with a
+//!    written-down audit of why it is sound.
+//! 3. **no-panic** — `.unwrap()` / `.expect(` are banned in non-test
+//!    server and coordinator code: serving paths must return typed
+//!    errors, not abort a worker.  Poison-propagating lock/condvar
+//!    unwraps are idiomatic and allowed; anything else needs an
+//!    explicit `// panic-ok: <why>` waiver on the line or in the
+//!    comment block above.
+//! 4. **config-drift** — the `--flag` tables in `docs/CONFIG.md` and
+//!    the body of `cli::help_text` must agree in *both* directions: a
+//!    knob documented but not offered, or offered but not documented,
+//!    fails the gate.
+//!
+//! `cargo test -p xtask` seeds one violation of each class into
+//! fixture trees and asserts the linter catches it, then asserts the
+//! real tree is clean.
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => run_lint(),
+        _ => {
+            eprintln!("usage: cargo run -p xtask -- lint");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run_lint() -> ExitCode {
+    let violations = lint_tree(&repo_root());
+    if violations.is_empty() {
+        println!("xtask lint: clean");
+        return ExitCode::SUCCESS;
+    }
+    for v in &violations {
+        println!("{v}");
+    }
+    println!("xtask lint: {} violation(s)", violations.len());
+    ExitCode::FAILURE
+}
+
+/// Workspace root: xtask lives one level below it.
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask sits inside the workspace")
+        .to_path_buf()
+}
+
+#[derive(Debug)]
+struct Violation {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    message: String,
+}
+
+impl Violation {
+    fn new(file: &str, line: usize, rule: &'static str, message: String) -> Violation {
+        Violation { file: file.to_string(), line, rule, message }
+    }
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Run every check against the tree rooted at `root`.
+fn lint_tree(root: &Path) -> Vec<Violation> {
+    let mut files = Vec::new();
+    rs_files(&root.join("rust/src"), &mut files);
+    let mut out = Vec::new();
+    for path in files {
+        let Ok(text) = fs::read_to_string(&path) else { continue };
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let lines: Vec<&str> = text.lines().collect();
+        check_unsafe(&rel, &lines, &mut out);
+        check_atomics(&rel, &lines, &mut out);
+        if rel.starts_with("rust/src/server") || rel.starts_with("rust/src/coordinator") {
+            check_panics(&rel, &lines, &mut out);
+        }
+    }
+    check_config_drift(root, &mut out);
+    out
+}
+
+/// All `.rs` files under `dir`, in a stable order.
+fn rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else { return };
+    let mut paths: Vec<PathBuf> = entries.flatten().map(|e| e.path()).collect();
+    paths.sort();
+    for p in paths {
+        if p.is_dir() {
+            rs_files(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+/// The source text of `line` with any `//` comment cut off.
+fn code_of(line: &str) -> &str {
+    match line.find("//") {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+fn is_word_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Whether `code` contains `word` as a standalone token (so
+/// `undocumented_unsafe_blocks` does not count as `unsafe`).
+fn has_keyword(code: &str, word: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(word) {
+        let start = from + pos;
+        let end = start + word.len();
+        let pre = start == 0 || !is_word_byte(bytes[start - 1]);
+        let post = end == bytes.len() || !is_word_byte(bytes[end]);
+        if pre && post {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+// ---------------------------------------------------------------- rule 1
+
+fn check_unsafe(path: &str, lines: &[&str], out: &mut Vec<Violation>) {
+    for (i, line) in lines.iter().enumerate() {
+        if !has_keyword(code_of(line), "unsafe") {
+            continue;
+        }
+        if !safety_documented(lines, i) {
+            out.push(Violation::new(
+                path,
+                i + 1,
+                "unsafe-safety",
+                "`unsafe` without a `// SAFETY:` comment on the line or in the \
+                 comment block above its statement"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+/// `SAFETY` on the line itself, or in a comment found by walking up to
+/// 10 nonblank lines: comment and attribute lines are stepped over, and
+/// a code line that *ends* a previous statement (`;`, `{` or `}`) stops
+/// the walk, so a multi-line `let … = unsafe { … }` still sees the
+/// comment above its `let`.
+fn safety_documented(lines: &[&str], idx: usize) -> bool {
+    if lines[idx].contains("SAFETY") {
+        return true;
+    }
+    let mut seen = 0;
+    let mut i = idx;
+    while i > 0 && seen < 10 {
+        i -= 1;
+        let t = lines[i].trim();
+        if t.is_empty() {
+            continue;
+        }
+        seen += 1;
+        if t.starts_with("//") {
+            if t.contains("SAFETY") {
+                return true;
+            }
+        } else if t.starts_with("#[") || t.starts_with("#!") {
+            // Attributes sit between a comment and its item.
+        } else if t.ends_with(';') || t.ends_with('{') || t.ends_with('}') {
+            return false;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------- rule 2
+
+const ATOMIC_ORDERINGS: [&str; 5] = ["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+const ALLOWLIST_MARKER: &str = "xtask:atomics-allowlist:";
+
+fn check_atomics(path: &str, lines: &[&str], out: &mut Vec<Violation>) {
+    let mut allow: Option<Vec<String>> = None;
+    for line in lines {
+        if let Some(pos) = line.find(ALLOWLIST_MARKER) {
+            let list = &line[pos + ALLOWLIST_MARKER.len()..];
+            allow = Some(list.split(',').map(|s| s.trim().to_string()).collect());
+        }
+    }
+    for (i, line) in lines.iter().enumerate() {
+        let code = code_of(line);
+        let mut from = 0;
+        while let Some(pos) = code[from..].find("Ordering::") {
+            let start = from + pos + "Ordering::".len();
+            let ident: String = code[start..]
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                .collect();
+            from = start + ident.len();
+            if !ATOMIC_ORDERINGS.contains(&ident.as_str()) {
+                continue; // std::cmp::Ordering and friends
+            }
+            match &allow {
+                None => {
+                    out.push(Violation::new(
+                        path,
+                        i + 1,
+                        "atomics-allowlist",
+                        format!(
+                            "Ordering::{ident} used but the file has no \
+                             `// {ALLOWLIST_MARKER}` header"
+                        ),
+                    ));
+                    return; // one missing-header complaint per file
+                }
+                Some(list) if !list.iter().any(|a| a == &ident) => {
+                    out.push(Violation::new(
+                        path,
+                        i + 1,
+                        "atomics-allowlist",
+                        format!(
+                            "Ordering::{ident} is not in this file's \
+                             `// {ALLOWLIST_MARKER}` header"
+                        ),
+                    ));
+                }
+                Some(_) => {}
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- rule 3
+
+fn check_panics(path: &str, lines: &[&str], out: &mut Vec<Violation>) {
+    for (i, line) in lines.iter().enumerate() {
+        if line.trim() == "#[cfg(test)]" {
+            break; // tests may panic freely
+        }
+        let code = code_of(line);
+        // Poison-propagating unwraps are idiomatic: a poisoned mutex or
+        // condvar means a worker already panicked, and unwrapping
+        // propagates that panic rather than minting a new failure mode.
+        let stripped = code.replace(".lock().unwrap()", "");
+        let wait_poison = stripped.contains(".wait(") || stripped.contains(".wait_timeout(");
+        let bad_unwrap = stripped.contains(".unwrap()") && !wait_poison;
+        let bad_expect = stripped.contains(".expect(");
+        if !(bad_unwrap || bad_expect) || panic_waived(lines, i) {
+            continue;
+        }
+        out.push(Violation::new(
+            path,
+            i + 1,
+            "no-panic",
+            "`.unwrap()`/`.expect()` in serving code — return a typed error, or \
+             waive with `// panic-ok: <why>`"
+                .to_string(),
+        ));
+    }
+}
+
+/// `panic-ok:` on the line itself, or anywhere in the contiguous
+/// comment block directly above it.
+fn panic_waived(lines: &[&str], idx: usize) -> bool {
+    if lines[idx].contains("panic-ok:") {
+        return true;
+    }
+    let mut i = idx;
+    while i > 0 {
+        i -= 1;
+        let t = lines[i].trim();
+        if !t.starts_with("//") {
+            return false;
+        }
+        if t.contains("panic-ok:") {
+            return true;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------- rule 4
+
+const CONFIG_REL: &str = "docs/CONFIG.md";
+const HELP_REL: &str = "rust/src/cli/mod.rs";
+
+fn check_config_drift(root: &Path, out: &mut Vec<Violation>) {
+    let Ok(config) = fs::read_to_string(root.join(CONFIG_REL)) else { return };
+    let Ok(help) = fs::read_to_string(root.join(HELP_REL)) else { return };
+
+    // CONFIG.md side: knob-table rows, which all start `| `--name …` |`.
+    let mut documented: Vec<(String, usize)> = Vec::new();
+    for (i, line) in config.lines().enumerate() {
+        let Some(rest) = line.trim_start().strip_prefix("| `--") else { continue };
+        let name: String =
+            rest.chars().take_while(|c| c.is_ascii_alphanumeric() || *c == '-').collect();
+        if !name.is_empty() {
+            documented.push((name, i + 1));
+        }
+    }
+
+    // help_text side: every `--flag` token inside the function body.
+    let lines: Vec<&str> = help.lines().collect();
+    let Some(start) = lines.iter().position(|l| l.contains("pub fn help_text")) else { return };
+    let end = lines[start..].iter().position(|l| *l == "}").map_or(lines.len(), |p| start + p);
+    let mut offered: Vec<(String, usize)> = Vec::new();
+    for (i, line) in lines[start..end].iter().enumerate() {
+        let bytes = line.as_bytes();
+        let mut from = 0;
+        while let Some(pos) = line[from..].find("--") {
+            let s = from + pos;
+            from = s + 2;
+            if s > 0 && (bytes[s - 1] == b'-' || is_word_byte(bytes[s - 1])) {
+                continue; // `---` runs or mid-word dashes
+            }
+            let name: String = line[s + 2..]
+                .chars()
+                .take_while(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || *c == '-')
+                .collect();
+            if !name.is_empty() {
+                offered.push((name, start + i + 1));
+            }
+        }
+    }
+
+    let doc_set: BTreeSet<&str> = documented.iter().map(|(n, _)| n.as_str()).collect();
+    let offer_set: BTreeSet<&str> = offered.iter().map(|(n, _)| n.as_str()).collect();
+    for (name, ln) in &documented {
+        if !offer_set.contains(name.as_str()) {
+            out.push(Violation::new(
+                CONFIG_REL,
+                *ln,
+                "config-drift",
+                format!("`--{name}` is documented in {CONFIG_REL} but missing from cli::help_text"),
+            ));
+        }
+    }
+    let mut reported = BTreeSet::new();
+    for (name, ln) in &offered {
+        if !doc_set.contains(name.as_str()) && reported.insert(name.as_str()) {
+            out.push(Violation::new(
+                HELP_REL,
+                *ln,
+                "config-drift",
+                format!("`--{name}` is in cli::help_text but undocumented in {CONFIG_REL}"),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    static DIR_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+    /// A throwaway tree under the system temp dir.
+    struct Fixture {
+        root: PathBuf,
+    }
+
+    impl Fixture {
+        fn new(name: &str) -> Fixture {
+            let n = DIR_SEQ.fetch_add(1, Ordering::Relaxed);
+            let root = std::env::temp_dir()
+                .join(format!("osmax-xtask-{}-{name}-{n}", std::process::id()));
+            fs::create_dir_all(root.join("rust/src")).unwrap();
+            Fixture { root }
+        }
+
+        fn write(&self, rel: &str, text: &str) {
+            let p = self.root.join(rel);
+            fs::create_dir_all(p.parent().unwrap()).unwrap();
+            fs::write(p, text).unwrap();
+        }
+    }
+
+    impl Drop for Fixture {
+        fn drop(&mut self) {
+            let _ = fs::remove_dir_all(&self.root);
+        }
+    }
+
+    fn rules(vs: &[Violation]) -> BTreeSet<&'static str> {
+        vs.iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn catches_unsafe_without_safety_comment() {
+        let fx = Fixture::new("unsafe");
+        fx.write("rust/src/a.rs", "pub fn f(p: *mut u8) {\n    unsafe { *p = 1 };\n}\n");
+        let v = lint_tree(&fx.root);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "unsafe-safety");
+        assert_eq!(v[0].line, 2);
+    }
+
+    #[test]
+    fn safety_comment_above_let_statement_is_accepted() {
+        let fx = Fixture::new("unsafe-ok");
+        fx.write(
+            "rust/src/a.rs",
+            "pub fn f(p: *mut u8) -> u8 {\n    // SAFETY: caller owns p.\n    let v: u8 =\n        unsafe { *p };\n    v\n}\n",
+        );
+        assert!(lint_tree(&fx.root).is_empty());
+    }
+
+    #[test]
+    fn word_unsafe_inside_identifiers_is_not_flagged() {
+        let fx = Fixture::new("unsafe-word");
+        fx.write("rust/src/a.rs", "#![warn(clippy::undocumented_unsafe_blocks)]\n");
+        assert!(lint_tree(&fx.root).is_empty());
+    }
+
+    #[test]
+    fn catches_ordering_outside_allowlist() {
+        let fx = Fixture::new("atomics");
+        fx.write(
+            "rust/src/a.rs",
+            "// xtask:atomics-allowlist: Relaxed\nfn f(x: &std::sync::atomic::AtomicUsize) {\n    x.store(1, Ordering::SeqCst);\n}\n",
+        );
+        let v = lint_tree(&fx.root);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "atomics-allowlist");
+        assert_eq!(v[0].line, 3);
+    }
+
+    #[test]
+    fn catches_missing_allowlist_header_and_ignores_cmp_ordering() {
+        let fx = Fixture::new("atomics-header");
+        fx.write(
+            "rust/src/a.rs",
+            "fn f(x: &std::sync::atomic::AtomicUsize) -> std::cmp::Ordering {\n    x.store(1, Ordering::Relaxed);\n    std::cmp::Ordering::Less\n}\n",
+        );
+        let v = lint_tree(&fx.root);
+        assert_eq!(v.len(), 1, "cmp::Ordering::Less must not need a header: {v:?}");
+        assert!(v[0].message.contains("no"), "{v:?}");
+    }
+
+    #[test]
+    fn catches_unwrap_in_serving_code_and_honors_waivers() {
+        let fx = Fixture::new("panics");
+        fx.write(
+            "rust/src/coordinator/a.rs",
+            concat!(
+                "fn f(o: Option<u8>, m: &std::sync::Mutex<u8>) -> u8 {\n",
+                "    let _fine = m.lock().unwrap();\n",
+                "    // panic-ok: fixture waiver.\n",
+                "    let _waived = o.expect(\"x\");\n",
+                "    o.unwrap()\n",
+                "}\n",
+                "#[cfg(test)]\n",
+                "mod tests {\n",
+                "    fn g(o: Option<u8>) -> u8 {\n",
+                "        o.unwrap()\n",
+                "    }\n",
+                "}\n",
+            ),
+        );
+        // Same content outside server/coordinator: no rule applies.
+        fx.write("rust/src/shard/a.rs", "fn f(o: Option<u8>) -> u8 {\n    o.unwrap()\n}\n");
+        let v = lint_tree(&fx.root);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "no-panic");
+        assert_eq!(v[0].line, 5);
+        assert!(v[0].file.contains("coordinator"));
+    }
+
+    #[test]
+    fn catches_config_drift_in_both_directions() {
+        let fx = Fixture::new("drift");
+        fx.write("docs/CONFIG.md", "| `--alpha N` | `alpha` | 1 | Seeded drift. |\n");
+        fx.write(
+            "rust/src/cli/mod.rs",
+            "pub fn help_text(version: &str) -> String {\n    format!(\"usage [{version}]: thing --beta N\")\n}\n",
+        );
+        let v = lint_tree(&fx.root);
+        assert_eq!(v.len(), 2, "{v:?}");
+        assert!(v.iter().any(|v| v.message.contains("`--alpha`")), "{v:?}");
+        assert!(v.iter().any(|v| v.message.contains("`--beta`")), "{v:?}");
+    }
+
+    #[test]
+    fn self_test_tree_seeds_one_violation_per_class() {
+        let fx = Fixture::new("all-classes");
+        fx.write("rust/src/a.rs", "pub fn f(p: *mut u8) {\n    unsafe { *p = 1 };\n}\n");
+        fx.write(
+            "rust/src/b.rs",
+            "fn f(x: &std::sync::atomic::AtomicUsize) {\n    x.store(1, Ordering::SeqCst);\n}\n",
+        );
+        fx.write("rust/src/server/a.rs", "fn f(o: Option<u8>) -> u8 {\n    o.unwrap()\n}\n");
+        fx.write("docs/CONFIG.md", "| `--alpha N` | `alpha` | 1 | Seeded drift. |\n");
+        fx.write(
+            "rust/src/cli/mod.rs",
+            "pub fn help_text(version: &str) -> String {\n    format!(\"usage [{version}]: thing --beta N\")\n}\n",
+        );
+        let v = lint_tree(&fx.root);
+        let want: BTreeSet<&str> =
+            ["unsafe-safety", "atomics-allowlist", "no-panic", "config-drift"]
+                .into_iter()
+                .collect();
+        assert_eq!(rules(&v), want, "{v:?}");
+    }
+
+    #[test]
+    fn real_tree_is_clean() {
+        let v = lint_tree(&repo_root());
+        let listing: Vec<String> = v.iter().map(|x| x.to_string()).collect();
+        assert!(v.is_empty(), "violations:\n{}", listing.join("\n"));
+    }
+}
