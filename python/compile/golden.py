@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import os
 
 import jax
@@ -19,9 +20,55 @@ import numpy as np
 
 from .kernels import fused_topk, ref
 
+_U64 = (1 << 64) - 1
+
 
 def _rng(seed: int) -> jax.Array:
     return jax.random.PRNGKey(seed)
+
+
+def _counter_hash(seed: int, counter: int) -> int:
+    """SplitMix64 output finalizer over an arbitrary counter — the exact
+    spec of ``sample::counter_hash`` in ``rust/src/sample/mod.rs``; the
+    sampling golden vectors pin the two implementations bit for bit."""
+    z = (seed + ((counter + 1) * 0x9E3779B97F4A7C15 & _U64)) & _U64
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _U64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _U64
+    return (z ^ (z >> 31)) & _U64
+
+
+def _gumbel(seed: int, index: int) -> np.float32:
+    """``sample::gumbel``: u from the hash's top 53 bits (offset ½ulp),
+    g = −ln(−ln(u)) computed in f64 and rounded once to f32."""
+    h = _counter_hash(seed, index & _U64)
+    u = ((h >> 11) + 0.5) * (1.0 / (1 << 53))
+    return np.float32(-math.log(-math.log(u)))
+
+
+def _sampled_expectations(x: np.ndarray, k: int, seed: int, temperature: float):
+    """Reference Gumbel-top-k selection per row: perturb in f32 exactly
+    like ``sample::perturb`` (f32 divide, f32 add), rank by perturbed
+    score with lower-index tie-breaking (the scan's incumbent-wins
+    insertion order), drop non-finite scores (NaN / −∞ masking), and
+    report the untempered probabilities ``e^{x−m}/d``."""
+    t = np.float32(temperature)
+    m, d = ref.online_normalizer(x)
+    m, d = np.asarray(m), np.asarray(d)
+    idx_rows, score_rows, val_rows = [], [], []
+    for row, xr in enumerate(x):
+        scored = []
+        for i, v in enumerate(xr):
+            s = np.float32(v) / t + _gumbel(seed, i)
+            if np.isfinite(s):
+                scored.append((float(s), i))
+        scored.sort(key=lambda p: (-p[0], p[1]))
+        top = scored[:k]
+        idx_rows.append([i for _, i in top])
+        score_rows.append([s for s, _ in top])
+        val_rows.append([
+            float(math.exp(float(xr[i]) - float(m[row])) / float(d[row])) for _, i in top
+        ])
+    return idx_rows, score_rows, val_rows
 
 
 def _cases():
@@ -110,11 +157,67 @@ def build(out_dir: str) -> None:
             "topk_idx": np.asarray(idx).tolist(),
         })
 
+    # Seeded Gumbel-top-k sampling cases: the counter-based draw spec is
+    # implemented twice (here and in rust/src/sample/mod.rs); these pin
+    # the raw draws bit for bit and the fused sampled selection
+    # (indices + f32 perturbed scores exact, untempered probabilities to
+    # tolerance — the rust side finalizes through its fast_exp).
+    gumbel_pins = [
+        {"seed": s, "index": i, "g": float(_gumbel(s, i))}
+        for s, i in [
+            (0, 0),
+            (42, 0),
+            (42, 1),
+            (42, 1023),
+            (123, 7),
+            (0xDEADBEEF, 65535),
+        ]
+    ]
+    sampled_cases = []
+    for name, shape, k, seed, temperature, scale, shift in [
+        ("gauss_cold", (2, 64), 5, 17, 0.7, 4.0, 0.0),
+        ("wide_unit", (1, 128), 3, 99, 1.0, 8.0, 0.0),
+        ("hot", (2, 48), 4, 5, 1.5, 3.0, 2.0),
+        ("k_beyond_v", (1, 6), 8, 7, 0.9, 2.0, 0.0),
+    ]:
+        x = (jax.random.normal(_rng(500 + seed), shape) * scale + shift).astype(jnp.float32)
+        xn = np.asarray(x)
+        idx_rows, score_rows, val_rows = _sampled_expectations(xn, k, seed, temperature)
+        sampled_cases.append({
+            "name": name,
+            "x": xn.tolist(),
+            "k": k,
+            "seed": seed,
+            "temperature": temperature,
+            "idx": idx_rows,
+            "scores": score_rows,
+            "vals": val_rows,
+        })
+    # Constant row: every logit ties, so the selection is decided purely
+    # by the perturbation stream — the strongest pin on the draw order.
+    xc = np.full((2, 33), 3.25, dtype=np.float32)
+    idx_rows, score_rows, val_rows = _sampled_expectations(xc, 4, 11, 1.0)
+    sampled_cases.append({
+        "name": "constant_rows",
+        "x": xc.tolist(),
+        "k": 4,
+        "seed": 11,
+        "temperature": 1.0,
+        "idx": idx_rows,
+        "scores": score_rows,
+        "vals": val_rows,
+    })
+
     with open(os.path.join(out_dir, "softmax_golden.json"), "w") as f:
-        json.dump({"cases": cases, "merges": merges, "sharded": shard_cases}, f)
+        json.dump({
+            "cases": cases,
+            "merges": merges,
+            "sharded": shard_cases,
+            "sampling": {"gumbel": gumbel_pins, "cases": sampled_cases},
+        }, f)
     print(
         f"wrote {len(cases)} cases + {len(merges)} merges + "
-        f"{len(shard_cases)} sharded cases to {out_dir}"
+        f"{len(shard_cases)} sharded cases + {len(sampled_cases)} sampled cases to {out_dir}"
     )
 
 

@@ -18,6 +18,9 @@
 //!   shard scan backends across vocab sizes — the crossover sweep
 //!   behind `auto` routing, with a machine-readable report via
 //!   `bench --json` (the committed `BENCH_backend.json` trajectory)
+//! * [`sample_ablation`] — greedy fused top-k vs seeded Gumbel-top-k
+//!   sampling on the same batch×shard grid: the per-element overhead of
+//!   fusing the counter-based perturbation into the single-sweep scan
 //!
 //! **Hardware scaling** (DESIGN.md §Hardware-Adaptation): the paper's
 //! batch-4000 × V-100k workloads size the *GPU's* DRAM; on this CPU we
@@ -35,6 +38,7 @@ use anyhow::Result;
 use crate::benchkit::{bench, black_box, fmt_time, BenchConfig, Stats, Table};
 use crate::exec::SchedPolicy;
 use crate::rng::Xoshiro256pp;
+use crate::sample::SampleSpec;
 use crate::shard::{
     tree_reduce, GridPlan, ShardBackendKind, ShardEngine, ShardEngineConfig, ShardPartial,
     ShardPlan,
@@ -828,6 +832,141 @@ pub fn backend_ablation(opts: &BenchOpts) -> Result<()> {
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// Sampling ablation: greedy fused top-k vs seeded Gumbel-top-k
+// ---------------------------------------------------------------------------
+
+/// Overhead of fusing seeded Gumbel-top-k sampling into the
+/// single-sweep scan: the same batch×shard grid runs the greedy fused
+/// softmax+top-k (`fused_topk_batch_planned`) and the sampled variant
+/// (`sampled_topk_batch_planned`), whose per-element extra work is one
+/// counter-hash + `x/T` per candidate-threshold survivor riding the
+/// existing ⊕ sweep.  Determinism is pinned before timing: two sampled
+/// runs under the same seed must select bitwise-identical indices.
+///
+/// `bench --fig sample --json FILE` writes an `osmax.bench.sample.v1`
+/// report in the `BENCH_backend.json` style so CI can rot-check the
+/// figure and the overhead trajectory can be committed.
+pub fn sample_ablation(opts: &BenchOpts) -> Result<()> {
+    let sizes = opts.sizes.clone().unwrap_or_else(|| {
+        if opts.smoke {
+            vec![8_192]
+        } else {
+            vec![8_192, 25_000, 100_000, 400_000]
+        }
+    });
+    let batch = opts.batch.unwrap_or(if opts.smoke { 3 } else { 8 });
+    let k = 5;
+    let spec = SampleSpec { seed: 0x5EED, temperature: 0.8 };
+    let workers =
+        if opts.threads <= 1 { crate::exec::default_threads() } else { opts.threads };
+    let cfg = BenchConfig::from_env();
+    let engine = ShardEngine::new(ShardEngineConfig {
+        workers,
+        min_shard: 4096,
+        threshold: 1, // the bench pins plans explicitly
+        ..ShardEngineConfig::default()
+    });
+    println!(
+        "\n=== sample: greedy fused top-k vs seeded Gumbel-top-k sampling \
+         (K={k}, T={}, batch {batch}, {workers} shard workers) ===",
+        spec.temperature
+    );
+    let mut table = Table::new(&[
+        "V",
+        "greedy p50",
+        "sampled p50",
+        "overhead",
+        "tiles",
+        "sampled ns/el",
+    ]);
+    let mut report_records: Vec<crate::json::Value> = Vec::new();
+    for &v in &sizes {
+        let data = make_batch(batch, v, v as u64);
+        let rows: Vec<&[f32]> = data.chunks_exact(v).collect();
+        let plan = ShardPlan::auto(v, workers, 4096);
+        let grid = GridPlan::new(batch, plan);
+
+        // Sampling must never change *determinism*: pin bitwise-equal
+        // selections across two runs of the same seed before timing.
+        let once = engine.sampled_topk_batch_planned(&rows, k, &grid, spec);
+        let twice = engine.sampled_topk_batch_planned(&rows, k, &grid, spec);
+        for (a, b) in once.iter().zip(&twice) {
+            assert_eq!(a.1, b.1, "sampled selection not reproducible under one seed (v={v})");
+            assert!(
+                a.0.iter().zip(&b.0).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "sampled probabilities not bitwise-reproducible (v={v})"
+            );
+        }
+
+        let elems = (batch * v) as f64;
+        let greedy_t = bench(&cfg, || {
+            black_box(engine.fused_topk_batch_planned(&rows, k, &grid).len())
+        });
+        let sampled_t = bench(&cfg, || {
+            black_box(engine.sampled_topk_batch_planned(&rows, k, &grid, spec).len())
+        });
+        let overhead = sampled_t.median / greedy_t.median;
+        table.row(vec![
+            v.to_string(),
+            fmt_time(greedy_t.median),
+            fmt_time(sampled_t.median),
+            format!("{overhead:.2}x"),
+            format!("{}x{}", grid.rows(), grid.shards_per_row()),
+            format!("{:.2}", sampled_t.median * 1e9 / elems),
+        ]);
+
+        for (mode, t) in [("greedy", &greedy_t), ("sampled", &sampled_t)] {
+            let mut rec = crate::json::Value::object();
+            rec.set("mode", crate::json::Value::String(mode.into()))
+                .set("vocab", crate::json::Value::Number(v as f64))
+                .set("batch", crate::json::Value::Number(batch as f64))
+                .set("k", crate::json::Value::Number(k as f64))
+                .set(
+                    "temperature",
+                    crate::json::Value::Number(spec.temperature as f64),
+                )
+                .set("p50_s", crate::json::Value::Number(t.median))
+                .set(
+                    "ns_per_element",
+                    crate::json::Value::Number(t.median * 1e9 / elems),
+                );
+            report_records.push(rec);
+        }
+
+        let mut rec = crate::json::Value::object();
+        rec.set("bench", crate::json::Value::String("sample_ablation".into()))
+            .set("v", crate::json::Value::Number(v as f64))
+            .set("batch", crate::json::Value::Number(batch as f64))
+            .set("k", crate::json::Value::Number(k as f64))
+            .set("workers", crate::json::Value::Number(workers as f64))
+            .set("greedy_p50_s", crate::json::Value::Number(greedy_t.median))
+            .set("sampled_p50_s", crate::json::Value::Number(sampled_t.median))
+            .set("overhead_sampled_vs_greedy", crate::json::Value::Number(overhead));
+        opts.emit(&rec)?;
+    }
+    println!("{}", table.render());
+    if let Some(path) = &opts.json_report {
+        let mut report = crate::json::Value::object();
+        report
+            .set("schema", crate::json::Value::String("osmax.bench.sample.v1".into()))
+            .set("fig", crate::json::Value::String("sample".into()))
+            .set("git", crate::json::Value::String(git_describe()))
+            .set("smoke", crate::json::Value::Bool(opts.smoke))
+            .set("workers", crate::json::Value::Number(workers as f64))
+            .set("records", crate::json::Value::Array(report_records));
+        std::fs::write(path, report.to_json() + "\n")?;
+        println!("wrote sample report → {path}");
+    }
+    println!(
+        "expected shape: near-1.00x overhead — the perturbation only runs on\n\
+         candidates that survive the threshold fast-reject, so the sweep stays\n\
+         bandwidth-bound; a growing gap means the fast-reject broke (every\n\
+         element paying the counter-hash)."
+    );
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -918,6 +1057,40 @@ mod tests {
         for r in records {
             assert!(r.get("backend").unwrap().as_str().is_some());
             assert!(r.get("vocab").unwrap().as_f64().unwrap() > 0.0);
+            assert!(r.get("ns_per_element").unwrap().as_f64().unwrap() > 0.0);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn sample_ablation_runs() {
+        let mut o = fast_opts();
+        o.sizes = None; // exercise the smoke defaults
+        o.batch = None;
+        o.threads = 2;
+        o.smoke = true;
+        sample_ablation(&o).unwrap();
+    }
+
+    #[test]
+    fn sample_json_report_is_a_single_schema_document() {
+        let mut o = fast_opts();
+        let path = std::env::temp_dir()
+            .join(format!("osmax-sample-report-{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        o.json_report = Some(path.display().to_string());
+        o.sizes = None; // smoke defaults: one size, greedy + sampled arms
+        o.batch = None;
+        o.threads = 2;
+        o.smoke = true;
+        sample_ablation(&o).unwrap();
+        let doc = crate::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("fig").unwrap().as_str().unwrap(), "sample");
+        assert_eq!(doc.get("schema").unwrap().as_str().unwrap(), "osmax.bench.sample.v1");
+        let records = doc.get("records").unwrap().as_array().unwrap();
+        assert_eq!(records.len(), 2, "one greedy + one sampled record per size");
+        for r in records {
+            assert!(r.get("mode").unwrap().as_str().is_some());
             assert!(r.get("ns_per_element").unwrap().as_f64().unwrap() > 0.0);
         }
         std::fs::remove_file(&path).ok();

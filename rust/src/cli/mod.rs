@@ -206,7 +206,7 @@ pub fn help_text(version: &str) -> String {
                                 (env default: OSMAX_REQUEST_TIMEOUT) [60000]\n\
            --seed N             synthetic-model RNG seed      [0xC0FFEE]\n\n\
          BENCH OPTIONS:\n\
-           --fig 1|2|3|4|k|ablation|grid|steal|backend|all  figure/study  [all]\n\
+           --fig 1|2|3|4|k|ablation|grid|steal|backend|sample|all  figure/study  [all]\n\
            --sizes a,b,c        vector sizes V override\n\
            --batch N            batch size override\n\
            --threads N          worker threads for parallel/sharded variants\n\
@@ -214,7 +214,7 @@ pub fn help_text(version: &str) -> String {
            --smoke              minimal sizes/iterations (CI rot check)\n\
            --out FILE           also append results as JSON lines\n\
            --json FILE          write a single machine-readable report\n\
-                                document (backend figure)\n\n\
+                                document (backend and sample figures)\n\n\
          LOADGEN OPTIONS:\n\
            --addr HOST:PORT     target server       [127.0.0.1:7070]\n\
            --requests N         total requests      [200]\n\
@@ -226,7 +226,11 @@ pub fn help_text(version: &str) -> String {
            --deadline-ms MS     per-request deadline (omit for none);\n\
                                 typed rejections are tallied, not fatal\n\
            --distinct N         payload variety: cycle N distinct\n\
-                                payloads (0 = all unique)     [0]\n"
+                                payloads (0 = all unique)     [0]\n\
+           --temperature T      sampling temperature sent with every\n\
+                                request (values != 1 need --seed)\n\
+           --seed N             Gumbel-top-k sampling seed; switches\n\
+                                decode/generate ops to seeded sampling\n"
     )
 }
 

@@ -34,9 +34,12 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use super::model::SyntheticLm;
-use super::request::{BatchClass, Payload, Reply, ReplyResult, Request, ServeError};
+use super::request::{
+    BatchClass, Payload, Reply, ReplyResult, Request, RequestOptions, ServeError,
+};
 use crate::config::{BackendKind, ServeConfig, ServingMode};
 use crate::runtime::{EnginePool, Input, Tensor};
+use crate::sample::{self, SampleSpec};
 use crate::shard::{self, ShardEngine, ShardEngineConfig};
 use crate::softmax::monoid::MD;
 use crate::softmax::{self, fused, Algorithm};
@@ -285,6 +288,50 @@ impl Executor {
         self.sessions.lock().unwrap().contains_key(&id)
     }
 
+    /// Validate the sampling-related options for one request, or `None`
+    /// when they are acceptable for `class` on this backend.
+    ///
+    /// The rules, in order: temperature must be a finite value > 0;
+    /// sampling options are meaningless on the softmax class (it
+    /// returns a full distribution, not a selection); a non-neutral
+    /// temperature without a seed is ambiguous (greedy top-k is
+    /// temperature-invariant, so honoring it silently would be a lie);
+    /// and sampled decode is served by the host backend only (the AOT
+    /// artifact graphs predate the fused Gumbel-top-k scan).
+    fn sampling_error(&self, class: BatchClass, options: &RequestOptions) -> Option<ServeError> {
+        let t = options.temperature;
+        if !(t.is_finite() && t > 0.0) {
+            return Some(ServeError::invalid(format!(
+                "temperature {t} must be a finite value > 0"
+            )));
+        }
+        if options.seed.is_none() && t == 1.0 {
+            return None; // greedy decode, nothing sampled
+        }
+        if class == BatchClass::Softmax {
+            return Some(ServeError::invalid(
+                "sampling options (temperature/seed) apply to decode requests, not softmax",
+            ));
+        }
+        if options.seed.is_none() {
+            return Some(ServeError::invalid(format!(
+                "temperature {t} requires a seed (sampled decode); greedy decode serves \
+                 temperature 1.0 only"
+            )));
+        }
+        if !self.is_host_backend() {
+            return Some(ServeError::invalid(
+                "sampled decode (seed) is served by the host backend only",
+            ));
+        }
+        None
+    }
+
+    /// The per-row sampling spec a validated request's options imply.
+    fn sample_spec(options: &RequestOptions) -> Option<SampleSpec> {
+        options.seed.map(|seed| SampleSpec { seed, temperature: options.temperature })
+    }
+
     /// Execute one formed batch; every request's reply channel receives
     /// its result (success or per-request error).
     pub fn execute_batch(&self, class: BatchClass, batch: Vec<Request>, worker: usize) {
@@ -300,11 +347,8 @@ impl Executor {
                 let _ = req.reply.send(Err(ServeError::deadline(
                     "deadline expired before execution",
                 )));
-            } else if req.options.temperature != 1.0 {
-                let _ = req.reply.send(Err(ServeError::invalid(format!(
-                    "temperature {} is unsupported (only 1.0 is served)",
-                    req.options.temperature
-                ))));
+            } else if let Some(err) = self.sampling_error(class, &req.options) {
+                let _ = req.reply.send(Err(err));
             } else {
                 live.push(req);
             }
@@ -556,6 +600,9 @@ impl Executor {
     fn run_decode(&self, batch: &[Request], worker: usize) -> Result<Vec<ReplyResult>> {
         let mut rows: Vec<Option<(&[f32], usize)>> = Vec::with_capacity(batch.len());
         let mut errors: Vec<Option<ServeError>> = vec![None; batch.len()];
+        // Per-*live*-row sampling specs (greedy rows carry `None`),
+        // parallel to the `live` vector below.
+        let mut specs: Vec<Option<SampleSpec>> = Vec::new();
         for (i, req) in batch.iter().enumerate() {
             match &req.payload {
                 Payload::DecodeTopK { hidden } => {
@@ -575,6 +622,7 @@ impl Executor {
                         rows.push(None);
                     } else {
                         rows.push(Some((hidden.as_slice(), k)));
+                        specs.push(Self::sample_spec(&req.options));
                     }
                 }
                 _ => unreachable!("router guarantees class purity"),
@@ -585,7 +633,7 @@ impl Executor {
             Vec::new()
         } else {
             let states: Vec<&[f32]> = live.iter().map(|(h, _)| *h).collect();
-            let full = self.decode_states(&states, worker)?;
+            let full = self.decode_states_sampled(&states, &specs, worker)?;
             full.into_iter()
                 .zip(live.iter())
                 .map(|((vals, idx), (_, k))| {
@@ -609,16 +657,37 @@ impl Executor {
         Ok(out)
     }
 
-    /// Decode a batch of hidden states to top-`artifact_k` results.
+    /// Decode a batch of hidden states to top-`artifact_k` results
+    /// (greedy — every row unsampled).
     pub fn decode_states(
         &self,
         states: &[&[f32]],
         worker: usize,
     ) -> Result<Vec<(Vec<f32>, Vec<i64>)>> {
+        self.decode_states_sampled(states, &vec![None; states.len()], worker)
+    }
+
+    /// [`Self::decode_states`] with a per-row sampling spec: rows with
+    /// `Some(spec)` return seeded Gumbel-top-k selections instead of
+    /// the greedy top-k (host backend only — admission validation
+    /// rejects seeds elsewhere, so the artifact arms see all-`None`).
+    pub fn decode_states_sampled(
+        &self,
+        states: &[&[f32]],
+        specs: &[Option<SampleSpec>],
+        worker: usize,
+    ) -> Result<Vec<(Vec<f32>, Vec<i64>)>> {
+        debug_assert_eq!(states.len(), specs.len());
         match &self.backend {
-            Backend::Artifacts(pool) if self.shards > 1 => self.decode_sharded(pool, states),
-            Backend::Artifacts(pool) => self.decode_unsharded(pool, states, worker),
-            Backend::Host => Ok(self.decode_host(states)),
+            Backend::Artifacts(pool) if self.shards > 1 => {
+                debug_assert!(specs.iter().all(Option::is_none));
+                self.decode_sharded(pool, states)
+            }
+            Backend::Artifacts(pool) => {
+                debug_assert!(specs.iter().all(Option::is_none));
+                self.decode_unsharded(pool, states, worker)
+            }
+            Backend::Host => Ok(self.decode_host(states, specs)),
         }
     }
 
@@ -633,7 +702,11 @@ impl Executor {
     /// materialized safe softmax, separate top-k) — the baseline the
     /// paper compares against, deliberately unsharded (see
     /// [`Self::softmax_host`]).
-    fn decode_host(&self, states: &[&[f32]]) -> Vec<(Vec<f32>, Vec<i64>)> {
+    fn decode_host(
+        &self,
+        states: &[&[f32]],
+        specs: &[Option<SampleSpec>],
+    ) -> Vec<(Vec<f32>, Vec<i64>)> {
         // Same defensive empty-batch short-circuit as `softmax_host`:
         // decode and lm_step batches where every request was rejected
         // up front never reach the chunked grid dispatch.
@@ -644,17 +717,31 @@ impl Executor {
         match self.mode {
             ServingMode::Safe => states
                 .iter()
-                .map(|h| {
+                .zip(specs)
+                .map(|(h, spec)| {
                     let logits = self.model.project_row(h);
-                    let mut scratch = Vec::new();
-                    fused::safe_unfused_topk(&logits, k, &mut scratch)
+                    match spec {
+                        // Sampled rows use the fused single-sweep scan
+                        // even in safe mode: the selection must be
+                        // bitwise-identical across serving modes, and
+                        // the reported probabilities match the safe
+                        // normalizer to fp tolerance.
+                        Some(spec) => sample::sampled_topk(&logits, k, *spec),
+                        None => {
+                            let mut scratch = Vec::new();
+                            fused::safe_unfused_topk(&logits, k, &mut scratch)
+                        }
+                    }
                 })
                 .collect(),
             ServingMode::Online if self.vocab >= self.shard_threshold => {
                 let engine = self.host_shard_engine();
                 let model = &self.model;
                 let mut out = Vec::with_capacity(states.len());
+                let mut base = 0usize;
                 for chunk in states.chunks(self.grid_chunk(states.len())) {
+                    let chunk_specs = &specs[base..base + chunk.len()];
+                    base += chunk.len();
                     let grid = engine.grid_plan(chunk.len(), self.vocab);
                     out.extend(engine.grid_map(
                         &grid,
@@ -663,7 +750,9 @@ impl Executor {
                             // of the logits is ever materialized, then
                             // the engine's backend (host scalar/
                             // vectorized, with per-tile fallback) scans
-                            // it into the (m, d, topk) partial.
+                            // it into the (m, d, topk) partial — plus
+                            // the Gumbel-top-k candidate state when the
+                            // row is sampled.
                             let logits = model.project_range(
                                 chunk[tile.row],
                                 tile.range.start,
@@ -673,18 +762,30 @@ impl Executor {
                                 &logits,
                                 tile.range.start..tile.range.end,
                                 k,
+                                chunk_specs[tile.row],
                             )
                         },
-                        |_row, parts| shard::tree_reduce(parts).finalize(),
+                        |row, parts| {
+                            let merged = shard::tree_reduce(parts);
+                            if chunk_specs[row].is_some() {
+                                merged.finalize_sampled()
+                            } else {
+                                merged.finalize()
+                            }
+                        },
                     ));
                 }
                 out
             }
             ServingMode::Online => states
                 .iter()
-                .map(|h| {
+                .zip(specs)
+                .map(|(h, spec)| {
                     let logits = self.model.project_row(h);
-                    fused::online_topk(&logits, k)
+                    match spec {
+                        Some(spec) => sample::sampled_topk(&logits, k, *spec),
+                        None => fused::online_topk(&logits, k),
+                    }
                 })
                 .collect(),
         }
@@ -804,6 +905,8 @@ impl Executor {
     fn run_lm_step(&self, batch: &[Request], worker: usize) -> Result<Vec<ReplyResult>> {
         let mut jobs: Vec<Option<(u64, i32, usize)>> = Vec::with_capacity(batch.len());
         let mut errors: Vec<Option<ServeError>> = vec![None; batch.len()];
+        // Per-live-job sampling specs, parallel to `live` below.
+        let mut specs: Vec<Option<SampleSpec>> = Vec::new();
         {
             let sessions = self.sessions.lock().unwrap();
             for (i, req) in batch.iter().enumerate() {
@@ -826,6 +929,7 @@ impl Executor {
                             jobs.push(None);
                         } else {
                             jobs.push(Some((*session, *token, k)));
+                            specs.push(Self::sample_spec(&req.options));
                         }
                     }
                     // `Generate` shares this batch class but is a
@@ -865,7 +969,7 @@ impl Executor {
                 .enumerate()
                 .map(|(i, _)| &new_states[i * self.hidden..(i + 1) * self.hidden])
                 .collect();
-            let decoded = self.decode_states(&state_rows, worker)?;
+            let decoded = self.decode_states_sampled(&state_rows, &specs, worker)?;
             results = decoded
                 .into_iter()
                 .zip(live.iter())

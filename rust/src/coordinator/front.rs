@@ -21,9 +21,11 @@
 //! **Keying.**  The key is the payload's exact f32 bit pattern plus
 //! the *effective* options: resolved top-k (`options.k` or the
 //! server's `default_k` — `None` and `Some(default_k)` are the same
-//! request), priority, and temperature bits.  Requests differing only
-//! in `tag` or `deadline` coalesce (the result is identical either
-//! way); requests differing in `k` or priority never share a key.
+//! request), priority, temperature bits, and sampling seed (seeded
+//! selections are deterministic, so equal seeds are the same
+//! computation).  Requests differing only in `tag` or `deadline`
+//! coalesce (the result is identical either way); requests differing
+//! in `k`, priority, or seed never share a key.
 //! Only stateless payloads ([`Payload::Softmax`],
 //! [`Payload::DecodeTopK`]) participate: `LmStep`/`Generate` advance
 //! per-session state, so identical-looking calls are *not* the same
@@ -108,6 +110,11 @@ struct FrontKey {
     k: usize,
     priority: u8,
     temperature: u32,
+    /// Sampling seed: seeded requests only coalesce with requests
+    /// carrying the *same* seed (selections are seed-deterministic, so
+    /// equal seeds are bitwise the same computation; different seeds
+    /// are different draws).
+    seed: Option<u64>,
 }
 
 struct FrontState {
@@ -227,6 +234,7 @@ impl Front {
             k: options.k.unwrap_or(self.policy.default_k),
             priority: options.priority.rank(),
             temperature: options.temperature.to_bits(),
+            seed: options.seed,
         })
     }
 }
@@ -511,6 +519,7 @@ mod tests {
             k: 5,
             priority: 0,
             temperature: 1.0f32.to_bits(),
+            seed: None,
         };
         lru.insert(key(1.0), reply(&[1.0]));
         lru.insert(key(2.0), reply(&[2.0]));

@@ -33,6 +33,7 @@ use std::time::Instant;
 use super::request::{Payload, Reply, RequestOptions, ServeError};
 use super::Coordinator;
 use crate::metrics;
+use crate::sample;
 
 /// Upper bound on `max_tokens` AND prompt length per stream.  Guards
 /// the server against a hostile `max_tokens` scalar (JSON integers
@@ -50,8 +51,9 @@ pub const MAX_STREAM_TOKENS: usize = 4096;
 pub struct TokenFrame {
     /// 0-based index of this token within the stream.
     pub index: usize,
-    /// The greedily selected token (`idx[0]`), which also feeds the
-    /// next step.
+    /// The selected token (`idx[0]` — the greedy argmax, or the
+    /// highest-perturbed-score draw on sampled streams), which also
+    /// feeds the next step.
     pub token: i32,
     /// Top-k probabilities, descending.
     pub vals: Vec<f32>,
@@ -63,9 +65,12 @@ impl Coordinator {
     /// Run one generation stream to completion on the calling thread.
     ///
     /// Feeds `prompt_tokens` into `session` (advancing its state, one
-    /// batched `LmStep` per token), then greedily decodes up to
-    /// `max_tokens` tokens, calling `emit` with each [`TokenFrame`] as
-    /// it is produced.  Returns the selected tokens.
+    /// batched `LmStep` per token), then decodes up to `max_tokens`
+    /// tokens — greedily, or by seeded Gumbel-top-k sampling when
+    /// `options.seed` is set (each step's seed is derived from the
+    /// stream seed, so a seeded stream is bitwise-reproducible) —
+    /// calling `emit` with each [`TokenFrame`] as it is produced.
+    /// Returns the selected tokens.
     ///
     /// `emit` returning `false` cancels the stream after the current
     /// token (the session keeps the state it has reached — identical
@@ -133,7 +138,7 @@ impl Coordinator {
         // admission times, so they carry no deadline of their own.
         let step_options = RequestOptions { deadline: None, ..options.clone() };
 
-        let step = |token: i32| -> Result<Reply, ServeError> {
+        let step = |token: i32, step_index: u64| -> Result<Reply, ServeError> {
             let timeout = match overall {
                 Some(d) => {
                     let now = Instant::now();
@@ -144,19 +149,26 @@ impl Coordinator {
                 }
                 None => self.request_timeout,
             };
-            self.call_opts(
-                Payload::LmStep { session, token },
-                step_options.clone(),
-                timeout,
-            )
+            let mut opts = step_options.clone();
+            // Sampled streams draw each step from its own derived seed:
+            // reusing the stream seed verbatim would apply the *same*
+            // perturbation pattern to every step's logits (perturbations
+            // are pure functions of (seed, vocab index)), correlating
+            // the whole trajectory.  The derivation is deterministic, so
+            // a client replaying the stream one `lm_step` at a time with
+            // the same per-step seeds reproduces it bitwise.
+            if let Some(seed) = options.seed {
+                opts.seed = Some(sample::derive_step_seed(seed, step_index));
+            }
+            self.call_opts(Payload::LmStep { session, token }, opts, timeout)
         };
 
         // Prompt feed: advance the session state through every prompt
         // token but the last, discarding the intermediate
         // distributions — exactly what a v1 client stepping its prompt
         // does.  The last prompt token seeds the decode loop.
-        for &t in &prompt_tokens[..prompt_tokens.len() - 1] {
-            step(t)?;
+        for (i, &t) in prompt_tokens[..prompt_tokens.len() - 1].iter().enumerate() {
+            step(t, i as u64)?;
         }
         // panic-ok: the wire layer rejects empty prompts before submit.
         let mut cur = *prompt_tokens.last().expect("nonempty prompt");
@@ -164,7 +176,9 @@ impl Coordinator {
         let tokens_emitted = metrics::global().counter("coordinator.stream.tokens");
         let mut selected = Vec::with_capacity(max_tokens);
         for index in 0..max_tokens {
-            let reply = step(cur)?;
+            // Step indices continue the prompt-feed count so every
+            // `LmStep` in the stream has a unique derived seed.
+            let reply = step(cur, (prompt_tokens.len() - 1 + index) as u64)?;
             let Reply::TopK { vals, idx } = reply else {
                 return Err(ServeError::internal("lm_step produced a non-topk reply"));
             };
@@ -273,6 +287,38 @@ mod tests {
         let long_prompt = vec![1i32; MAX_STREAM_TOKENS + 1];
         let err = coord.generate(s, &long_prompt, 1, &opts, |_| true).unwrap_err();
         assert_eq!(err.code, crate::coordinator::ErrorCode::InvalidArgument, "{err}");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn sampled_generate_is_seed_reproducible() {
+        let coord = coordinator();
+        let run = |seed: u64| {
+            let s = coord.open_session();
+            let opts = RequestOptions {
+                k: Some(4),
+                temperature: 0.8,
+                seed: Some(seed),
+                ..RequestOptions::default()
+            };
+            let mut frames = Vec::new();
+            let tokens = coord
+                .generate(s, &[3, 9], 6, &opts, |f| {
+                    frames.push(f.clone());
+                    true
+                })
+                .unwrap();
+            (tokens, frames)
+        };
+        let (t1, f1) = run(42);
+        let (t2, f2) = run(42);
+        assert_eq!(t1, t2, "same seed: identical token stream");
+        for (a, b) in f1.iter().zip(&f2) {
+            assert_eq!(a.idx, b.idx, "same seed: bitwise-identical selections");
+            assert_eq!(a.vals, b.vals, "same seed: bitwise-identical probabilities");
+        }
+        let (t3, _) = run(43);
+        assert_ne!(t1, t3, "different seeds: trajectories diverge");
         coord.shutdown();
     }
 

@@ -4,8 +4,9 @@
 //! Three things changed from the v1 surface and together they define
 //! the v2 API (see `docs/PROTOCOL.md` for the wire rendition):
 //!
-//! * **[`RequestOptions`]** ride on every request: top-k, temperature
-//!   (pinned to 1.0 for now), a [`Priority`] class, an optional
+//! * **[`RequestOptions`]** ride on every request: top-k, sampling
+//!   temperature and seed (seeded Gumbel-top-k sampling on the decode
+//!   classes), a [`Priority`] class, an optional
 //!   deadline, and an opaque client tag.  The batcher uses priority and
 //!   deadline for flush ordering; the executor rejects requests whose
 //!   deadline expired while queued.
@@ -177,10 +178,16 @@ impl Priority {
 pub struct RequestOptions {
     /// Top-k override; `None` uses the server's `default_k`.
     pub k: Option<usize>,
-    /// Sampling temperature.  Only `1.0` is supported today (the
-    /// serving path is exact greedy/top-k); the field exists so the
-    /// wire schema does not need another revision when sampling lands.
+    /// Sampling temperature.  Must be finite and `> 0`; any value
+    /// other than `1.0` requires a `seed` (tempered sampling is only
+    /// meaningful on the sampled decode path).
     pub temperature: f32,
+    /// Sampling seed.  `Some` switches decode classes from greedy
+    /// top-k to seeded Gumbel-top-k sampling (without replacement,
+    /// ∝ `exp(x / temperature)`), computed inside the same fused
+    /// single-sweep scan.  Bitwise-reproducible: the same seed always
+    /// selects the same tokens regardless of sharding or backend.
+    pub seed: Option<u64>,
     /// Batcher scheduling class.
     pub priority: Priority,
     /// Total handling budget measured from admission.  The batcher
@@ -198,6 +205,7 @@ impl Default for RequestOptions {
         RequestOptions {
             k: None,
             temperature: 1.0,
+            seed: None,
             priority: Priority::Interactive,
             deadline: None,
             client_tag: None,
@@ -425,6 +433,7 @@ mod tests {
         let o = RequestOptions::default();
         assert_eq!(o.k, None);
         assert_eq!(o.temperature, 1.0);
+        assert_eq!(o.seed, None, "no seed: greedy decode");
         assert_eq!(o.priority, Priority::Interactive);
         assert!(o.deadline.is_none() && o.client_tag.is_none());
         assert_eq!(RequestOptions::with_k(7).k, Some(7));

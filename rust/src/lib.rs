@@ -68,6 +68,7 @@ pub mod metrics;
 pub mod prop;
 pub mod rng;
 pub mod runtime;
+pub mod sample;
 pub mod server;
 pub mod shard;
 pub mod softmax;

@@ -9,6 +9,7 @@
 //!                       [--op decode|softmax|generate] [--tokens N]
 //!                       [--priority interactive|batch|mixed]
 //!                       [--deadline-ms MS] [--distinct N]
+//!                       [--temperature T] [--seed S]
 //! onlinesoftmax help
 //! ```
 
@@ -32,6 +33,7 @@ const VALUE_OPTS: &[&str] = &[
     "host-shards", "shard-threshold", "grid-rows", "pool-sched", "shard-backend",
     "request-timeout", "tokens", "admission-interactive-cap", "admission-batch-cap",
     "cache-capacity", "cache-coalesce", "priority", "deadline-ms", "distinct",
+    "temperature",
 ];
 
 fn main() {
@@ -117,6 +119,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "grid" => benches::grid_ablation(&opts),
         "steal" => benches::steal_ablation(&opts),
         "backend" => benches::backend_ablation(&opts),
+        "sample" => benches::sample_ablation(&opts),
         "all" => {
             benches::fig1(&opts)?;
             benches::fig2(&opts)?;
@@ -126,10 +129,11 @@ fn cmd_bench(args: &Args) -> Result<()> {
             benches::shard_ablation(&opts)?;
             benches::grid_ablation(&opts)?;
             benches::steal_ablation(&opts)?;
-            benches::backend_ablation(&opts)
+            benches::backend_ablation(&opts)?;
+            benches::sample_ablation(&opts)
         }
         other => Err(anyhow!(
-            "unknown figure `{other}` (1|2|3|4|k|ablation|grid|steal|backend|all)"
+            "unknown figure `{other}` (1|2|3|4|k|ablation|grid|steal|backend|sample|all)"
         )),
     }
 }
@@ -262,6 +266,22 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     // (identical bits across workers, so the server's result cache can
     // hit); 0 = every request unique.
     let distinct: usize = args.opt_parse("distinct", 0)?;
+    // Sampling knobs: a seed switches decode/lm_step/generate requests
+    // to seeded Gumbel-top-k sampling (sent verbatim on every request,
+    // so identical payloads still coalesce); temperature != 1 requires
+    // a seed, mirroring the server's rule.
+    let sample_seed: Option<u64> = match args.opt_str("seed") {
+        Some(s) => Some(
+            s.parse().map_err(|_| anyhow!("--seed expects a non-negative integer, got `{s}`"))?,
+        ),
+        None => None,
+    };
+    let temperature: Option<f32> = match args.opt_str("temperature") {
+        Some(s) => Some(
+            s.parse().map_err(|_| anyhow!("--temperature expects a number, got `{s}`"))?,
+        ),
+        None => None,
+    };
     args.finish()?;
     if !matches!(priority.as_str(), "interactive" | "batch" | "mixed") {
         return Err(anyhow!(
@@ -286,6 +306,8 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                     let mut client = Client::connect(&addr)?;
                     client.set_tag(Some(&format!("loadgen-{w}")));
                     client.set_deadline_ms(deadline_ms);
+                    client.set_temperature(temperature);
+                    client.set_seed(sample_seed);
                     let mut rng =
                         onlinesoftmax::rng::Xoshiro256pp::seed_from_u64(w as u64 + 1);
                     let mut tally = [ClassTally::default(), ClassTally::default()];

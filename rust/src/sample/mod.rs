@@ -1,0 +1,373 @@
+//! Fused Gumbel-top-k sampling state for the single-sweep scan.
+//!
+//! The Gumbel-max trick turns sampling into selection: perturb each
+//! tempered logit with an i.i.d. Gumbel(0,1) draw and take the argmax —
+//! the result is a sample from `softmax(x / T)`.  Taking the top-k by
+//! perturbed score samples k tokens *without replacement* from the same
+//! distribution (Gumbel-top-k).  Because each perturbation is a pure
+//! function of `(seed, global index)`, the perturbed scores compose
+//! with the paper's ⊕ merge law exactly like raw logits do: any
+//! shard/grid/backend decomposition sees identical perturbations, so
+//! the fused single sweep of Algorithm 4 can track a sampled candidate
+//! set alongside the exact online normalizer with zero extra passes.
+//!
+//! Everything here is deterministic given `(seed, temperature)`:
+//!
+//! * [`gumbel`] — the counter-based per-index draw (SplitMix64-style
+//!   finalizer; the python reference in `compile/golden.py` implements
+//!   the same spec bit for bit).
+//! * [`SampledBuffer`] — the (K+1)-slot insertion buffer of Algorithm 4
+//!   keyed by *perturbed score* while remembering each candidate's raw
+//!   logit, so the merged state can still report exact untempered
+//!   probabilities `e^{x−m}/d`.
+//! * [`derive_step_seed`] — per-decode-step seed derivation for
+//!   streaming generation (one request seed, a distinct stream per
+//!   step, no inter-step correlation).
+
+use crate::softmax::fastexp::fast_exp;
+use crate::softmax::monoid::MD;
+
+/// Golden-ratio increment of the counter stream (SplitMix64's gamma).
+const GAMMA: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Domain separator for [`derive_step_seed`], so step seeds never
+/// collide with the per-index draw stream of the same request seed.
+const STEP_STREAM: u64 = 0xA5A5_5A5A_C3C3_3C3C;
+
+/// Per-request sampling parameters, threaded from [`RequestOptions`]
+/// (`crate::coordinator::RequestOptions`) down to every per-tile scan.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SampleSpec {
+    /// Seed of the counter-based draw stream.  Same seed ⇒ bitwise-
+    /// identical perturbations regardless of decomposition.
+    pub seed: u64,
+    /// Softmax temperature; perturbed score is `x/T + Gumbel`.  Must be
+    /// finite and > 0 (validated at admission, asserted here).
+    pub temperature: f32,
+}
+
+/// The SplitMix64 output finalizer over an arbitrary 64-bit counter:
+/// `seed` selects the stream, `counter` indexes into it.  Stateless —
+/// any evaluation order over any partition of the counters produces
+/// the same values.
+#[inline]
+pub fn counter_hash(seed: u64, counter: u64) -> u64 {
+    let mut z = seed.wrapping_add(counter.wrapping_add(1).wrapping_mul(GAMMA));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// The per-index Gumbel(0,1) draw: `g = −ln(−ln(u))` where `u ∈ (0,1)`
+/// comes from the top 53 bits of [`counter_hash`] (offset by ½ulp so
+/// `u` is never 0 or 1 and the double logarithm is always finite).
+/// Computed in f64 and rounded once to f32, matching the python
+/// reference exactly.
+#[inline]
+pub fn gumbel(seed: u64, index: i64) -> f32 {
+    let h = counter_hash(seed, index as u64);
+    let u = ((h >> 11) as f64 + 0.5) * (1.0 / (1u64 << 53) as f64);
+    (-(-u.ln()).ln()) as f32
+}
+
+/// The perturbed selection score of one logit: `x/T + Gumbel(seed, i)`.
+/// `−∞` (vocabulary padding) stays `−∞` and NaN stays NaN under this
+/// arithmetic, so masked and poisoned inputs keep the exclusion
+/// behaviour of the deterministic top-k scan.
+#[inline]
+pub fn perturb(x: f32, index: i64, spec: SampleSpec) -> f32 {
+    debug_assert!(spec.temperature.is_finite() && spec.temperature > 0.0);
+    (x / spec.temperature) + gumbel(spec.seed, index)
+}
+
+/// Derive the seed of decode step `step` from a request-level seed.
+/// Each streamed token gets its own draw stream — otherwise a repeated
+/// hidden state would repeat its sampled token forever — while the
+/// whole stream stays a pure function of the request seed.  Uses a
+/// domain-separated [`counter_hash`] stream so step seeds never alias
+/// the per-index draws.
+#[inline]
+pub fn derive_step_seed(seed: u64, step: u64) -> u64 {
+    counter_hash(seed ^ STEP_STREAM, step)
+}
+
+/// The sampled analogue of [`TopKBuffer`](crate::topk::TopKBuffer): the
+/// same (K+1)-slot descending insertion buffer of Algorithm 4, ordered
+/// by **perturbed score** while carrying each candidate's raw logit so
+/// finalization can report exact untempered probabilities.
+///
+/// Structure and semantics mirror `TopKBuffer` slot for slot: sentinel
+/// `(−∞, −∞, −1)` entries, strict-`<` bubbling (incumbent wins score
+/// ties), NaN scores structurally excluded (they fail both the fast
+/// reject and every bubble comparison, so they never enter the visible
+/// `k` window), and an associative [`merge`](Self::merge) — the ⊕ law
+/// the shard tree reduction relies on.
+#[derive(Clone, Debug)]
+pub struct SampledBuffer {
+    /// Perturbed scores, descending; length K+1 (slot K is scratch).
+    s: Vec<f32>,
+    /// Raw (untempered, unperturbed) logits aligned with `s`.
+    x: Vec<f32>,
+    /// Global indices aligned with `s`.
+    p: Vec<i64>,
+    k: usize,
+}
+
+impl SampledBuffer {
+    /// Initialize with −∞ scores/logits and −1 indices.
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0, "k must be positive");
+        Self {
+            s: vec![f32::NEG_INFINITY; k + 1],
+            x: vec![f32::NEG_INFINITY; k + 1],
+            p: vec![-1; k + 1],
+            k,
+        }
+    }
+
+    /// The buffer's k.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Insert `(score, logit, index)` via slot K+1 and bubble it up —
+    /// lines 8–15 of Algorithm 4 keyed by perturbed score.
+    #[inline]
+    pub fn push(&mut self, score: f32, logit: f32, index: i64) {
+        let k = self.k;
+        // Fast reject: strictly-not-better than the current k-th score.
+        // (Equal scores lose to the incumbent, like line 11's strict `<`.)
+        if score <= self.s[k - 1] {
+            return;
+        }
+        self.s[k] = score;
+        self.x[k] = logit;
+        self.p[k] = index;
+        let mut i = k;
+        while i >= 1 && self.s[i - 1] < self.s[i] {
+            self.s.swap(i - 1, i);
+            self.x.swap(i - 1, i);
+            self.p.swap(i - 1, i);
+            i -= 1;
+        }
+    }
+
+    /// The first K `(score, logit, index)` triples, descending by score.
+    pub fn entries(&self) -> impl Iterator<Item = (f32, f32, i64)> + '_ {
+        (0..self.k).map(|i| (self.s[i], self.x[i], self.p[i]))
+    }
+
+    /// Perturbed scores only (descending).
+    pub fn scores(&self) -> &[f32] {
+        &self.s[..self.k]
+    }
+
+    /// Selected global indices, descending by perturbed score.
+    pub fn indices(&self) -> &[i64] {
+        &self.p[..self.k]
+    }
+
+    /// Number of real (non-sentinel) entries.
+    pub fn len_filled(&self) -> usize {
+        self.p[..self.k].iter().filter(|&&i| i >= 0).count()
+    }
+
+    /// Associative merge (lane/thread/shard combination): re-insert the
+    /// other buffer's real entries.  Incumbent-wins tie-breaking makes
+    /// ascending-shard merge order reproduce the whole-row scan.
+    pub fn merge(&mut self, other: &SampledBuffer) {
+        assert_eq!(self.k, other.k, "cannot merge buffers of different k");
+        for (s, x, i) in other.entries() {
+            if i >= 0 {
+                self.push(s, x, i);
+            }
+        }
+    }
+}
+
+/// Scan a tile into a fresh sampled buffer: perturb each element with
+/// its per-index draw and track the top-k by perturbed score.  `base`
+/// globalizes indices (shards pass their range start), and — because
+/// the draw is keyed by the *global* index — every decomposition of a
+/// row produces partials that merge to the identical selection.
+pub fn scan_sampled(tile: &[f32], k: usize, base: i64, spec: SampleSpec) -> SampledBuffer {
+    let mut buf = SampledBuffer::new(k);
+    for (i, &v) in tile.iter().enumerate() {
+        let idx = base + i as i64;
+        buf.push(perturb(v, idx, spec), v, idx);
+    }
+    buf
+}
+
+/// Lines 17–19 of Algorithm 4 over a merged sampled buffer: report the
+/// **untempered** probability `e^{x−m}/d` of each sampled token, in
+/// descending perturbed-score order (the sampled ranking).  Sentinel
+/// slots (k > real candidates) are skipped like the deterministic path.
+pub fn finalize_sampled(buf: &SampledBuffer, md: MD) -> (Vec<f32>, Vec<i64>) {
+    let inv = 1.0 / md.d;
+    let mut vals = Vec::with_capacity(buf.k());
+    let mut idx = Vec::with_capacity(buf.k());
+    for (_, x, i) in buf.entries() {
+        if i >= 0 {
+            vals.push(fast_exp(x - md.m) * inv);
+            idx.push(i);
+        }
+    }
+    (vals, idx)
+}
+
+/// Whole-row convenience: one fused sweep producing the exact online
+/// normalizer (the reference scalar scan) plus the sampled selection.
+/// This is the per-row path the executor uses below the sharding
+/// threshold; the sharded grid path computes the same thing via
+/// per-tile [`scan_sampled`] partials and the ⊕ tree reduction.
+pub fn sampled_topk(x: &[f32], k: usize, spec: SampleSpec) -> (Vec<f32>, Vec<i64>) {
+    let (md, _) = crate::softmax::fused::fused_partial(x, k, 0);
+    let buf = scan_sampled(x, k, 0, spec);
+    finalize_sampled(&buf, md)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    const SPEC: SampleSpec = SampleSpec { seed: 42, temperature: 1.0 };
+
+    fn logits(n: usize, seed: u64) -> Vec<f32> {
+        Xoshiro256pp::seed_from_u64(seed).logits(n, 6.0)
+    }
+
+    #[test]
+    fn counter_hash_is_stateless_and_seed_sensitive() {
+        assert_eq!(counter_hash(7, 3), counter_hash(7, 3));
+        assert_ne!(counter_hash(7, 3), counter_hash(7, 4));
+        assert_ne!(counter_hash(7, 3), counter_hash(8, 3));
+        // the counter stream has no fixed point at zero
+        assert_ne!(counter_hash(0, 0), 0);
+    }
+
+    #[test]
+    fn gumbel_draws_are_finite_and_deterministic() {
+        for idx in 0..10_000i64 {
+            let g = gumbel(123, idx);
+            assert!(g.is_finite(), "index {idx} drew {g}");
+            assert_eq!(g, gumbel(123, idx));
+        }
+    }
+
+    #[test]
+    fn gumbel_sample_moments_match_distribution() {
+        // Gumbel(0,1): mean = γ ≈ 0.5772, variance = π²/6 ≈ 1.6449.
+        let n = 200_000i64;
+        let (mut sum, mut sumsq) = (0.0f64, 0.0f64);
+        for i in 0..n {
+            let g = gumbel(9, i) as f64;
+            sum += g;
+            sumsq += g * g;
+        }
+        let mean = sum / n as f64;
+        let var = sumsq / n as f64 - mean * mean;
+        assert!((mean - 0.5772).abs() < 0.01, "mean {mean}");
+        assert!((var - 1.6449).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn perturb_preserves_masking_semantics() {
+        assert_eq!(perturb(f32::NEG_INFINITY, 5, SPEC), f32::NEG_INFINITY);
+        assert!(perturb(f32::NAN, 5, SPEC).is_nan());
+        let cold = SampleSpec { seed: 42, temperature: 0.5 };
+        let hot = SampleSpec { seed: 42, temperature: 2.0 };
+        // lower temperature stretches the logit's contribution
+        assert_eq!(perturb(3.0, 7, cold) - gumbel(42, 7), 6.0);
+        assert_eq!(perturb(3.0, 7, hot) - gumbel(42, 7), 1.5);
+    }
+
+    #[test]
+    fn scan_matches_bruteforce_argsort() {
+        let x = logits(800, 3);
+        let k = 7;
+        let buf = scan_sampled(&x, k, 0, SPEC);
+        let mut scored: Vec<(f32, i64)> = x
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| (perturb(v, i as i64, SPEC), i as i64))
+            .collect();
+        scored.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+        let want: Vec<i64> = scored[..k].iter().map(|&(_, i)| i).collect();
+        assert_eq!(buf.indices(), &want[..]);
+    }
+
+    #[test]
+    fn merge_equals_whole_scan_for_any_split() {
+        let x = logits(1000, 5);
+        let k = 5;
+        let whole = scan_sampled(&x, k, 0, SPEC);
+        for chunk in [37usize, 100, 512, 999] {
+            let mut merged = SampledBuffer::new(k);
+            for (c, tile) in x.chunks(chunk).enumerate() {
+                merged.merge(&scan_sampled(tile, k, (c * chunk) as i64, SPEC));
+            }
+            assert_eq!(merged.indices(), whole.indices(), "chunk={chunk}");
+            assert_eq!(merged.scores(), whole.scores(), "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn nan_and_neg_inf_are_excluded_k_beyond_v_leaves_sentinels() {
+        let x = [1.0f32, f32::NAN, f32::NEG_INFINITY, 2.0];
+        let buf = scan_sampled(&x, 4, 0, SPEC);
+        assert_eq!(buf.len_filled(), 2, "only the two finite logits enter");
+        assert!(buf.indices()[..2].iter().all(|&i| i == 0 || i == 3));
+        assert_eq!(&buf.indices()[2..], &[-1, -1]);
+        assert!(buf.scores().iter().all(|s| !s.is_nan()));
+    }
+
+    #[test]
+    fn different_seeds_select_differently() {
+        let x = logits(4096, 8);
+        let a = scan_sampled(&x, 3, 0, SampleSpec { seed: 1, temperature: 1.0 });
+        let b = scan_sampled(&x, 3, 0, SampleSpec { seed: 2, temperature: 1.0 });
+        assert_ne!(a.indices(), b.indices());
+    }
+
+    #[test]
+    fn low_temperature_converges_to_greedy() {
+        // As T → 0 the tempered logit dominates the O(1) Gumbel noise,
+        // so the sampled argmax is the deterministic argmax.
+        let x = logits(512, 11);
+        let spec = SampleSpec { seed: 77, temperature: 1e-4 };
+        let (_, idx) = sampled_topk(&x, 1, spec);
+        let (_, greedy) = crate::softmax::fused::online_topk(&x, 1);
+        assert_eq!(idx, greedy);
+    }
+
+    #[test]
+    fn finalize_reports_untempered_probabilities() {
+        let x = logits(300, 13);
+        let spec = SampleSpec { seed: 5, temperature: 0.7 };
+        let (vals, idx) = sampled_topk(&x, 4, spec);
+        assert_eq!(vals.len(), 4);
+        let (md, _) = crate::softmax::fused::fused_partial(&x, 4, 0);
+        for (v, &i) in vals.iter().zip(&idx) {
+            let want = fast_exp(x[i as usize] - md.m) / md.d;
+            assert_eq!(*v, want, "index {i}");
+        }
+    }
+
+    #[test]
+    fn step_seeds_are_distinct_and_domain_separated() {
+        let mut seen = std::collections::HashSet::new();
+        for step in 0..1000u64 {
+            assert!(seen.insert(derive_step_seed(99, step)));
+            // never aliases the per-index hash stream of the same seed
+            assert_ne!(derive_step_seed(99, step), counter_hash(99, step));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "k must be positive")]
+    fn zero_k_panics() {
+        SampledBuffer::new(0);
+    }
+}

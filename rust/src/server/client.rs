@@ -3,7 +3,8 @@
 //!
 //! The client speaks **protocol v2**: every request carries `"v":2`
 //! plus any configured per-request options ([`Client::set_priority`],
-//! [`Client::set_deadline_ms`], [`Client::set_tag`]), errors decode
+//! [`Client::set_deadline_ms`], [`Client::set_tag`],
+//! [`Client::set_temperature`], [`Client::set_seed`]), errors decode
 //! into their structured `{code, message}` form, and
 //! [`Client::generate`] exposes server-side streaming generation as an
 //! iterator of [`TokenFrame`]s.  (Servers still accept v1 frames from
@@ -26,6 +27,8 @@ pub struct Client {
     priority: Option<String>,
     deadline_ms: Option<u64>,
     tag: Option<String>,
+    temperature: Option<f32>,
+    seed: Option<u64>,
 }
 
 impl Client {
@@ -40,6 +43,8 @@ impl Client {
             priority: None,
             deadline_ms: None,
             tag: None,
+            temperature: None,
+            seed: None,
         })
     }
 
@@ -60,6 +65,21 @@ impl Client {
         self.tag = tag.map(|s| s.to_string());
     }
 
+    /// Sampling temperature sent with every subsequent request
+    /// (`None` = server default 1.0).  Values other than 1.0 require a
+    /// seed ([`Client::set_seed`]) — the server rejects tempered
+    /// greedy decode as `invalid_argument`.
+    pub fn set_temperature(&mut self, temperature: Option<f32>) {
+        self.temperature = temperature;
+    }
+
+    /// Sampling seed sent with every subsequent request.  `Some`
+    /// switches decode/lm_step/generate from greedy top-k to seeded
+    /// Gumbel-top-k sampling; `None` (the default) is greedy.
+    pub fn set_seed(&mut self, seed: Option<u64>) {
+        self.seed = seed;
+    }
+
     /// A v2 request skeleton for `op`, carrying the configured options.
     fn request(&self, op: &str) -> Value {
         let mut v = Value::object();
@@ -73,6 +93,12 @@ impl Client {
         }
         if let Some(t) = &self.tag {
             v.set("tag", Value::String(t.clone()));
+        }
+        if let Some(t) = self.temperature {
+            v.set("temperature", Value::Number(t as f64));
+        }
+        if let Some(s) = self.seed {
+            v.set("seed", Value::Number(s as f64));
         }
         v
     }

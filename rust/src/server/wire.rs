@@ -17,7 +17,7 @@
 //! rides along for v2-aware tooling; v1 clients read `error`).
 //!
 //! **v2** (`"v": 2`) — the typed surface: every request may carry
-//! [`RequestOptions`] fields (`k`, `temperature`, `priority`,
+//! [`RequestOptions`] fields (`k`, `temperature`, `seed`, `priority`,
 //! `deadline_ms`, `tag`), responses echo `"v":2`, errors are
 //! structured objects, and the streaming op exists:
 //! ```json
@@ -167,12 +167,23 @@ fn decode_options(doc: &Value) -> Result<RequestOptions, ServeError> {
         let t = t
             .as_f64()
             .ok_or_else(|| ServeError::bad_request("`temperature` must be a number"))?;
-        if t != 1.0 {
+        // Range validation (finite, > 0) happens once, here at the
+        // surface; the executor re-checks the same rule for in-process
+        // callers.  Pairing rules (non-neutral temperature requires a
+        // seed, host backend only) stay executor-side where the
+        // backend is known.
+        if !(t.is_finite() && t > 0.0) {
             return Err(ServeError::invalid(format!(
-                "temperature {t} is unsupported (only 1.0 is served)"
+                "temperature {t} must be a finite value > 0"
             )));
         }
         o.temperature = t as f32;
+    }
+    if let Some(s) = doc.get("seed") {
+        let seed = s.as_i64().filter(|n| *n >= 0).ok_or_else(|| {
+            ServeError::bad_request("`seed` must be a non-negative integer")
+        })?;
+        o.seed = Some(seed as u64);
     }
     if let Some(p) = doc.get("priority") {
         let s = p
@@ -573,9 +584,30 @@ mod tests {
         let e = decode_request(r#"{"op":"generate","session":1,"prompt":[1],"max_tokens":2}"#)
             .unwrap_err();
         assert!(e.error.message.contains("v2"), "{}", e.error);
-        // unsupported temperature is invalid_argument, not bad_request
-        let e = decode_request(r#"{"v":2,"op":"ping","temperature":0.7}"#).unwrap_err();
+        // out-of-range temperature is invalid_argument, not bad_request
+        let e = decode_request(r#"{"v":2,"op":"ping","temperature":0}"#).unwrap_err();
         assert_eq!(e.error.code, ErrorCode::InvalidArgument);
+        let e = decode_request(r#"{"v":2,"op":"ping","temperature":-0.5}"#).unwrap_err();
+        assert_eq!(e.error.code, ErrorCode::InvalidArgument);
+        // an ill-typed seed is a bad_request (protocol misuse)
+        let e = decode_request(r#"{"v":2,"op":"ping","seed":-1}"#).unwrap_err();
+        assert_eq!(e.error.code, ErrorCode::BadRequest);
+        let e = decode_request(r#"{"v":2,"op":"ping","seed":"abc"}"#).unwrap_err();
+        assert_eq!(e.error.code, ErrorCode::BadRequest);
+    }
+
+    #[test]
+    fn decode_v2_sampling_options() {
+        let f = decode_request(
+            r#"{"v":2,"op":"decode","hidden":[0.5],"k":3,"temperature":0.7,"seed":42}"#,
+        )
+        .unwrap();
+        assert_eq!(f.options.temperature, 0.7);
+        assert_eq!(f.options.seed, Some(42));
+        // v1 frames never parse sampling options: the surface is frozen.
+        let f = decode_request(r#"{"op":"decode","hidden":[0.5],"k":3,"seed":42}"#).unwrap();
+        assert_eq!(f.options.seed, None, "v1 ignores seed");
+        assert_eq!(f.options.temperature, 1.0);
     }
 
     #[test]

@@ -52,6 +52,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use crate::sample::{self, SampleSpec};
 use crate::softmax::monoid::MD;
 use crate::softmax::{twopass, vectorized};
 use crate::topk::scan_topk;
@@ -124,11 +125,20 @@ pub trait ShardBackend: Send + Sync {
     /// Scan one tile in a single conceptual sweep: the fused
     /// online-normalizer + top-k partial of Algorithm 4 over
     /// `logits`, with candidate indices globalized by `range.start`.
+    ///
+    /// When `sample` is present the same sweep must additionally track
+    /// the Gumbel-top-k candidate state ([`ShardPartial::sampled`]):
+    /// each element's perturbed score is the pure function
+    /// [`sample::perturb`] of `(seed, global index)`, so every backend
+    /// — and every decomposition — produces bitwise-identical sampled
+    /// selections for a fixed spec (pinned by the cross-backend
+    /// property harness; see `docs/BACKENDS.md`).
     fn scan_tile(
         &self,
         logits: &[f32],
         range: Range<usize>,
         k: usize,
+        sample: Option<SampleSpec>,
     ) -> std::result::Result<ShardPartial, Unsupported>;
 
     /// Normalizer-only scan of one tile (the first pass of a sharded
@@ -178,8 +188,9 @@ impl ShardBackend for HostScalar {
         logits: &[f32],
         range: Range<usize>,
         k: usize,
+        sample: Option<SampleSpec>,
     ) -> std::result::Result<ShardPartial, Unsupported> {
-        Ok(ShardPartial::scan(logits, k, range.start as i64))
+        Ok(ShardPartial::scan_with(logits, k, range.start as i64, sample))
     }
 
     fn normalizer_tile(
@@ -225,6 +236,7 @@ impl ShardBackend for HostVectorized {
         logits: &[f32],
         range: Range<usize>,
         k: usize,
+        sample: Option<SampleSpec>,
     ) -> std::result::Result<ShardPartial, Unsupported> {
         if !self.supports(logits.len(), k) {
             return Err(Unsupported::new(
@@ -236,9 +248,11 @@ impl ShardBackend for HostVectorized {
                 ),
             ));
         }
+        let base = range.start as i64;
         Ok(ShardPartial {
             md: vectorized::online_normalizer_streaming(logits),
-            topk: scan_topk(logits, k, range.start as i64),
+            topk: scan_topk(logits, k, base),
+            sampled: sample.map(|spec| sample::scan_sampled(logits, k, base, spec)),
         })
     }
 
@@ -311,12 +325,15 @@ impl ShardBackend for HostTwoPass {
         logits: &[f32],
         range: Range<usize>,
         k: usize,
+        sample: Option<SampleSpec>,
     ) -> std::result::Result<ShardPartial, Unsupported> {
         if !self.supports(logits.len(), k) {
             return Err(self.decline(logits.len()));
         }
-        let (md, topk) = twopass::fused_partial(logits, k, range.start as i64);
-        Ok(ShardPartial { md, topk })
+        let base = range.start as i64;
+        let (md, topk) = twopass::fused_partial(logits, k, base);
+        let sampled = sample.map(|spec| sample::scan_sampled(logits, k, base, spec));
+        Ok(ShardPartial { md, topk, sampled })
     }
 
     fn normalizer_tile(
@@ -395,6 +412,7 @@ impl ShardBackend for ArtifactsStub {
         logits: &[f32],
         _range: Range<usize>,
         _k: usize,
+        _sample: Option<SampleSpec>,
     ) -> std::result::Result<ShardPartial, Unsupported> {
         Err(self.decline(logits))
     }
@@ -475,11 +493,14 @@ impl ShardBackend for AutoBackend {
         logits: &[f32],
         range: Range<usize>,
         k: usize,
+        sample: Option<SampleSpec>,
     ) -> std::result::Result<ShardPartial, Unsupported> {
         match Self::route(logits.len(), k) {
-            ShardBackendKind::TwoPass => self.twopass.scan_tile(logits, range, k),
-            ShardBackendKind::Vectorized => self.vectorized.scan_tile(logits, range, k),
-            _ => self.scalar.scan_tile(logits, range, k),
+            ShardBackendKind::TwoPass => self.twopass.scan_tile(logits, range, k, sample),
+            ShardBackendKind::Vectorized => {
+                self.vectorized.scan_tile(logits, range, k, sample)
+            }
+            _ => self.scalar.scan_tile(logits, range, k, sample),
         }
     }
 
@@ -637,7 +658,7 @@ mod tests {
     #[test]
     fn scalar_backend_is_the_reference_scan() {
         let x = logits(3000, 1);
-        let part = HostScalar.scan_tile(&x, 0..x.len(), 5).unwrap();
+        let part = HostScalar.scan_tile(&x, 0..x.len(), 5, None).unwrap();
         let (md, buf) = fused::fused_partial(&x, 5, 0);
         assert_eq!(part.md, md);
         assert_eq!(part.topk.indices(), buf.indices());
@@ -649,8 +670,8 @@ mod tests {
     fn vectorized_backend_selects_identical_indices() {
         for n in [16usize, 100, 513, 4097] {
             let x = logits(n, n as u64);
-            let part = HostVectorized.scan_tile(&x, 0..n, 6).unwrap();
-            let reference = HostScalar.scan_tile(&x, 0..n, 6).unwrap();
+            let part = HostVectorized.scan_tile(&x, 0..n, 6, None).unwrap();
+            let reference = HostScalar.scan_tile(&x, 0..n, 6, None).unwrap();
             assert_eq!(part.topk.indices(), reference.topk.indices(), "n={n}");
             assert_eq!(part.md.m, reference.md.m, "n={n}");
             let (a, b) = (part.md.d, reference.md.d);
@@ -662,7 +683,7 @@ mod tests {
     fn vectorized_backend_declines_sub_stripe_tiles() {
         let x = logits(vectorized::LANES - 1, 9);
         assert!(!HostVectorized.supports(x.len(), 3));
-        let err = HostVectorized.scan_tile(&x, 0..x.len(), 3).unwrap_err();
+        let err = HostVectorized.scan_tile(&x, 0..x.len(), 3, None).unwrap_err();
         assert_eq!(err.backend, "vectorized");
         assert!(HostVectorized.normalizer_tile(&x, 0..x.len()).is_err());
         assert!(HostVectorized.supports(vectorized::LANES, 3));
@@ -671,7 +692,7 @@ mod tests {
     #[test]
     fn vectorized_backend_globalizes_indices() {
         let x = logits(64, 4);
-        let part = HostVectorized.scan_tile(&x, 1000..1064, 3).unwrap();
+        let part = HostVectorized.scan_tile(&x, 1000..1064, 3, None).unwrap();
         assert!(part.topk.indices().iter().all(|&i| (1000..1064).contains(&(i as usize))));
     }
 
@@ -681,8 +702,8 @@ mod tests {
         // stripe, sub-STRIPE, exact STRIPE multiples, and ragged tails.
         for n in [16usize, 100, 513, 1024, 4097] {
             let x = logits(n, n as u64);
-            let part = HostTwoPass.scan_tile(&x, 0..n, 6).unwrap();
-            let reference = HostScalar.scan_tile(&x, 0..n, 6).unwrap();
+            let part = HostTwoPass.scan_tile(&x, 0..n, 6, None).unwrap();
+            let reference = HostScalar.scan_tile(&x, 0..n, 6, None).unwrap();
             assert_eq!(part.topk.indices(), reference.topk.indices(), "n={n}");
             assert_eq!(part.md.m, reference.md.m, "n={n}");
             let (a, b) = (part.md.d, reference.md.d);
@@ -694,7 +715,7 @@ mod tests {
     fn twopass_backend_declines_sub_stripe_tiles() {
         let x = logits(vectorized::LANES - 1, 9);
         assert!(!HostTwoPass.supports(x.len(), 3));
-        let err = HostTwoPass.scan_tile(&x, 0..x.len(), 3).unwrap_err();
+        let err = HostTwoPass.scan_tile(&x, 0..x.len(), 3, None).unwrap_err();
         assert_eq!(err.backend, "twopass");
         assert!(HostTwoPass.normalizer_tile(&x, 0..x.len()).is_err());
         assert!(HostTwoPass.supports(vectorized::LANES, 3));
@@ -706,8 +727,8 @@ mod tests {
         // stripes, so per-stripe bases compose with the global offset.
         let n = 2 * twopass::STRIPE + 64;
         let x = logits(n, 4);
-        let part = HostTwoPass.scan_tile(&x, 50_000..50_000 + n, 3).unwrap();
-        let reference = HostScalar.scan_tile(&x, 50_000..50_000 + n, 3).unwrap();
+        let part = HostTwoPass.scan_tile(&x, 50_000..50_000 + n, 3, None).unwrap();
+        let reference = HostScalar.scan_tile(&x, 50_000..50_000 + n, 3, None).unwrap();
         assert_eq!(part.topk.indices(), reference.topk.indices());
         assert!(part
             .topk
@@ -729,11 +750,11 @@ mod tests {
     fn artifacts_stub_always_declines_at_runtime() {
         let x = logits(512, 2);
         assert!(ArtifactsStub.supports(x.len(), 5), "claims support up front");
-        let err = ArtifactsStub.scan_tile(&x, 0..512, 5).unwrap_err();
+        let err = ArtifactsStub.scan_tile(&x, 0..512, 5, None).unwrap_err();
         assert_eq!(err.backend, "artifacts-stub");
         assert!(ArtifactsStub.normalizer_tile(&x, 0..512).is_err());
         // Empty tiles exercise the interop path too, without panicking.
-        assert!(ArtifactsStub.scan_tile(&[], 0..0, 1).is_err());
+        assert!(ArtifactsStub.scan_tile(&[], 0..0, 1, None).is_err());
     }
 
     #[test]
@@ -741,21 +762,21 @@ mod tests {
         let auto = AutoBackend::default();
         // Middle-band tile → vectorized numerics (streaming d).
         let x = logits(512, 3);
-        let got = auto.scan_tile(&x, 0..512, 4).unwrap();
-        let vec = HostVectorized.scan_tile(&x, 0..512, 4).unwrap();
+        let got = auto.scan_tile(&x, 0..512, 4, None).unwrap();
+        let vec = HostVectorized.scan_tile(&x, 0..512, 4, None).unwrap();
         assert_eq!(got.md, vec.md);
         assert_eq!(got.topk.indices(), vec.topk.indices());
         // At/above the crossover → two-pass numerics (stripe d).
         let n = TWOPASS_CROSSOVER;
         let big = logits(n, 11);
-        let got = auto.scan_tile(&big, 0..n, 4).unwrap();
-        let tp = HostTwoPass.scan_tile(&big, 0..n, 4).unwrap();
+        let got = auto.scan_tile(&big, 0..n, 4, None).unwrap();
+        let tp = HostTwoPass.scan_tile(&big, 0..n, 4, None).unwrap();
         assert_eq!(got.md, tp.md);
         assert_eq!(got.topk.indices(), tp.topk.indices());
         // Sub-stripe tile → scalar numerics, not an error.
         let tiny = logits(5, 6);
-        let got = auto.scan_tile(&tiny, 0..5, 2).unwrap();
-        let scalar = HostScalar.scan_tile(&tiny, 0..5, 2).unwrap();
+        let got = auto.scan_tile(&tiny, 0..5, 2, None).unwrap();
+        let scalar = HostScalar.scan_tile(&tiny, 0..5, 2, None).unwrap();
         assert_eq!(got.md, scalar.md);
         assert_eq!(got.topk.indices(), scalar.topk.indices());
         // Normalizer-only path routes through the same bands.

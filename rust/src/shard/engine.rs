@@ -40,6 +40,7 @@ use std::sync::Arc;
 use crate::exec::sync::{AtomicUsize, Ordering};
 use crate::exec::{self, SchedPolicy, ThreadPool};
 use crate::metrics::{self, Counter};
+use crate::sample::SampleSpec;
 use crate::softmax::monoid::{self, MD};
 
 use super::backend::{self, ShardBackend, ShardBackendKind};
@@ -164,14 +165,25 @@ impl ShardEngine {
     /// returned partial carries global candidate indices.  This is the
     /// engine's only path to a backend for fused queries, so every
     /// tile is counted in `shard.backend.<name>.tiles`.
-    pub fn scan_tile(&self, tile: &[f32], range: Range<usize>, k: usize) -> ShardPartial {
+    ///
+    /// When `sample` is present the partial additionally carries the
+    /// Gumbel-top-k candidate state — the per-tile perturbations are
+    /// pure functions of `(seed, global index)`, so the fallback rerun
+    /// produces the identical sampled partial too.
+    pub fn scan_tile(
+        &self,
+        tile: &[f32],
+        range: Range<usize>,
+        k: usize,
+        sample: Option<SampleSpec>,
+    ) -> ShardPartial {
         assert_eq!(
             tile.len(),
             range.end - range.start,
             "tile slice must cover exactly its vocabulary range"
         );
         self.tile_ctr.inc();
-        match self.backend.scan_tile(tile, range.clone(), k) {
+        match self.backend.scan_tile(tile, range.clone(), k, sample) {
             Ok(part) => part,
             Err(unsupported) => {
                 self.fallback_ctr.inc();
@@ -180,7 +192,7 @@ impl ShardEngine {
                 // fallbacks counter is the always-on signal.
                 crate::debug!("shard.backend", "host fallback: {unsupported}");
                 self.fallback
-                    .scan_tile(tile, range, k)
+                    .scan_tile(tile, range, k, sample)
                     .expect("HostScalar is total over every tile geometry")
             }
         }
@@ -429,6 +441,74 @@ impl ShardEngine {
         k: usize,
         grid: &GridPlan,
     ) -> Vec<(Vec<f32>, Vec<i64>)> {
+        self.topk_batch_core(rows, k, grid, None)
+    }
+
+    /// Seeded Gumbel-top-k sampling fused into the same single-sweep
+    /// scan as [`Self::fused_topk`]: every tile additionally tracks the
+    /// top-k by perturbed score `x/T + Gumbel(seed, index)` while the
+    /// exact online normalizer accumulates, and the ⊕ tree reduction
+    /// merges sampled candidates exactly like deterministic top-k.
+    /// Returns `(vals, idx)` where `idx` is the sampled selection
+    /// (descending perturbed score) and `vals` the **untempered**
+    /// probabilities `e^{x−m}/d` of those tokens.  Selections are
+    /// bitwise-identical for a fixed spec across backends, scheduling
+    /// policies, and grid decompositions.
+    pub fn sampled_topk(&self, x: &[f32], k: usize, spec: SampleSpec) -> (Vec<f32>, Vec<i64>) {
+        self.sampled_topk_planned(x, k, &self.plan(x.len()), spec)
+    }
+
+    /// [`Self::sampled_topk`] under an explicit plan (the degenerate
+    /// 1×S grid, like its greedy counterpart).
+    pub fn sampled_topk_planned(
+        &self,
+        x: &[f32],
+        k: usize,
+        plan: &ShardPlan,
+        spec: SampleSpec,
+    ) -> (Vec<f32>, Vec<i64>) {
+        assert_eq!(plan.v(), x.len(), "plan does not cover the row");
+        self.sampled_topk_batch_planned(&[x], k, &GridPlan::single_row(*plan), spec)
+            .pop()
+            .expect("one row")
+    }
+
+    /// Batched [`Self::sampled_topk`] over same-length rows, tiled as
+    /// an R×S grid in one scheduling pass.  All rows share one spec —
+    /// per-row specs (mixed sampled/greedy batches) are composed by the
+    /// coordinator through [`Self::grid_map`] directly.
+    pub fn sampled_topk_batch(
+        &self,
+        rows: &[&[f32]],
+        k: usize,
+        spec: SampleSpec,
+    ) -> Vec<(Vec<f32>, Vec<i64>)> {
+        let v = rows.first().map_or(0, |r| r.len());
+        self.sampled_topk_batch_planned(rows, k, &self.grid_plan(rows.len(), v), spec)
+    }
+
+    /// [`Self::sampled_topk_batch`] under an explicit grid.
+    pub fn sampled_topk_batch_planned(
+        &self,
+        rows: &[&[f32]],
+        k: usize,
+        grid: &GridPlan,
+        spec: SampleSpec,
+    ) -> Vec<(Vec<f32>, Vec<i64>)> {
+        self.topk_batch_core(rows, k, grid, Some(spec))
+    }
+
+    /// Shared grid executor behind the greedy and sampled fused top-k
+    /// entry points: identical planning, scan dispatch, and ⊕ tree
+    /// reduction; only the finalization (deterministic vs sampled
+    /// ranking) differs.
+    fn topk_batch_core(
+        &self,
+        rows: &[&[f32]],
+        k: usize,
+        grid: &GridPlan,
+        sample: Option<SampleSpec>,
+    ) -> Vec<(Vec<f32>, Vec<i64>)> {
         assert_eq!(grid.rows(), rows.len(), "grid does not cover the batch");
         for r in rows {
             assert_eq!(r.len(), grid.v(), "all rows must match the planned length");
@@ -441,9 +521,17 @@ impl ShardEngine {
                     &x[tile.range.start..tile.range.end],
                     tile.range.start..tile.range.end,
                     k,
+                    sample,
                 )
             },
-            |_row, parts| reduce::tree_reduce(parts).finalize(),
+            |_row, parts| {
+                let merged = reduce::tree_reduce(parts);
+                if sample.is_some() {
+                    merged.finalize_sampled()
+                } else {
+                    merged.finalize()
+                }
+            },
         )
     }
 
@@ -960,6 +1048,59 @@ mod tests {
             let probs = eng.softmax(&x);
             let sum: f32 = probs.iter().sum();
             assert!((sum - 1.0).abs() < 1e-3, "backend {}: sum={sum}", kind.as_str());
+        }
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // multi-thousand-element rows; grid unsafe paths are miri-covered by the small tests
+    fn sampled_topk_is_decomposition_invariant_and_seeded() {
+        let eng = engine(4, 256);
+        let spec = SampleSpec { seed: 31, temperature: 0.9 };
+        let x = logits(10_000, 3);
+        let whole = eng.sampled_topk_planned(&x, 5, &ShardPlan::single(x.len()), spec);
+        for shards in [2usize, 3, 7, 16] {
+            let got = eng.sampled_topk_planned(&x, 5, &ShardPlan::with_shards(x.len(), shards), spec);
+            assert_eq!(got.1, whole.1, "shards={shards}: selections must be bitwise");
+        }
+        // Different seeds diverge; the greedy path is untouched.
+        let other = eng.sampled_topk(&x, 5, SampleSpec { seed: 32, temperature: 0.9 });
+        assert_ne!(other.1, whole.1);
+        assert_ne!(whole.1, eng.fused_topk(&x, 5).1, "sampling should usually differ from greedy");
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // multi-row 4k grids; grid unsafe paths are miri-covered by the small tests
+    fn sampled_grid_batch_matches_per_row_dispatch_bitwise() {
+        let eng = engine(4, 256);
+        let spec = SampleSpec { seed: 77, temperature: 1.3 };
+        let data: Vec<Vec<f32>> = (0..5).map(|i| logits(4097, 90 + i as u64)).collect();
+        let rows: Vec<&[f32]> = data.iter().map(|r| r.as_slice()).collect();
+        let got = eng.sampled_topk_batch(&rows, 6, spec);
+        for (row, out) in rows.iter().zip(&got) {
+            assert_eq!(*out, eng.sampled_topk(row, 6, spec), "grid sampled topk must be bitwise");
+        }
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // 3k-element row per backend; grid unsafe paths are miri-covered by the small tests
+    fn every_backend_kind_produces_identical_sampled_selections() {
+        let x = logits(3000, 43);
+        let plan = ShardPlan::with_shards(3000, 5);
+        let spec = SampleSpec { seed: 7, temperature: 0.8 };
+        let mut selections = Vec::new();
+        for kind in ShardBackendKind::all() {
+            let eng = ShardEngine::new(ShardEngineConfig {
+                workers: 2,
+                min_shard: 1,
+                threshold: 1,
+                backend: kind,
+                ..ShardEngineConfig::default()
+            });
+            let (_, idx) = eng.sampled_topk_planned(&x, 5, &plan, spec);
+            selections.push((kind.as_str(), idx));
+        }
+        for (name, idx) in &selections[1..] {
+            assert_eq!(idx, &selections[0].1, "backend {name} diverged from scalar");
         }
     }
 

@@ -9,6 +9,7 @@
 //! tree: log-depth (parallelizable) and slightly *better* fp accuracy
 //! than a left fold (error grows with tree depth, not shard count).
 
+use crate::sample::{self, SampleSpec, SampledBuffer};
 use crate::softmax::fused;
 use crate::softmax::monoid::MD;
 use crate::topk::TopKBuffer;
@@ -20,19 +21,37 @@ pub struct ShardPartial {
     pub md: MD,
     /// Shard-local top-k candidates carrying global indices.
     pub topk: TopKBuffer,
+    /// Shard-local Gumbel-top-k candidates (perturbed-score selection),
+    /// present iff the query is sampled.  Because each perturbation is
+    /// a pure function of `(seed, global index)`, this state obeys the
+    /// same ⊕ merge law as `topk` — see `docs/BACKENDS.md`.
+    pub sampled: Option<SampledBuffer>,
 }
 
 impl ShardPartial {
     /// Scan one shard slice in a single fused sweep (Algorithm 4's
     /// loop over `[base, base + x.len())` of the global row).
     pub fn scan(x: &[f32], k: usize, base: i64) -> ShardPartial {
+        Self::scan_with(x, k, base, None)
+    }
+
+    /// [`Self::scan`] with an optional sampled (Gumbel-top-k) state:
+    /// the same single sweep additionally tracks the top-k by seeded
+    /// perturbed score when `spec` is present.
+    pub fn scan_with(
+        x: &[f32],
+        k: usize,
+        base: i64,
+        spec: Option<SampleSpec>,
+    ) -> ShardPartial {
         let (md, topk) = fused::fused_partial(x, k, base);
-        ShardPartial { md, topk }
+        let sampled = spec.map(|s| sample::scan_sampled(x, k, base, s));
+        ShardPartial { md, topk, sampled }
     }
 
     /// An empty partial (the reduction identity).
     pub fn identity(k: usize) -> ShardPartial {
-        ShardPartial { md: MD::IDENTITY, topk: TopKBuffer::new(k) }
+        ShardPartial { md: MD::IDENTITY, topk: TopKBuffer::new(k), sampled: None }
     }
 
     /// Associative merge: ⊕ on `(m, d)`, buffer-merge on the top-k.
@@ -66,12 +85,34 @@ impl ShardPartial {
     pub fn merge(mut self, other: ShardPartial) -> ShardPartial {
         self.md = self.md.combine(other.md);
         self.topk.merge(&other.topk);
+        // Sampled state merges under the same law; an absent side (the
+        // identity partial, or an unsampled query) is neutral.
+        self.sampled = match (self.sampled.take(), other.sampled) {
+            (Some(mut a), Some(b)) => {
+                a.merge(&b);
+                Some(a)
+            }
+            (a, b) => a.or(b),
+        };
         self
     }
 
     /// Lines 17–19 of Algorithm 4 over the merged state.
     pub fn finalize(&self) -> (Vec<f32>, Vec<i64>) {
         fused::finalize(&self.topk, self.md)
+    }
+
+    /// Sampled-selection finalization: the untempered probability
+    /// `e^{x−m}/d` of each Gumbel-top-k candidate, in descending
+    /// perturbed-score order.  Panics if the partial was scanned
+    /// without a [`SampleSpec`] — callers route here only for sampled
+    /// queries.
+    pub fn finalize_sampled(&self) -> (Vec<f32>, Vec<i64>) {
+        let buf = self
+            .sampled
+            .as_ref()
+            .expect("finalize_sampled on a partial scanned without a SampleSpec");
+        sample::finalize_sampled(buf, self.md)
     }
 }
 
@@ -169,5 +210,55 @@ mod tests {
     #[should_panic(expected = "zero shard partials")]
     fn empty_reduction_panics() {
         tree_reduce(Vec::new());
+    }
+
+    fn sampled_partials(
+        x: &[f32],
+        k: usize,
+        shards: usize,
+        spec: SampleSpec,
+    ) -> Vec<ShardPartial> {
+        ShardPlan::with_shards(x.len(), shards)
+            .ranges()
+            .map(|r| ShardPartial::scan_with(&x[r.start..r.end], k, r.start as i64, Some(spec)))
+            .collect()
+    }
+
+    #[test]
+    fn sampled_tree_reduce_equals_whole_row_scan() {
+        let x = logits(5000, 21);
+        let k = 6;
+        let spec = SampleSpec { seed: 17, temperature: 0.8 };
+        let whole = ShardPartial::scan_with(&x, k, 0, Some(spec));
+        let (want_vals, want_idx) = whole.finalize_sampled();
+        assert_eq!(want_idx.len(), k);
+        for shards in [1usize, 2, 3, 4, 7, 16, 64] {
+            let merged = tree_reduce(sampled_partials(&x, k, shards, spec));
+            let (vals, idx) = merged.finalize_sampled();
+            // Selections are bitwise-identical under any decomposition:
+            // perturbed scores are pure functions of (seed, index).
+            assert_eq!(idx, want_idx, "shards={shards}");
+            for (a, b) in vals.iter().zip(&want_vals) {
+                assert!((a - b).abs() <= 2e-5 * a.max(*b), "shards={shards}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn sampled_merge_with_identity_is_neutral() {
+        let x = logits(600, 23);
+        let spec = SampleSpec { seed: 3, temperature: 1.0 };
+        let part = ShardPartial::scan_with(&x, 4, 0, Some(spec));
+        let want = part.finalize_sampled();
+        let merged = part.clone().merge(ShardPartial::identity(4));
+        assert_eq!(merged.finalize_sampled().1, want.1);
+        let merged = ShardPartial::identity(4).merge(part);
+        assert_eq!(merged.finalize_sampled().1, want.1);
+    }
+
+    #[test]
+    fn unsampled_scan_has_no_sampled_state() {
+        let part = ShardPartial::scan(&logits(64, 1), 3, 0);
+        assert!(part.sampled.is_none());
     }
 }

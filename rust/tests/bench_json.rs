@@ -1,12 +1,12 @@
-//! Schema test for the machine-readable bench report (`bench --json`).
+//! Schema tests for the machine-readable bench reports (`bench --json`).
 //!
-//! Runs the real binary end-to-end — `bench --fig backend --smoke
-//! --json FILE` — and asserts the emitted document matches the
-//! `osmax.bench.backend.v1` schema that the committed
-//! `BENCH_backend.json` trajectory (and any tooling that consumes it)
-//! depends on.  A unit test inside `benches::` covers the emitter
-//! function; this test covers the CLI plumbing on top of it, so a
-//! regression in either the `--json` flag or the report shape fails
+//! Runs the real binary end-to-end — `bench --fig backend|sample
+//! --smoke --json FILE` — and asserts the emitted documents match the
+//! `osmax.bench.backend.v1` / `osmax.bench.sample.v1` schemas that the
+//! committed `BENCH_backend.json` trajectory (and any tooling that
+//! consumes the reports) depends on.  Unit tests inside `benches::`
+//! cover the emitter functions; these cover the CLI plumbing on top, so
+//! a regression in either the `--json` flag or a report shape fails
 //! loudly.
 
 use std::process::Command;
@@ -66,6 +66,62 @@ fn bench_backend_smoke_emits_schema_document() {
         assert!(r.get("vocab").unwrap().as_f64().unwrap() > 0.0);
         assert!(r.get("batch").unwrap().as_f64().unwrap() > 0.0);
         assert!(r.get("k").unwrap().as_f64().unwrap() > 0.0);
+        assert!(r.get("p50_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(r.get("ns_per_element").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn bench_sample_smoke_emits_schema_document() {
+    let path = std::env::temp_dir()
+        .join(format!("osmax-bench-sample-json-e2e-{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+
+    let out = Command::new(env!("CARGO_BIN_EXE_onlinesoftmax"))
+        .args([
+            "bench",
+            "--fig",
+            "sample",
+            "--smoke",
+            "--threads",
+            "2",
+            "--json",
+            path.to_str().unwrap(),
+        ])
+        .env("OSMAX_BENCH_FAST", "1")
+        .output()
+        .expect("spawn bench binary");
+    assert!(
+        out.status.success(),
+        "bench exited with {:?}\nstdout: {}\nstderr: {}",
+        out.status.code(),
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    let text = std::fs::read_to_string(&path).expect("report file written");
+    let doc = json::parse(&text).expect("report parses as JSON");
+
+    assert_eq!(doc.get("schema").unwrap().as_str().unwrap(), "osmax.bench.sample.v1");
+    assert_eq!(doc.get("fig").unwrap().as_str().unwrap(), "sample");
+    assert!(!doc.get("git").unwrap().as_str().unwrap().is_empty());
+    assert_eq!(doc.get("smoke").unwrap().as_bool(), Some(true));
+    assert!(doc.get("workers").unwrap().as_f64().unwrap() >= 1.0);
+
+    let records = doc.get("records").unwrap().as_array().unwrap();
+    // Smoke profile: one vocab size × (greedy, sampled) arms.
+    assert_eq!(records.len(), 2, "records: {text}");
+    let mut modes: Vec<&str> =
+        records.iter().map(|r| r.get("mode").unwrap().as_str().unwrap()).collect();
+    modes.sort_unstable();
+    assert_eq!(modes, ["greedy", "sampled"]);
+    for r in records {
+        assert!(r.get("vocab").unwrap().as_f64().unwrap() > 0.0);
+        assert!(r.get("batch").unwrap().as_f64().unwrap() > 0.0);
+        assert!(r.get("k").unwrap().as_f64().unwrap() > 0.0);
+        assert!(r.get("temperature").unwrap().as_f64().unwrap() > 0.0);
         assert!(r.get("p50_s").unwrap().as_f64().unwrap() > 0.0);
         assert!(r.get("ns_per_element").unwrap().as_f64().unwrap() > 0.0);
     }

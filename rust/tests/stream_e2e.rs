@@ -158,6 +158,79 @@ fn generate_stream_matches_sequential_v1_lm_steps() {
     }
 }
 
+/// Seeded sampling end to end over TCP: the same `(seed, temperature)`
+/// replays a bitwise-identical stream — tokens, candidate sets, and
+/// probabilities — on fresh sessions and fresh connections; a different
+/// seed takes a different trajectory; and the sampling-free request
+/// shape is pinned to stay exactly the greedy decode it always was.
+#[test]
+fn sampled_generate_is_seed_reproducible_over_the_wire() {
+    let server = start_server(&host_config());
+    const N: usize = 6;
+    let prompt = [3i32, 9];
+
+    let run = |seed: Option<u64>, temperature: Option<f32>| {
+        let mut client = Client::connect(&server.addr).unwrap();
+        client.set_seed(seed);
+        client.set_temperature(temperature);
+        let sid = client.open_session().unwrap();
+        let frames = client.generate_all(sid, &prompt, N, Some(4)).unwrap();
+        assert_eq!(frames.len(), N);
+        frames
+            .iter()
+            .map(|f| (f.token, f.idx.clone(), f.vals.clone()))
+            .collect::<Vec<_>>()
+    };
+
+    // Same seed ⇒ bitwise-identical stream, across connections/sessions.
+    let a = run(Some(42), Some(0.8));
+    let b = run(Some(42), Some(0.8));
+    assert_eq!(a, b, "same seed must replay the stream bitwise");
+
+    // A different seed diverges (different perturbation stream).
+    let c = run(Some(43), Some(0.8));
+    assert_ne!(a, c, "different seeds must take different trajectories");
+
+    // Greedy regression pin: no sampling options ≡ explicit neutral
+    // temperature — the pre-sampling wire shape still serves the exact
+    // greedy decode.
+    let greedy = run(None, None);
+    let neutral = run(None, Some(1.0));
+    assert_eq!(greedy, neutral, "temperature 1.0 without a seed is greedy");
+    assert_ne!(a, greedy, "a tempered seeded stream is not the greedy stream");
+}
+
+/// The stateless sampled ops over the wire: seeded `decode` is
+/// reproducible and seed-sensitive, and tempered decode *without* a
+/// seed is refused with the typed error (the executor-side pairing
+/// rule, observed end to end).
+#[test]
+fn sampled_decode_over_the_wire_is_seeded_and_validated() {
+    let server = start_server(&host_config());
+    let mut client = Client::connect(&server.addr).unwrap();
+    let hidden: Vec<f32> = (0..32).map(|i| (i as f32) * 0.1 - 1.5).collect();
+
+    client.set_seed(Some(7));
+    client.set_temperature(Some(0.7));
+    let a = client.decode(&hidden, Some(5)).unwrap();
+    let b = client.decode(&hidden, Some(5)).unwrap();
+    assert_eq!(a, b, "same seed, same payload ⇒ same sampled answer");
+
+    client.set_seed(Some(8));
+    let c = client.decode(&hidden, Some(5)).unwrap();
+    assert_ne!(a, c, "a different seed must sample differently");
+
+    // Tempered greedy is a typed invalid_argument, not a silent fallback.
+    client.set_seed(None);
+    let err = client.decode(&hidden, Some(5)).unwrap_err();
+    assert!(format!("{err}").contains("invalid_argument"), "{err}");
+
+    // The connection survives and plain greedy still serves.
+    client.set_temperature(None);
+    let (vals, _) = client.decode(&hidden, Some(5)).unwrap();
+    assert_eq!(vals.len(), 5);
+}
+
 /// Concurrent generation streams must share decode batches: the
 /// whole point of moving the loop server-side.  Witnessed by the
 /// `coordinator.batch.lm_step.peak` gauge (a monotone high-water mark
