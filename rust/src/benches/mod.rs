@@ -21,6 +21,9 @@
 //! * [`sample_ablation`] — greedy fused top-k vs seeded Gumbel-top-k
 //!   sampling on the same batch×shard grid: the per-element overhead of
 //!   fusing the counter-based perturbation into the single-sweep scan
+//! * [`cache_fig`] — the coalescing result-cache front: cold-miss vs
+//!   cache-hit QPS through the full coordinator submit/batch/reply
+//!   path, with the hit rate read back from the front's counters
 //!
 //! **Hardware scaling** (DESIGN.md §Hardware-Adaptation): the paper's
 //! batch-4000 × V-100k workloads size the *GPU's* DRAM; on this CPU we
@@ -32,10 +35,13 @@
 //! the access-count ratios (4/3 for softmax, 5/1 for fused topk).
 
 use std::io::Write;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::benchkit::{bench, black_box, fmt_time, BenchConfig, Stats, Table};
+use crate::config::{BackendKind, ServeConfig};
+use crate::coordinator::{Coordinator, Payload};
 use crate::exec::SchedPolicy;
 use crate::rng::Xoshiro256pp;
 use crate::sample::SampleSpec;
@@ -452,6 +458,7 @@ pub fn grid_ablation(opts: &BenchOpts) -> Result<()> {
         "grid/per-row",
         "GB/s grid",
     ]);
+    let mut report_records: Vec<crate::json::Value> = Vec::new();
     for &v in &sizes {
         let data = make_batch(batch, v, v as u64);
         let rows: Vec<&[f32]> = data.chunks_exact(v).collect();
@@ -490,9 +497,22 @@ pub fn grid_ablation(opts: &BenchOpts) -> Result<()> {
             .set("per_row_s", crate::json::Value::Number(per_row.median))
             .set("grid_s", crate::json::Value::Number(grid_t.median))
             .set("speedup_grid_vs_per_row", crate::json::Value::Number(speedup));
+        report_records.push(rec.clone());
         opts.emit(&rec)?;
     }
     println!("{}", table.render());
+    if let Some(path) = &opts.json_report {
+        let mut report = crate::json::Value::object();
+        report
+            .set("schema", crate::json::Value::String("osmax.bench.grid.v1".into()))
+            .set("fig", crate::json::Value::String("grid".into()))
+            .set("git", crate::json::Value::String(git_describe()))
+            .set("smoke", crate::json::Value::Bool(opts.smoke))
+            .set("workers", crate::json::Value::Number(workers as f64))
+            .set("records", crate::json::Value::Array(report_records));
+        std::fs::write(path, report.to_json() + "\n")?;
+        println!("wrote grid report → {path}");
+    }
     println!(
         "expected shape: the grid wins whenever per-row join gaps leave workers\n\
          idle — widest at small V·shards (join overhead dominates) and at\n\
@@ -571,6 +591,7 @@ pub fn steal_ablation(opts: &BenchOpts) -> Result<()> {
         "steal/fifo",
         "steals",
     ]);
+    let mut report_records: Vec<crate::json::Value> = Vec::new();
     for &v in &sizes {
         let data = make_batch(batch, v, v as u64);
         let rows: Vec<&[f32]> = data.chunks_exact(v).collect();
@@ -627,11 +648,25 @@ pub fn steal_ablation(opts: &BenchOpts) -> Result<()> {
                 .set("skew", crate::json::Value::Number(skew as f64))
                 .set("fifo_p50_s", crate::json::Value::Number(fifo_t.median))
                 .set("steal_p50_s", crate::json::Value::Number(steal_t.median))
-                .set("speedup_steal_vs_fifo", crate::json::Value::Number(speedup));
+                .set("speedup_steal_vs_fifo", crate::json::Value::Number(speedup))
+                .set("steals", crate::json::Value::Number(stolen as f64));
+            report_records.push(rec.clone());
             opts.emit(&rec)?;
         }
     }
     println!("{}", table.render());
+    if let Some(path) = &opts.json_report {
+        let mut report = crate::json::Value::object();
+        report
+            .set("schema", crate::json::Value::String("osmax.bench.steal.v1".into()))
+            .set("fig", crate::json::Value::String("steal".into()))
+            .set("git", crate::json::Value::String(git_describe()))
+            .set("smoke", crate::json::Value::Bool(opts.smoke))
+            .set("workers", crate::json::Value::Number(workers as f64))
+            .set("records", crate::json::Value::Array(report_records));
+        std::fs::write(path, report.to_json() + "\n")?;
+        println!("wrote steal report → {path}");
+    }
     println!(
         "expected shape: ~1.00x on uniform costs (stealing has nothing to\n\
          rebalance and must not regress); > 1x on the skewed arm, growing with\n\
@@ -967,6 +1002,145 @@ pub fn sample_ablation(opts: &BenchOpts) -> Result<()> {
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// Cache figure: cold-miss vs cache-hit QPS through the coordinator
+// ---------------------------------------------------------------------------
+
+/// The coalescing result-cache front under a cache-friendly workload:
+/// a small set of distinct softmax payloads driven through the *full*
+/// coordinator path (submit → front → batcher → executor → reply).
+///
+/// Two phases over one coordinator instance:
+///
+/// * **cold** — each distinct payload once: every call misses, runs
+///   the kernel, and populates the LRU (the front counts one miss per
+///   payload).
+/// * **hot** — `requests` calls cycling the same payloads: every call
+///   resolves at the front without touching the batcher.
+///
+/// The hit rate is read back from [`Coordinator::cache_stats`] and
+/// asserted, so the figure doubles as a rot check on the front: if
+/// caching silently broke, the hot phase would stop hitting and the
+/// run fails rather than quietly reporting kernel QPS as hit QPS.
+///
+/// `bench --fig cache --json FILE` writes an `osmax.bench.cache.v1`
+/// report in the `BENCH_backend.json` style.
+pub fn cache_fig(opts: &BenchOpts) -> Result<()> {
+    let v = opts
+        .sizes
+        .as_ref()
+        .and_then(|s| s.first().copied())
+        .unwrap_or(if opts.smoke { 1_024 } else { 8_192 });
+    let distinct = opts.batch.unwrap_or(8).max(1);
+    let requests = if opts.smoke { 64 } else { 2_048 };
+    let timeout = Duration::from_secs(30);
+
+    let mut cfg = ServeConfig::default();
+    cfg.backend = BackendKind::Host;
+    cfg.vocab = v;
+    cfg.hidden = 32;
+    cfg.cache_capacity = distinct * 2;
+    cfg.cache_coalesce = true;
+    cfg.workers = if opts.threads <= 1 { 2 } else { opts.threads };
+    let coord = Coordinator::start(&cfg)?;
+
+    println!(
+        "\n=== cache: result-cache front, cold miss vs hot hit \
+         (V={v}, {distinct} distinct payloads, {requests} hot requests) ==="
+    );
+    let payloads: Vec<Vec<f32>> = (0..distinct)
+        .map(|i| {
+            let mut rng = Xoshiro256pp::seed_from_u64(0xCAC4E + i as u64);
+            rng.logits(v, 6.0)
+        })
+        .collect();
+
+    let call = |logits: Vec<f32>| -> Result<()> {
+        match coord.call(Payload::Softmax { logits }, timeout) {
+            Ok(_) => Ok(()),
+            Err(e) => anyhow::bail!("cache-fig softmax failed: {e}"),
+        }
+    };
+
+    let t0 = Instant::now();
+    for p in &payloads {
+        call(p.clone())?;
+    }
+    let cold = t0.elapsed();
+    let after_cold = coord.cache_stats();
+
+    let t1 = Instant::now();
+    for i in 0..requests {
+        call(payloads[i % distinct].clone())?;
+    }
+    let hot = t1.elapsed();
+    let stats = coord.cache_stats();
+    coord.shutdown();
+
+    let hot_hits = stats.hits - after_cold.hits;
+    anyhow::ensure!(
+        hot_hits == requests as u64,
+        "hot phase expected {requests} cache hits, front counted {hot_hits} \
+         (misses {} → {})",
+        after_cold.misses,
+        stats.misses
+    );
+    let miss_qps = distinct as f64 / cold.as_secs_f64();
+    let hit_qps = requests as f64 / hot.as_secs_f64();
+    let total = (stats.hits + stats.misses) as f64;
+    let hit_rate = stats.hits as f64 / total.max(1.0);
+
+    let mut table = Table::new(&[
+        "V",
+        "distinct",
+        "requests",
+        "miss QPS",
+        "hit QPS",
+        "hit/miss",
+        "hit rate",
+    ]);
+    table.row(vec![
+        v.to_string(),
+        distinct.to_string(),
+        requests.to_string(),
+        format!("{miss_qps:.0}"),
+        format!("{hit_qps:.0}"),
+        format!("{:.1}x", hit_qps / miss_qps),
+        format!("{:.3}", hit_rate),
+    ]);
+    println!("{}", table.render());
+
+    let mut rec = crate::json::Value::object();
+    rec.set("bench", crate::json::Value::String("cache_fig".into()))
+        .set("v", crate::json::Value::Number(v as f64))
+        .set("distinct", crate::json::Value::Number(distinct as f64))
+        .set("requests", crate::json::Value::Number(requests as f64))
+        .set("miss_qps", crate::json::Value::Number(miss_qps))
+        .set("hit_qps", crate::json::Value::Number(hit_qps))
+        .set("hits", crate::json::Value::Number(stats.hits as f64))
+        .set("misses", crate::json::Value::Number(stats.misses as f64))
+        .set("hit_rate", crate::json::Value::Number(hit_rate));
+    opts.emit(&rec)?;
+
+    if let Some(path) = &opts.json_report {
+        let mut report = crate::json::Value::object();
+        report
+            .set("schema", crate::json::Value::String("osmax.bench.cache.v1".into()))
+            .set("fig", crate::json::Value::String("cache".into()))
+            .set("git", crate::json::Value::String(git_describe()))
+            .set("smoke", crate::json::Value::Bool(opts.smoke))
+            .set("records", crate::json::Value::Array(vec![rec]));
+        std::fs::write(path, report.to_json() + "\n")?;
+        println!("wrote cache report → {path}");
+    }
+    println!(
+        "expected shape: hit QPS orders of magnitude above miss QPS — a hit is\n\
+         one front lookup (no batcher, no kernel); the gap narrows only if the\n\
+         cached payloads are small enough that the kernel itself is trivial."
+    );
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1092,6 +1266,74 @@ mod tests {
         for r in records {
             assert!(r.get("mode").unwrap().as_str().is_some());
             assert!(r.get("ns_per_element").unwrap().as_f64().unwrap() > 0.0);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn cache_fig_runs_and_reports_schema_document() {
+        let mut o = fast_opts();
+        let path = std::env::temp_dir()
+            .join(format!("osmax-cache-report-{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        o.json_report = Some(path.display().to_string());
+        o.sizes = Some(vec![256]);
+        o.batch = Some(4); // 4 distinct payloads
+        o.smoke = true; // 64 hot requests
+        cache_fig(&o).unwrap();
+        let doc = crate::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("fig").unwrap().as_str().unwrap(), "cache");
+        assert_eq!(doc.get("schema").unwrap().as_str().unwrap(), "osmax.bench.cache.v1");
+        assert!(doc.get("git").unwrap().as_str().is_some());
+        let records = doc.get("records").unwrap().as_array().unwrap();
+        assert_eq!(records.len(), 1);
+        let r = &records[0];
+        assert!(r.get("hit_qps").unwrap().as_f64().unwrap() > 0.0);
+        assert!(r.get("miss_qps").unwrap().as_f64().unwrap() > 0.0);
+        assert!(r.get("hit_rate").unwrap().as_f64().unwrap() > 0.5);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn grid_json_report_is_a_single_schema_document() {
+        let mut o = fast_opts();
+        let path = std::env::temp_dir()
+            .join(format!("osmax-grid-report-{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        o.json_report = Some(path.display().to_string());
+        o.sizes = Some(vec![8192]);
+        o.batch = Some(3);
+        o.threads = 2;
+        grid_ablation(&o).unwrap();
+        let doc = crate::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("fig").unwrap().as_str().unwrap(), "grid");
+        assert_eq!(doc.get("schema").unwrap().as_str().unwrap(), "osmax.bench.grid.v1");
+        let records = doc.get("records").unwrap().as_array().unwrap();
+        assert_eq!(records.len(), 1, "one record per size");
+        assert!(records[0].get("speedup_grid_vs_per_row").unwrap().as_f64().unwrap() > 0.0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn steal_json_report_is_a_single_schema_document() {
+        let mut o = fast_opts();
+        let path = std::env::temp_dir()
+            .join(format!("osmax-steal-report-{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        o.json_report = Some(path.display().to_string());
+        o.sizes = None; // smoke defaults: one size
+        o.batch = None;
+        o.threads = 2;
+        o.smoke = true;
+        steal_ablation(&o).unwrap();
+        let doc = crate::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("fig").unwrap().as_str().unwrap(), "steal");
+        assert_eq!(doc.get("schema").unwrap().as_str().unwrap(), "osmax.bench.steal.v1");
+        let records = doc.get("records").unwrap().as_array().unwrap();
+        assert_eq!(records.len(), 2, "uniform + skewed per size");
+        for r in records {
+            assert!(r.get("cost_shape").unwrap().as_str().is_some());
+            assert!(r.get("speedup_steal_vs_fifo").unwrap().as_f64().unwrap() > 0.0);
         }
         std::fs::remove_file(&path).ok();
     }

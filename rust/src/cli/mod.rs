@@ -173,7 +173,7 @@ pub fn help_text(version: &str) -> String {
            --config FILE        JSON config (defaults + CLI overrides)\n\
            --addr HOST:PORT     bind address        [127.0.0.1:7070]\n\
            --artifacts DIR      AOT artifacts dir   [artifacts]\n\
-           --backend B          auto|artifacts|host [auto]\n\
+           --backend B          auto|artifacts|host|router [auto]\n\
            --mode safe|online   softmax strategy    [online]\n\
            --shards N           vocabulary shards (artifact backend) [1]\n\
            --vocab N            served vocab (host backend)   [8192]\n\
@@ -204,9 +204,19 @@ pub fn help_text(version: &str) -> String {
            --request-timeout MS per-request handling budget; per-request\n\
                                 deadline_ms tightens it\n\
                                 (env default: OSMAX_REQUEST_TIMEOUT) [60000]\n\
-           --seed N             synthetic-model RNG seed      [0xC0FFEE]\n\n\
+           --seed N             synthetic-model RNG seed      [0xC0FFEE]\n\
+           --worker-slice S:E   router-tier worker role: assigned vocab\n\
+                                slice (advisory; published as gauges)\n\
+           --router-workers L   router backend: comma-separated worker\n\
+                                host:port list, one vocab slice each\n\
+           --router-probe-ms MS router worker health-probe period [500]\n\
+           --router-shard-timeout-ms MS  per-shard call budget; a late\n\
+                                shard is excluded + requeued    [2000]\n\
+           --router-hedge-quantile Q  duplicate a shard still running\n\
+                                past this latency quantile onto a\n\
+                                second worker (0 = off)         [0]\n\n\
          BENCH OPTIONS:\n\
-           --fig 1|2|3|4|k|ablation|grid|steal|backend|sample|all  figure/study  [all]\n\
+           --fig 1|2|3|4|k|ablation|grid|steal|backend|sample|cache|all  figure/study  [all]\n\
            --sizes a,b,c        vector sizes V override\n\
            --batch N            batch size override\n\
            --threads N          worker threads for parallel/sharded variants\n\
@@ -230,7 +240,13 @@ pub fn help_text(version: &str) -> String {
            --temperature T      sampling temperature sent with every\n\
                                 request (values != 1 need --seed)\n\
            --seed N             Gumbel-top-k sampling seed; switches\n\
-                                decode/generate ops to seeded sampling\n"
+                                decode/generate ops to seeded sampling\n\
+           --target T           single|router|both: which topologies to\n\
+                                drive; `both` runs the same load against\n\
+                                --addr and --router-addr and reports\n\
+                                per-class percentiles for each [single]\n\
+           --router-addr H:P    router-tier address for --target\n\
+                                router|both       [127.0.0.1:7080]\n"
     )
 }
 

@@ -53,6 +53,10 @@ pub enum BackendKind {
     /// In-process host kernels: the shard-reduction engine for large
     /// vocabularies, single-thread kernels below the threshold.
     Host,
+    /// Router tier: fan vocabulary shards out over worker processes
+    /// (`--router-workers`) as `shard_scan` frames and ⊕-merge the
+    /// partials locally (see `docs/ARCHITECTURE.md` §router tier).
+    Router,
 }
 
 impl BackendKind {
@@ -61,7 +65,10 @@ impl BackendKind {
             "auto" => Ok(BackendKind::Auto),
             "artifacts" => Ok(BackendKind::Artifacts),
             "host" => Ok(BackendKind::Host),
-            _ => bail!("invalid backend `{s}` (expected `auto`, `artifacts`, or `host`)"),
+            "router" => Ok(BackendKind::Router),
+            _ => bail!(
+                "invalid backend `{s}` (expected `auto`, `artifacts`, `host`, or `router`)"
+            ),
         }
     }
 
@@ -70,8 +77,22 @@ impl BackendKind {
             BackendKind::Auto => "auto",
             BackendKind::Artifacts => "artifacts",
             BackendKind::Host => "host",
+            BackendKind::Router => "router",
         }
     }
+}
+
+/// Parse a `START:END` vocabulary slice (half-open, `START < END`).
+fn parse_slice(s: &str) -> Result<(usize, usize)> {
+    let Some((a, b)) = s.split_once(':') else {
+        bail!("invalid slice `{s}` (expected START:END)");
+    };
+    let start: usize = a.trim().parse().with_context(|| format!("slice start in `{s}`"))?;
+    let end: usize = b.trim().parse().with_context(|| format!("slice end in `{s}`"))?;
+    if start >= end {
+        bail!("invalid slice `{s}`: start must be < end");
+    }
+    Ok((start, end))
 }
 
 /// Full serving configuration.
@@ -149,6 +170,27 @@ pub struct ServeConfig {
     /// it, never extends it).  JSON `request_timeout_ms`, CLI
     /// `--request-timeout` (ms), env default `OSMAX_REQUEST_TIMEOUT`.
     pub request_timeout: Duration,
+    /// Worker-role marker for a router-tier deployment: the vocabulary
+    /// slice this server is assigned, as half-open `(start, end)`.
+    /// Advisory (published as `worker.slice.*` gauges) — `shard_scan`
+    /// ranges are not restricted to it, so the router can requeue an
+    /// excluded worker's slice onto any peer.  JSON/CLI `START:END`.
+    pub worker_slice: Option<(usize, usize)>,
+    /// Worker addresses for the router backend, one vocabulary slice
+    /// per worker (`ShardPlan::with_shards(vocab, workers.len())`).
+    /// JSON `router_workers` (string array), CLI `--router-workers`
+    /// (comma-separated `host:port` list).
+    pub router_workers: Vec<String>,
+    /// Router health-probe period in milliseconds.
+    pub router_probe_ms: u64,
+    /// Router per-shard call budget (connect + roundtrip) in
+    /// milliseconds; a shard exceeding it is excluded and requeued.
+    pub router_shard_timeout_ms: u64,
+    /// Straggler-hedging latency quantile in `[0, 1)`: a shard still
+    /// outstanding past this quantile of recent shard latencies is
+    /// duplicated onto a second healthy worker (first reply wins).
+    /// `0` disables hedging (the default).
+    pub router_hedge_quantile: f64,
 }
 
 /// `OSMAX_REQUEST_TIMEOUT` (integer milliseconds) overrides the
@@ -196,6 +238,11 @@ impl Default for ServeConfig {
             // layers override the env.
             shard_backend: ShardBackendKind::from_env_or(ShardBackendKind::Auto),
             request_timeout: request_timeout_from_env_or(Duration::from_secs(60)),
+            worker_slice: None,
+            router_workers: Vec::new(),
+            router_probe_ms: 500,
+            router_shard_timeout_ms: 2_000,
+            router_hedge_quantile: 0.0,
         }
     }
 }
@@ -280,6 +327,28 @@ impl ServeConfig {
         if let Some(n) = v.get("request_timeout_ms").and_then(Value::as_usize) {
             cfg.request_timeout = Duration::from_millis(n as u64);
         }
+        if let Some(s) = v.get("worker_slice").and_then(Value::as_str) {
+            cfg.worker_slice = Some(parse_slice(s)?);
+        }
+        if let Some(arr) = v.get("router_workers").and_then(Value::as_array) {
+            cfg.router_workers = arr
+                .iter()
+                .map(|w| {
+                    w.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| anyhow::anyhow!("router_workers must be strings"))
+                })
+                .collect::<Result<Vec<String>>>()?;
+        }
+        if let Some(n) = v.get("router_probe_ms").and_then(Value::as_usize) {
+            cfg.router_probe_ms = n as u64;
+        }
+        if let Some(n) = v.get("router_shard_timeout_ms").and_then(Value::as_usize) {
+            cfg.router_shard_timeout_ms = n as u64;
+        }
+        if let Some(q) = v.get("router_hedge_quantile").and_then(Value::as_f64) {
+            cfg.router_hedge_quantile = q;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -326,6 +395,18 @@ impl ServeConfig {
         self.request_timeout = Duration::from_millis(
             args.opt_parse("request-timeout", self.request_timeout.as_millis() as u64)?,
         );
+        if let Some(s) = args.opt_str("worker-slice") {
+            self.worker_slice = Some(parse_slice(s)?);
+        }
+        if let Some(s) = args.opt_str("router-workers") {
+            self.router_workers =
+                s.split(',').map(str::trim).filter(|w| !w.is_empty()).map(str::to_string).collect();
+        }
+        self.router_probe_ms = args.opt_parse("router-probe-ms", self.router_probe_ms)?;
+        self.router_shard_timeout_ms =
+            args.opt_parse("router-shard-timeout-ms", self.router_shard_timeout_ms)?;
+        self.router_hedge_quantile =
+            args.opt_parse("router-hedge-quantile", self.router_hedge_quantile)?;
         self.validate()
     }
 
@@ -373,6 +454,40 @@ impl ServeConfig {
         if self.request_timeout.is_zero() {
             bail!("request_timeout must be > 0");
         }
+        if let Some((start, end)) = self.worker_slice {
+            // start < end is parse-enforced for CLI/JSON, but keep the
+            // invariant here too for programmatic construction.
+            if start >= end {
+                bail!("worker_slice start ({start}) must be < end ({end})");
+            }
+            if end > self.vocab {
+                bail!("worker_slice end ({end}) exceeds vocab ({})", self.vocab);
+            }
+        }
+        if !(0.0..1.0).contains(&self.router_hedge_quantile) {
+            bail!(
+                "router_hedge_quantile ({}) must be in [0, 1); 0 disables hedging",
+                self.router_hedge_quantile
+            );
+        }
+        if self.backend == BackendKind::Router {
+            if self.router_workers.is_empty() {
+                bail!("backend `router` requires router_workers (--router-workers)");
+            }
+            if self.vocab < self.router_workers.len() {
+                bail!(
+                    "vocab ({}) cannot be sliced over {} router workers",
+                    self.vocab,
+                    self.router_workers.len()
+                );
+            }
+            if self.router_probe_ms == 0 {
+                bail!("router_probe_ms must be > 0");
+            }
+            if self.router_shard_timeout_ms == 0 {
+                bail!("router_shard_timeout_ms must be > 0");
+            }
+        }
         Ok(())
     }
 
@@ -406,7 +521,25 @@ impl ServeConfig {
             .set(
                 "request_timeout_ms",
                 Value::Number(self.request_timeout.as_millis() as f64),
-            );
+            )
+            .set(
+                "router_workers",
+                Value::Array(
+                    self.router_workers
+                        .iter()
+                        .map(|w| Value::String(w.clone()))
+                        .collect(),
+                ),
+            )
+            .set("router_probe_ms", Value::Number(self.router_probe_ms as f64))
+            .set(
+                "router_shard_timeout_ms",
+                Value::Number(self.router_shard_timeout_ms as f64),
+            )
+            .set("router_hedge_quantile", Value::Number(self.router_hedge_quantile));
+        if let Some((start, end)) = self.worker_slice {
+            v.set("worker_slice", Value::String(format!("{start}:{end}")));
+        }
         v
     }
 }
@@ -590,6 +723,89 @@ mod tests {
             ServeConfig::from_json(&v).unwrap().request_timeout,
             Duration::from_millis(250)
         );
+    }
+
+    #[test]
+    fn router_knobs_roundtrip_and_cli() {
+        let mut cfg = ServeConfig::default();
+        cfg.backend = BackendKind::Router;
+        cfg.router_workers =
+            vec!["127.0.0.1:7071".to_string(), "127.0.0.1:7072".to_string()];
+        cfg.router_probe_ms = 250;
+        cfg.router_shard_timeout_ms = 750;
+        cfg.router_hedge_quantile = 0.9;
+        cfg.worker_slice = Some((0, 1024));
+        cfg.validate().unwrap();
+        let back = ServeConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.backend, BackendKind::Router);
+        assert_eq!(back.router_workers, cfg.router_workers);
+        assert_eq!(back.router_probe_ms, 250);
+        assert_eq!(back.router_shard_timeout_ms, 750);
+        assert_eq!(back.router_hedge_quantile, 0.9);
+        assert_eq!(back.worker_slice, Some((0, 1024)));
+
+        let mut cfg = ServeConfig::default();
+        let raw: Vec<String> = [
+            "--backend", "router",
+            "--router-workers", "a:1, b:2,c:3",
+            "--router-probe-ms", "100",
+            "--router-shard-timeout-ms", "300",
+            "--router-hedge-quantile", "0.95",
+            "--worker-slice", "128:4096",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let args = Args::parse(
+            &raw,
+            &["backend", "router-workers", "router-probe-ms", "router-shard-timeout-ms",
+              "router-hedge-quantile", "worker-slice"],
+        )
+        .unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.backend, BackendKind::Router);
+        assert_eq!(cfg.router_workers, vec!["a:1", "b:2", "c:3"]);
+        assert_eq!(cfg.router_probe_ms, 100);
+        assert_eq!(cfg.router_shard_timeout_ms, 300);
+        assert_eq!(cfg.router_hedge_quantile, 0.95);
+        assert_eq!(cfg.worker_slice, Some((128, 4096)));
+    }
+
+    #[test]
+    fn router_validation_rejects_nonsense() {
+        assert_eq!(BackendKind::parse("router").unwrap(), BackendKind::Router);
+        assert!(BackendKind::parse("proxy").is_err());
+
+        // router backend without workers
+        let mut cfg = ServeConfig::default();
+        cfg.backend = BackendKind::Router;
+        assert!(cfg.validate().is_err());
+
+        // more workers than vocabulary entries
+        cfg.router_workers = (0..4).map(|i| format!("w:{i}")).collect();
+        cfg.vocab = 3;
+        assert!(cfg.validate().is_err());
+
+        // hedge quantile outside [0, 1)
+        let mut cfg = ServeConfig::default();
+        cfg.router_hedge_quantile = 1.0;
+        assert!(cfg.validate().is_err());
+        cfg.router_hedge_quantile = -0.1;
+        assert!(cfg.validate().is_err());
+        cfg.router_hedge_quantile = 0.99;
+        cfg.validate().unwrap();
+
+        // malformed slices
+        assert!(parse_slice("10").is_err());
+        assert!(parse_slice("5:5").is_err());
+        assert!(parse_slice("9:4").is_err());
+        assert!(parse_slice("x:4").is_err());
+        assert_eq!(parse_slice(" 4 : 9 ").unwrap(), (4, 9));
+
+        // slice beyond the served vocab
+        let mut cfg = ServeConfig::default();
+        cfg.worker_slice = Some((0, cfg.vocab + 1));
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

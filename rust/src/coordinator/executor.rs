@@ -29,15 +29,17 @@
 
 use std::collections::HashMap;
 use std::sync::Mutex;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
 use super::model::SyntheticLm;
 use super::request::{
-    BatchClass, Payload, Reply, ReplyResult, Request, RequestOptions, ServeError,
+    BatchClass, Payload, Reply, ReplyResult, Request, RequestOptions, ServeError, ShardScan,
+    ShardScanKind, ShardScanReply,
 };
 use crate::config::{BackendKind, ServeConfig, ServingMode};
+use crate::router::{Router, RouterConfig};
 use crate::runtime::{EnginePool, Input, Tensor};
 use crate::sample::{self, SampleSpec};
 use crate::shard::{self, ShardEngine, ShardEngineConfig};
@@ -55,6 +57,10 @@ enum Backend {
     Artifacts(EnginePool),
     /// In-process host kernels (shard engine + single-thread fallback).
     Host,
+    /// Router tier: vocabulary shards fan out over worker *processes*
+    /// as `shard_scan` frames and ⊕-merge back here (see
+    /// [`crate::router`]).
+    Router(Router),
 }
 
 /// Executes batches against the selected backend.
@@ -85,6 +91,7 @@ impl Executor {
         let use_artifacts = match cfg.backend {
             BackendKind::Artifacts => true,
             BackendKind::Host => false,
+            BackendKind::Router => return Self::new_router(cfg),
             BackendKind::Auto => cfg.artifacts_dir.join("manifest.json").exists(),
         };
         if use_artifacts {
@@ -129,9 +136,70 @@ impl Executor {
             shard_engine.threshold(),
             if cfg.grid_rows == 0 { "auto".to_string() } else { cfg.grid_rows.to_string() }
         );
+        if let Some((start, end)) = cfg.worker_slice {
+            // Advisory role marker for a router-tier worker: published
+            // for operators, but *not* enforced against `shard_scan`
+            // ranges — partial-failure requeue and hedging deliberately
+            // send an excluded worker's slice to a healthy peer, and
+            // every worker holds the full (seed-deterministic) weights.
+            if end > vocab {
+                bail!("worker slice {start}:{end} exceeds served vocab {vocab}");
+            }
+            let reg = crate::metrics::global();
+            reg.gauge("worker.slice.start").set(start as i64);
+            reg.gauge("worker.slice.end").set(end as i64);
+            crate::info!(
+                "coordinator.executor",
+                "worker role: assigned vocabulary slice {start}:{end} of {vocab}"
+            );
+        }
         Ok(Executor {
             backend: Backend::Host,
             shard_engine: Some(shard_engine),
+            model: SyntheticLm::generate(vocab, hidden, cfg.seed),
+            mode: cfg.mode,
+            shards: 1,
+            default_k: cfg.default_k,
+            vocab,
+            hidden,
+            artifact_k,
+            shard_threshold: cfg.shard_threshold,
+            grid_rows: cfg.grid_rows,
+            sessions: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Router backend: this process owns no kernels — every shard scan
+    /// ships to a worker process and only the ⊕ merge runs here.  The
+    /// request surface (classes, validation, k ceiling) matches the
+    /// host backend exactly, which is what makes the bitwise-identity
+    /// property testable: same plan, same kernels, different processes.
+    fn new_router(cfg: &ServeConfig) -> Result<Executor> {
+        if cfg.router_workers.is_empty() {
+            bail!("router backend requires --router-workers (comma-separated host:port list)");
+        }
+        if cfg.mode != ServingMode::Online {
+            bail!(
+                "router backend distributes the online ⊕ path; `--mode safe` is the \
+                 single-process baseline and cannot be sharded across workers"
+            );
+        }
+        let vocab = cfg.vocab;
+        let hidden = cfg.hidden;
+        let artifact_k = HOST_MAX_K.max(cfg.default_k).min(vocab);
+        if cfg.default_k > artifact_k {
+            bail!("default_k {} exceeds vocab {}", cfg.default_k, vocab);
+        }
+        let router = Router::new(RouterConfig {
+            workers: cfg.router_workers.clone(),
+            vocab,
+            probe_interval: Duration::from_millis(cfg.router_probe_ms),
+            shard_timeout: Duration::from_millis(cfg.router_shard_timeout_ms),
+            hedge_quantile: cfg.router_hedge_quantile,
+        })?;
+        Ok(Executor {
+            backend: Backend::Router(router),
+            shard_engine: None,
             model: SyntheticLm::generate(vocab, hidden, cfg.seed),
             mode: cfg.mode,
             shards: 1,
@@ -319,7 +387,10 @@ impl Executor {
                  temperature 1.0 only"
             )));
         }
-        if !self.is_host_backend() {
+        if matches!(self.backend, Backend::Artifacts(_)) {
+            // The router tier forwards sample specs to its (host
+            // backend) workers inside `shard_scan`, so it admits seeds
+            // just like direct host serving does.
             return Some(ServeError::invalid(
                 "sampled decode (seed) is served by the host backend only",
             ));
@@ -370,7 +441,13 @@ impl Executor {
                 }
             }
             Err(e) => {
-                let err = ServeError::internal(format!("batch execution failed: {e:#}"));
+                // A typed failure (e.g. the router tier exhausting its
+                // requeue budget, or a worker's own rejection) keeps its
+                // code; anything else is an internal fault.
+                let err = match e.downcast::<ServeError>() {
+                    Ok(e) => e,
+                    Err(e) => ServeError::internal(format!("batch execution failed: {e:#}")),
+                };
                 crate::error!("coordinator.executor", "{err}");
                 for req in batch {
                     let _ = req.reply.send(Err(err.clone()));
@@ -413,6 +490,7 @@ impl Executor {
                 }
                 Backend::Artifacts(pool) => self.softmax_unsharded(pool, &live, worker)?,
                 Backend::Host => self.softmax_host(&live),
+                Backend::Router(router) => router.softmax(&live).map_err(anyhow::Error::new)?,
             }
         };
         let mut out = Vec::with_capacity(batch.len());
@@ -688,6 +766,9 @@ impl Executor {
                 self.decode_unsharded(pool, states, worker)
             }
             Backend::Host => Ok(self.decode_host(states, specs)),
+            Backend::Router(router) => {
+                router.decode(states, self.artifact_k, specs).map_err(anyhow::Error::new)
+            }
         }
     }
 
@@ -999,7 +1080,12 @@ impl Executor {
     /// beyond `live.len()` (artifact batch padding) are ignored.
     fn advance_states(&self, live: &[(u64, i32, usize)], worker: usize) -> Result<Vec<f32>> {
         match &self.backend {
-            Backend::Host => {
+            // The router advances states locally too: the recurrent
+            // step is O(hidden²) with no vocabulary axis to shard, and
+            // the synthetic weights are seed-deterministic, so local
+            // advancement is bitwise-identical to any worker's.  Only
+            // the decode that follows fans out.
+            Backend::Host | Backend::Router(_) => {
                 // Copy the states out under the lock, compute after
                 // releasing it (matching the artifact arm) — lm_step_row
                 // is O(hidden²) per row and must not serialize sessions.
@@ -1045,9 +1131,111 @@ impl Executor {
         }
     }
 
+    // ------------------------------------------------------------------
+    // Router-tier worker surface (`shard_scan` frames)
+    // ------------------------------------------------------------------
+
+    /// Serve one `shard_scan` frame: compute this request's vocabulary
+    /// slice with exactly the per-tile kernels the in-process grid path
+    /// dispatches, so the router's ⊕ merge of the returned partials is
+    /// bitwise-identical to single-process serving.
+    ///
+    /// Ranges are validated against the served vocab but *not* against
+    /// this worker's `--worker-slice` assignment — the router requeues
+    /// an excluded worker's slice onto any healthy peer, and every
+    /// worker holds the full seed-deterministic weights.
+    pub fn shard_scan(&self, scan: &ShardScan) -> Result<ShardScanReply, ServeError> {
+        let Some(engine) = (match &self.backend {
+            Backend::Host => self.shard_engine.as_ref(),
+            _ => None,
+        }) else {
+            return Err(ServeError::invalid(
+                "shard_scan is served by host-backend workers only",
+            ));
+        };
+        let (start, end) = (scan.start, scan.end);
+        if start >= end || end > self.vocab {
+            return Err(ServeError::invalid(format!(
+                "shard range {start}:{end} outside served vocab {}",
+                self.vocab
+            )));
+        }
+        let width = end - start;
+        match scan.kind {
+            ShardScanKind::Decode => {
+                if scan.k == 0 || scan.k > self.vocab {
+                    return Err(ServeError::invalid(format!(
+                        "k={} outside supported range 1..={}",
+                        scan.k, self.vocab
+                    )));
+                }
+                if scan.samples.len() != scan.rows.len() {
+                    return Err(ServeError::invalid("samples must align with rows"));
+                }
+                let mut partials = Vec::with_capacity(scan.rows.len());
+                for (row, spec) in scan.rows.iter().zip(&scan.samples) {
+                    if row.len() != self.hidden {
+                        return Err(ServeError::invalid(format!(
+                            "hidden length {} != served hidden {}",
+                            row.len(),
+                            self.hidden
+                        )));
+                    }
+                    // Sharded projection + Algorithm 4 scan: the same
+                    // two calls the grid path's per-tile closure makes.
+                    let logits = self.model.project_range(row, start, end);
+                    partials.push(engine.scan_tile(&logits, start..end, scan.k, *spec));
+                }
+                Ok(ShardScanReply::Partials(partials))
+            }
+            ShardScanKind::Softmax => {
+                let mut norms = Vec::with_capacity(scan.rows.len());
+                for row in &scan.rows {
+                    if row.len() != width {
+                        return Err(ServeError::invalid(format!(
+                            "softmax row length {} != shard width {width}",
+                            row.len()
+                        )));
+                    }
+                    norms.push(engine.normalizer_tile(row, start..end));
+                }
+                Ok(ShardScanReply::Norms(norms))
+            }
+            ShardScanKind::Scale => {
+                if scan.norms.len() != scan.rows.len() {
+                    return Err(ServeError::invalid("norms must align with rows"));
+                }
+                let mut slices = Vec::with_capacity(scan.rows.len());
+                for (row, md) in scan.rows.iter().zip(&scan.norms) {
+                    if row.len() != width {
+                        return Err(ServeError::invalid(format!(
+                            "scale row length {} != shard width {width}",
+                            row.len()
+                        )));
+                    }
+                    if !(md.d.is_finite() && md.d > 0.0 && md.m.is_finite()) {
+                        return Err(ServeError::invalid(
+                            "scale norms must be finite non-identity (m, d) values",
+                        ));
+                    }
+                    // Same arithmetic as the in-process scale grid: the
+                    // reciprocal is taken once per (row, shard) tile in
+                    // f32, then the backend's scale kernel runs.
+                    let inv = 1.0 / md.d;
+                    let mut out = vec![0.0f32; width];
+                    engine.scale_slice(row, &mut out, md.m, inv);
+                    slices.push(out);
+                }
+                Ok(ShardScanReply::Slices(slices))
+            }
+        }
+    }
+
     pub fn shutdown(&self) {
-        if let Backend::Artifacts(pool) = &self.backend {
-            pool.shutdown();
+        match &self.backend {
+            Backend::Artifacts(pool) => pool.shutdown(),
+            Backend::Router(router) => router.shutdown(),
+            Backend::Host => {}
         }
     }
 }

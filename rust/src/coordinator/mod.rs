@@ -53,7 +53,7 @@ pub use generate::TokenFrame;
 pub use model::SyntheticLm;
 pub use request::{
     BatchClass, ErrorCode, Payload, Priority, Reply, ReplyResult, Request, RequestId,
-    RequestOptions, ServeError,
+    RequestOptions, ServeError, ShardScan, ShardScanKind, ShardScanReply,
 };
 
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -382,6 +382,76 @@ impl Request {
     }
 }
 
+/// What a `shard_scan` frame asks a worker to compute over its slice
+/// of the vocabulary (the router tier's fan-out unit — see
+/// `docs/PROTOCOL.md` §shard_scan).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardScanKind {
+    /// Project each hidden-state row onto `[start, end)` of the vocab
+    /// and run the fused Algorithm-4 scan → one `ShardPartial` per row.
+    Decode,
+    /// Rows are raw logit slices covering `[start, end)`; compute each
+    /// row's partial online normalizer `(m, d)`.
+    Softmax,
+    /// Pass 2 of a distributed softmax: rows are the same logit slices,
+    /// `norms` carries each row's *globally merged* `(m, d)`; scale to
+    /// `e^{x−m}/d` probabilities.
+    Scale,
+}
+
+impl ShardScanKind {
+    /// Wire name of this scan kind.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ShardScanKind::Decode => "decode",
+            ShardScanKind::Softmax => "softmax",
+            ShardScanKind::Scale => "scale",
+        }
+    }
+
+    /// Inverse of [`Self::as_str`].
+    pub fn parse(s: &str) -> Option<ShardScanKind> {
+        match s {
+            "decode" => Some(ShardScanKind::Decode),
+            "softmax" => Some(ShardScanKind::Softmax),
+            "scale" => Some(ShardScanKind::Scale),
+            _ => None,
+        }
+    }
+}
+
+/// A decoded v2 `shard_scan` request: one batch of rows scanned against
+/// the global vocabulary range `[start, end)` on a worker process.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardScan {
+    /// What to compute (decides how `rows` is interpreted).
+    pub kind: ShardScanKind,
+    /// Global vocabulary range start (inclusive).
+    pub start: usize,
+    /// Global vocabulary range end (exclusive).
+    pub end: usize,
+    /// Top-k per row ([`ShardScanKind::Decode`] only).
+    pub k: usize,
+    /// Batch rows: hidden states (`Decode`) or logit slices of length
+    /// `end − start` (`Softmax` / `Scale`).
+    pub rows: Vec<Vec<f32>>,
+    /// Per-row sampling spec (`Decode` only; aligned with `rows`).
+    pub samples: Vec<Option<crate::sample::SampleSpec>>,
+    /// Per-row merged normalizers (`Scale` only; aligned with `rows`).
+    pub norms: Vec<crate::softmax::monoid::MD>,
+}
+
+/// What a worker returns for a [`ShardScan`], by kind.
+#[derive(Clone, Debug)]
+pub enum ShardScanReply {
+    /// `Decode`: one `ShardPartial` per row (global indices).
+    Partials(Vec<crate::shard::ShardPartial>),
+    /// `Softmax`: one partial `(m, d)` per row.
+    Norms(Vec<crate::softmax::monoid::MD>),
+    /// `Scale`: one probability slice per row.
+    Slices(Vec<Vec<f32>>),
+}
+
 /// Batchable request classes (one executable family per class).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum BatchClass {

@@ -67,6 +67,7 @@ pub mod logging;
 pub mod metrics;
 pub mod prop;
 pub mod rng;
+pub mod router;
 pub mod runtime;
 pub mod sample;
 pub mod server;

@@ -33,7 +33,8 @@ const VALUE_OPTS: &[&str] = &[
     "host-shards", "shard-threshold", "grid-rows", "pool-sched", "shard-backend",
     "request-timeout", "tokens", "admission-interactive-cap", "admission-batch-cap",
     "cache-capacity", "cache-coalesce", "priority", "deadline-ms", "distinct",
-    "temperature",
+    "temperature", "worker-slice", "router-workers", "router-probe-ms",
+    "router-shard-timeout-ms", "router-hedge-quantile", "target", "router-addr",
 ];
 
 fn main() {
@@ -120,6 +121,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "steal" => benches::steal_ablation(&opts),
         "backend" => benches::backend_ablation(&opts),
         "sample" => benches::sample_ablation(&opts),
+        "cache" => benches::cache_fig(&opts),
         "all" => {
             benches::fig1(&opts)?;
             benches::fig2(&opts)?;
@@ -130,10 +132,11 @@ fn cmd_bench(args: &Args) -> Result<()> {
             benches::grid_ablation(&opts)?;
             benches::steal_ablation(&opts)?;
             benches::backend_ablation(&opts)?;
-            benches::sample_ablation(&opts)
+            benches::sample_ablation(&opts)?;
+            benches::cache_fig(&opts)
         }
         other => Err(anyhow!(
-            "unknown figure `{other}` (1|2|3|4|k|ablation|grid|steal|backend|sample|all)"
+            "unknown figure `{other}` (1|2|3|4|k|ablation|grid|steal|backend|sample|cache|all)"
         )),
     }
 }
@@ -243,11 +246,24 @@ fn slot_logits(slot: usize, n: usize, scale: f32) -> Vec<f32> {
     rng.logits(n, scale)
 }
 
-fn cmd_loadgen(args: &Args) -> Result<()> {
-    use onlinesoftmax::coordinator::ErrorCode;
-    use onlinesoftmax::server::wire;
+/// One loadgen run's knobs, shared across `--target` topologies so the
+/// comparison mode drives identical workloads at both tiers.
+struct LoadOpts {
+    requests: usize,
+    concurrency: usize,
+    op: String,
+    tokens: usize,
+    priority: String,
+    deadline_ms: Option<u64>,
+    distinct: usize,
+    sample_seed: Option<u64>,
+    temperature: Option<f32>,
+}
 
+fn cmd_loadgen(args: &Args) -> Result<()> {
     let addr = args.opt_str("addr").unwrap_or("127.0.0.1:7070").to_string();
+    let router_addr = args.opt_str("router-addr").unwrap_or("127.0.0.1:7080").to_string();
+    let target = args.opt_str("target").unwrap_or("single").to_string();
     let requests: usize = args.opt_parse("requests", 200)?;
     let concurrency: usize = args.opt_parse("concurrency", 4)?;
     let op = args.opt_str("op").unwrap_or("decode").to_string();
@@ -288,9 +304,65 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             "unknown priority `{priority}` (interactive|batch|mixed)"
         ));
     }
+    let opts = LoadOpts {
+        requests,
+        concurrency,
+        op,
+        tokens,
+        priority,
+        deadline_ms,
+        distinct,
+        sample_seed,
+        temperature,
+    };
+
+    // `--target` selects the topologies: `single` and `router` drive
+    // one address; `both` runs the same workload against each tier in
+    // turn and reports per-class percentiles side by side.
+    let runs: Vec<(&str, &str)> = match target.as_str() {
+        "single" => vec![("single", addr.as_str())],
+        "router" => vec![("router", router_addr.as_str())],
+        "both" => vec![("single", addr.as_str()), ("router", router_addr.as_str())],
+        other => return Err(anyhow!("unknown target `{other}` (single|router|both)")),
+    };
+    let mut any_progress = false;
+    for (topology, run_addr) in runs {
+        let (wall, tallies) = run_load(run_addr, &opts)?;
+        report_load(topology, run_addr, &opts, wall, &tallies);
+        let ok_total = tallies[0].ok.len() + tallies[1].ok.len();
+        let structured = tallies[0].overloaded
+            + tallies[1].overloaded
+            + tallies[0].deadline
+            + tallies[1].deadline;
+        if ok_total > 0 || structured > 0 {
+            any_progress = true;
+        }
+    }
+    if !any_progress {
+        return Err(anyhow!("no successful requests"));
+    }
+    Ok(())
+}
+
+/// Drive one address with `opts`; returns the wall time and the
+/// `[interactive, batch]` tallies merged across workers.
+fn run_load(addr: &str, opts: &LoadOpts) -> Result<(Duration, [ClassTally; 2])> {
+    use onlinesoftmax::coordinator::ErrorCode;
+    use onlinesoftmax::server::wire;
+
+    let LoadOpts {
+        requests,
+        concurrency,
+        tokens,
+        deadline_ms,
+        distinct,
+        sample_seed,
+        temperature,
+        ..
+    } = *opts;
 
     // Probe connection (fail fast if the server is down).
-    let mut probe = Client::connect(&addr)?;
+    let mut probe = Client::connect(addr)?;
     probe.ping()?;
 
     let per_worker = requests.div_ceil(concurrency);
@@ -299,11 +371,10 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     let tallies: [ClassTally; 2] = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..concurrency)
             .map(|w| {
-                let addr = addr.clone();
-                let op = op.clone();
-                let priority = priority.clone();
+                let op = opts.op.as_str();
+                let priority = opts.priority.as_str();
                 scope.spawn(move || -> Result<[ClassTally; 2]> {
-                    let mut client = Client::connect(&addr)?;
+                    let mut client = Client::connect(addr)?;
                     client.set_tag(Some(&format!("loadgen-{w}")));
                     client.set_deadline_ms(deadline_ms);
                     client.set_temperature(temperature);
@@ -312,7 +383,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                         onlinesoftmax::rng::Xoshiro256pp::seed_from_u64(w as u64 + 1);
                     let mut tally = [ClassTally::default(), ClassTally::default()];
                     for r in 0..per_worker {
-                        let class = match priority.as_str() {
+                        let class = match priority {
                             "batch" => 1,
                             "mixed" => (w + r) % 2,
                             _ => 0,
@@ -328,7 +399,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                         let slot = if distinct > 0 { Some(r % distinct) } else { None };
                         let t = Instant::now();
                         let res: Result<()> = (|| {
-                            match op.as_str() {
+                            match op {
                                 "softmax" => {
                                     let logits = match slot {
                                         Some(s) => slot_logits(s, 8192, 5.0),
@@ -386,15 +457,28 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         }
         merged
     });
-    let wall = t0.elapsed();
+    Ok((t0.elapsed(), tallies))
+}
+
+/// Print one topology's summary: throughput plus per-class outcome
+/// counts and latency percentiles (the `--target both` comparison is
+/// these blocks side by side, one per tier).
+fn report_load(
+    topology: &str,
+    addr: &str,
+    opts: &LoadOpts,
+    wall: Duration,
+    tallies: &[ClassTally; 2],
+) {
     let attempts = tallies[0].attempts() + tallies[1].attempts();
     let ok_total = tallies[0].ok.len() + tallies[1].ok.len();
     println!(
-        "loadgen: {} `{}` requests ({} ok), concurrency {}, wall {:.2}s → {:.0} req/s",
+        "loadgen[{topology} @ {addr}]: {} `{}` requests ({} ok), concurrency {}, \
+         wall {:.2}s → {:.0} req/s",
         attempts,
-        op,
+        opts.op,
         ok_total,
-        concurrency,
+        opts.concurrency,
         wall.as_secs_f64(),
         ok_total as f64 / wall.as_secs_f64()
     );
@@ -424,12 +508,4 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             sorted[total - 1].as_secs_f64() * 1e3
         );
     }
-    let structured = tallies[0].overloaded
-        + tallies[1].overloaded
-        + tallies[0].deadline
-        + tallies[1].deadline;
-    if ok_total == 0 && structured == 0 {
-        return Err(anyhow!("no successful requests"));
-    }
-    Ok(())
 }

@@ -1,0 +1,815 @@
+//! Router tier: multi-process sharded serving over stock `osmax`
+//! workers.
+//!
+//! The paper's ⊕ merge (eq. 4) is associative and location-transparent:
+//! a `ShardPartial` computed in another *process* merges exactly like
+//! one computed on another thread.  This module exploits that to scale
+//! the serving surface across worker processes — each worker is a
+//! normal host-backend server assigned a vocabulary slice
+//! (`--worker-slice START:END`), and the router fans every request's
+//! shards out over `shard_scan` frames, then runs **the same tree
+//! reduction the in-process grid path runs**:
+//!
+//! ```text
+//!  client ──► router (Backend::Router)
+//!               │ ShardPlan::with_shards(vocab, N)   [fixed at startup]
+//!               ├── shard 0 ── shard_scan ──► worker 0 ─► partial₀ ┐
+//!               ├── shard 1 ── shard_scan ──► worker 1 ─► partial₁ ├─ ⊕ tree
+//!               └── shard 2 ── shard_scan ──► worker 2 ─► partial₂ ┘    │
+//!                                                                finalize ─► reply
+//! ```
+//!
+//! **Bitwise identity.**  The router's decomposition is pinned at
+//! startup (`with_shards(vocab, workers)`) and never changes — not for
+//! failures, not for hedges.  Partial failure and load shedding change
+//! only *which worker* computes a slice, never the slice boundaries, so
+//! merged results are bitwise-identical to a single process serving the
+//! same plan (`router_e2e` pins this across shard backends × pool
+//! schedulers).
+//!
+//! **Partial failure.**  Per-worker connection pools with per-shard
+//! timeouts; a transport failure excludes the worker and requeues its
+//! slice onto the next healthy peer (one bounded retry,
+//! `router.retry.requeued`).  A background prober pings every worker
+//! each `probe_interval`, feeding the exclude/readmit list
+//! (`router.worker.*`).  Typed worker rejections (a `ServeError`) are
+//! **not** retried — they are deterministic and would fail anywhere.
+//!
+//! **Hedging.**  With `hedge_quantile ∈ (0, 1)` set, a shard still
+//! outstanding past that latency quantile is duplicated onto a second
+//! healthy worker; the first successful reply wins and the loser is
+//! discarded *before* the merge (`router.hedge.*`).  The ⊕ tree always
+//! sees exactly one partial per shard — the top-k buffer merge
+//! re-inserts equal values, so merging a duplicate partial would NOT
+//! be idempotent; winner-selection at the channel is what makes hedges
+//! safe.
+
+#![warn(missing_docs)]
+
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{ServeError, ShardScan, ShardScanKind};
+use crate::json::Value;
+use crate::metrics::{self, Counter, Gauge, Histogram};
+use crate::sample::SampleSpec;
+use crate::server::wire;
+use crate::shard::{reduce, ShardPartial, ShardPlan, ShardRange};
+use crate::softmax::monoid::{self, MD};
+
+/// Lock acquisition that survives a poisoned mutex: router state is
+/// plain data (no invariants broken by a panicking holder), so
+/// recovering the inner value is always sound here.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Latency-ring capacity backing the hedge quantile estimate.
+const LATENCY_RING: usize = 256;
+
+/// Minimum observed shard calls before hedging arms — quantiles over
+/// fewer samples are noise.
+const HEDGE_MIN_SAMPLES: usize = 16;
+
+/// Router construction parameters (derived from `ServeConfig` by the
+/// executor's `Backend::Router` arm).
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Worker addresses, one per vocabulary shard (`host:port`).
+    pub workers: Vec<String>,
+    /// Global vocabulary size; sliced as `with_shards(vocab, workers)`.
+    pub vocab: usize,
+    /// Health-probe period.
+    pub probe_interval: Duration,
+    /// Per-shard call budget (connect + roundtrip).
+    pub shard_timeout: Duration,
+    /// Straggler-hedging latency quantile in `[0, 1)`; `0` disables
+    /// hedging.
+    pub hedge_quantile: f64,
+}
+
+/// How a single worker call failed.
+#[derive(Debug)]
+enum CallError {
+    /// Connection-level failure (connect, io, timeout, malformed
+    /// reply): the worker is suspect — exclude and requeue.
+    Transport(String),
+    /// A typed rejection from a healthy worker: deterministic, never
+    /// retried.
+    App(ServeError),
+}
+
+/// One pooled worker connection.
+struct Conn {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+/// A per-worker connection pool (lazy: connections are dialed on first
+/// use, so the router starts cleanly with workers still booting).
+struct WorkerPool {
+    addr: String,
+    timeout: Duration,
+    idle: Mutex<Vec<Conn>>,
+}
+
+impl WorkerPool {
+    fn new(addr: String, timeout: Duration) -> WorkerPool {
+        WorkerPool { addr, timeout, idle: Mutex::new(Vec::new()) }
+    }
+
+    fn checkout(&self) -> Result<Conn, CallError> {
+        if let Some(conn) = lock(&self.idle).pop() {
+            return Ok(conn);
+        }
+        let mut addrs = self
+            .addr
+            .to_socket_addrs()
+            .map_err(|e| CallError::Transport(format!("resolve {}: {e}", self.addr)))?;
+        let addr = addrs
+            .next()
+            .ok_or_else(|| CallError::Transport(format!("{} resolves to nothing", self.addr)))?;
+        let stream = TcpStream::connect_timeout(&addr, self.timeout)
+            .map_err(|e| CallError::Transport(format!("connect {}: {e}", self.addr)))?;
+        let transport = |e: std::io::Error| CallError::Transport(format!("{}: {e}", self.addr));
+        stream.set_nodelay(true).map_err(transport)?;
+        stream.set_read_timeout(Some(self.timeout)).map_err(transport)?;
+        stream.set_write_timeout(Some(self.timeout)).map_err(transport)?;
+        let writer = stream.try_clone().map_err(transport)?;
+        Ok(Conn { writer, reader: BufReader::new(stream) })
+    }
+
+    /// One request/response roundtrip.  The connection returns to the
+    /// pool only after a *complete* roundtrip — a failed connection is
+    /// dropped (closing the socket), so request/response framing can
+    /// never desynchronize across calls.
+    fn call(&self, line: &str) -> Result<Value, CallError> {
+        let mut conn = self.checkout()?;
+        let transport = |e: std::io::Error| CallError::Transport(format!("{}: {e}", self.addr));
+        conn.writer.write_all(line.as_bytes()).map_err(transport)?;
+        conn.writer.write_all(b"\n").map_err(transport)?;
+        conn.writer.flush().map_err(transport)?;
+        let mut response = String::new();
+        let n = conn.reader.read_line(&mut response).map_err(transport)?;
+        if n == 0 {
+            return Err(CallError::Transport(format!("{}: connection closed", self.addr)));
+        }
+        match wire::decode_response(&response) {
+            Ok(v) => {
+                lock(&self.idle).push(conn);
+                Ok(v)
+            }
+            Err(e) => match e.downcast_ref::<wire::WireError>() {
+                // A structured rejection still completed its roundtrip:
+                // the connection stays poolable and the error is typed.
+                Some(w) => {
+                    let code = w.code.unwrap_or(crate::coordinator::ErrorCode::Internal);
+                    lock(&self.idle).push(conn);
+                    Err(CallError::App(ServeError::new(code, w.message.clone())))
+                }
+                None => Err(CallError::Transport(format!("{}: {e:#}", self.addr))),
+            },
+        }
+    }
+}
+
+/// Mutable router state shared with the prober thread.
+struct RouterState {
+    /// Exclude list, indexed like `Router::pools`.
+    excluded: Mutex<Vec<bool>>,
+    /// Recent shard-call latencies (µs) feeding the hedge quantile.
+    latencies: Mutex<VecDeque<u64>>,
+    /// Prober shutdown flag + wakeup (Mutex/Condvar rather than an
+    /// atomic: stop is control-plane, no need for lock-free).
+    stop: Mutex<bool>,
+    stop_cv: Condvar,
+    shard_timeout: Duration,
+    hedge_quantile: f64,
+    probes: Arc<Counter>,
+    probe_failures: Arc<Counter>,
+    readmitted: Arc<Counter>,
+    excluded_gauge: Arc<Gauge>,
+    retry_requeued: Arc<Counter>,
+    retry_failed: Arc<Counter>,
+    hedge_launched: Arc<Counter>,
+    hedge_wins: Arc<Counter>,
+    latency_hist: Arc<Histogram>,
+}
+
+impl RouterState {
+    fn exclude(&self, worker: usize, why: &str) {
+        let mut ex = lock(&self.excluded);
+        if !ex[worker] {
+            ex[worker] = true;
+            crate::warn_!("router", "excluding worker {worker}: {why}");
+        }
+        self.excluded_gauge.set(ex.iter().filter(|&&e| e).count() as i64);
+    }
+
+    fn readmit(&self, worker: usize) {
+        let mut ex = lock(&self.excluded);
+        if ex[worker] {
+            ex[worker] = false;
+            self.readmitted.inc();
+            crate::info!("router", "readmitting worker {worker} (probe succeeded)");
+        }
+        self.excluded_gauge.set(ex.iter().filter(|&&e| e).count() as i64);
+    }
+
+    /// First non-excluded worker at or after `from` (wrapping), or
+    /// `None` when every worker is excluded.
+    fn next_healthy(&self, from: usize, n: usize) -> Option<usize> {
+        let ex = lock(&self.excluded);
+        (0..n).map(|i| (from + i) % n).find(|&w| !ex[w])
+    }
+
+    fn record_latency(&self, d: Duration) {
+        self.latency_hist.record(d);
+        let mut ring = lock(&self.latencies);
+        if ring.len() == LATENCY_RING {
+            ring.pop_front();
+        }
+        ring.push_back(d.as_micros().min(u64::MAX as u128) as u64);
+    }
+
+    /// Hedge launch delay: the configured latency quantile over the
+    /// recent ring.  `None` (hedging off) until the quantile is armed,
+    /// sampled, and meaningfully below the shard timeout.
+    fn hedge_delay(&self) -> Option<Duration> {
+        if self.hedge_quantile <= 0.0 {
+            return None;
+        }
+        let ring = lock(&self.latencies);
+        if ring.len() < HEDGE_MIN_SAMPLES {
+            return None;
+        }
+        let mut sorted: Vec<u64> = ring.iter().copied().collect();
+        drop(ring);
+        sorted.sort_unstable();
+        let idx = ((sorted.len() - 1) as f64 * self.hedge_quantile) as usize;
+        let delay = Duration::from_micros(sorted[idx]);
+        (delay < self.shard_timeout).then_some(delay)
+    }
+}
+
+/// The router tier: a fixed shard plan over N worker processes, with
+/// health probing, bounded requeue retry, and straggler hedging.  See
+/// the module docs for the full semantics.
+pub struct Router {
+    plan: ShardPlan,
+    pools: Vec<Arc<WorkerPool>>,
+    state: Arc<RouterState>,
+    prober: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Router {
+    /// Build the tier and start its health prober.  Connections are
+    /// lazy — construction succeeds with every worker still down; the
+    /// first request (or probe) discovers actual health.
+    pub fn new(cfg: RouterConfig) -> Result<Router> {
+        if cfg.workers.is_empty() {
+            bail!("router backend requires at least one worker address");
+        }
+        if cfg.vocab < cfg.workers.len() {
+            bail!(
+                "vocab {} cannot be sliced over {} workers",
+                cfg.vocab,
+                cfg.workers.len()
+            );
+        }
+        let reg = metrics::global();
+        let state = Arc::new(RouterState {
+            excluded: Mutex::new(vec![false; cfg.workers.len()]),
+            latencies: Mutex::new(VecDeque::with_capacity(LATENCY_RING)),
+            stop: Mutex::new(false),
+            stop_cv: Condvar::new(),
+            shard_timeout: cfg.shard_timeout,
+            hedge_quantile: cfg.hedge_quantile,
+            probes: reg.counter("router.worker.probes"),
+            probe_failures: reg.counter("router.worker.probe_failures"),
+            readmitted: reg.counter("router.worker.readmitted"),
+            excluded_gauge: reg.gauge("router.worker.excluded"),
+            retry_requeued: reg.counter("router.retry.requeued"),
+            retry_failed: reg.counter("router.retry.failed"),
+            hedge_launched: reg.counter("router.hedge.launched"),
+            hedge_wins: reg.counter("router.hedge.wins"),
+            latency_hist: reg.histogram("router.shard.call_us"),
+        });
+        let pools: Vec<Arc<WorkerPool>> = cfg
+            .workers
+            .iter()
+            .map(|addr| Arc::new(WorkerPool::new(addr.clone(), cfg.shard_timeout)))
+            .collect();
+        let plan = ShardPlan::with_shards(cfg.vocab, pools.len());
+        crate::info!(
+            "router",
+            "router tier over {} workers, {} vocab slices, probe every {:?}",
+            pools.len(),
+            plan.shards(),
+            cfg.probe_interval
+        );
+        let prober = {
+            let state = state.clone();
+            let pools = pools.clone();
+            std::thread::Builder::new()
+                .name("router-prober".to_string())
+                .spawn(move || prober_loop(&state, &pools, cfg.probe_interval))?
+        };
+        Ok(Router { plan, pools, state, prober: Mutex::new(Some(prober)) })
+    }
+
+    /// The fixed vocabulary decomposition (one slice per worker).
+    pub fn plan(&self) -> ShardPlan {
+        self.plan
+    }
+
+    /// Number of worker processes behind the tier.
+    pub fn workers(&self) -> usize {
+        self.pools.len()
+    }
+
+    /// Stop the health prober (idempotent).
+    pub fn shutdown(&self) {
+        *lock(&self.state.stop) = true;
+        self.state.stop_cv.notify_all();
+        if let Some(h) = lock(&self.prober).take() {
+            let _ = h.join();
+        }
+    }
+
+    // ----- public query surface (called by the executor) ------------------
+
+    /// Distributed decode: fan hidden states out as `shard_scan
+    /// kind=decode` frames, ⊕-merge the returned partials per row, and
+    /// finalize — greedy rows via [`ShardPartial::finalize`], sampled
+    /// rows via [`ShardPartial::finalize_sampled`].  Bitwise-identical
+    /// to the in-process grid path under the same plan.
+    pub fn decode(
+        &self,
+        states: &[&[f32]],
+        k: usize,
+        specs: &[Option<SampleSpec>],
+    ) -> Result<Vec<(Vec<f32>, Vec<i64>)>, ServeError> {
+        assert_eq!(states.len(), specs.len(), "specs must align with states");
+        let rows: Vec<Vec<f32>> = states.iter().map(|s| s.to_vec()).collect();
+        let sampled: Vec<bool> = specs.iter().map(Option::is_some).collect();
+        // Per shard: call, then decode + validate the partials reply.
+        let shard_parts: Vec<Vec<ShardPartial>> = self.scatter(|range| {
+            let scan = ShardScan {
+                kind: ShardScanKind::Decode,
+                start: range.start,
+                end: range.end,
+                k,
+                rows: rows.clone(),
+                samples: specs.to_vec(),
+                norms: Vec::new(),
+            };
+            let reply = self.shard_call(&scan, range.index)?;
+            wire::decode_shard_partials(&reply, rows.len(), k, range.start, range.end, &sampled)
+                .map_err(|e| {
+                    ServeError::internal(format!("shard {} reply: {e:#}", range.index))
+                })
+        })?;
+        // Per row: transpose to shard order and run the same ⊕ tree the
+        // in-process grid reduction runs.
+        Ok((0..rows.len())
+            .map(|r| {
+                let parts: Vec<ShardPartial> =
+                    shard_parts.iter().map(|shard| shard[r].clone()).collect();
+                let merged = reduce::tree_reduce(parts);
+                if sampled[r] {
+                    merged.finalize_sampled()
+                } else {
+                    merged.finalize()
+                }
+            })
+            .collect())
+    }
+
+    /// Distributed softmax: pass 1 collects per-shard `(m, d)` partials
+    /// and ⊕-reduces them per row ([`monoid::tree_reduce`], the same
+    /// bracketing as the in-process normalizer grid); pass 2 ships the
+    /// merged normalizers back out for the scale pass and concatenates
+    /// the returned probability slices in shard order.
+    pub fn softmax(&self, rows: &[&[f32]]) -> Result<Vec<Vec<f32>>, ServeError> {
+        let v = self.plan.v();
+        for row in rows {
+            assert_eq!(row.len(), v, "router softmax rows must match the vocab");
+        }
+        // Pass 1: per-shard partial normalizers.
+        let shard_norms: Vec<Vec<MD>> = self.scatter(|range| {
+            let scan = ShardScan {
+                kind: ShardScanKind::Softmax,
+                start: range.start,
+                end: range.end,
+                k: 0,
+                rows: rows.iter().map(|r| r[range.start..range.end].to_vec()).collect(),
+                samples: Vec::new(),
+                norms: Vec::new(),
+            };
+            let reply = self.shard_call(&scan, range.index)?;
+            wire::decode_shard_norms(&reply, rows.len()).map_err(|e| {
+                ServeError::internal(format!("shard {} reply: {e:#}", range.index))
+            })
+        })?;
+        let merged: Vec<MD> = (0..rows.len())
+            .map(|r| {
+                let mds: Vec<MD> = shard_norms.iter().map(|shard| shard[r]).collect();
+                monoid::tree_reduce(&mds)
+            })
+            .collect();
+        // Pass 2: scale each slice under its row's global (m, d).
+        let shard_slices: Vec<Vec<Vec<f32>>> = self.scatter(|range| {
+            let scan = ShardScan {
+                kind: ShardScanKind::Scale,
+                start: range.start,
+                end: range.end,
+                k: 0,
+                rows: rows.iter().map(|r| r[range.start..range.end].to_vec()).collect(),
+                samples: Vec::new(),
+                norms: merged.clone(),
+            };
+            let reply = self.shard_call(&scan, range.index)?;
+            wire::decode_shard_slices(&reply, rows.len(), range.end - range.start).map_err(
+                |e| ServeError::internal(format!("shard {} reply: {e:#}", range.index)),
+            )
+        })?;
+        Ok((0..rows.len())
+            .map(|r| {
+                let mut out = Vec::with_capacity(v);
+                for shard in &shard_slices {
+                    out.extend_from_slice(&shard[r]);
+                }
+                out
+            })
+            .collect())
+    }
+
+    // ----- fan-out machinery ----------------------------------------------
+
+    /// Run `f` once per shard range on scoped threads; first error
+    /// wins.  The decomposition is `self.plan` — always, which is what
+    /// keeps failure handling orthogonal to numerics.
+    fn scatter<T: Send>(
+        &self,
+        f: impl Fn(ShardRange) -> Result<T, ServeError> + Sync,
+    ) -> Result<Vec<T>, ServeError> {
+        let ranges: Vec<ShardRange> = self.plan.ranges().collect();
+        let f = &f;
+        let joined: Vec<std::thread::Result<Result<T, ServeError>>> =
+            std::thread::scope(|s| {
+                let handles: Vec<_> =
+                    ranges.iter().map(|&range| s.spawn(move || f(range))).collect();
+                handles.into_iter().map(|h| h.join()).collect()
+            });
+        joined
+            .into_iter()
+            .map(|j| match j {
+                Ok(r) => r,
+                Err(_) => Err(ServeError::internal("router shard task panicked")),
+            })
+            .collect()
+    }
+
+    /// Issue one shard's scan with the full recovery ladder: excluded
+    /// primary → requeue to a healthy peer; transport failure → exclude
+    /// + one bounded retry on the next healthy peer; hedging inside
+    /// each attempt.  Typed worker rejections propagate immediately.
+    fn shard_call(&self, scan: &ShardScan, shard: usize) -> Result<Value, ServeError> {
+        let n = self.pools.len();
+        let line = wire::encode_shard_scan(scan);
+        let primary = shard % n;
+        let first = match self.state.next_healthy(primary, n) {
+            Some(w) => w,
+            None => {
+                // Every worker is excluded: optimistically try the
+                // primary anyway (probes may simply not have caught a
+                // recovery yet); its own failure handling applies.
+                primary
+            }
+        };
+        if first != primary {
+            self.state.retry_requeued.inc();
+            crate::debug!("router", "shard {shard}: primary {primary} excluded, requeued to {first}");
+        }
+        match self.attempt(&line, first) {
+            Ok(v) => Ok(v),
+            Err(CallError::App(e)) => Err(worker_rejection(first, e)),
+            Err(CallError::Transport(why)) => {
+                self.state.exclude(first, &why);
+                let Some(second) =
+                    self.state.next_healthy((first + 1) % n, n).filter(|&w| w != first)
+                else {
+                    self.state.retry_failed.inc();
+                    return Err(ServeError::internal(format!(
+                        "shard {shard} failed with no healthy peer to requeue onto: {why}"
+                    )));
+                };
+                self.state.retry_requeued.inc();
+                crate::warn_!(
+                    "router",
+                    "shard {shard}: worker {first} failed ({why}), requeueing onto {second}"
+                );
+                match self.attempt(&line, second) {
+                    Ok(v) => Ok(v),
+                    Err(CallError::App(e)) => Err(worker_rejection(second, e)),
+                    Err(CallError::Transport(why2)) => {
+                        self.state.exclude(second, &why2);
+                        self.state.retry_failed.inc();
+                        Err(ServeError::internal(format!(
+                            "shard {shard} failed on worker {first} ({why}) and requeued \
+                             worker {second} ({why2})"
+                        )))
+                    }
+                }
+            }
+        }
+    }
+
+    /// One attempt against `worker`, hedged: if the call is still
+    /// outstanding past the hedge delay, duplicate it onto another
+    /// healthy worker and take the first success.  Exactly one reply is
+    /// ever returned — the loser is discarded here, so the ⊕ merge
+    /// never sees a duplicated shard.
+    fn attempt(&self, line: &str, worker: usize) -> Result<Value, CallError> {
+        let t0 = Instant::now();
+        let deadline = t0 + self.state.shard_timeout;
+        let hedge_at = self.state.hedge_delay().map(|d| t0 + d);
+        let (tx, rx) = mpsc::channel::<(usize, Result<Value, CallError>)>();
+        let spawn_call = |w: usize| {
+            let pool = self.pools[w].clone();
+            let line = line.to_string();
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                let _ = tx.send((w, pool.call(&line)));
+            });
+        };
+        spawn_call(worker);
+        let mut outstanding = 1usize;
+        let mut hedged = false;
+        let mut last_err = CallError::Transport("no attempt completed".to_string());
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(CallError::Transport(format!(
+                    "shard call timed out after {:?}",
+                    self.state.shard_timeout
+                )));
+            }
+            let wake = match hedge_at {
+                Some(at) if !hedged && at < deadline => at.max(now),
+                _ => deadline,
+            };
+            match rx.recv_timeout(wake - now) {
+                Ok((from, Ok(v))) => {
+                    self.state.record_latency(t0.elapsed());
+                    if from != worker {
+                        self.state.hedge_wins.inc();
+                        crate::debug!("router", "hedge won: worker {from} beat {worker}");
+                    }
+                    return Ok(v);
+                }
+                Ok((_, Err(CallError::App(e)))) => {
+                    // Deterministic rejection: any peer would answer
+                    // the same, so don't wait out a hedge.
+                    return Err(CallError::App(e));
+                }
+                Ok((from, Err(CallError::Transport(why)))) => {
+                    outstanding -= 1;
+                    if hedged {
+                        // A hedged sibling may still win; only exclude
+                        // the failed copy's worker if it wasn't the
+                        // last hope.
+                        if from != worker {
+                            self.state.exclude(from, &why);
+                        }
+                    }
+                    last_err = CallError::Transport(why);
+                    if outstanding == 0 {
+                        return Err(last_err);
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    let past_hedge = hedge_at.is_some_and(|at| Instant::now() >= at);
+                    if !hedged && past_hedge {
+                        hedged = true; // arm once whether or not a peer exists
+                        let n = self.pools.len();
+                        if let Some(backup) = self
+                            .state
+                            .next_healthy((worker + 1) % n, n)
+                            .filter(|&w| w != worker)
+                        {
+                            self.state.hedge_launched.inc();
+                            crate::debug!(
+                                "router",
+                                "hedging straggler on worker {worker} with {backup}"
+                            );
+                            spawn_call(backup);
+                            outstanding += 1;
+                        }
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    // All attempt threads died without sending —
+                    // impossible (they always send), but never hang.
+                    return Err(last_err);
+                }
+            }
+        }
+    }
+}
+
+/// Propagate a typed worker rejection, naming the worker.  The code is
+/// preserved — a worker's `deadline_exceeded` or `invalid_argument` is
+/// the client-visible truth, not a router fault.
+fn worker_rejection(worker: usize, e: ServeError) -> ServeError {
+    ServeError::new(e.code, format!("worker {worker}: {}", e.message))
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Health-probe loop: ping every worker each period, excluding failures
+/// and readmitting recoveries.
+fn prober_loop(state: &RouterState, pools: &[Arc<WorkerPool>], period: Duration) {
+    let ping = {
+        let mut v = Value::object();
+        v.set("v", Value::Number(wire::PROTOCOL_VERSION as f64))
+            .set("op", Value::String("ping".to_string()));
+        v.to_json()
+    };
+    loop {
+        let stopped = {
+            let guard = lock(&state.stop);
+            let (guard, _timeout) = state
+                .stop_cv
+                .wait_timeout(guard, period)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+            *guard
+        };
+        if stopped {
+            return;
+        }
+        for (w, pool) in pools.iter().enumerate() {
+            state.probes.inc();
+            match pool.call(&ping) {
+                Ok(_) => state.readmit(w),
+                Err(e) => {
+                    state.probe_failures.inc();
+                    let why = match e {
+                        CallError::Transport(why) => why,
+                        CallError::App(e) => e.to_string(),
+                    };
+                    state.exclude(w, &format!("probe failed: {why}"));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_state(hedge_quantile: f64, timeout_ms: u64) -> RouterState {
+        let reg = metrics::global();
+        RouterState {
+            excluded: Mutex::new(vec![false; 3]),
+            latencies: Mutex::new(VecDeque::new()),
+            stop: Mutex::new(false),
+            stop_cv: Condvar::new(),
+            shard_timeout: Duration::from_millis(timeout_ms),
+            hedge_quantile,
+            probes: reg.counter("router.test.probes"),
+            probe_failures: reg.counter("router.test.probe_failures"),
+            readmitted: reg.counter("router.test.readmitted"),
+            excluded_gauge: reg.gauge("router.test.excluded"),
+            retry_requeued: reg.counter("router.test.retry_requeued"),
+            retry_failed: reg.counter("router.test.retry_failed"),
+            hedge_launched: reg.counter("router.test.hedge_launched"),
+            hedge_wins: reg.counter("router.test.hedge_wins"),
+            latency_hist: reg.histogram("router.test.call_us"),
+        }
+    }
+
+    #[test]
+    fn exclude_readmit_and_next_healthy() {
+        let s = test_state(0.0, 100);
+        assert_eq!(s.next_healthy(0, 3), Some(0));
+        assert_eq!(s.next_healthy(2, 3), Some(2));
+        s.exclude(1, "test");
+        assert_eq!(s.next_healthy(1, 3), Some(2), "skips the excluded worker");
+        s.exclude(2, "test");
+        assert_eq!(s.next_healthy(1, 3), Some(0), "wraps to the healthy one");
+        s.exclude(0, "test");
+        assert_eq!(s.next_healthy(0, 3), None, "all excluded");
+        s.readmit(2);
+        assert_eq!(s.next_healthy(0, 3), Some(2));
+        // exclude/readmit are idempotent
+        s.readmit(2);
+        s.exclude(0, "again");
+        assert_eq!(s.next_healthy(2, 3), Some(2));
+    }
+
+    #[test]
+    fn hedge_delay_arms_only_with_data() {
+        // quantile 0 = off, regardless of samples
+        let s = test_state(0.0, 1000);
+        for _ in 0..64 {
+            s.record_latency(Duration::from_micros(500));
+        }
+        assert_eq!(s.hedge_delay(), None);
+
+        // too few samples = off
+        let s = test_state(0.9, 1000);
+        for _ in 0..HEDGE_MIN_SAMPLES - 1 {
+            s.record_latency(Duration::from_micros(500));
+        }
+        assert_eq!(s.hedge_delay(), None);
+        // one more sample arms it at the ring's quantile
+        s.record_latency(Duration::from_micros(500));
+        assert_eq!(s.hedge_delay(), Some(Duration::from_micros(500)));
+
+        // a delay at/above the shard timeout never hedges
+        let s = test_state(0.9, 1);
+        for _ in 0..64 {
+            s.record_latency(Duration::from_millis(5));
+        }
+        assert_eq!(s.hedge_delay(), None, "quantile ≥ timeout disarms hedging");
+    }
+
+    #[test]
+    fn hedge_quantile_picks_the_tail() {
+        let s = test_state(0.5, 10_000);
+        for us in 1..=100u64 {
+            s.record_latency(Duration::from_micros(us));
+        }
+        let d = s.hedge_delay().expect("armed");
+        assert!(
+            (Duration::from_micros(40)..=Duration::from_micros(60)).contains(&d),
+            "p50 of 1..=100µs should be ~50µs, got {d:?}"
+        );
+    }
+
+    #[test]
+    fn latency_ring_is_bounded() {
+        let s = test_state(0.9, 10_000);
+        for _ in 0..(LATENCY_RING + 100) {
+            s.record_latency(Duration::from_micros(10));
+        }
+        assert_eq!(lock(&s.latencies).len(), LATENCY_RING);
+    }
+
+    #[test]
+    fn router_rejects_bad_configs() {
+        assert!(Router::new(RouterConfig {
+            workers: vec![],
+            vocab: 100,
+            probe_interval: Duration::from_millis(100),
+            shard_timeout: Duration::from_millis(100),
+            hedge_quantile: 0.0,
+        })
+        .is_err());
+        assert!(Router::new(RouterConfig {
+            workers: vec!["127.0.0.1:1".into(), "127.0.0.1:2".into()],
+            vocab: 1,
+            probe_interval: Duration::from_millis(100),
+            shard_timeout: Duration::from_millis(100),
+            hedge_quantile: 0.0,
+        })
+        .is_err());
+    }
+
+    #[test]
+    fn shard_call_with_all_workers_down_is_typed_internal() {
+        // Unroutable workers (reserved port 0 region): every attempt is
+        // a fast transport failure → exclude + requeue once → typed
+        // internal error, never a panic or hang.
+        let router = Router::new(RouterConfig {
+            workers: vec!["127.0.0.1:1".into(), "127.0.0.1:2".into(), "127.0.0.1:3".into()],
+            vocab: 30,
+            probe_interval: Duration::from_secs(3600),
+            shard_timeout: Duration::from_millis(200),
+            hedge_quantile: 0.0,
+        })
+        .expect("lazy construction succeeds with workers down");
+        assert_eq!(router.workers(), 3);
+        assert_eq!(router.plan().shards(), 3);
+        let rows = vec![vec![1.0f32; 30]];
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let err = router.softmax(&refs).expect_err("no worker can serve");
+        assert_eq!(err.code, crate::coordinator::ErrorCode::Internal);
+        router.shutdown();
+        router.shutdown(); // idempotent
+    }
+}

@@ -304,6 +304,16 @@ fn dispatch(
             coord.close_session(id);
             ok_object(Value::object())
         }
+        Op::ShardScan(scan) => {
+            // Worker-role fast path: shard scans bypass the batcher —
+            // the router already batched rows into the frame, and the
+            // per-request queueing machinery would only add latency
+            // between the tiers.
+            match coord.executor().shard_scan(&scan) {
+                Ok(reply) => ok_object(wire::shard_scan_reply_fields(&reply)),
+                Err(e) => wire::encode_error_for(v, &e),
+            }
+        }
         Op::Request(Payload::Generate { session, prompt_tokens, max_tokens }) => {
             return run_generate(
                 coord,

@@ -44,9 +44,13 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::{
-    ErrorCode, Payload, Priority, Reply, RequestOptions, ServeError, TokenFrame,
+    ErrorCode, Payload, Priority, Reply, RequestOptions, ServeError, ShardScan,
+    ShardScanKind, ShardScanReply, TokenFrame,
 };
 use crate::json::{self, Value};
+use crate::sample::SampleSpec;
+use crate::shard::{reduce, ShardPartial};
+use crate::softmax::monoid::MD;
 
 /// The current protocol version.
 pub const PROTOCOL_VERSION: u64 = 2;
@@ -55,6 +59,9 @@ pub const PROTOCOL_VERSION: u64 = 2;
 #[derive(Debug, Clone, PartialEq)]
 pub enum Op {
     Request(Payload),
+    /// A router-tier fan-out scan over one vocabulary slice (v2 only;
+    /// see `docs/PROTOCOL.md` §shard_scan).
+    ShardScan(ShardScan),
     OpenSession,
     ForkSession(u64),
     CloseSession(u64),
@@ -143,6 +150,14 @@ fn decode_frame(doc: &Value, version: u64) -> Result<Frame, ServeError> {
                 prompt_tokens: i32_vec_field(doc, "prompt")?,
                 max_tokens: usize_field(doc, "max_tokens")?,
             })
+        }
+        "shard_scan" => {
+            if version < 2 {
+                return Err(ServeError::bad_request(
+                    "`shard_scan` requires protocol v2 (send \"v\":2)",
+                ));
+            }
+            Op::ShardScan(decode_shard_scan(doc)?)
         }
         "open_session" => Op::OpenSession,
         "fork_session" => Op::ForkSession(u64_field(doc, "session")?),
@@ -257,6 +272,247 @@ fn usize_field(doc: &Value, key: &str) -> Result<usize, ServeError> {
     doc.get(key).ok_or_else(|| missing(key))?.as_usize().ok_or_else(|| {
         ServeError::bad_request(format!("`{key}` must be a non-negative integer"))
     })
+}
+
+// ---------------------------------------------------------------------------
+// shard_scan frames (router ↔ worker, v2 only)
+// ---------------------------------------------------------------------------
+
+/// Encode a sampling spec for a `shard_scan` frame.  The seed travels
+/// as a decimal **string**: JSON numbers are f64 and a derived step
+/// seed uses all 64 bits, so a numeric encoding would corrupt seeds
+/// ≥ 2^53.
+fn sample_spec_value(spec: SampleSpec) -> Value {
+    let mut v = Value::object();
+    v.set("seed", Value::String(spec.seed.to_string()))
+        .set("temperature", Value::Number(spec.temperature as f64));
+    v
+}
+
+fn decode_sample_spec(v: &Value) -> Result<SampleSpec, ServeError> {
+    let seed = match v.get("seed") {
+        Some(Value::String(s)) => s.parse::<u64>().map_err(|_| {
+            ServeError::bad_request("`seed` string must be a decimal u64")
+        })?,
+        Some(n) => n.as_i64().filter(|s| *s >= 0).ok_or_else(|| {
+            ServeError::bad_request("`seed` must be a non-negative integer or decimal string")
+        })? as u64,
+        None => return Err(missing("seed")),
+    };
+    let t = v
+        .get("temperature")
+        .ok_or_else(|| missing("temperature"))?
+        .as_f64()
+        .ok_or_else(|| ServeError::bad_request("`temperature` must be a number"))?;
+    if !(t.is_finite() && t > 0.0) {
+        return Err(ServeError::invalid(format!(
+            "temperature {t} must be a finite value > 0"
+        )));
+    }
+    Ok(SampleSpec { seed, temperature: t as f32 })
+}
+
+/// Encode a `shard_scan` request frame (the router's fan-out side).
+pub fn encode_shard_scan(scan: &ShardScan) -> String {
+    let mut v = Value::object();
+    v.set("v", Value::Number(PROTOCOL_VERSION as f64))
+        .set("op", Value::String("shard_scan".to_string()))
+        .set("kind", Value::String(scan.kind.as_str().to_string()))
+        .set("start", Value::Number(scan.start as f64))
+        .set("end", Value::Number(scan.end as f64))
+        .set(
+            "rows",
+            Value::Array(scan.rows.iter().map(|r| Value::from_f32_slice(r)).collect()),
+        );
+    match scan.kind {
+        ShardScanKind::Decode => {
+            v.set("k", Value::Number(scan.k as f64));
+            if scan.samples.iter().any(Option::is_some) {
+                v.set(
+                    "samples",
+                    Value::Array(
+                        scan.samples
+                            .iter()
+                            .map(|s| s.map_or(Value::Null, sample_spec_value))
+                            .collect(),
+                    ),
+                );
+            }
+        }
+        ShardScanKind::Softmax => {}
+        ShardScanKind::Scale => {
+            v.set(
+                "norms",
+                Value::Array(scan.norms.iter().map(|&md| reduce::md_to_wire(md)).collect()),
+            );
+        }
+    }
+    v.to_json()
+}
+
+/// Decode a `shard_scan` request (worker side).  Structural validation
+/// only — the executor still checks the range against its own vocab,
+/// row widths, and `k` bounds (those depend on serving config).
+fn decode_shard_scan(doc: &Value) -> Result<ShardScan, ServeError> {
+    let kind_str = doc
+        .get("kind")
+        .and_then(Value::as_str)
+        .ok_or_else(|| ServeError::bad_request("missing `kind` (must be a string)"))?;
+    let kind = ShardScanKind::parse(kind_str).ok_or_else(|| {
+        ServeError::bad_request(format!("unknown shard_scan kind `{kind_str}` (decode|softmax|scale)"))
+    })?;
+    let start = usize_field(doc, "start")?;
+    let end = usize_field(doc, "end")?;
+    if start >= end {
+        return Err(ServeError::bad_request(format!(
+            "empty shard range {start}:{end} (start must be < end)"
+        )));
+    }
+    let rows = doc
+        .get("rows")
+        .ok_or_else(|| missing("rows"))?
+        .to_f32_matrix()
+        .map_err(|e| ServeError::bad_request(format!("`rows`: {e}")))?;
+    if rows.is_empty() {
+        return Err(ServeError::bad_request("`rows` must not be empty"));
+    }
+    let mut scan = ShardScan {
+        kind,
+        start,
+        end,
+        k: 0,
+        rows,
+        samples: Vec::new(),
+        norms: Vec::new(),
+    };
+    match kind {
+        ShardScanKind::Decode => {
+            scan.k = usize_field(doc, "k")?;
+            if scan.k == 0 {
+                return Err(ServeError::bad_request("`k` must be ≥ 1"));
+            }
+            scan.samples = match doc.get("samples") {
+                None => vec![None; scan.rows.len()],
+                Some(v) => {
+                    let arr = v.as_array().ok_or_else(|| {
+                        ServeError::bad_request("`samples` must be an array")
+                    })?;
+                    if arr.len() != scan.rows.len() {
+                        return Err(ServeError::bad_request(
+                            "`samples` must align with `rows`",
+                        ));
+                    }
+                    arr.iter()
+                        .map(|s| match s {
+                            Value::Null => Ok(None),
+                            v => decode_sample_spec(v).map(Some),
+                        })
+                        .collect::<Result<_, _>>()?
+                }
+            };
+        }
+        ShardScanKind::Softmax => {}
+        ShardScanKind::Scale => {
+            let arr = doc
+                .get("norms")
+                .ok_or_else(|| missing("norms"))?
+                .as_array()
+                .ok_or_else(|| ServeError::bad_request("`norms` must be an array"))?;
+            if arr.len() != scan.rows.len() {
+                return Err(ServeError::bad_request("`norms` must align with `rows`"));
+            }
+            scan.norms = arr
+                .iter()
+                .map(|v| {
+                    reduce::md_from_wire(v)
+                        .map_err(|e| ServeError::bad_request(format!("`norms`: {e}")))
+                })
+                .collect::<Result<_, _>>()?;
+        }
+    }
+    Ok(scan)
+}
+
+/// Encode a worker's `shard_scan` reply payload (merged into the v2
+/// success envelope by the server loop).
+pub fn shard_scan_reply_fields(reply: &ShardScanReply) -> Value {
+    let mut v = Value::object();
+    match reply {
+        ShardScanReply::Partials(parts) => {
+            v.set("partials", Value::Array(parts.iter().map(ShardPartial::to_wire).collect()));
+        }
+        ShardScanReply::Norms(norms) => {
+            v.set("norms", Value::Array(norms.iter().map(|&md| reduce::md_to_wire(md)).collect()));
+        }
+        ShardScanReply::Slices(slices) => {
+            v.set(
+                "slices",
+                Value::Array(slices.iter().map(|r| Value::from_f32_slice(r)).collect()),
+            );
+        }
+    }
+    v
+}
+
+fn reply_array<'v>(v: &'v Value, key: &str, rows: usize) -> Result<&'v [Value]> {
+    let arr = v
+        .require(key)?
+        .as_array()
+        .ok_or_else(|| anyhow!("`{key}` must be an array"))?;
+    if arr.len() != rows {
+        bail!("`{key}` carries {} rows, expected {rows}", arr.len());
+    }
+    Ok(arr)
+}
+
+/// Decode a `shard_scan` decode-kind reply: one validated
+/// [`ShardPartial`] per row, indices global to `[start, end)`
+/// (router side; validation rules in [`ShardPartial::from_wire`]).
+pub fn decode_shard_partials(
+    v: &Value,
+    rows: usize,
+    k: usize,
+    start: usize,
+    end: usize,
+    sampled: &[bool],
+) -> Result<Vec<ShardPartial>> {
+    let arr = reply_array(v, "partials", rows)?;
+    arr.iter()
+        .enumerate()
+        .map(|(i, p)| {
+            ShardPartial::from_wire(p, k, start, end, sampled[i])
+                .map_err(|e| anyhow!("partial row {i}: {e}"))
+        })
+        .collect()
+}
+
+/// Decode a `shard_scan` softmax-kind reply: one partial `(m, d)` per
+/// row (router side; non-finite components are rejected).
+pub fn decode_shard_norms(v: &Value, rows: usize) -> Result<Vec<MD>> {
+    let arr = reply_array(v, "norms", rows)?;
+    arr.iter()
+        .enumerate()
+        .map(|(i, n)| reduce::md_from_wire(n).map_err(|e| anyhow!("norm row {i}: {e}")))
+        .collect()
+}
+
+/// Decode a `shard_scan` scale-kind reply: one probability slice of
+/// width `end − start` per row (router side).
+pub fn decode_shard_slices(v: &Value, rows: usize, width: usize) -> Result<Vec<Vec<f32>>> {
+    let arr = reply_array(v, "slices", rows)?;
+    arr.iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let slice = r.to_f32_vec().map_err(|e| anyhow!("slice row {i}: {e}"))?;
+            if slice.len() != width {
+                bail!("slice row {i} has {} elements, expected {width}", slice.len());
+            }
+            if slice.iter().any(|p| !p.is_finite()) {
+                bail!("slice row {i} carries non-finite probabilities");
+            }
+            Ok(slice)
+        })
+        .collect()
 }
 
 // ---------------------------------------------------------------------------
@@ -666,6 +922,138 @@ mod tests {
 
         // I/O-level failures have no wire code.
         assert_eq!(error_code(&anyhow!("connection reset")), None);
+    }
+
+    #[test]
+    fn shard_scan_roundtrips_all_kinds() {
+        // decode kind, one sampled and one greedy row
+        let scan = ShardScan {
+            kind: ShardScanKind::Decode,
+            start: 128,
+            end: 256,
+            k: 4,
+            rows: vec![vec![0.5, -1.25], vec![2.0, 3.5]],
+            samples: vec![None, Some(SampleSpec { seed: u64::MAX - 3, temperature: 0.5 })],
+            norms: vec![],
+        };
+        let f = decode_request(&encode_shard_scan(&scan)).unwrap();
+        assert_eq!(f.v, 2);
+        assert_eq!(f.op, Op::ShardScan(scan), "u64 seeds survive the string encoding");
+
+        // softmax kind: rows are logit slices, no k/samples/norms
+        let scan = ShardScan {
+            kind: ShardScanKind::Softmax,
+            start: 0,
+            end: 3,
+            k: 0,
+            rows: vec![vec![1.0, 2.0, 3.0]],
+            samples: vec![],
+            norms: vec![],
+        };
+        let f = decode_request(&encode_shard_scan(&scan)).unwrap();
+        assert_eq!(f.op, Op::ShardScan(scan));
+
+        // scale kind carries the merged norms (incl. the identity shape)
+        let scan = ShardScan {
+            kind: ShardScanKind::Scale,
+            start: 3,
+            end: 6,
+            k: 0,
+            rows: vec![vec![1.0, 2.0, 3.0], vec![0.0, 0.5, 1.0]],
+            samples: vec![],
+            norms: vec![MD { m: 3.0, d: 1.5 }, MD::IDENTITY],
+        };
+        let f = decode_request(&encode_shard_scan(&scan)).unwrap();
+        assert_eq!(f.op, Op::ShardScan(scan));
+    }
+
+    #[test]
+    fn shard_scan_requires_v2() {
+        let scan = ShardScan {
+            kind: ShardScanKind::Softmax,
+            start: 0,
+            end: 2,
+            k: 0,
+            rows: vec![vec![1.0, 2.0]],
+            samples: vec![],
+            norms: vec![],
+        };
+        let v1 = encode_shard_scan(&scan).replace("\"v\":2", "\"v\":1");
+        let e = decode_request(&v1).unwrap_err();
+        assert_eq!(e.error.code, ErrorCode::BadRequest);
+        assert!(e.error.message.contains("v2"), "{}", e.error);
+    }
+
+    #[test]
+    fn shard_scan_rejects_malformed_typed() {
+        for (frame, what) in [
+            (r#"{"v":2,"op":"shard_scan"}"#, "missing kind"),
+            (r#"{"v":2,"op":"shard_scan","kind":"transpose","start":0,"end":2,"rows":[[1]]}"#, "unknown kind"),
+            (r#"{"v":2,"op":"shard_scan","kind":"softmax","end":2,"rows":[[1]]}"#, "missing start"),
+            (r#"{"v":2,"op":"shard_scan","kind":"softmax","start":2,"end":2,"rows":[[1]]}"#, "empty range"),
+            (r#"{"v":2,"op":"shard_scan","kind":"softmax","start":3,"end":2,"rows":[[1]]}"#, "inverted range"),
+            (r#"{"v":2,"op":"shard_scan","kind":"softmax","start":0,"end":2}"#, "missing rows"),
+            (r#"{"v":2,"op":"shard_scan","kind":"softmax","start":0,"end":2,"rows":[]}"#, "empty rows"),
+            (r#"{"v":2,"op":"shard_scan","kind":"softmax","start":0,"end":2,"rows":[["a"]]}"#, "ill-typed rows"),
+            (r#"{"v":2,"op":"shard_scan","kind":"softmax","start":0,"end":2,"rows":[[null]]}"#, "null logit"),
+            (r#"{"v":2,"op":"shard_scan","kind":"decode","start":0,"end":2,"rows":[[1]]}"#, "decode without k"),
+            (r#"{"v":2,"op":"shard_scan","kind":"decode","start":0,"end":2,"k":0,"rows":[[1]]}"#, "k = 0"),
+            (r#"{"v":2,"op":"shard_scan","kind":"decode","start":0,"end":2,"k":2,"rows":[[1]],"samples":[null,null]}"#, "misaligned samples"),
+            (r#"{"v":2,"op":"shard_scan","kind":"decode","start":0,"end":2,"k":2,"rows":[[1]],"samples":[{"seed":"x","temperature":1}]}"#, "bad seed string"),
+            (r#"{"v":2,"op":"shard_scan","kind":"decode","start":0,"end":2,"k":2,"rows":[[1]],"samples":[{"seed":"1"}]}"#, "spec missing temperature"),
+            (r#"{"v":2,"op":"shard_scan","kind":"scale","start":0,"end":2,"rows":[[1,2]]}"#, "scale without norms"),
+            (r#"{"v":2,"op":"shard_scan","kind":"scale","start":0,"end":2,"rows":[[1,2]],"norms":[]}"#, "misaligned norms"),
+            (r#"{"v":2,"op":"shard_scan","kind":"scale","start":0,"end":2,"rows":[[1,2]],"norms":[{"m":null,"d":1}]}"#, "non-finite m"),
+            (r#"{"v":2,"op":"shard_scan","kind":"scale","start":0,"end":2,"rows":[[1,2]],"norms":[{"m":1,"d":0}]}"#, "d = 0"),
+        ] {
+            let e = decode_request(frame).unwrap_err();
+            assert_eq!(e.error.code, ErrorCode::BadRequest, "{what}: {frame}");
+            assert_eq!(e.v, 2, "{what}");
+        }
+        // a non-positive spec temperature is invalid_argument (value range)
+        let e = decode_request(
+            r#"{"v":2,"op":"shard_scan","kind":"decode","start":0,"end":2,"k":2,"rows":[[1]],"samples":[{"seed":"1","temperature":0}]}"#,
+        )
+        .unwrap_err();
+        assert_eq!(e.error.code, ErrorCode::InvalidArgument);
+    }
+
+    #[test]
+    fn shard_scan_reply_roundtrips() {
+        // decode-kind reply: partials with global indices
+        let x: Vec<f32> = (0..32).map(|i| ((i * 13) % 7) as f32).collect();
+        let parts = vec![
+            ShardPartial::scan(&x, 3, 64),
+            ShardPartial::scan_with(&x, 3, 64, Some(SampleSpec { seed: 5, temperature: 1.0 })),
+        ];
+        let line = encode_object_v2(shard_scan_reply_fields(&ShardScanReply::Partials(parts.clone())));
+        let v = decode_response(&line).unwrap();
+        let back = decode_shard_partials(&v, 2, 3, 64, 96, &[false, true]).unwrap();
+        assert_eq!(back[0].md, parts[0].md);
+        assert_eq!(back[0].topk.values(), parts[0].topk.values());
+        assert_eq!(back[0].topk.indices(), parts[0].topk.indices());
+        assert_eq!(
+            back[1].sampled.as_ref().map(|b| b.indices().to_vec()),
+            parts[1].sampled.as_ref().map(|b| b.indices().to_vec())
+        );
+        // wrong row count / out-of-range indices are typed errors
+        assert!(decode_shard_partials(&v, 3, 3, 64, 96, &[false, true, true]).is_err());
+        assert!(decode_shard_partials(&v, 2, 3, 0, 32, &[false, true]).is_err(), "indices outside range");
+
+        // softmax-kind reply
+        let norms = vec![MD { m: 1.0, d: 2.0 }, MD::IDENTITY];
+        let line = encode_object_v2(shard_scan_reply_fields(&ShardScanReply::Norms(norms.clone())));
+        let v = decode_response(&line).unwrap();
+        assert_eq!(decode_shard_norms(&v, 2).unwrap(), norms);
+        assert!(decode_shard_norms(&v, 1).is_err());
+
+        // scale-kind reply
+        let slices = vec![vec![0.25, 0.75]];
+        let line = encode_object_v2(shard_scan_reply_fields(&ShardScanReply::Slices(slices.clone())));
+        let v = decode_response(&line).unwrap();
+        assert_eq!(decode_shard_slices(&v, 1, 2).unwrap(), slices);
+        assert!(decode_shard_slices(&v, 1, 3).is_err(), "width mismatch");
+        assert!(decode_shard_slices(&v, 2, 2).is_err(), "row-count mismatch");
     }
 
     #[test]

@@ -225,6 +225,15 @@ impl ShardEngine {
         self.backend.scale_tile(tile, out, m, inv);
     }
 
+    /// Public scale-pass entry for one externally-materialized tile
+    /// (the router tier's workers run pass 2 of a distributed softmax
+    /// through this): `out[i] = e^{tile[i] − m} · inv` via the backend,
+    /// exactly the kernel the in-process sharded scale pass dispatches.
+    pub fn scale_slice(&self, tile: &[f32], out: &mut [f32], m: f32, inv: f32) {
+        assert_eq!(tile.len(), out.len(), "scale output must match its tile");
+        self.scale_tile(tile, out, m, inv);
+    }
+
     /// Cumulative task-steal count from the pool metrics (the
     /// process-wide `exec.pool.steal.steals` counter; 0 for an inline
     /// engine).  Monotone — consumers compare before/after deltas.

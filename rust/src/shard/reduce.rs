@@ -9,6 +9,7 @@
 //! tree: log-depth (parallelizable) and slightly *better* fp accuracy
 //! than a left fold (error grows with tree depth, not shard count).
 
+use crate::json::Value;
 use crate::sample::{self, SampleSpec, SampledBuffer};
 use crate::softmax::fused;
 use crate::softmax::monoid::MD;
@@ -113,6 +114,164 @@ impl ShardPartial {
             .as_ref()
             .expect("finalize_sampled on a partial scanned without a SampleSpec");
         sample::finalize_sampled(buf, self.md)
+    }
+}
+
+/// Encode an `(m, d)` normalizer state for the wire.
+///
+/// JSON numbers cannot carry `−∞` (it would serialize as `null`), so
+/// the ⊕ identity gets a dedicated `{"identity":true}` shape; every
+/// other state is `{"m":…, "d":…}` with finite components.
+pub fn md_to_wire(md: MD) -> Value {
+    let mut v = Value::object();
+    if md.is_identity() {
+        v.set("identity", Value::Bool(true));
+    } else {
+        v.set("m", Value::Number(md.m as f64));
+        v.set("d", Value::Number(md.d as f64));
+    }
+    v
+}
+
+/// Decode an `(m, d)` normalizer state from the wire, rejecting
+/// non-finite `m` and non-finite or non-positive `d` (a hostile or
+/// corrupt peer must never inject a poisoned normalizer into the ⊕
+/// tree).  The error string names the offending field.
+pub fn md_from_wire(v: &Value) -> Result<MD, String> {
+    if v.get("identity").and_then(Value::as_bool) == Some(true) {
+        return Ok(MD::IDENTITY);
+    }
+    let m = v.get("m").and_then(Value::as_f64).ok_or("`m` must be a number")? as f32;
+    let d = v.get("d").and_then(Value::as_f64).ok_or("`d` must be a number")? as f32;
+    if !m.is_finite() {
+        return Err(format!("non-finite m {m}"));
+    }
+    if !(d.is_finite() && d > 0.0) {
+        return Err(format!("d {d} must be finite and > 0"));
+    }
+    Ok(MD { m, d })
+}
+
+fn finite_f32_array(v: &Value, what: &str) -> Result<Vec<f32>, String> {
+    let arr = v.as_array().ok_or_else(|| format!("`{what}` must be an array"))?;
+    arr.iter()
+        .map(|e| {
+            e.as_f64()
+                .map(|n| n as f32)
+                .filter(|f| f.is_finite())
+                .ok_or_else(|| format!("`{what}` must hold finite numbers"))
+        })
+        .collect()
+}
+
+fn index_array(v: &Value, what: &str, start: usize, end: usize) -> Result<Vec<i64>, String> {
+    let arr = v.as_array().ok_or_else(|| format!("`{what}` must be an array"))?;
+    arr.iter()
+        .map(|e| {
+            let i = e.as_i64().ok_or_else(|| format!("`{what}` must hold integers"))?;
+            if i < start as i64 || i >= end as i64 {
+                return Err(format!("`{what}` index {i} outside shard range {start}:{end}"));
+            }
+            Ok(i)
+        })
+        .collect()
+}
+
+impl ShardPartial {
+    /// Encode this partial for the wire (`shard_scan` partials reply).
+    ///
+    /// Only real (index ≥ 0) buffer entries are serialized, in stored
+    /// (descending) order; the sentinel tail is reconstructed by
+    /// [`from_wire`](Self::from_wire) from `k`.  Sampled state rides as
+    /// aligned `s` (perturbed score) / `x` (raw logit) / `p` (index)
+    /// arrays when present.
+    pub fn to_wire(&self) -> Value {
+        let mut v = md_to_wire(self.md);
+        let mut vals = Vec::new();
+        let mut idx = Vec::new();
+        for (u, p) in self.topk.entries() {
+            if p >= 0 {
+                vals.push(Value::Number(u as f64));
+                idx.push(Value::Number(p as f64));
+            }
+        }
+        let mut topk = Value::object();
+        topk.set("vals", Value::Array(vals));
+        topk.set("idx", Value::Array(idx));
+        v.set("topk", topk);
+        if let Some(buf) = &self.sampled {
+            let mut s = Vec::new();
+            let mut x = Vec::new();
+            let mut p = Vec::new();
+            for (score, logit, index) in buf.entries() {
+                if index >= 0 {
+                    s.push(Value::Number(score as f64));
+                    x.push(Value::Number(logit as f64));
+                    p.push(Value::Number(index as f64));
+                }
+            }
+            let mut sampled = Value::object();
+            sampled.set("s", Value::Array(s));
+            sampled.set("x", Value::Array(x));
+            sampled.set("p", Value::Array(p));
+            v.set("sampled", sampled);
+        }
+        v
+    }
+
+    /// Decode a partial from the wire, validating every component the
+    /// router will feed into its ⊕ tree: the normalizer (via
+    /// [`md_from_wire`]), buffer values/scores/logits finite, indices
+    /// inside the shard's declared global `[start, end)` range, aligned
+    /// lengths ≤ `k`, and sampled state present exactly when the query
+    /// was sampled.  Entries rebuild through the buffers' own `push`
+    /// path in stored order, so a roundtrip is bitwise-identical.
+    pub fn from_wire(
+        v: &Value,
+        k: usize,
+        start: usize,
+        end: usize,
+        sampled: bool,
+    ) -> Result<ShardPartial, String> {
+        let md = md_from_wire(v)?;
+        let topk_v = v.get("topk").ok_or("missing `topk`")?;
+        let vals =
+            finite_f32_array(topk_v.get("vals").ok_or("missing `topk.vals`")?, "topk.vals")?;
+        let idx =
+            index_array(topk_v.get("idx").ok_or("missing `topk.idx`")?, "topk.idx", start, end)?;
+        if vals.len() != idx.len() {
+            return Err("`topk.vals` and `topk.idx` lengths differ".into());
+        }
+        if vals.len() > k {
+            return Err(format!("`topk` carries {} entries for k={k}", vals.len()));
+        }
+        let mut topk = TopKBuffer::new(k);
+        for (&u, &p) in vals.iter().zip(&idx) {
+            topk.push(u, p);
+        }
+        let sampled = match (v.get("sampled"), sampled) {
+            (Some(sv), true) => {
+                let s = finite_f32_array(sv.get("s").ok_or("missing `sampled.s`")?, "sampled.s")?;
+                let x = finite_f32_array(sv.get("x").ok_or("missing `sampled.x`")?, "sampled.x")?;
+                let p =
+                    index_array(sv.get("p").ok_or("missing `sampled.p`")?, "sampled.p", start, end)?;
+                if s.len() != x.len() || s.len() != p.len() {
+                    return Err("`sampled.s`/`sampled.x`/`sampled.p` lengths differ".into());
+                }
+                if s.len() > k {
+                    return Err(format!("`sampled` carries {} entries for k={k}", s.len()));
+                }
+                let mut buf = SampledBuffer::new(k);
+                for i in 0..s.len() {
+                    buf.push(s[i], x[i], p[i]);
+                }
+                Some(buf)
+            }
+            (None, false) => None,
+            (Some(_), false) => return Err("unexpected `sampled` state on a greedy query".into()),
+            (None, true) => return Err("missing `sampled` state on a sampled query".into()),
+        };
+        Ok(ShardPartial { md, topk, sampled })
     }
 }
 
@@ -260,5 +419,119 @@ mod tests {
     fn unsampled_scan_has_no_sampled_state() {
         let part = ShardPartial::scan(&logits(64, 1), 3, 0);
         assert!(part.sampled.is_none());
+    }
+
+    // ----- wire serde -----------------------------------------------------
+
+    /// Encode → serialize → parse → decode, as the router does over TCP.
+    fn roundtrip(part: &ShardPartial, k: usize, start: usize, end: usize, sampled: bool) -> ShardPartial {
+        let doc = crate::json::parse(&part.to_wire().to_json()).expect("wire JSON parses");
+        ShardPartial::from_wire(&doc, k, start, end, sampled).expect("wire partial decodes")
+    }
+
+    #[test]
+    fn wire_roundtrip_is_bitwise() {
+        let x = logits(700, 31);
+        let k = 6;
+        let part = ShardPartial::scan(&x[100..400], k, 100);
+        let back = roundtrip(&part, k, 100, 400, false);
+        assert_eq!(back.md, part.md);
+        assert_eq!(back.topk.values(), part.topk.values());
+        assert_eq!(back.topk.indices(), part.topk.indices());
+        assert!(back.sampled.is_none());
+    }
+
+    #[test]
+    fn wire_roundtrip_preserves_sentinel_tail() {
+        // A shard smaller than k serializes only its real entries; the
+        // decoder reconstructs the −∞/−1 sentinel tail from k.
+        let x = logits(3, 7);
+        let part = ShardPartial::scan(&x, 5, 40);
+        assert_eq!(part.topk.len_filled(), 3);
+        let back = roundtrip(&part, 5, 40, 43, false);
+        assert_eq!(back.topk.values(), part.topk.values());
+        assert_eq!(back.topk.indices(), part.topk.indices());
+        assert_eq!(back.topk.len_filled(), 3);
+    }
+
+    #[test]
+    fn wire_roundtrip_sampled_is_bitwise() {
+        let x = logits(512, 33);
+        let k = 4;
+        let spec = SampleSpec { seed: 99, temperature: 0.7 };
+        let part = ShardPartial::scan_with(&x, k, 0, Some(spec));
+        let back = roundtrip(&part, k, 0, 512, true);
+        assert_eq!(back.md, part.md);
+        assert_eq!(back.topk.values(), part.topk.values());
+        assert_eq!(back.topk.indices(), part.topk.indices());
+        let (a, b) = (back.sampled.expect("sampled state"), part.sampled.expect("sampled state"));
+        assert_eq!(a.scores(), b.scores());
+        assert_eq!(a.indices(), b.indices());
+        assert_eq!(back.finalize_sampled(), part.finalize_sampled());
+    }
+
+    #[test]
+    fn wire_roundtrip_identity() {
+        let part = ShardPartial::identity(3);
+        let doc = crate::json::parse(&part.to_wire().to_json()).expect("parses");
+        assert_eq!(doc.get("identity").and_then(crate::json::Value::as_bool), Some(true));
+        let back = ShardPartial::from_wire(&doc, 3, 0, 10, false).expect("decodes");
+        assert!(back.md.is_identity());
+        assert_eq!(back.topk.len_filled(), 0);
+    }
+
+    #[test]
+    fn wire_rejects_corruption_typed() {
+        let k = 3;
+        // Every case must decode to Err — never panic.
+        let bad = [
+            // non-finite m (JSON can't say Inf; null and strings must fail)
+            r#"{"m":null,"d":1.0,"topk":{"vals":[],"idx":[]}}"#,
+            r#"{"m":"inf","d":1.0,"topk":{"vals":[],"idx":[]}}"#,
+            // d must be finite and > 0
+            r#"{"m":1.0,"d":0.0,"topk":{"vals":[],"idx":[]}}"#,
+            r#"{"m":1.0,"d":-2.0,"topk":{"vals":[],"idx":[]}}"#,
+            r#"{"m":1.0,"d":null,"topk":{"vals":[],"idx":[]}}"#,
+            // missing / malformed topk
+            r#"{"m":1.0,"d":1.0}"#,
+            r#"{"m":1.0,"d":1.0,"topk":{"vals":[1.0]}}"#,
+            r#"{"m":1.0,"d":1.0,"topk":{"vals":[1.0],"idx":[5,6]}}"#,
+            r#"{"m":1.0,"d":1.0,"topk":{"vals":[1,2,3,4],"idx":[5,6,7,8]}}"#,
+            r#"{"m":1.0,"d":1.0,"topk":{"vals":[null],"idx":[5]}}"#,
+            // out-of-range global indices (shard range is 4..9 below)
+            r#"{"m":1.0,"d":1.0,"topk":{"vals":[1.0],"idx":[3]}}"#,
+            r#"{"m":1.0,"d":1.0,"topk":{"vals":[1.0],"idx":[9]}}"#,
+            r#"{"m":1.0,"d":1.0,"topk":{"vals":[1.0],"idx":[-1]}}"#,
+            r#"{"m":1.0,"d":1.0,"topk":{"vals":[1.0],"idx":[5.5]}}"#,
+            // sampled state on a greedy query
+            r#"{"m":1.0,"d":1.0,"topk":{"vals":[],"idx":[]},"sampled":{"s":[],"x":[],"p":[]}}"#,
+        ];
+        for doc in bad {
+            let v = crate::json::parse(doc).expect("test corpus is valid JSON");
+            let got = ShardPartial::from_wire(&v, k, 4, 9, false);
+            assert!(got.is_err(), "decoded corrupt partial: {doc}");
+        }
+        // A sampled query must find its sampled state...
+        let v = crate::json::parse(r#"{"m":1.0,"d":1.0,"topk":{"vals":[],"idx":[]}}"#).unwrap();
+        assert!(ShardPartial::from_wire(&v, k, 4, 9, true).is_err());
+        // ...with aligned, in-range, finite components.
+        for doc in [
+            r#"{"m":1.0,"d":1.0,"topk":{"vals":[],"idx":[]},"sampled":{"s":[1.0],"x":[1.0],"p":[5,6]}}"#,
+            r#"{"m":1.0,"d":1.0,"topk":{"vals":[],"idx":[]},"sampled":{"s":[null],"x":[1.0],"p":[5]}}"#,
+            r#"{"m":1.0,"d":1.0,"topk":{"vals":[],"idx":[]},"sampled":{"s":[1.0],"x":[1.0],"p":[99]}}"#,
+            r#"{"m":1.0,"d":1.0,"topk":{"vals":[],"idx":[]},"sampled":{"s":[1.0],"x":[1.0]}}"#,
+        ] {
+            let v = crate::json::parse(doc).expect("test corpus is valid JSON");
+            assert!(ShardPartial::from_wire(&v, k, 4, 9, true).is_err(), "decoded: {doc}");
+        }
+    }
+
+    #[test]
+    fn wire_md_roundtrip() {
+        let md = MD { m: 3.25, d: 17.5 };
+        let doc = crate::json::parse(&md_to_wire(md).to_json()).unwrap();
+        assert_eq!(md_from_wire(&doc).unwrap(), md);
+        let id = crate::json::parse(&md_to_wire(MD::IDENTITY).to_json()).unwrap();
+        assert!(md_from_wire(&id).unwrap().is_identity());
     }
 }

@@ -1,0 +1,321 @@
+//! Router-tier e2e: a router coordinator fanning vocabulary shards
+//! over in-process worker servers must serve results **bitwise
+//! identical** to a single-process coordinator, across every shard
+//! backend and both pool schedulers — and must survive a dead worker
+//! by requeuing its slice onto a healthy peer.
+//!
+//! Topology per case: three host-backend worker `Server`s on loopback
+//! (each a stock `osmax` server with an advisory `--worker-slice`),
+//! one router-backend coordinator pointed at them, and one
+//! single-process host-backend reference coordinator.  The reference
+//! pins `host_shards = 3` so its auto plan is exactly the router's
+//! `ShardPlan::with_shards(vocab, 3)` — same ranges, same ⊕
+//! bracketing, hence bitwise-equal results.
+//!
+//! The SIGKILL-a-real-process rendition lives in CI's multi-process
+//! leg; here worker death is a connection-refused address, which
+//! drives the same exclude → requeue path deterministically.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use onlinesoftmax::config::{BackendKind, ServeConfig, ServingMode};
+use onlinesoftmax::coordinator::{Coordinator, Payload, Reply, RequestOptions};
+use onlinesoftmax::exec::SchedPolicy;
+use onlinesoftmax::metrics;
+use onlinesoftmax::rng::Xoshiro256pp;
+use onlinesoftmax::server::Server;
+use onlinesoftmax::shard::{ShardBackendKind, ShardPlan};
+
+const TIMEOUT: Duration = Duration::from_secs(60);
+const VOCAB: usize = 2048;
+const HIDDEN: usize = 32;
+const WORKERS: usize = 3;
+
+/// Shared kernel/plan config: vocab above the shard threshold so the
+/// sharded path engages, and `host_shards = 3` so the single-process
+/// plan equals the router's 3-worker plan (the bitwise-identity
+/// precondition).
+fn base_cfg(backend: ShardBackendKind, sched: SchedPolicy) -> ServeConfig {
+    let mut cfg = ServeConfig::default();
+    cfg.backend = BackendKind::Host;
+    cfg.mode = ServingMode::Online;
+    cfg.vocab = VOCAB;
+    cfg.hidden = HIDDEN;
+    cfg.host_shards = WORKERS;
+    cfg.shard_threshold = 512;
+    cfg.workers = 2;
+    cfg.max_wait = Duration::from_micros(500);
+    cfg.shard_backend = backend;
+    cfg.pool_sched = sched;
+    cfg
+}
+
+struct TestWorker {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    thread: std::thread::JoinHandle<()>,
+}
+
+impl TestWorker {
+    fn spawn(mut cfg: ServeConfig, slice: (usize, usize)) -> TestWorker {
+        cfg.addr = "127.0.0.1:0".into();
+        cfg.worker_slice = Some(slice);
+        let coord = Arc::new(Coordinator::start(&cfg).expect("worker coordinator"));
+        let server = Server::bind(&cfg.addr, coord, 8).expect("worker bind");
+        let addr = server.local_addr().expect("worker addr").to_string();
+        let stop = server.stop_handle();
+        let thread = std::thread::spawn(move || {
+            let _ = server.serve();
+        });
+        TestWorker { addr, stop, thread }
+    }
+
+    fn halt(self) {
+        self.stop.store(true, Ordering::Relaxed);
+        let _ = self.thread.join();
+    }
+}
+
+/// Three workers, each advertising the slice the router's plan will
+/// actually send it.
+fn spawn_workers(cfg: &ServeConfig) -> Vec<TestWorker> {
+    ShardPlan::with_shards(VOCAB, WORKERS)
+        .ranges()
+        .map(|r| TestWorker::spawn(cfg.clone(), (r.start, r.end)))
+        .collect()
+}
+
+fn router_coord(cfg: &ServeConfig, worker_addrs: Vec<String>) -> Coordinator {
+    let mut rc = cfg.clone();
+    rc.backend = BackendKind::Router;
+    rc.router_workers = worker_addrs;
+    rc.router_probe_ms = 200;
+    rc.router_shard_timeout_ms = 10_000;
+    Coordinator::start(&rc).expect("router coordinator")
+}
+
+/// A loopback address that refuses connections: bind, read the port,
+/// drop the listener.
+fn dead_addr() -> String {
+    let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = l.local_addr().unwrap().to_string();
+    drop(l);
+    addr
+}
+
+fn assert_bitwise(a: &Reply, b: &Reply, what: &str) {
+    match (a, b) {
+        (Reply::Softmax { probs: pa }, Reply::Softmax { probs: pb }) => {
+            assert_eq!(pa.len(), pb.len(), "{what}: prob lengths");
+            for (i, (x, y)) in pa.iter().zip(pb).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "{what}: prob {i}: {x} vs {y}");
+            }
+        }
+        (Reply::TopK { vals: va, idx: ia }, Reply::TopK { vals: vb, idx: ib }) => {
+            assert_eq!(ia, ib, "{what}: selected indices");
+            for (i, (x, y)) in va.iter().zip(vb).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "{what}: val {i}: {x} vs {y}");
+            }
+        }
+        _ => panic!("{what}: reply kinds diverged"),
+    }
+}
+
+/// Drive one payload through both coordinators and compare bitwise.
+fn check(router: &Coordinator, single: &Coordinator, payload: Payload, opts: RequestOptions, what: &str) {
+    let a = router
+        .call_opts(payload.clone(), opts.clone(), TIMEOUT)
+        .unwrap_or_else(|e| panic!("{what}: router: {e}"));
+    let b = single
+        .call_opts(payload, opts, TIMEOUT)
+        .unwrap_or_else(|e| panic!("{what}: single: {e}"));
+    assert_bitwise(&a, &b, what);
+}
+
+fn sampled_opts(k: usize, seed: u64) -> RequestOptions {
+    RequestOptions {
+        k: Some(k),
+        temperature: 0.8,
+        seed: Some(seed),
+        ..RequestOptions::default()
+    }
+}
+
+fn exercise(router: &Coordinator, single: &Coordinator, rng: &mut Xoshiro256pp, label: &str) {
+    for i in 0..2 {
+        let logits = rng.logits(VOCAB, 8.0);
+        check(
+            router,
+            single,
+            Payload::Softmax { logits },
+            RequestOptions::default(),
+            &format!("{label}: softmax {i}"),
+        );
+    }
+    for i in 0..2 {
+        let hidden = rng.logits(HIDDEN, 1.0);
+        check(
+            router,
+            single,
+            Payload::DecodeTopK { hidden },
+            RequestOptions::with_k(5),
+            &format!("{label}: decode {i}"),
+        );
+    }
+    let hidden = rng.logits(HIDDEN, 1.0);
+    check(
+        router,
+        single,
+        Payload::DecodeTopK { hidden },
+        sampled_opts(5, 0x5EED ^ rng.below(1 << 20)),
+        &format!("{label}: sampled decode"),
+    );
+}
+
+#[test]
+fn router_matches_single_process_bitwise_across_backends_and_scheds() {
+    let mut rng = Xoshiro256pp::seed_from_u64(0x40B7E4);
+    for backend in ShardBackendKind::all() {
+        for sched in [SchedPolicy::Fifo, SchedPolicy::Steal] {
+            let cfg = base_cfg(backend, sched);
+            let workers = spawn_workers(&cfg);
+            let addrs: Vec<String> = workers.iter().map(|w| w.addr.clone()).collect();
+            let router = router_coord(&cfg, addrs);
+            let single = Coordinator::start(&cfg).expect("single-process coordinator");
+            let label = format!("{}/{:?}", backend.as_str(), sched);
+
+            exercise(&router, &single, &mut rng, &label);
+
+            router.shutdown();
+            single.shutdown();
+            for w in workers {
+                w.halt();
+            }
+        }
+    }
+}
+
+#[test]
+fn router_property_random_batches_stay_bitwise_identical() {
+    // Property flavor: many rounds of random payload batches through
+    // one fixed topology; every reply must stay bitwise-equal to the
+    // single-process reference, including in-flight-concurrent rounds.
+    let cfg = base_cfg(ShardBackendKind::Auto, SchedPolicy::Steal);
+    let workers = spawn_workers(&cfg);
+    let addrs: Vec<String> = workers.iter().map(|w| w.addr.clone()).collect();
+    let router = router_coord(&cfg, addrs);
+    let single = Coordinator::start(&cfg).expect("single-process coordinator");
+    let mut rng = Xoshiro256pp::seed_from_u64(0x9409);
+
+    for round in 0..6 {
+        // Mixed batch, submitted concurrently so the router sees
+        // multi-row frames, then compared reply-by-reply.
+        let logits: Vec<Vec<f32>> = (0..3).map(|_| rng.logits(VOCAB, 6.0)).collect();
+        let rx_r: Vec<_> = logits
+            .iter()
+            .map(|l| router.submit(Payload::Softmax { logits: l.clone() }).unwrap())
+            .collect();
+        let rx_s: Vec<_> = logits
+            .iter()
+            .map(|l| single.submit(Payload::Softmax { logits: l.clone() }).unwrap())
+            .collect();
+        for (i, (ra, rb)) in rx_r.into_iter().zip(rx_s).enumerate() {
+            let a = ra.recv_timeout(TIMEOUT).unwrap().unwrap();
+            let b = rb.recv_timeout(TIMEOUT).unwrap().unwrap();
+            assert_bitwise(&a, &b, &format!("round {round}: batched softmax {i}"));
+        }
+
+        let k = 1 + (rng.below(8) as usize);
+        let hidden = rng.logits(HIDDEN, 1.0);
+        check(
+            &router,
+            &single,
+            Payload::DecodeTopK { hidden },
+            RequestOptions::with_k(k),
+            &format!("round {round}: decode k={k}"),
+        );
+        let hidden = rng.logits(HIDDEN, 1.0);
+        check(
+            &router,
+            &single,
+            Payload::DecodeTopK { hidden },
+            sampled_opts(k, rng.below(u32::MAX as u64)),
+            &format!("round {round}: sampled k={k}"),
+        );
+    }
+    router.shutdown();
+    single.shutdown();
+    for w in workers {
+        w.halt();
+    }
+}
+
+#[test]
+fn router_requeues_dead_worker_slice_and_stays_bitwise() {
+    // Worker 2 is a connection-refused address: every request whose
+    // plan touches its slice must be requeued onto a healthy peer
+    // (visible in `router.retry.requeued`) and still answer bitwise
+    // identically — the plan never changes, only who computes it.
+    let cfg = base_cfg(ShardBackendKind::Auto, SchedPolicy::Steal);
+    let live: Vec<TestWorker> = ShardPlan::with_shards(VOCAB, WORKERS)
+        .ranges()
+        .take(2)
+        .map(|r| TestWorker::spawn(cfg.clone(), (r.start, r.end)))
+        .collect();
+    let mut addrs: Vec<String> = live.iter().map(|w| w.addr.clone()).collect();
+    addrs.push(dead_addr());
+    let requeued = metrics::global().counter("router.retry.requeued");
+    let before = requeued.get();
+
+    let router = router_coord(&cfg, addrs);
+    let single = Coordinator::start(&cfg).expect("single-process coordinator");
+    let mut rng = Xoshiro256pp::seed_from_u64(0xDEAD);
+
+    exercise(&router, &single, &mut rng, "dead-worker");
+
+    assert!(
+        requeued.get() > before,
+        "a dead worker's shards must be requeued (router.retry.requeued {} -> {})",
+        before,
+        requeued.get()
+    );
+    router.shutdown();
+    single.shutdown();
+    for w in live {
+        w.halt();
+    }
+}
+
+#[test]
+fn router_topology_surfaces_typed_errors_and_keeps_serving() {
+    // An invalid request through the router topology must come back as
+    // a typed rejection (here from the router coordinator's own
+    // validation — the same surface a single-process server presents),
+    // not a transport failure or a hang, and must not poison the
+    // worker connections for the next request.
+    let cfg = base_cfg(ShardBackendKind::Auto, SchedPolicy::Fifo);
+    let workers = spawn_workers(&cfg);
+    let addrs: Vec<String> = workers.iter().map(|w| w.addr.clone()).collect();
+    let router = router_coord(&cfg, addrs);
+
+    let err = router
+        .call_opts(
+            Payload::DecodeTopK { hidden: vec![0.0; HIDDEN + 1] },
+            RequestOptions::with_k(3),
+            TIMEOUT,
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("length"), "typed rejection expected, got: {err}");
+
+    // The router keeps serving after the rejection.
+    let mut rng = Xoshiro256pp::seed_from_u64(0x7E57);
+    let logits = rng.logits(VOCAB, 5.0);
+    assert!(router.call(Payload::Softmax { logits }, TIMEOUT).is_ok());
+
+    router.shutdown();
+    for w in workers {
+        w.halt();
+    }
+}

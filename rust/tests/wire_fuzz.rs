@@ -25,7 +25,30 @@ fn corpus() -> Vec<String> {
         r#"{"v":2,"op":"generate","session":4,"prompt":[3,9],"max_tokens":8,"k":5}"#.to_string(),
         r#"{"v":2,"op":"decode","hidden":[0.5],"priority":"batch","deadline_ms":250,"tag":"t"}"#
             .to_string(),
+        // Router↔worker shard_scan frames, one per kind.
+        r#"{"v":2,"op":"shard_scan","kind":"softmax","start":64,"end":96,"rows":[[1,2],[3,4]]}"#
+            .to_string(),
+        concat!(
+            r#"{"v":2,"op":"shard_scan","kind":"decode","start":0,"end":4,"k":2,"#,
+            r#""rows":[[0.5,1.5]],"samples":[{"seed":"18446744073709551615","temperature":0.8}]}"#
+        )
+        .to_string(),
+        concat!(
+            r#"{"v":2,"op":"shard_scan","kind":"scale","start":0,"end":2,"#,
+            r#""rows":[[0.1,0.2]],"norms":[{"m":1.5,"d":2.0}]}"#
+        )
+        .to_string(),
     ]
+}
+
+/// A structurally valid `shard_scan` partials reply (the worker → router
+/// direction), used as the reply-side mutation corpus.
+fn partials_reply() -> String {
+    concat!(
+        r#"{"v":2,"ok":true,"partials":[{"m":1.5,"d":2.0,"#,
+        r#""topk":{"vals":[0.9,0.5],"idx":[65,64]}}]}"#
+    )
+    .to_string()
 }
 
 #[test]
@@ -135,6 +158,143 @@ fn type_confused_fields_are_rejected_typed() {
         let e = wire::decode_request(line).unwrap_err();
         assert_eq!(e.error.code, ErrorCode::BadRequest, "{line}: {}", e.error);
         assert!(!e.error.message.is_empty());
+    }
+}
+
+#[test]
+fn shard_scan_version_confusion_is_rejected_typed() {
+    // shard_scan is v2-only: a v1 or unversioned frame must be refused
+    // with a structured error, not silently decoded under v1 leniency.
+    let body = r#""op":"shard_scan","kind":"softmax","start":0,"end":2,"rows":[[1,2]]"#;
+    for prefix in ["", r#""v":1,"#, r#""v":3,"#, r#""v":"2","#] {
+        let line = format!("{{{prefix}{body}}}");
+        let e = wire::decode_request(&line).unwrap_err();
+        assert_eq!(e.error.code, ErrorCode::BadRequest, "{line}: {}", e.error);
+        assert!(!e.error.message.is_empty());
+    }
+    let ok = format!(r#"{{"v":2,{body}}}"#);
+    wire::decode_request(&ok).unwrap_or_else(|e| panic!("{ok}: {}", e.error));
+}
+
+/// Parse + decode a partials reply; `Err` for either stage.  The test
+/// contract is only "no panic, typed refusal".
+fn try_partials(line: &str, rows: usize, k: usize, start: usize, end: usize) -> bool {
+    match onlinesoftmax::json::parse(line) {
+        Ok(v) => wire::decode_shard_partials(&v, rows, k, start, end, &vec![false; rows]).is_ok(),
+        Err(_) => false,
+    }
+}
+
+#[test]
+fn partials_reply_corpus_decodes_then_every_truncation_errors() {
+    let reply = partials_reply();
+    assert!(try_partials(&reply, 1, 2, 64, 96), "corpus reply must decode");
+    for cut in 0..reply.len() {
+        // Any prefix either fails to parse or fails partial validation
+        // (it can never resurface as a *valid* one-row reply) — and
+        // neither stage may panic.
+        assert!(
+            !try_partials(&reply[..cut], 1, 2, 64, 96),
+            "truncation at {cut} decoded as a valid reply"
+        );
+    }
+}
+
+#[test]
+fn hostile_partials_are_rejected_not_merged() {
+    // A corrupt or hostile worker must never inject a poisoned partial
+    // into the router's ⊕ tree: non-finite normalizers, out-of-range
+    // global indices, misaligned or oversized buffers all refuse.
+    let cases = [
+        // non-finite / ill-typed (m, d)
+        r#"{"partials":[{"m":null,"d":2.0,"topk":{"vals":[],"idx":[]}}]}"#,
+        r#"{"partials":[{"m":"nan","d":2.0,"topk":{"vals":[],"idx":[]}}]}"#,
+        r#"{"partials":[{"m":1e999,"d":2.0,"topk":{"vals":[],"idx":[]}}]}"#,
+        r#"{"partials":[{"m":1.0,"d":0.0,"topk":{"vals":[],"idx":[]}}]}"#,
+        r#"{"partials":[{"m":1.0,"d":-3.0,"topk":{"vals":[],"idx":[]}}]}"#,
+        r#"{"partials":[{"m":1.0,"d":1e999,"topk":{"vals":[],"idx":[]}}]}"#,
+        // global indices outside the declared [64, 96) shard range
+        r#"{"partials":[{"m":1.0,"d":1.0,"topk":{"vals":[0.9],"idx":[63]}}]}"#,
+        r#"{"partials":[{"m":1.0,"d":1.0,"topk":{"vals":[0.9],"idx":[96]}}]}"#,
+        r#"{"partials":[{"m":1.0,"d":1.0,"topk":{"vals":[0.9],"idx":[-1]}}]}"#,
+        // misaligned / oversized top-k buffers
+        r#"{"partials":[{"m":1.0,"d":1.0,"topk":{"vals":[0.9,0.5],"idx":[64]}}]}"#,
+        r#"{"partials":[{"m":1.0,"d":1.0,"topk":{"vals":[1,2,3],"idx":[64,65,66]}}]}"#,
+        r#"{"partials":[{"m":1.0,"d":1.0,"topk":{"vals":[0.9],"idx":[64.5]}}]}"#,
+        // structural confusion
+        r#"{"partials":[{"m":1.0,"d":1.0}]}"#,
+        r#"{"partials":[null]}"#,
+        r#"{"partials":{}}"#,
+        r#"{"partials":[{"m":1.0,"d":1.0,"topk":{"vals":[],"idx":[]}},{"m":1.0,"d":1.0,"topk":{"vals":[],"idx":[]}}]}"#,
+        // sampled state on a greedy query
+        r#"{"partials":[{"m":1.0,"d":1.0,"topk":{"vals":[],"idx":[]},"sampled":{"s":[],"x":[],"p":[]}}]}"#,
+        r#"{}"#,
+    ];
+    for line in cases {
+        assert!(!try_partials(line, 1, 2, 64, 96), "accepted hostile reply: {line}");
+    }
+}
+
+#[test]
+fn hostile_norms_and_slices_are_rejected_not_merged() {
+    let bad_norms = [
+        r#"{"norms":[{"m":1e999,"d":1.0}]}"#,
+        r#"{"norms":[{"m":1.0,"d":0.0}]}"#,
+        r#"{"norms":[{"m":1.0,"d":null}]}"#,
+        r#"{"norms":[{"m":1.0,"d":1.0},{"m":1.0,"d":1.0}]}"#, // row-count mismatch
+        r#"{"norms":"x"}"#,
+        r#"{}"#,
+    ];
+    for line in bad_norms {
+        let ok = onlinesoftmax::json::parse(line)
+            .map(|v| wire::decode_shard_norms(&v, 1).is_ok())
+            .unwrap_or(false);
+        assert!(!ok, "accepted hostile norms reply: {line}");
+    }
+    let bad_slices = [
+        r#"{"slices":[[0.1,0.2,0.3]]}"#,   // width 3, expected 2
+        r#"{"slices":[[0.1,1e999]]}"#,     // non-finite probability
+        r#"{"slices":[[0.1,null]]}"#,      // ill-typed element
+        r#"{"slices":[[0.1,0.2],[0.3,0.4]]}"#, // row-count mismatch
+        r#"{"slices":7}"#,
+        r#"{}"#,
+    ];
+    for line in bad_slices {
+        let ok = onlinesoftmax::json::parse(line)
+            .map(|v| wire::decode_shard_slices(&v, 1, 2).is_ok())
+            .unwrap_or(false);
+        assert!(!ok, "accepted hostile slices reply: {line}");
+    }
+}
+
+#[test]
+fn random_mutations_of_shard_frames_never_panic() {
+    // Byte-splice fuzz over both shard_scan directions: the request
+    // decoder and all three reply decoders must refuse or accept
+    // structurally — never panic.
+    let mut rng = Xoshiro256pp::seed_from_u64(0x5CA2);
+    let corpus: Vec<String> = corpus()
+        .into_iter()
+        .filter(|f| f.contains("shard_scan"))
+        .chain(std::iter::once(partials_reply()))
+        .collect();
+    assert!(corpus.len() == 4, "three shard_scan kinds + one reply");
+    for _ in 0..2_000 {
+        let base = &corpus[rng.below(corpus.len() as u64) as usize];
+        let mut s = base.clone().into_bytes();
+        for _ in 0..(1 + rng.below(4)) {
+            let pos = rng.below(s.len() as u64 + 1) as usize;
+            s.insert(pos, b' ' + (rng.below(95)) as u8);
+        }
+        let line = String::from_utf8_lossy(&s).into_owned();
+        if let Err(e) = wire::decode_request(&line) {
+            assert!(ErrorCode::parse(e.error.code.as_str()).is_some());
+        }
+        if let Ok(v) = onlinesoftmax::json::parse(&line) {
+            let _ = wire::decode_shard_partials(&v, 1, 2, 64, 96, &[false]);
+            let _ = wire::decode_shard_norms(&v, 1);
+            let _ = wire::decode_shard_slices(&v, 1, 2);
+        }
     }
 }
 
